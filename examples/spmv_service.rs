@@ -1,0 +1,83 @@
+//! SpMV-as-a-service demo: the L3 coordinator routing batched requests
+//! to the PJRT-compiled JAX/Pallas kernel, with a synthetic open-loop
+//! load generator and latency/throughput/batching metrics — the paper's
+//! SpMVM as the hot path of a serving system.
+//!
+//! Falls back to the native executor when artifacts are missing.
+//!
+//!     cargo run --release --example spmv_service [requests] [window_us]
+
+use std::sync::atomic::Ordering::Relaxed;
+use std::time::{Duration, Instant};
+
+use spmvperf::coordinator::{
+    BatchExecutor, Coordinator, NativeExecutor, PjrtExecutor, Service, ServiceConfig,
+};
+use spmvperf::gen::{holstein_hubbard, HolsteinHubbardParams};
+use spmvperf::matrix::{Crs, EllMatrix};
+use spmvperf::runtime::{default_artifacts_dir, Runtime};
+use spmvperf::util::report::{f, Table};
+use spmvperf::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let requests: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(256);
+    let window_us: u64 = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(300);
+
+    let h = holstein_hubbard(&HolsteinHubbardParams::tiny());
+    let ell = EllMatrix::from_crs(&Crs::from_coo(&h), Some(24))?;
+    let n = ell.n;
+
+    let have_artifacts = default_artifacts_dir().join("spmv_b8_d24_n540.hlo.txt").exists();
+    let backend = if have_artifacts { "pjrt/pallas" } else { "native (artifacts missing)" };
+    eprintln!("starting service: dim {n}, backend {backend}, window {window_us}us");
+
+    let ell_worker = ell.clone();
+    let svc = Service::start(
+        ServiceConfig { batch_window: Duration::from_micros(window_us) },
+        n,
+        move || {
+            if have_artifacts {
+                let rt = Runtime::new(&default_artifacts_dir())?;
+                let bound = rt.bind(&ell_worker, rt.load("spmv_b8_d24_n540.hlo.txt")?)?;
+                Ok(Box::new(PjrtExecutor { bound }) as Box<dyn BatchExecutor>)
+            } else {
+                Ok(Box::new(NativeExecutor { ell: ell_worker, max_batch: 8 }) as Box<dyn BatchExecutor>)
+            }
+        },
+    )?;
+    let mut router = Coordinator::new();
+    router.register("holstein-hubbard", svc);
+
+    // Open-loop load: fire all requests, then gather.
+    let svc = router.route("holstein-hubbard")?;
+    let mut rng = Rng::new(1234);
+    let t0 = Instant::now();
+    let rxs: Vec<_> = (0..requests)
+        .map(|_| {
+            let mut x = vec![0.0; n];
+            rng.fill_f64(&mut x, -1.0, 1.0);
+            svc.submit(x).unwrap()
+        })
+        .collect();
+    let mut checksum = 0.0f64;
+    for rx in rxs {
+        let y = rx.recv().unwrap().map_err(|e| anyhow::anyhow!(e))?;
+        checksum += y.iter().sum::<f64>();
+    }
+    let dt = t0.elapsed();
+
+    let m = &svc.metrics;
+    let mut t = Table::new("service metrics", &["metric", "value"]);
+    t.row(vec!["backend".into(), backend.to_string()]);
+    t.row(vec!["requests".into(), m.requests.load(Relaxed).to_string()]);
+    t.row(vec!["batches".into(), m.batches.load(Relaxed).to_string()]);
+    t.row(vec!["avg batch size".into(), f(m.avg_batch())]);
+    t.row(vec!["avg latency (us)".into(), f(m.avg_latency_us())]);
+    t.row(vec!["p_max latency (us)".into(), m.latency_us_max.load(Relaxed).to_string()]);
+    t.row(vec!["errors".into(), m.errors.load(Relaxed).to_string()]);
+    t.row(vec!["throughput (req/s)".into(), f(requests as f64 / dt.as_secs_f64())]);
+    t.row(vec!["checksum".into(), format!("{checksum:.6e}")]);
+    t.print();
+    Ok(())
+}

@@ -1,0 +1,83 @@
+"""AOT pipeline: lower the Layer-2 entry points to HLO *text* artifacts
+for the Rust PJRT runtime.
+
+HLO text (not ``HloModuleProto.serialize``) is the interchange format:
+jax >= 0.5 emits protos with 64-bit instruction ids which the published
+``xla`` crate's xla_extension 0.5.1 rejects; the text parser reassigns
+ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifact shapes are static (XLA requirement). Shapes are encoded in the
+file names, e.g. ``spmv_b8_d24_n540.hlo.txt``; the Rust runtime parses
+them back. f64 throughout (x64 enabled) to match the Rust solvers.
+
+Usage: python -m compile.aot --out-dir ../artifacts [--n 540 --d 24 --batch 8]
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from . import model  # noqa: E402
+
+
+def to_hlo_text(fn, *args) -> str:
+    lowered = jax.jit(fn).lower(*args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=jnp.float64):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def build_artifacts(out_dir: str, n: int, d: int, batch: int) -> list[str]:
+    os.makedirs(out_dir, exist_ok=True)
+    f64 = jnp.float64
+    i32 = jnp.int32
+    val = spec((d, n), f64)
+    col = spec((d, n), i32)
+    x = spec((n,), f64)
+    xs = spec((batch, n), f64)
+    scalar = spec((), f64)
+
+    jobs = [
+        (f"spmv_d{d}_n{n}", model.spmv, (val, col, x)),
+        (f"spmv_b{batch}_d{d}_n{n}", model.spmv_batched, (val, col, xs)),
+        (f"lanczos_step_d{d}_n{n}", model.lanczos_step, (val, col, x, x, scalar)),
+        (f"power_step_d{d}_n{n}", model.power_step, (val, col, x, scalar)),
+    ]
+    written = []
+    for name, fn, args in jobs:
+        text = to_hlo_text(fn, *args)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as fh:
+            fh.write(text)
+        print(f"wrote {path} ({len(text)} chars)", file=sys.stderr)
+        written.append(path)
+    return written
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out-dir", default="../artifacts")
+    p.add_argument("--n", type=int, default=540, help="matrix dimension (HH tiny = 540)")
+    p.add_argument("--d", type=int, default=24, help="max non-zeros per row (ELL depth)")
+    p.add_argument("--batch", type=int, default=8, help="batched-SpMV batch size")
+    args = p.parse_args()
+    build_artifacts(args.out_dir, args.n, args.d, args.batch)
+
+
+if __name__ == "__main__":
+    main()

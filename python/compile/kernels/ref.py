@@ -1,0 +1,66 @@
+"""Pure-jnp reference oracles for the Pallas SpMV kernels.
+
+The padded-JDS (ELL) layout stores a matrix whose permuted rows have at
+most ``D`` non-zeros as two dense ``(D, N)`` arrays:
+
+- ``val[d, i]``: the d-th stored non-zero of (permuted) row ``i``
+  (0.0 padding),
+- ``col[d, i]``: its (permuted) column index (0 padding; padding values
+  are harmless because the corresponding ``val`` is 0).
+
+This is the paper's JDS storage padded to rectangular — the layout its
+vector-architecture lineage (§2) maps naturally onto a TPU's VPU lanes.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def spmv_ell_ref(val: jnp.ndarray, col: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """y[i] = sum_d val[d, i] * x[col[d, i]] — the ELL SpMV oracle."""
+    assert val.shape == col.shape
+    assert val.shape[1] == x.shape[0]
+    return jnp.sum(val * x[col], axis=0)
+
+
+def ell_to_dense(val: np.ndarray, col: np.ndarray, n_cols: int | None = None) -> np.ndarray:
+    """Materialize an ELL matrix densely (tests only)."""
+    d, n = val.shape
+    n_cols = n_cols or n
+    out = np.zeros((n, n_cols), dtype=val.dtype)
+    for k in range(d):
+        for i in range(n):
+            out[i, col[k, i]] += val[k, i]
+    return out
+
+
+def random_ell(
+    rng: np.random.Generator, n: int, d: int, fill: float = 0.7, dtype=np.float64
+):
+    """Random ELL arrays with ~fill fraction of populated slots (padding
+    slots have val == 0 and col == 0, like the production packer)."""
+    val = rng.standard_normal((d, n)).astype(dtype)
+    col = rng.integers(0, n, size=(d, n)).astype(np.int32)
+    mask = rng.random((d, n)) < fill
+    val = np.where(mask, val, 0.0).astype(dtype)
+    col = np.where(mask, col, 0).astype(np.int32)
+    return val, col
+
+
+def lanczos_step_ref(val, col, v_prev, v_cur, beta):
+    """One Lanczos three-term recurrence step (reference).
+
+    w = A v_cur - beta * v_prev
+    alpha = <w, v_cur>
+    w -= alpha * v_cur
+    beta_new = ||w||
+    v_next = w / beta_new
+    """
+    w = spmv_ell_ref(val, col, v_cur) - beta * v_prev
+    alpha = jnp.dot(w, v_cur)
+    w = w - alpha * v_cur
+    beta_new = jnp.sqrt(jnp.dot(w, w))
+    v_next = w / jnp.where(beta_new == 0.0, 1.0, beta_new)
+    return alpha, beta_new, v_next

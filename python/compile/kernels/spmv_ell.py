@@ -1,0 +1,90 @@
+"""Layer-1 Pallas kernel: padded-JDS (ELL) sparse matrix-vector product.
+
+Hardware adaptation (DESIGN.md §5): the paper's JDS format exists for
+vector machines; a TPU is architecturally on that side of the paper's
+CRS-vs-JDS dichotomy. The kernel therefore:
+
+- tiles the ``(D, N)`` ``val``/``col`` planes into ``(D_BLK, N_BLK)``
+  VMEM blocks streamed from HBM (the BlockSpec below *is* the paper's
+  NBJDS cache-blocking, re-expressed as a VMEM schedule),
+- keeps the ``N_BLK`` result tile resident across the diagonal loop
+  (grid accumulation), exactly like NBJDS keeps the result block in
+  cache (§2),
+- keeps the input vector whole in VMEM (it is the gather target — the
+  analogue of the paper's ``invec`` locality problem).
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom calls; real-TPU performance is estimated analytically in
+DESIGN.md / EXPERIMENTS.md §Perf instead of measured.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, val_ref, col_ref, y_ref):
+    """One (D_BLK, N_BLK) tile: y_blk += sum_d val * x[col]."""
+    d = pl.program_id(1)
+
+    @pl.when(d == 0)
+    def _init():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    x = x_ref[...]  # full input vector, VMEM resident
+    val = val_ref[...]  # (D_BLK, N_BLK) tile
+    col = col_ref[...]
+    y_ref[...] += jnp.sum(val * x[col], axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("n_blk", "d_blk"))
+def spmv_ell(val, col, x, *, n_blk: int = 256, d_blk: int = 8):
+    """y = A x for an ELL-packed matrix.
+
+    Args:
+      val: (D, N) non-zero values, 0.0-padded.
+      col: (D, N) int32 column indices, 0-padded.
+      x:   (N,) input vector.
+      n_blk, d_blk: VMEM tile shape (clamped to the problem size).
+    """
+    d, n = val.shape
+    assert col.shape == (d, n)
+    assert x.shape == (n,)
+    n_blk = min(n_blk, n)
+    d_blk = min(d_blk, d)
+    # Grid must tile exactly in interpret mode for simplicity: fall back
+    # to one block when shapes do not divide.
+    if n % n_blk != 0:
+        n_blk = n
+    if d % d_blk != 0:
+        d_blk = d
+    grid = (n // n_blk, d // d_blk)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n,), lambda i, j: (0,)),  # x: whole vector
+            pl.BlockSpec((d_blk, n_blk), lambda i, j: (j, i)),  # val tile
+            pl.BlockSpec((d_blk, n_blk), lambda i, j: (j, i)),  # col tile
+        ],
+        out_specs=pl.BlockSpec((n_blk,), lambda i, j: (i,)),  # y tile (revisited over j)
+        out_shape=jax.ShapeDtypeStruct((n,), val.dtype),
+        interpret=True,
+    )(x, val, col)
+
+
+def vmem_footprint_bytes(n: int, d_blk: int, n_blk: int, dtype_bytes: int = 8) -> int:
+    """Estimated VMEM footprint of one kernel instance: x + val tile +
+    col tile + y tile (+ double buffering on the streamed tiles).
+
+    Used by DESIGN.md §Perf to check tile choices against the ~16 MiB
+    VMEM of a TPU v4 core without running on TPU hardware.
+    """
+    x = n * dtype_bytes
+    tile = d_blk * n_blk * (dtype_bytes + 4)  # val + int32 col
+    y = n_blk * dtype_bytes
+    return x + 2 * tile + y  # x resident, tiles double-buffered

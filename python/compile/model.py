@@ -1,0 +1,56 @@
+"""Layer-2 JAX model: the compute graphs AOT-lowered for the Rust
+runtime. Every entry point funnels its SpMV through the Layer-1 Pallas
+kernel (`kernels.spmv_ell`), so the lowered HLO contains the kernel and
+the Rust hot path never touches Python.
+
+Entry points:
+
+- ``spmv``: one matrix-vector product (the paper's core operation).
+- ``spmv_batched``: a batch of input vectors against the same matrix —
+  what the Rust coordinator's dynamic batcher dispatches.
+- ``lanczos_step``: one three-term Lanczos recurrence step (the paper's
+  motivating eigensolver, §1), fused around the kernel.
+- ``power_step``: one shifted power-iteration step with Rayleigh
+  quotient, used as a cross-check.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.spmv_ell import spmv_ell
+
+
+def spmv(val, col, x):
+    return spmv_ell(val, col, x)
+
+
+def spmv_batched(val, col, xs):
+    """xs: (B, N) batch of input vectors -> (B, N) results."""
+    return jax.vmap(lambda x: spmv_ell(val, col, x))(xs)
+
+
+def lanczos_step(val, col, v_prev, v_cur, beta):
+    """One Lanczos step; returns (alpha, beta_new, v_next).
+
+    w = A v_cur - beta v_prev;  alpha = <w, v_cur>;
+    w -= alpha v_cur;           beta' = ||w||;  v' = w / beta'.
+    """
+    w = spmv_ell(val, col, v_cur) - beta * v_prev
+    alpha = jnp.dot(w, v_cur)
+    w = w - alpha * v_cur
+    beta_new = jnp.sqrt(jnp.dot(w, w))
+    v_next = w / jnp.where(beta_new == 0.0, 1.0, beta_new)
+    return alpha, beta_new, v_next
+
+
+def power_step(val, col, v, shift):
+    """One power-iteration step on (shift I - A): returns (v_next,
+    rayleigh) where rayleigh = <v, A v> of the *input* vector."""
+    av = spmv_ell(val, col, v)
+    rayleigh = jnp.dot(v, av)
+    w = shift * v - av
+    norm = jnp.sqrt(jnp.dot(w, w))
+    v_next = w / jnp.where(norm == 0.0, 1.0, norm)
+    return v_next, rayleigh

@@ -1,0 +1,101 @@
+"""Layer-1 correctness: the Pallas ELL SpMV kernel against the pure-jnp
+oracle, swept over shapes/dtypes/tilings with hypothesis."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import ell_to_dense, random_ell, spmv_ell_ref
+from compile.kernels.spmv_ell import spmv_ell, vmem_footprint_bytes
+
+
+def run_both(val, col, x, **kw):
+    got = np.asarray(spmv_ell(jnp.asarray(val), jnp.asarray(col), jnp.asarray(x), **kw))
+    want = np.asarray(spmv_ell_ref(jnp.asarray(val), jnp.asarray(col), jnp.asarray(x)))
+    return got, want
+
+
+def test_identity_matrix():
+    n = 16
+    val = np.zeros((1, n))
+    val[0] = 1.0
+    col = np.arange(n, dtype=np.int32)[None, :]
+    x = np.linspace(-1, 1, n)
+    got, want = run_both(val, col, x)
+    np.testing.assert_allclose(got, x)
+    np.testing.assert_allclose(want, x)
+
+
+def test_matches_dense_matvec():
+    rng = np.random.default_rng(0)
+    val, col = random_ell(rng, n=48, d=5)
+    x = rng.standard_normal(48)
+    dense = ell_to_dense(val, col)
+    got, _ = run_both(val, col, x)
+    np.testing.assert_allclose(got, dense @ x, rtol=1e-12, atol=1e-12)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    n=st.integers(min_value=1, max_value=128),
+    d=st.integers(min_value=1, max_value=12),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    n_blk=st.sampled_from([4, 16, 64, 256]),
+    d_blk=st.sampled_from([1, 2, 4, 8]),
+)
+def test_kernel_vs_ref_hypothesis(n, d, seed, n_blk, d_blk):
+    rng = np.random.default_rng(seed)
+    val, col = random_ell(rng, n=n, d=d)
+    x = rng.standard_normal(n)
+    got, want = run_both(val, col, x, n_blk=n_blk, d_blk=d_blk)
+    np.testing.assert_allclose(got, want, rtol=1e-10, atol=1e-10)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_kernel_f32(seed):
+    rng = np.random.default_rng(seed)
+    val, col = random_ell(rng, n=64, d=6, dtype=np.float32)
+    x = rng.standard_normal(64).astype(np.float32)
+    got, want = run_both(val, col, x)
+    assert got.dtype == np.float32
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_empty_padding_rows_are_harmless():
+    # Entire diagonals of padding must not change the result.
+    rng = np.random.default_rng(3)
+    val, col = random_ell(rng, n=32, d=3)
+    pad_val = np.vstack([val, np.zeros((2, 32))])
+    pad_col = np.vstack([col, np.zeros((2, 32), dtype=np.int32)])
+    x = rng.standard_normal(32)
+    a, _ = run_both(val, col, x)
+    b, _ = run_both(pad_val, pad_col, x)
+    np.testing.assert_allclose(a, b, rtol=1e-12)
+
+
+def test_non_dividing_block_sizes_fall_back():
+    rng = np.random.default_rng(4)
+    val, col = random_ell(rng, n=37, d=5)  # primes: no tiling divides
+    x = rng.standard_normal(37)
+    got, want = run_both(val, col, x, n_blk=16, d_blk=4)
+    np.testing.assert_allclose(got, want, rtol=1e-10)
+
+
+def test_vmem_footprint_estimate():
+    # The default demo config must fit comfortably in a v4 core's ~16 MiB
+    # VMEM; a paper-scale config must be flagged as too big.
+    small = vmem_footprint_bytes(n=540, d_blk=8, n_blk=256)
+    assert small < 16 << 20
+    huge = vmem_footprint_bytes(n=1_201_200, d_blk=24, n_blk=1_201_200)
+    assert huge > 16 << 20
+
+
+@pytest.mark.parametrize("n,d", [(1, 1), (2, 1), (3, 7)])
+def test_degenerate_shapes(n, d):
+    rng = np.random.default_rng(5)
+    val, col = random_ell(rng, n=n, d=d)
+    x = rng.standard_normal(n)
+    got, want = run_both(val, col, x)
+    np.testing.assert_allclose(got, want, rtol=1e-10, atol=1e-12)

@@ -1,0 +1,29 @@
+// Shared helpers for the harness-free bench binaries. Each bench wraps
+// one experiment driver, times it, and prints the regenerated tables —
+// `cargo bench` therefore reproduces the paper's figures as text/CSV.
+// Scale: default experiment sizes; set SPMVPERF_BENCH_QUICK=1 for a
+// fast smoke pass or SPMVPERF_BENCH_FULL=1 for paper scale.
+
+use spmvperf::experiments::ExpOptions;
+
+pub fn bench_options() -> ExpOptions {
+    let quick = std::env::var("SPMVPERF_BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
+    let full = std::env::var("SPMVPERF_BENCH_FULL").map(|v| v == "1").unwrap_or(false);
+    ExpOptions {
+        quick,
+        full,
+        csv_dir: Some("results".to_string()),
+        ..Default::default()
+    }
+}
+
+pub fn run_experiment_bench(id: &str) {
+    let opts = bench_options();
+    let t0 = std::time::Instant::now();
+    spmvperf::experiments::run(id, &opts).expect("experiment failed");
+    println!(
+        "bench {id}: regenerated in {:.2}s (scale: {})",
+        t0.elapsed().as_secs_f64(),
+        if opts.full { "paper" } else if opts.quick { "quick" } else { "default" }
+    );
+}

@@ -1,0 +1,3 @@
+//! cargo-bench target regenerating the paper's fig2 (see DESIGN.md §3).
+include!("common.rs");
+fn main() { run_experiment_bench("fig2"); }

@@ -1,0 +1,45 @@
+//! Host wall-clock benchmarks of the native SpMV kernels for every
+//! storage scheme (and the Table-1 microbenchmark loops) — real
+//! measurements on the host CPU, complementing the simulated figures.
+
+use spmvperf::gen::{self, HolsteinHubbardParams};
+use spmvperf::kernels::{table1_ops, MicroBuffers, SpmvKernel};
+use spmvperf::matrix::Scheme;
+use spmvperf::util::bench::default_bench;
+use spmvperf::util::report::{f, Table};
+use spmvperf::util::rng::Rng;
+
+fn main() {
+    let quick = std::env::var("SPMVPERF_BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
+    let params = if quick { HolsteinHubbardParams::tiny() } else { HolsteinHubbardParams::small() };
+    eprintln!("generating HH matrix (N = {}) ...", params.dimension());
+    let h = gen::holstein_hubbard(&params);
+    let mut rng = Rng::new(9);
+    let mut x = vec![0.0; h.nrows];
+    rng.fill_f64(&mut x, -1.0, 1.0);
+    let b = default_bench();
+
+    let mut t = Table::new("native SpMV kernels (host CPU)", &["scheme", "MFlop/s", "ns/nnz"]);
+    for scheme in Scheme::all_with(1000, 2) {
+        let kernel = SpmvKernel::build(&h, scheme);
+        let mut ws = kernel.workspace(&x);
+        let r = b.run(&scheme.name(), kernel.nnz() as u64, 2 * kernel.nnz() as u64, || {
+            kernel.spmv_hot(&mut ws);
+            ws.yp[0]
+        });
+        println!("{}", r.summary());
+        t.row(vec![scheme.name(), f(r.mflops()), f(r.ns_per_item())]);
+    }
+    t.print();
+
+    let n = if quick { 20_000 } else { 500_000 };
+    let blen = 8 << 20;
+    let mut t2 = Table::new("Table-1 microbenchmark loops (host CPU, k=8)", &["op", "ns/update"]);
+    for op in table1_ops(8) {
+        let bufs = MicroBuffers::new(op, n, blen, 42);
+        let r = b.run(&op.name(), n as u64, op.flops_per_iter() * n as u64, || bufs.run());
+        println!("{}", r.summary());
+        t2.row(vec![op.name(), f(r.ns_per_item())]);
+    }
+    t2.print();
+}

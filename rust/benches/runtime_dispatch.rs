@@ -1,0 +1,60 @@
+//! PJRT dispatch overhead and batched-SpMV throughput through the AOT
+//! JAX/Pallas artifacts: how much the coordinator's dynamic batching
+//! amortizes per-call costs. Requires `make artifacts`.
+
+use spmvperf::gen::{self, HolsteinHubbardParams};
+use spmvperf::matrix::{Crs, EllMatrix, SpMv};
+use spmvperf::runtime::{default_artifacts_dir, Runtime};
+use spmvperf::util::bench::default_bench;
+use spmvperf::util::report::{f, Table};
+use spmvperf::util::rng::Rng;
+
+fn main() {
+    if !default_artifacts_dir().join("spmv_d24_n540.hlo.txt").exists() {
+        eprintln!("SKIP: artifacts missing — run `make artifacts` first");
+        return;
+    }
+    let h = gen::holstein_hubbard(&HolsteinHubbardParams::tiny());
+    let crs = Crs::from_coo(&h);
+    let ell = EllMatrix::from_crs(&crs, Some(24)).unwrap();
+    let rt = Runtime::new(&default_artifacts_dir()).unwrap();
+    let single = rt.bind(&ell, rt.load("spmv_d24_n540.hlo.txt").unwrap()).unwrap();
+    let batched = rt.bind(&ell, rt.load("spmv_b8_d24_n540.hlo.txt").unwrap()).unwrap();
+
+    let mut rng = Rng::new(3);
+    let mut x = vec![0.0; ell.n];
+    rng.fill_f64(&mut x, -1.0, 1.0);
+    let xs: Vec<Vec<f64>> = (0..8).map(|_| x.clone()).collect();
+    let b = default_bench();
+    let flops = 2 * crs.nnz() as u64;
+
+    let r1 = b.run("pjrt spmv (batch 1)", crs.nnz() as u64, flops, || {
+        single.spmv(&x).unwrap()[0]
+    });
+    let r8 = b.run("pjrt spmv (batch 8)", 8 * crs.nnz() as u64, 8 * flops, || {
+        batched.spmv_batched(&xs).unwrap()[0][0]
+    });
+    // native baseline
+    let mut y = vec![0.0; ell.n];
+    let rn = b.run("native ELL spmv", crs.nnz() as u64, flops, || {
+        ell.spmv_permuted(&x, &mut y);
+        y[0]
+    });
+
+    println!("{}", r1.summary());
+    println!("{}", r8.summary());
+    println!("{}", rn.summary());
+    let mut t = Table::new("PJRT dispatch & batching", &["path", "us/request", "MFlop/s"]);
+    t.row(vec!["pjrt batch=1".into(), f(r1.median_secs() * 1e6), f(r1.mflops())]);
+    t.row(vec![
+        "pjrt batch=8".into(),
+        f(r8.median_secs() * 1e6 / 8.0),
+        f(r8.mflops()),
+    ]);
+    t.row(vec!["native".into(), f(rn.median_secs() * 1e6), f(rn.mflops())]);
+    t.print();
+    println!(
+        "batching amortization: {:.2}x lower per-request cost at batch 8",
+        r1.median_secs() / (r8.median_secs() / 8.0)
+    );
+}

@@ -1,0 +1,164 @@
+//! Diagonal occupation profile (Fig 5, bottom panel): the number of
+//! non-zero elements as a function of their distance to the main
+//! diagonal, plus the derived statistics the paper quotes (e.g. "about
+//! 60% of the non-zero elements are contained in the twelve outermost
+//! secondary diagonals").
+
+use std::collections::BTreeMap;
+
+use crate::matrix::Coo;
+
+/// Occupation statistics of the (sub)diagonals of a symmetric matrix.
+#[derive(Debug, Clone)]
+pub struct DiagProfile {
+    /// nnz per |col - row| offset (0 = main diagonal). For symmetric
+    /// matrices, upper and lower contributions are merged.
+    pub counts: BTreeMap<u64, u64>,
+    /// Total (possible) elements per offset: `n - offset` for the upper
+    /// triangle — the paper's dashed "total elements" line.
+    pub capacity: BTreeMap<u64, u64>,
+    pub nnz_total: u64,
+    pub n: u64,
+}
+
+impl DiagProfile {
+    /// Occupation fraction of an offset (0..=1).
+    pub fn occupation(&self, offset: u64) -> f64 {
+        let cnt = self.counts.get(&offset).copied().unwrap_or(0);
+        let cap = self.capacity.get(&offset).copied().unwrap_or(0);
+        if cap == 0 {
+            0.0
+        } else {
+            cnt as f64 / cap as f64
+        }
+    }
+
+    /// Offsets sorted by descending nnz count.
+    pub fn densest_offsets(&self) -> Vec<(u64, u64)> {
+        let mut v: Vec<(u64, u64)> = self.counts.iter().map(|(&o, &c)| (o, c)).collect();
+        v.sort_by_key(|&(o, c)| (std::cmp::Reverse(c), o));
+        v
+    }
+
+    /// Fraction of nnz contained in the `k` most populated non-main
+    /// (secondary) diagonals — the paper's "60% in twelve diagonals".
+    pub fn fraction_in_top_secondary(&self, k: usize) -> f64 {
+        let top: u64 = self
+            .densest_offsets()
+            .into_iter()
+            .filter(|&(o, _)| o != 0)
+            .take(k)
+            .map(|(_, c)| c)
+            .sum();
+        if self.nnz_total == 0 {
+            0.0
+        } else {
+            top as f64 / self.nnz_total as f64
+        }
+    }
+
+    /// Cumulative nnz fraction for offsets >= the given offset ("outer"
+    /// part of the band).
+    pub fn fraction_beyond(&self, offset: u64) -> f64 {
+        let outer: u64 = self
+            .counts
+            .iter()
+            .filter(|&(&o, _)| o >= offset)
+            .map(|(_, &c)| c)
+            .sum();
+        if self.nnz_total == 0 {
+            0.0
+        } else {
+            outer as f64 / self.nnz_total as f64
+        }
+    }
+
+    /// Matrix bandwidth (largest occupied offset).
+    pub fn bandwidth(&self) -> u64 {
+        self.counts.keys().next_back().copied().unwrap_or(0)
+    }
+}
+
+/// Compute the diagonal profile of a matrix. Entries from both triangles
+/// are merged into their |col - row| offset (the paper shows only the
+/// upper subdiagonals of the symmetric Hamiltonian). The main diagonal is
+/// counted once per stored entry.
+pub fn diag_profile(coo: &Coo) -> DiagProfile {
+    let mut counts: BTreeMap<u64, u64> = BTreeMap::new();
+    for &(r, c, _) in &coo.entries {
+        let off = (c as i64 - r as i64).unsigned_abs();
+        *counts.entry(off).or_insert(0) += 1;
+    }
+    // Symmetric merge: off-diagonal offsets were counted from both
+    // triangles; halve to describe the upper triangle like the paper.
+    for (&off, cnt) in counts.iter_mut() {
+        if off != 0 {
+            *cnt = (*cnt).div_ceil(2);
+        }
+    }
+    let n = coo.nrows as u64;
+    let capacity: BTreeMap<u64, u64> = counts
+        .keys()
+        .map(|&o| (o, n.saturating_sub(o)))
+        .collect();
+    let nnz_total: u64 = counts.values().sum();
+    DiagProfile { counts, capacity, nnz_total, n }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn tridiagonal_profile() {
+        let m = gen::laplacian_1d(100);
+        let p = diag_profile(&m);
+        assert_eq!(p.counts.get(&0).copied(), Some(100));
+        assert_eq!(p.counts.get(&1).copied(), Some(99));
+        assert_eq!(p.bandwidth(), 1);
+        assert_eq!(p.occupation(1), 1.0);
+        assert!(p.fraction_in_top_secondary(1) > 0.0);
+    }
+
+    #[test]
+    fn laplacian_2d_has_two_secondary_diagonals() {
+        let m = gen::laplacian_2d(10, 10);
+        let p = diag_profile(&m);
+        // offsets 1 and 10 (within-row and across-row neighbours)
+        assert!(p.counts.contains_key(&1));
+        assert!(p.counts.contains_key(&10));
+        assert_eq!(p.bandwidth(), 10);
+        // all nnz in 2 secondary diagonals + main
+        assert!((p.fraction_in_top_secondary(2) + p.occupation(0) * 100.0 / p.nnz_total as f64
+            - 1.0)
+            .abs()
+            < 1e-9);
+    }
+
+    #[test]
+    fn holstein_hubbard_split_structure() {
+        // The HH matrix must show the paper's split structure: a few
+        // dense secondary diagonals holding a large nnz share.
+        let params = gen::HolsteinHubbardParams::tiny();
+        let h = gen::holstein_hubbard(&params);
+        let p = diag_profile(&h);
+        let frac12 = p.fraction_in_top_secondary(12);
+        assert!(
+            frac12 > 0.35,
+            "top-12 secondary diagonals hold only {frac12:.2} of nnz"
+        );
+        // band is much narrower than the dimension
+        assert!(p.bandwidth() < h.nrows as u64);
+    }
+
+    #[test]
+    fn random_matrix_has_flat_profile() {
+        let mut rng = Rng::new(3);
+        let m = gen::random_square(200, 3000, &mut rng);
+        let p = diag_profile(&m);
+        // no single secondary diagonal dominates
+        assert!(p.fraction_in_top_secondary(1) < 0.05);
+    }
+}

@@ -1,0 +1,9 @@
+//! Sparsity-pattern analysis: the diagonal occupation profile of Fig 5
+//! (bottom) and the input-vector stride distributions of Fig 6a that feed
+//! the predictive performance model.
+
+pub mod diag_profile;
+pub mod stride_dist;
+
+pub use diag_profile::{diag_profile, DiagProfile};
+pub use stride_dist::StrideDistribution;

@@ -1,0 +1,217 @@
+//! Input-vector stride distributions (Fig 6a): the successive differences
+//! of `invec` access indices during an SpMV kernel walk, split into
+//! forward and backward jumps. This is the matrix "fingerprint" the
+//! paper's performance model consumes.
+
+use std::collections::BTreeMap;
+
+use crate::kernels::SpmvKernel;
+use crate::matrix::jds::SpmvVisitor;
+
+/// Histogram of signed strides (in elements) between successive input
+/// vector accesses.
+#[derive(Debug, Clone, Default)]
+pub struct StrideDistribution {
+    /// stride (elements, signed; 0 = revisit) -> count
+    pub counts: BTreeMap<i64, u64>,
+    pub total: u64,
+}
+
+struct StrideVisitor {
+    prev: Option<usize>,
+    dist: StrideDistribution,
+}
+
+impl SpmvVisitor for StrideVisitor {
+    #[inline]
+    fn update(&mut self, _row: usize, _j: usize, col: usize) {
+        if let Some(p) = self.prev {
+            let d = col as i64 - p as i64;
+            *self.dist.counts.entry(d).or_insert(0) += 1;
+            self.dist.total += 1;
+        }
+        self.prev = Some(col);
+    }
+}
+
+impl StrideDistribution {
+    /// Collect the stride distribution of a kernel's access order.
+    pub fn from_kernel(kernel: &SpmvKernel) -> Self {
+        let mut v = StrideVisitor { prev: None, dist: StrideDistribution::default() };
+        kernel.walk(&mut v);
+        v.dist
+    }
+
+    /// Accumulated weight of backward jumps (negative strides) — ~7% for
+    /// CRS on the paper's Hamiltonian, roughly tripled for plain JDS.
+    pub fn backward_fraction(&self) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let back: u64 = self
+            .counts
+            .iter()
+            .filter(|&(&s, _)| s < 0)
+            .map(|(_, &c)| c)
+            .sum();
+        back as f64 / self.total as f64
+    }
+
+    /// Fraction of strides with |stride| <= `limit` elements. The paper
+    /// quotes "almost 60% of the strides are smaller than 64 bytes" for
+    /// JDS, i.e. |stride| < 8 elements of 8 bytes.
+    pub fn fraction_within(&self, limit: i64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let within: u64 = self
+            .counts
+            .iter()
+            .filter(|&(&s, _)| s.abs() <= limit)
+            .map(|(_, &c)| c)
+            .sum();
+        within as f64 / self.total as f64
+    }
+
+    /// Mean of |stride|.
+    pub fn mean_abs_stride(&self) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let sum: i64 = self
+            .counts
+            .iter()
+            .map(|(&s, &c)| s.abs() * c as i64)
+            .sum();
+        sum as f64 / self.total as f64
+    }
+
+    /// Distribution function (CDF) over |stride| for forward (positive)
+    /// or backward (negative) jumps separately, as (stride, cumulative
+    /// fraction of total) points — the solid/dashed curves of Fig 6a.
+    pub fn cdf(&self, forward: bool) -> Vec<(i64, f64)> {
+        let mut pts = Vec::new();
+        let mut acc = 0u64;
+        let entries: Vec<(i64, u64)> = self
+            .counts
+            .iter()
+            .filter(|&(&s, _)| if forward { s > 0 } else { s < 0 })
+            .map(|(&s, &c)| (s.abs(), c))
+            .collect();
+        let mut sorted = entries;
+        sorted.sort_by_key(|&(s, _)| s);
+        for (s, c) in sorted {
+            acc += c;
+            pts.push((s, acc as f64 / self.total.max(1) as f64));
+        }
+        pts
+    }
+
+    /// Weighted histogram over |stride| buckets (powers of two), useful
+    /// for compact reporting.
+    pub fn bucketed(&self) -> Vec<(String, f64)> {
+        let mut buckets: Vec<(i64, u64)> = Vec::new(); // (upper bound, count)
+        let bounds = [1i64, 2, 4, 8, 16, 32, 64, 128, 256, 1024, 4096, i64::MAX];
+        for &b in &bounds {
+            buckets.push((b, 0));
+        }
+        for (&s, &c) in &self.counts {
+            let a = s.abs();
+            for bucket in buckets.iter_mut() {
+                if a <= bucket.0 {
+                    bucket.1 += c;
+                    break;
+                }
+            }
+        }
+        buckets
+            .into_iter()
+            .map(|(b, c)| {
+                let label = if b == i64::MAX { ">4096".to_string() } else { format!("<={b}") };
+                (label, c as f64 / self.total.max(1) as f64)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen;
+    use crate::matrix::Scheme;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn crs_stride_dist_of_tridiagonal() {
+        // Tridiagonal CRS: within a row strides are +1; row changes jump
+        // back by 1 (from col i+1 to col i) — mostly small strides.
+        let m = gen::laplacian_1d(500);
+        let k = SpmvKernel::build(&m, Scheme::Crs);
+        let d = StrideDistribution::from_kernel(&k);
+        assert!(d.fraction_within(2) > 0.99);
+        assert!(d.backward_fraction() > 0.2); // one back-jump per row
+    }
+
+    #[test]
+    fn crs_backward_fraction_is_one_per_row() {
+        // For a banded random matrix, CRS jumps backward once per row
+        // (start of a new row), so backward fraction ~ nrows / nnz.
+        let mut rng = Rng::new(40);
+        let m = gen::random_band(400, 10, 60, &mut rng);
+        let k = SpmvKernel::build(&m, Scheme::Crs);
+        let d = StrideDistribution::from_kernel(&k);
+        let expect = m.nrows as f64 / m.nnz() as f64;
+        let got = d.backward_fraction();
+        assert!(
+            (got - expect).abs() < 0.3 * expect,
+            "backward {got} vs expected ~{expect}"
+        );
+    }
+
+    #[test]
+    fn jds_has_more_backward_jumps_than_crs() {
+        // The paper: JDS roughly triples the backward weight vs CRS on
+        // the Hamiltonian.
+        let params = gen::HolsteinHubbardParams::tiny();
+        let h = gen::holstein_hubbard(&params);
+        let crs = SpmvKernel::build(&h, Scheme::Crs);
+        let jds = SpmvKernel::build(&h, Scheme::Jds);
+        let d_crs = StrideDistribution::from_kernel(&crs);
+        let d_jds = StrideDistribution::from_kernel(&jds);
+        assert!(
+            d_jds.backward_fraction() > 1.5 * d_crs.backward_fraction(),
+            "JDS backward {:.3} vs CRS {:.3}",
+            d_jds.backward_fraction(),
+            d_crs.backward_fraction()
+        );
+    }
+
+    #[test]
+    fn cdf_is_monotone_and_bounded() {
+        let params = gen::HolsteinHubbardParams::tiny();
+        let h = gen::holstein_hubbard(&params);
+        let k = SpmvKernel::build(&h, Scheme::NbJds { block: 64 });
+        let d = StrideDistribution::from_kernel(&k);
+        for fwd in [true, false] {
+            let cdf = d.cdf(fwd);
+            assert!(cdf.windows(2).all(|w| w[0].1 <= w[1].1));
+            if let Some(&(_, last)) = cdf.last() {
+                assert!(last <= 1.0 + 1e-12);
+            }
+        }
+        let f = d.cdf(true).last().map(|x| x.1).unwrap_or(0.0);
+        let b = d.cdf(false).last().map(|x| x.1).unwrap_or(0.0);
+        let z = d.fraction_within(0);
+        assert!((f + b + z - 1.0).abs() < 1e-9, "f{f}+b{b}+z{z} != 1");
+    }
+
+    #[test]
+    fn bucketed_sums_to_one() {
+        let mut rng = Rng::new(41);
+        let m = gen::random_square(300, 2500, &mut rng);
+        let k = SpmvKernel::build(&m, Scheme::Jds);
+        let d = StrideDistribution::from_kernel(&k);
+        let total: f64 = d.bucketed().iter().map(|(_, f)| f).sum();
+        assert!((total - 1.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,374 @@
+//! L3 coordinator: an SpMV service with request routing and dynamic
+//! batching, in the style of an inference router. Requests (input
+//! vectors) arrive on a queue; a worker thread coalesces them into
+//! batches (up to the artifact's batch size, within a latency window)
+//! and dispatches them to an executor — either the PJRT-compiled
+//! JAX/Pallas artifact or a native fallback. Python is never on this
+//! path.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::matrix::EllMatrix;
+
+/// Batch executor abstraction: the service is agnostic of what actually
+/// multiplies. Executors are constructed *inside* the worker thread (a
+/// PJRT client is not `Send`).
+pub trait BatchExecutor {
+    fn dim(&self) -> usize;
+    fn max_batch(&self) -> usize;
+    /// Multiply each input vector (permuted basis).
+    fn run_batch(&self, xs: &[Vec<f64>]) -> Result<Vec<Vec<f64>>>;
+}
+
+/// Native ELL executor (fallback / testing).
+pub struct NativeExecutor {
+    pub ell: EllMatrix,
+    pub max_batch: usize,
+}
+
+impl BatchExecutor for NativeExecutor {
+    fn dim(&self) -> usize {
+        self.ell.n
+    }
+    fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+    fn run_batch(&self, xs: &[Vec<f64>]) -> Result<Vec<Vec<f64>>> {
+        let mut out = Vec::with_capacity(xs.len());
+        let mut y = vec![0.0; self.ell.n];
+        for x in xs {
+            self.ell.spmv_permuted(x, &mut y);
+            out.push(y.clone());
+        }
+        Ok(out)
+    }
+}
+
+/// PJRT executor over a batched artifact.
+pub struct PjrtExecutor {
+    pub bound: crate::runtime::BoundSpmv,
+}
+
+impl BatchExecutor for PjrtExecutor {
+    fn dim(&self) -> usize {
+        self.bound.n
+    }
+    fn max_batch(&self) -> usize {
+        self.bound.meta.batch.unwrap_or(1)
+    }
+    fn run_batch(&self, xs: &[Vec<f64>]) -> Result<Vec<Vec<f64>>> {
+        self.bound.spmv_batched(xs)
+    }
+}
+
+/// Service metrics (lock-free counters).
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub requests: AtomicU64,
+    pub batches: AtomicU64,
+    pub errors: AtomicU64,
+    /// Sum of end-to-end request latencies, microseconds.
+    pub latency_us_sum: AtomicU64,
+    pub latency_us_max: AtomicU64,
+}
+
+impl Metrics {
+    pub fn avg_batch(&self) -> f64 {
+        let b = self.batches.load(Ordering::Relaxed);
+        if b == 0 {
+            0.0
+        } else {
+            self.requests.load(Ordering::Relaxed) as f64 / b as f64
+        }
+    }
+
+    pub fn avg_latency_us(&self) -> f64 {
+        let r = self.requests.load(Ordering::Relaxed);
+        if r == 0 {
+            0.0
+        } else {
+            self.latency_us_sum.load(Ordering::Relaxed) as f64 / r as f64
+        }
+    }
+
+    fn record_latency(&self, us: u64) {
+        self.latency_us_sum.fetch_add(us, Ordering::Relaxed);
+        self.latency_us_max.fetch_max(us, Ordering::Relaxed);
+    }
+}
+
+struct Request {
+    x: Vec<f64>,
+    enqueued: Instant,
+    reply: mpsc::Sender<Result<Vec<f64>, String>>,
+}
+
+/// Service configuration.
+#[derive(Debug, Clone)]
+pub struct ServiceConfig {
+    /// Max time the batcher waits for more requests once one is pending.
+    pub batch_window: Duration,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        Self { batch_window: Duration::from_micros(500) }
+    }
+}
+
+/// A running SpMV service (one matrix, one worker thread).
+pub struct Service {
+    tx: Option<mpsc::Sender<Request>>,
+    worker: Option<std::thread::JoinHandle<()>>,
+    pub metrics: Arc<Metrics>,
+    pub dim: usize,
+}
+
+impl Service {
+    /// Start a service. `make_executor` runs on the worker thread (PJRT
+    /// handles are not `Send`); its `dim` must equal `dim`.
+    pub fn start<F>(cfg: ServiceConfig, dim: usize, make_executor: F) -> Result<Self>
+    where
+        F: FnOnce() -> Result<Box<dyn BatchExecutor>> + Send + 'static,
+    {
+        let (tx, rx) = mpsc::channel::<Request>();
+        let metrics = Arc::new(Metrics::default());
+        let m2 = metrics.clone();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<(), String>>();
+        let worker = std::thread::Builder::new()
+            .name("spmv-service".into())
+            .spawn(move || {
+                let exec = match make_executor() {
+                    Ok(e) => {
+                        let _ = ready_tx.send(Ok(()));
+                        e
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(format!("{e:#}")));
+                        return;
+                    }
+                };
+                worker_loop(rx, exec, cfg, m2);
+            })
+            .context("spawning service worker")?;
+        ready_rx
+            .recv()
+            .context("service worker died during startup")?
+            .map_err(|e| anyhow::anyhow!("executor init failed: {e}"))?;
+        Ok(Service { tx: Some(tx), worker: Some(worker), metrics, dim })
+    }
+
+    /// Submit a request; returns a receiver for the result.
+    pub fn submit(&self, x: Vec<f64>) -> Result<mpsc::Receiver<Result<Vec<f64>, String>>> {
+        anyhow::ensure!(x.len() == self.dim, "input length {} != {}", x.len(), self.dim);
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .as_ref()
+            .context("service stopped")?
+            .send(Request { x, enqueued: Instant::now(), reply })
+            .map_err(|_| anyhow::anyhow!("service worker gone"))?;
+        Ok(rx)
+    }
+
+    /// Submit and block for the result.
+    pub fn submit_wait(&self, x: Vec<f64>) -> Result<Vec<f64>> {
+        let rx = self.submit(x)?;
+        rx.recv()
+            .context("service dropped the request")?
+            .map_err(|e| anyhow::anyhow!(e))
+    }
+}
+
+impl Drop for Service {
+    fn drop(&mut self) {
+        drop(self.tx.take()); // close queue; worker drains and exits
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(
+    rx: mpsc::Receiver<Request>,
+    exec: Box<dyn BatchExecutor>,
+    cfg: ServiceConfig,
+    metrics: Arc<Metrics>,
+) {
+    let max_batch = exec.max_batch().max(1);
+    loop {
+        // Block for the first request of the batch.
+        let first = match rx.recv() {
+            Ok(r) => r,
+            Err(_) => return, // queue closed
+        };
+        let mut batch = vec![first];
+        // Coalesce: take whatever arrives within the window, up to the
+        // executor's batch capacity.
+        let deadline = Instant::now() + cfg.batch_window;
+        while batch.len() < max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(r) => batch.push(r),
+                Err(mpsc::RecvTimeoutError::Timeout) => break,
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        let xs: Vec<Vec<f64>> = batch.iter().map(|r| r.x.clone()).collect();
+        let result = exec.run_batch(&xs);
+        metrics.batches.fetch_add(1, Ordering::Relaxed);
+        match result {
+            Ok(ys) => {
+                for (req, y) in batch.into_iter().zip(ys) {
+                    metrics.requests.fetch_add(1, Ordering::Relaxed);
+                    metrics.record_latency(req.enqueued.elapsed().as_micros() as u64);
+                    let _ = req.reply.send(Ok(y));
+                }
+            }
+            Err(e) => {
+                let msg = format!("{e:#}");
+                for req in batch {
+                    metrics.errors.fetch_add(1, Ordering::Relaxed);
+                    let _ = req.reply.send(Err(msg.clone()));
+                }
+            }
+        }
+    }
+}
+
+/// Router over several named services (one per matrix / artifact).
+#[derive(Default)]
+pub struct Coordinator {
+    services: HashMap<String, Service>,
+}
+
+impl Coordinator {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn register(&mut self, name: &str, service: Service) {
+        self.services.insert(name.to_string(), service);
+    }
+
+    pub fn route(&self, name: &str) -> Result<&Service> {
+        self.services
+            .get(name)
+            .with_context(|| format!("no service '{name}' registered"))
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.services.keys().map(|s| s.as_str()).collect();
+        v.sort();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen;
+    use crate::matrix::{Crs, SpMv};
+
+    fn tiny_ell() -> EllMatrix {
+        let h = gen::holstein_hubbard(&gen::HolsteinHubbardParams::tiny());
+        EllMatrix::from_crs(&Crs::from_coo(&h), None).unwrap()
+    }
+
+    fn start_native(max_batch: usize, window: Duration) -> (Service, EllMatrix) {
+        let ell = tiny_ell();
+        let dim = ell.n;
+        let ell2 = ell.clone();
+        let svc = Service::start(
+            ServiceConfig { batch_window: window },
+            dim,
+            move || Ok(Box::new(NativeExecutor { ell: ell2, max_batch }) as Box<dyn BatchExecutor>),
+        )
+        .unwrap();
+        (svc, ell)
+    }
+
+    #[test]
+    fn single_request_roundtrip() {
+        let (svc, ell) = start_native(8, Duration::from_micros(100));
+        let mut rng = crate::util::rng::Rng::new(1);
+        let mut x = vec![0.0; ell.n];
+        rng.fill_f64(&mut x, -1.0, 1.0);
+        let y = svc.submit_wait(x.clone()).unwrap();
+        let mut want = vec![0.0; ell.n];
+        ell.spmv_permuted(&x, &mut want);
+        assert!(crate::util::stats::max_abs_diff(&y, &want) < 1e-12);
+        assert_eq!(svc.metrics.requests.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn concurrent_requests_get_batched() {
+        let (svc, ell) = start_native(16, Duration::from_millis(20));
+        let svc = Arc::new(svc);
+        let mut rng = crate::util::rng::Rng::new(2);
+        let xs: Vec<Vec<f64>> = (0..32)
+            .map(|_| {
+                let mut x = vec![0.0; ell.n];
+                rng.fill_f64(&mut x, -1.0, 1.0);
+                x
+            })
+            .collect();
+        // Fire all requests from threads, then collect.
+        let rxs: Vec<_> = xs.iter().map(|x| svc.submit(x.clone()).unwrap()).collect();
+        let mut want = vec![0.0; ell.n];
+        for (x, rx) in xs.iter().zip(rxs) {
+            let y = rx.recv().unwrap().unwrap();
+            ell.spmv_permuted(x, &mut want);
+            assert!(crate::util::stats::max_abs_diff(&y, &want) < 1e-12);
+        }
+        assert_eq!(svc.metrics.requests.load(Ordering::Relaxed), 32);
+        // 32 requests in << 20ms window with capacity 16: far fewer than
+        // 32 batches.
+        let batches = svc.metrics.batches.load(Ordering::Relaxed);
+        assert!(batches <= 16, "expected batching, got {batches} batches");
+        assert!(svc.metrics.avg_batch() >= 2.0);
+    }
+
+    #[test]
+    fn wrong_length_rejected() {
+        let (svc, _) = start_native(4, Duration::from_micros(10));
+        assert!(svc.submit(vec![0.0; 3]).is_err());
+    }
+
+    #[test]
+    fn coordinator_routes_by_name() {
+        let (a, _) = start_native(4, Duration::from_micros(10));
+        let (b, _) = start_native(4, Duration::from_micros(10));
+        let mut c = Coordinator::new();
+        c.register("hh-tiny", a);
+        c.register("hh-tiny-2", b);
+        assert_eq!(c.names(), vec!["hh-tiny", "hh-tiny-2"]);
+        assert!(c.route("hh-tiny").is_ok());
+        assert!(c.route("missing").is_err());
+    }
+
+    #[test]
+    fn executor_init_failure_is_reported() {
+        let r = Service::start(ServiceConfig::default(), 8, || {
+            anyhow::bail!("boom")
+        });
+        assert!(r.is_err());
+        assert!(format!("{:#}", r.err().unwrap()).contains("boom"));
+    }
+
+    #[test]
+    fn shutdown_joins_worker() {
+        let (svc, ell) = start_native(4, Duration::from_micros(10));
+        let x = vec![1.0; ell.n];
+        let _ = svc.submit_wait(x).unwrap();
+        drop(svc); // must not hang
+    }
+}

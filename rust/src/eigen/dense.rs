@@ -1,0 +1,174 @@
+//! Dense symmetric eigensolver (cyclic Jacobi rotations) — the reference
+//! oracle for validating the Lanczos solver and the Hamiltonian
+//! generator on small systems. O(n³) per sweep; fine up to n ≈ 1000.
+
+/// Eigen-decomposition of a dense symmetric matrix (row-major `n × n`).
+/// Returns eigenvalues in ascending order. If `want_vectors`, also
+/// returns the corresponding orthonormal eigenvectors as rows.
+pub fn jacobi_eigen(
+    a_in: &[Vec<f64>],
+    want_vectors: bool,
+) -> (Vec<f64>, Option<Vec<Vec<f64>>>) {
+    let n = a_in.len();
+    assert!(a_in.iter().all(|r| r.len() == n), "matrix must be square");
+    // Work on a flat copy.
+    let mut a: Vec<f64> = a_in.iter().flatten().copied().collect();
+    let mut v: Vec<f64> = if want_vectors {
+        let mut id = vec![0.0; n * n];
+        for i in 0..n {
+            id[i * n + i] = 1.0;
+        }
+        id
+    } else {
+        Vec::new()
+    };
+
+    let idx = |i: usize, j: usize| i * n + j;
+    let off = |a: &[f64]| -> f64 {
+        let mut s = 0.0;
+        for i in 0..n {
+            for j in 0..n {
+                if i != j {
+                    s += a[idx(i, j)] * a[idx(i, j)];
+                }
+            }
+        }
+        s
+    };
+
+    let mut sweeps = 0;
+    while off(&a) > 1e-22 * n as f64 && sweeps < 100 {
+        sweeps += 1;
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = a[idx(p, q)];
+                if apq.abs() < 1e-300 {
+                    continue;
+                }
+                let app = a[idx(p, p)];
+                let aqq = a[idx(q, q)];
+                let theta = (aqq - app) / (2.0 * apq);
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                // Rotate rows/cols p and q.
+                for k in 0..n {
+                    let akp = a[idx(k, p)];
+                    let akq = a[idx(k, q)];
+                    a[idx(k, p)] = c * akp - s * akq;
+                    a[idx(k, q)] = s * akp + c * akq;
+                }
+                for k in 0..n {
+                    let apk = a[idx(p, k)];
+                    let aqk = a[idx(q, k)];
+                    a[idx(p, k)] = c * apk - s * aqk;
+                    a[idx(q, k)] = s * apk + c * aqk;
+                }
+                if want_vectors {
+                    for k in 0..n {
+                        let vkp = v[idx(k, p)];
+                        let vkq = v[idx(k, q)];
+                        v[idx(k, p)] = c * vkp - s * vkq;
+                        v[idx(k, q)] = s * vkp + c * vkq;
+                    }
+                }
+            }
+        }
+    }
+
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&i, &j| a[idx(i, i)].partial_cmp(&a[idx(j, j)]).unwrap());
+    let evals: Vec<f64> = order.iter().map(|&i| a[idx(i, i)]).collect();
+    let evecs = if want_vectors {
+        Some(
+            order
+                .iter()
+                .map(|&col| (0..n).map(|r| v[idx(r, col)]).collect())
+                .collect(),
+        )
+    } else {
+        None
+    };
+    (evals, evecs)
+}
+
+/// Eigenvalues of a symmetric tridiagonal matrix given diagonal `d` and
+/// off-diagonal `e` (len n-1), via Jacobi on the dense embedding. Used
+/// for the small projected matrices produced by Lanczos.
+pub fn tridiag_eigenvalues(d: &[f64], e: &[f64]) -> Vec<f64> {
+    let n = d.len();
+    assert_eq!(e.len(), n.saturating_sub(1));
+    let mut a = vec![vec![0.0; n]; n];
+    for i in 0..n {
+        a[i][i] = d[i];
+        if i + 1 < n {
+            a[i][i + 1] = e[i];
+            a[i + 1][i] = e[i];
+        }
+    }
+    jacobi_eigen(&a, false).0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn two_by_two_exact() {
+        let a = vec![vec![2.0, 1.0], vec![1.0, 2.0]];
+        let (ev, vecs) = jacobi_eigen(&a, true);
+        assert!((ev[0] - 1.0).abs() < 1e-12);
+        assert!((ev[1] - 3.0).abs() < 1e-12);
+        let v = vecs.unwrap();
+        // eigenvector for lambda=1 is (1,-1)/sqrt2 up to sign
+        let ratio = v[0][0] / v[0][1];
+        assert!((ratio + 1.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn laplacian_eigenvalues_match_closed_form() {
+        // 1D Dirichlet Laplacian: lambda_k = 2 - 2 cos(k pi / (n+1)).
+        let n = 12;
+        let mut a = vec![vec![0.0; n]; n];
+        for i in 0..n {
+            a[i][i] = 2.0;
+            if i + 1 < n {
+                a[i][i + 1] = -1.0;
+                a[i + 1][i] = -1.0;
+            }
+        }
+        let (ev, _) = jacobi_eigen(&a, false);
+        for (k, &l) in ev.iter().enumerate() {
+            let exact = 2.0 - 2.0 * ((k + 1) as f64 * std::f64::consts::PI / (n as f64 + 1.0)).cos();
+            assert!((l - exact).abs() < 1e-10, "k={k}: {l} vs {exact}");
+        }
+    }
+
+    #[test]
+    fn eigenvectors_satisfy_av_equals_lv() {
+        let a = vec![
+            vec![4.0, 1.0, 0.5],
+            vec![1.0, 3.0, -0.2],
+            vec![0.5, -0.2, 1.0],
+        ];
+        let (ev, vecs) = jacobi_eigen(&a, true);
+        let v = vecs.unwrap();
+        for (k, vec_k) in v.iter().enumerate() {
+            for i in 0..3 {
+                let av: f64 = (0..3).map(|j| a[i][j] * vec_k[j]).sum();
+                assert!((av - ev[k] * vec_k[i]).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn tridiag_helper() {
+        let d = vec![2.0, 2.0, 2.0];
+        let e = vec![-1.0, -1.0];
+        let ev = tridiag_eigenvalues(&d, &e);
+        let s = std::f64::consts::SQRT_2;
+        assert!((ev[0] - (2.0 - s)).abs() < 1e-10);
+        assert!((ev[1] - 2.0).abs() < 1e-10);
+        assert!((ev[2] - (2.0 + s)).abs() < 1e-10);
+    }
+}

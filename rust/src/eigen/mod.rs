@@ -1,0 +1,8 @@
+//! Eigensolvers: the Lanczos iteration driving SpMV (the paper's
+//! motivating application) and a dense Jacobi reference oracle.
+
+pub mod dense;
+pub mod lanczos;
+
+pub use dense::{jacobi_eigen, tridiag_eigenvalues};
+pub use lanczos::{inverse_shifted_power, lanczos, LanczosConfig, LanczosResult, LinearOp};

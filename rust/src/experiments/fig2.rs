@@ -1,0 +1,173 @@
+//! Fig 2 (and Table 1): cycles per element update of the basic sparse
+//! vector operations at strides k = 1 (dense packing), k = 8 (one entry
+//! per cache line) and k = 530 (one entry per memory page, chosen odd to
+//! avoid cache trashing), on all three simulated machines plus real host
+//! wall-clock.
+//!
+//! Paper shapes to reproduce:
+//! - indirect addressing (IS) costs ~50% over direct constant stride (CS)
+//!   at dense packing (extra 4 B/iter for the index vector);
+//! - k = 8 drops performance by ~the cache-line factor (whole line per
+//!   useful element);
+//! - k = 530 adds a TLB penalty on top.
+
+use crate::kernels::{IndexPattern, MicroBuffers, MicroOp, OpKind};
+use crate::simulator::{simulate_microbench, SimOptions};
+use crate::util::bench;
+use crate::util::report::{f, Table};
+
+use super::ExpOptions;
+
+/// Ops of Table 1 for a given stride class.
+fn ops_for(k: usize) -> Vec<MicroOp> {
+    if k == 1 {
+        vec![
+            MicroOp { kind: OpKind::Add, pattern: IndexPattern::Dense },
+            MicroOp { kind: OpKind::Scp, pattern: IndexPattern::Dense },
+            MicroOp { kind: OpKind::Add, pattern: IndexPattern::IndexedStride(1) },
+            MicroOp { kind: OpKind::Scp, pattern: IndexPattern::IndexedStride(1) },
+            MicroOp { kind: OpKind::Add, pattern: IndexPattern::Geometric { mean: 1.0 } },
+            MicroOp { kind: OpKind::Scp, pattern: IndexPattern::Geometric { mean: 1.0 } },
+        ]
+    } else {
+        vec![
+            MicroOp { kind: OpKind::Add, pattern: IndexPattern::ConstStride(k) },
+            MicroOp { kind: OpKind::Scp, pattern: IndexPattern::ConstStride(k) },
+            MicroOp { kind: OpKind::Add, pattern: IndexPattern::IndexedStride(k) },
+            MicroOp { kind: OpKind::Scp, pattern: IndexPattern::IndexedStride(k) },
+            MicroOp { kind: OpKind::Add, pattern: IndexPattern::Geometric { mean: k as f64 } },
+            MicroOp { kind: OpKind::Scp, pattern: IndexPattern::Geometric { mean: k as f64 } },
+        ]
+    }
+}
+
+pub fn run(opts: &ExpOptions) -> Vec<Table> {
+    let n = opts.micro_iters();
+    let sim_opts = SimOptions { warmup: false, ..Default::default() };
+    let mut tables = Vec::new();
+
+    for &k in &[1usize, 8, 530] {
+        let title = format!(
+            "Fig 2 — basic sparse ops, stride k={k} ({}): cycles per update",
+            match k {
+                1 => "dense packing",
+                8 => "one entry per cache line",
+                _ => "one entry per page",
+            }
+        );
+        let mut header: Vec<String> = vec!["op".into()];
+        header.extend(opts.machines.iter().map(|m| format!("{} (sim)", m.name)));
+        header.push("host ns/upd".into());
+        let href: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+        let mut t = Table::new(&title, &href);
+
+        // B array sized so gathers exceed every LLC.
+        let b_len = (n * k.max(1) * 2).max(4 << 20);
+        for op in ops_for(k) {
+            let mut row = vec![op.name()];
+            for m in &opts.machines {
+                let r = simulate_microbench(m, op, n, b_len, &sim_opts, 42);
+                row.push(f(r.cycles_per_update));
+            }
+            // Host wall-clock (ns/update; the host CPU is not one of the
+            // paper's machines — shape comparison only).
+            let bufs = MicroBuffers::new(op, n, b_len, 42);
+            let b = if opts.quick { bench::Bench::quick() } else { bench::default_bench() };
+            let res = b.run(&op.name(), n as u64, op.flops_per_iter() * n as u64, || bufs.run());
+            row.push(f(res.ns_per_item()));
+            t.row(row);
+        }
+        tables.push(t);
+    }
+    tables
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simulator::MachineSpec;
+
+    fn cycles(m: &MachineSpec, op: MicroOp, n: usize, blen: usize) -> f64 {
+        simulate_microbench(m, op, n, blen, &SimOptions { warmup: false, ..Default::default() }, 42).cycles_per_update
+    }
+
+    #[test]
+    fn indirect_overhead_is_moderate_at_unit_stride() {
+        // ISADD(k=1) vs dense ADD: the index array adds 4 B to 8 B per
+        // iteration -> ~50% more traffic (paper: "overhead of around 50%
+        // for ISADD").
+        let m = MachineSpec::woodcrest();
+        let n = 50_000;
+        let blen = 4 << 20;
+        let dense = cycles(&m, MicroOp { kind: OpKind::Add, pattern: IndexPattern::Dense }, n, blen);
+        let is1 = cycles(
+            &m,
+            MicroOp { kind: OpKind::Add, pattern: IndexPattern::IndexedStride(1) },
+            n,
+            blen,
+        );
+        let ratio = is1 / dense;
+        assert!(
+            (1.2..2.2).contains(&ratio),
+            "ISADD/PDADD ratio {ratio:.2}, expected ~1.5"
+        );
+    }
+
+    #[test]
+    fn cacheline_stride_is_much_slower() {
+        let m = MachineSpec::nehalem();
+        let n = 50_000;
+        let k1 = cycles(
+            &m,
+            MicroOp { kind: OpKind::Scp, pattern: IndexPattern::IndexedStride(1) },
+            n,
+            4 << 20,
+        );
+        let k8 = cycles(
+            &m,
+            MicroOp { kind: OpKind::Scp, pattern: IndexPattern::IndexedStride(8) },
+            n,
+            8 << 20,
+        );
+        assert!(k8 > 3.0 * k1, "k=8 {k8:.1} should be >> k=1 {k1:.1}");
+    }
+
+    #[test]
+    fn page_stride_adds_tlb_penalty() {
+        let m = MachineSpec::woodcrest();
+        let n = 30_000;
+        let k512 = cycles(
+            &m,
+            MicroOp { kind: OpKind::Scp, pattern: IndexPattern::IndexedStride(512) },
+            n,
+            64 << 20,
+        );
+        let k530 = cycles(
+            &m,
+            MicroOp { kind: OpKind::Scp, pattern: IndexPattern::IndexedStride(530) },
+            n,
+            64 << 20,
+        );
+        // 530 elements * 8 B > page: every access a new page -> TLB bound;
+        // 512 is page-aligned power of two (cache trashing) — both slow,
+        // and much slower than a cache-line stride.
+        let k8 = cycles(
+            &m,
+            MicroOp { kind: OpKind::Scp, pattern: IndexPattern::IndexedStride(8) },
+            n,
+            8 << 20,
+        );
+        assert!(k530 > 1.5 * k8, "k=530 {k530:.1} vs k=8 {k8:.1}");
+        assert!(k512 > 1.5 * k8, "k=512 {k512:.1} vs k=8 {k8:.1}");
+    }
+
+    #[test]
+    fn driver_emits_three_tables() {
+        let opts = ExpOptions { quick: true, ..Default::default() };
+        let tables = run(&opts);
+        assert_eq!(tables.len(), 3);
+        for t in &tables {
+            assert_eq!(t.rows.len(), 6);
+        }
+    }
+}

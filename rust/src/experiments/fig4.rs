@@ -1,0 +1,105 @@
+//! Fig 4 — IRSCP with Gaussian-distributed strides: mean and variance
+//! controlled independently, allowing backward jumps at large variance.
+//! Paper shapes: the ISSCP spike structure reappears at small variance;
+//! stride jitter has minor effect; the geometric-distribution "bulge" is
+//! absent; performance decreases smoothly with mean stride (Nehalem shows
+//! no fine structure at all).
+
+use crate::kernels::{IndexPattern, MicroOp, OpKind};
+use crate::simulator::{simulate_microbench, SimOptions};
+use crate::util::report::{f, Table};
+
+use super::ExpOptions;
+
+pub fn means(quick: bool) -> Vec<usize> {
+    if quick {
+        vec![1, 8, 64]
+    } else {
+        vec![1, 2, 4, 8, 16, 32, 64, 128, 256, 512]
+    }
+}
+
+pub fn variances(quick: bool) -> Vec<f64> {
+    if quick {
+        vec![0.0, 64.0]
+    } else {
+        vec![0.0, 1.0, 4.0, 16.0, 64.0, 256.0, 1024.0, 4096.0, 16384.0]
+    }
+}
+
+pub fn run(opts: &ExpOptions) -> Vec<Table> {
+    let n = opts.micro_iters();
+    let sim = SimOptions { warmup: false, ..Default::default() };
+    let mut tables = Vec::new();
+    for m in &opts.machines {
+        // The paper shows Woodcrest (rich structure) and reports Nehalem
+        // as smooth; we emit the grid for every requested machine.
+        let title = format!(
+            "Fig 4 — IRSCP Gaussian strides on {}: cycles/update (rows: mean, cols: variance)",
+            m.name
+        );
+        let vars = variances(opts.quick);
+        let mut header: Vec<String> = vec!["mean\\var".into()];
+        header.extend(vars.iter().map(|v| format!("{v}")));
+        let href: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+        let mut t = Table::new(&title, &href);
+        for &mean in &means(opts.quick) {
+            let mut row = vec![mean.to_string()];
+            for &var in &vars {
+                let op = MicroOp {
+                    kind: OpKind::Scp,
+                    pattern: IndexPattern::Gaussian { mean: mean as f64, variance: var },
+                };
+                let b_len = (n * mean * 2).max(8 << 20);
+                let r = simulate_microbench(m, op, n, b_len, &sim, 42);
+                row.push(f(r.cycles_per_update));
+            }
+            t.row(row);
+        }
+        tables.push(t);
+    }
+    tables
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simulator::MachineSpec;
+
+    fn gauss(mean: f64, var: f64) -> MicroOp {
+        MicroOp { kind: OpKind::Scp, pattern: IndexPattern::Gaussian { mean, variance: var } }
+    }
+
+    #[test]
+    fn performance_decreases_with_mean_stride() {
+        let m = MachineSpec::nehalem();
+        let n = 30_000;
+        let c1 = simulate_microbench(&m, gauss(1.0, 4.0), n, 8 << 20, &SimOptions { warmup: false, ..Default::default() }, 1);
+        let c64 = simulate_microbench(&m, gauss(64.0, 4.0), n, 32 << 20, &SimOptions { warmup: false, ..Default::default() }, 1);
+        assert!(
+            c64.cycles_per_update > 2.0 * c1.cycles_per_update,
+            "mean 64 {:.1} vs mean 1 {:.1}",
+            c64.cycles_per_update,
+            c1.cycles_per_update
+        );
+    }
+
+    #[test]
+    fn small_variance_jitter_has_minor_effect() {
+        // Paper: "the stride jitter has only a minor effect".
+        let m = MachineSpec::woodcrest();
+        let n = 30_000;
+        let a = simulate_microbench(&m, gauss(16.0, 0.0), n, 16 << 20, &SimOptions { warmup: false, ..Default::default() }, 1);
+        let b = simulate_microbench(&m, gauss(16.0, 4.0), n, 16 << 20, &SimOptions { warmup: false, ..Default::default() }, 1);
+        let rel = (a.cycles_per_update - b.cycles_per_update).abs() / a.cycles_per_update;
+        assert!(rel < 0.35, "jitter effect {rel:.2} too large");
+    }
+
+    #[test]
+    fn driver_emits_one_table_per_machine() {
+        let opts = ExpOptions { quick: true, ..Default::default() };
+        let tables = run(&opts);
+        assert_eq!(tables.len(), 3);
+        assert_eq!(tables[0].rows.len(), means(true).len());
+    }
+}

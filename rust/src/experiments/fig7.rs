@@ -1,0 +1,139 @@
+//! Fig 7 — block-size dependence of serial SpMVM performance for the
+//! blocked JDS schemes (NBJDS, RBJDS, SOJDS), with CRS / JDS / NUJDS as
+//! horizontal reference lines.
+//!
+//! Paper shapes: each blocked scheme has an optimal block-size plateau;
+//! RBJDS and SOJDS have a *wider* range of good block sizes than NBJDS
+//! (their storage stays contiguous under blocking); at the optimum none
+//! of them beats CRS.
+
+use crate::kernels::SpmvKernel;
+use crate::matrix::{Crs, Scheme};
+use crate::sched::Schedule;
+use crate::simulator::{simulate_spmv, MachineSpec, Placement, SimOptions};
+use crate::util::report::{f, Table};
+
+use super::ExpOptions;
+
+pub fn blocks(quick: bool, nrows: usize) -> Vec<usize> {
+    let mut v = if quick {
+        vec![8, 64, 512]
+    } else {
+        vec![16, 64, 256, 1000, 4096, 16384, 65536, 262144]
+    };
+    v.retain(|&b| b <= nrows.max(16));
+    v.push(nrows); // block = N  ==  plain JDS limit
+    v
+}
+
+fn serial_mflops(m: &MachineSpec, k: &SpmvKernel) -> f64 {
+    simulate_spmv(
+        m,
+        k,
+        1,
+        1,
+        Schedule::Static { chunk: None },
+        Placement::FirstTouchStatic,
+        &SimOptions::default(),
+    )
+    .mflops
+}
+
+pub fn run(opts: &ExpOptions) -> Vec<Table> {
+    let coo = opts.test_matrix();
+    let crs = Crs::from_coo(&coo);
+    let machines: Vec<&MachineSpec> = opts
+        .machines
+        .iter()
+        .filter(|m| m.name != "Shanghai" || opts.full) // paper: Shanghai ~ Nehalem
+        .collect();
+    let mut tables = Vec::new();
+
+    for m in machines {
+        let mut t = Table::new(
+            &format!("Fig 7 — block-size dependence on {} (serial MFlop/s)", m.name),
+            &["block", "NBJDS", "RBJDS", "SOJDS"],
+        );
+        for &b in &blocks(opts.quick, crs.nrows) {
+            let nb = SpmvKernel::build_from_crs(&crs, Scheme::NbJds { block: b });
+            let rb = SpmvKernel::build_from_crs(&crs, Scheme::RbJds { block: b });
+            let so = SpmvKernel::build_from_crs(&crs, Scheme::SoJds { block: b });
+            t.row(vec![
+                b.to_string(),
+                f(serial_mflops(m, &nb)),
+                f(serial_mflops(m, &rb)),
+                f(serial_mflops(m, &so)),
+            ]);
+        }
+        // Reference lines.
+        let mut t2 = Table::new(
+            &format!("Fig 7 — unblocked references on {}", m.name),
+            &["scheme", "MFlop/s"],
+        );
+        for s in [Scheme::Crs, Scheme::Jds, Scheme::NuJds { unroll: 2 }] {
+            let k = SpmvKernel::build_from_crs(&crs, s);
+            t2.row(vec![s.name(), f(serial_mflops(m, &k))]);
+        }
+        tables.push(t);
+        tables.push(t2);
+    }
+    tables
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen;
+
+    #[test]
+    fn optimal_block_beats_extremes_for_nbjds() {
+        // A mid-size block must beat both block=tiny (loop overhead) and
+        // block=N (plain JDS: result vector streamed once per diagonal).
+        let coo = gen::holstein_hubbard(&gen::HolsteinHubbardParams {
+            max_phonons: 3,
+            ..gen::HolsteinHubbardParams::paper()
+        });
+        let crs = Crs::from_coo(&coo);
+        let m = MachineSpec::nehalem();
+        let perf = |b: usize| {
+            let k = SpmvKernel::build_from_crs(&crs, Scheme::NbJds { block: b });
+            serial_mflops(&m, &k)
+        };
+        let tiny = perf(4);
+        let mid = perf(1000);
+        let huge = perf(crs.nrows);
+        assert!(mid > tiny, "block 1000 ({mid:.0}) must beat block 4 ({tiny:.0})");
+        assert!(mid > huge, "block 1000 ({mid:.0}) must beat block N ({huge:.0})");
+    }
+
+    #[test]
+    fn rbjds_tolerates_small_blocks_better_than_nbjds() {
+        // RBJDS keeps val/col contiguous even for small blocks, so its
+        // small-block penalty must be smaller than NBJDS's (wider
+        // plateau, Fig 7).
+        let coo = gen::holstein_hubbard(&gen::HolsteinHubbardParams {
+            max_phonons: 3,
+            ..gen::HolsteinHubbardParams::paper()
+        });
+        let crs = Crs::from_coo(&coo);
+        let m = MachineSpec::nehalem();
+        let perf = |s: Scheme| serial_mflops(&m, &SpmvKernel::build_from_crs(&crs, s));
+        let nb_small = perf(Scheme::NbJds { block: 16 });
+        let nb_best = perf(Scheme::NbJds { block: 1000 });
+        let rb_small = perf(Scheme::RbJds { block: 16 });
+        let rb_best = perf(Scheme::RbJds { block: 1000 });
+        let nb_drop = nb_best / nb_small;
+        let rb_drop = rb_best / rb_small;
+        assert!(
+            rb_drop < nb_drop,
+            "RBJDS small-block drop {rb_drop:.2} must be smaller than NBJDS {nb_drop:.2}"
+        );
+    }
+
+    #[test]
+    fn driver_quick() {
+        let opts = ExpOptions { quick: true, ..Default::default() };
+        let tables = run(&opts);
+        assert!(tables.len() >= 4);
+    }
+}

@@ -1,0 +1,184 @@
+//! Fig 8 — OpenMP-parallel SpMVM: intra-socket and inter-socket scaling
+//! on the three x86 machines, plus HLRB-II node scaling.
+//!
+//! Paper shapes: Nehalem/Shanghai scale up to ~3 threads/socket (then the
+//! socket bandwidth saturates); a second Woodcrest thread per socket buys
+//! nothing; the second Woodcrest socket buys only ~50% (FSB); ccNUMA
+//! nodes scale ~2x across sockets with first-touch placement; Nehalem ≈
+//! 2x Shanghai. HLRB-II: superlinear speedup once the per-thread
+//! partition fits the aggregated L3, and NBJDS overtakes CRS at large
+//! thread counts (short inner loops hurt the in-order Itanium2).
+
+use crate::kernels::SpmvKernel;
+use crate::matrix::{Crs, Scheme};
+use crate::sched::Schedule;
+use crate::simulator::{simulate_spmv, MachineSpec, Placement, SimOptions};
+use crate::util::report::{f, Table};
+
+use super::ExpOptions;
+
+fn mflops(
+    m: &MachineSpec,
+    k: &SpmvKernel,
+    tps: usize,
+    sockets: usize,
+) -> f64 {
+    simulate_spmv(
+        m,
+        k,
+        tps,
+        sockets,
+        Schedule::Static { chunk: None },
+        Placement::FirstTouchStatic,
+        &SimOptions::default(),
+    )
+    .mflops
+}
+
+pub fn run(opts: &ExpOptions) -> Vec<Table> {
+    let coo = opts.test_matrix();
+    let crs = Crs::from_coo(&coo);
+    let block = if opts.quick { 64 } else { 1000 };
+    let k_crs = SpmvKernel::build_from_crs(&crs, Scheme::Crs);
+    let k_nb = SpmvKernel::build_from_crs(&crs, Scheme::NbJds { block });
+    let mut tables = Vec::new();
+
+    // --- x86 machines: threads/socket × sockets ---
+    for m in &opts.machines {
+        let mut t = Table::new(
+            &format!(
+                "Fig 8 — OpenMP scaling on {} (static, block {block}): MFlop/s",
+                m.name
+            ),
+            &["sockets", "threads/socket", "CRS", "NBJDS", "CRS speedup"],
+        );
+        let base = mflops(m, &k_crs, 1, 1);
+        let tps_list: Vec<usize> = (1..=m.cores_per_socket).collect();
+        for sockets in 1..=m.sockets.min(2) {
+            for &tps in &tps_list {
+                let c = mflops(m, &k_crs, tps, sockets);
+                let n = mflops(m, &k_nb, tps, sockets);
+                t.row(vec![
+                    sockets.to_string(),
+                    tps.to_string(),
+                    f(c),
+                    f(n),
+                    f(c / base),
+                ]);
+            }
+        }
+        tables.push(t);
+    }
+
+    // --- HLRB-II node scaling (2 threads per locality domain) ---
+    let thread_counts: Vec<usize> = if opts.quick {
+        vec![2, 8]
+    } else {
+        vec![2, 4, 8, 16, 32, 64, 128]
+    };
+    let mut t = Table::new(
+        "Fig 8 (lower right) — HLRB-II node: measured vs ideal speedup",
+        &["threads", "CRS MFlop/s", "NBJDS MFlop/s", "CRS speedup", "ideal"],
+    );
+    let domains_max = thread_counts.iter().max().copied().unwrap_or(2) / 2;
+    let hlrb = MachineSpec::hlrb2(domains_max.max(1));
+    let base_crs = mflops(&hlrb, &k_crs, 2, 1) / 2.0; // per-thread baseline
+    for &threads in &thread_counts {
+        let sockets = (threads / 2).max(1);
+        let tps = if threads >= 2 { 2 } else { 1 };
+        let c = mflops(&hlrb, &k_crs, tps, sockets);
+        let n = mflops(&hlrb, &k_nb, tps, sockets);
+        t.row(vec![
+            threads.to_string(),
+            f(c),
+            f(n),
+            f(c / base_crs),
+            f(threads as f64),
+        ]);
+    }
+    tables.push(t);
+    tables
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen;
+    use std::sync::OnceLock;
+
+    fn medium_crs() -> &'static Crs {
+        static CRS: OnceLock<Crs> = OnceLock::new();
+        CRS.get_or_init(|| {
+            Crs::from_coo(&gen::holstein_hubbard(&gen::HolsteinHubbardParams {
+                max_phonons: 4, // 84k rows, ~1.1M nnz
+                ..gen::HolsteinHubbardParams::paper()
+            }))
+        })
+    }
+
+    #[test]
+    fn nehalem_roughly_twice_shanghai_full_node() {
+        let k = SpmvKernel::build_from_crs(medium_crs(), Scheme::Crs);
+        let neh = mflops(&MachineSpec::nehalem(), &k, 4, 2);
+        let sha = mflops(&MachineSpec::shanghai(), &k, 4, 2);
+        let ratio = neh / sha;
+        assert!(
+            (1.4..2.6).contains(&ratio),
+            "Nehalem/Shanghai full-node ratio {ratio:.2}, paper says ~2"
+        );
+    }
+
+    #[test]
+    fn woodcrest_second_thread_gains_nothing() {
+        let k = SpmvKernel::build_from_crs(medium_crs(), Scheme::Crs);
+        let m = MachineSpec::woodcrest();
+        let one = mflops(&m, &k, 1, 1);
+        let two = mflops(&m, &k, 2, 1);
+        assert!(
+            two < 1.15 * one,
+            "Woodcrest 2nd thread: {one:.0} -> {two:.0} should be flat"
+        );
+    }
+
+    #[test]
+    fn woodcrest_second_socket_gains_about_half() {
+        let k = SpmvKernel::build_from_crs(medium_crs(), Scheme::Crs);
+        let m = MachineSpec::woodcrest();
+        let one = mflops(&m, &k, 2, 1);
+        let two = mflops(&m, &k, 2, 2);
+        let gain = two / one;
+        assert!(
+            (1.2..1.8).contains(&gain),
+            "Woodcrest socket scaling {gain:.2}, paper says ~1.5"
+        );
+    }
+
+    #[test]
+    fn hlrb2_superlinear_and_nbjds_wins_at_scale() {
+        // With enough threads the matrix partitions fit the Itanium L3s:
+        // superlinear CRS speedup; and NBJDS (long loops) must overtake
+        // CRS (short loops, heavy in-order loop startup) at high counts.
+        let k_crs = SpmvKernel::build_from_crs(medium_crs(), Scheme::Crs);
+        let k_nb = SpmvKernel::build_from_crs(medium_crs(), Scheme::NbJds { block: 1000 });
+        let m = MachineSpec::hlrb2(32);
+        let base = mflops(&m, &k_crs, 2, 1);
+        let crs64 = mflops(&m, &k_crs, 2, 32);
+        let nb64 = mflops(&m, &k_nb, 2, 32);
+        let speedup = crs64 / base * 2.0; // threads: 2 -> 64
+        assert!(
+            speedup > 32.0,
+            "CRS speedup at 64 threads {speedup:.1} should be superlinear-ish (>32)"
+        );
+        assert!(
+            nb64 > crs64,
+            "NBJDS {nb64:.0} must dominate CRS {crs64:.0} at large thread counts"
+        );
+    }
+
+    #[test]
+    fn driver_quick() {
+        let opts = ExpOptions { quick: true, ..Default::default() };
+        let tables = run(&opts);
+        assert_eq!(tables.len(), 4); // 3 machines + HLRB-II
+    }
+}

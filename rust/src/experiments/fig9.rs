@@ -1,0 +1,157 @@
+//! Fig 9 — scheduling policy, chunk size and block size interplay for
+//! 2×4 threads on Nehalem.
+//!
+//! Paper shapes: static scheduling with the CRS format is best overall;
+//! chunks smaller than a memory page randomize first-touch placement and
+//! are hazardous; dynamic/guided scheduling disrupts NUMA locality; large
+//! blocks × large chunks underutilize threads (too few chunks).
+
+use crate::kernels::SpmvKernel;
+use crate::matrix::{Crs, Scheme};
+use crate::sched::Schedule;
+use crate::simulator::{simulate_spmv, MachineSpec, Placement, SimOptions};
+use crate::util::report::{f, Table};
+
+use super::ExpOptions;
+
+pub fn chunks(quick: bool) -> Vec<usize> {
+    if quick {
+        vec![16, 1024]
+    } else {
+        vec![16, 128, 512, 2048, 8192, 32768]
+    }
+}
+
+fn mflops(m: &MachineSpec, k: &SpmvKernel, schedule: Schedule) -> f64 {
+    simulate_spmv(
+        m,
+        k,
+        m.cores_per_socket,
+        2,
+        schedule,
+        Placement::FirstTouchStatic,
+        &SimOptions::default(),
+    )
+    .mflops
+}
+
+pub fn run(opts: &ExpOptions) -> Vec<Table> {
+    let coo = opts.test_matrix();
+    let crs = Crs::from_coo(&coo);
+    let m = MachineSpec::nehalem();
+    let mut tables = Vec::new();
+    let blocks: Vec<usize> = if opts.quick {
+        vec![64]
+    } else {
+        vec![128, 1000, 8192, 65536]
+    };
+
+    // CRS: schedule × chunk.
+    let ch = chunks(opts.quick);
+    let mut header: Vec<String> = vec!["schedule".into()];
+    header.extend(ch.iter().map(|c| format!("chunk {c}")));
+    let href: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(
+        "Fig 9 — CRS on Nehalem 2x4 threads: MFlop/s by schedule and chunk",
+        &href,
+    );
+    let k_crs = SpmvKernel::build_from_crs(&crs, Scheme::Crs);
+    let default = mflops(&m, &k_crs, Schedule::Static { chunk: None });
+    t.row({
+        let mut r = vec!["static(default)".to_string()];
+        r.extend(std::iter::repeat_n(f(default), ch.len()));
+        r
+    });
+    for (name, mk) in [
+        ("static", Box::new(|c: usize| Schedule::Static { chunk: Some(c) }) as Box<dyn Fn(usize) -> Schedule>),
+        ("dynamic", Box::new(|c: usize| Schedule::Dynamic { chunk: c })),
+        ("guided", Box::new(|c: usize| Schedule::Guided { min_chunk: c })),
+    ] {
+        let mut row = vec![name.to_string()];
+        for &c in &ch {
+            row.push(f(mflops(&m, &k_crs, mk(c))));
+        }
+        t.row(row);
+    }
+    tables.push(t);
+
+    // Blocked JDS flavors: block × chunk under static scheduling (the
+    // paper's per-scheme heatmap panels).
+    for scheme_name in ["NBJDS", "RBJDS", "SOJDS"] {
+        let mut header: Vec<String> = vec!["block".into()];
+        header.extend(ch.iter().map(|c| format!("chunk {c}")));
+        header.push("static(default)".into());
+        let href: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+        let mut t = Table::new(
+            &format!("Fig 9 — {scheme_name} on Nehalem 2x4 threads: MFlop/s by block and static chunk"),
+            &href,
+        );
+        for &b in &blocks {
+            let scheme = match scheme_name {
+                "NBJDS" => Scheme::NbJds { block: b },
+                "RBJDS" => Scheme::RbJds { block: b },
+                _ => Scheme::SoJds { block: b },
+            };
+            let k = SpmvKernel::build_from_crs(&crs, scheme);
+            let mut row = vec![b.to_string()];
+            for &c in &ch {
+                row.push(f(mflops(&m, &k, Schedule::Static { chunk: Some(c) })));
+            }
+            row.push(f(mflops(&m, &k, Schedule::Static { chunk: None })));
+            t.row(row);
+        }
+        tables.push(t);
+    }
+    tables
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen;
+    use std::sync::OnceLock;
+
+    fn medium_crs() -> &'static Crs {
+        static CRS: OnceLock<Crs> = OnceLock::new();
+        CRS.get_or_init(|| {
+            Crs::from_coo(&gen::holstein_hubbard(&gen::HolsteinHubbardParams {
+                max_phonons: 4,
+                ..gen::HolsteinHubbardParams::paper()
+            }))
+        })
+    }
+
+    #[test]
+    fn static_default_beats_dynamic_small_chunks() {
+        // Dynamic scheduling with small chunks disrupts NUMA locality.
+        let m = MachineSpec::nehalem();
+        let k = SpmvKernel::build_from_crs(medium_crs(), Scheme::Crs);
+        let stat = mflops(&m, &k, Schedule::Static { chunk: None });
+        let dyn_small = mflops(&m, &k, Schedule::Dynamic { chunk: 16 });
+        assert!(
+            stat > 1.1 * dyn_small,
+            "static {stat:.0} must beat dynamic,16 {dyn_small:.0}"
+        );
+    }
+
+    #[test]
+    fn sub_page_static_chunks_are_hazardous() {
+        // Chunks far below a page (512 rows x 8 B = 4 KiB) randomize
+        // placement: static,16 must trail static,{>=512}.
+        let m = MachineSpec::nehalem();
+        let k = SpmvKernel::build_from_crs(medium_crs(), Scheme::Crs);
+        let tiny = mflops(&m, &k, Schedule::Static { chunk: Some(16) });
+        let page = mflops(&m, &k, Schedule::Static { chunk: Some(4096) });
+        assert!(
+            page > 1.1 * tiny,
+            "page-sized chunks {page:.0} must beat sub-page {tiny:.0}"
+        );
+    }
+
+    #[test]
+    fn driver_quick() {
+        let opts = ExpOptions { quick: true, ..Default::default() };
+        let tables = run(&opts);
+        assert_eq!(tables.len(), 4);
+    }
+}

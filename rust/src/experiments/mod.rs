@@ -1,0 +1,139 @@
+//! Experiment drivers regenerating every figure of the paper's
+//! evaluation (see DESIGN.md §3 for the experiment index). Each driver
+//! returns text tables whose rows/series mirror the paper's plots; the
+//! CLI (`spmvperf experiment <id>`) prints them and can emit CSV, and the
+//! `cargo bench` targets wrap the same drivers.
+
+pub mod fig2;
+pub mod fig3;
+pub mod fig4;
+pub mod fig5;
+pub mod fig6;
+pub mod fig7;
+pub mod fig8;
+pub mod fig9;
+
+use anyhow::Result;
+
+use crate::gen::{self, HolsteinHubbardParams};
+use crate::matrix::Coo;
+use crate::simulator::MachineSpec;
+use crate::util::report::Table;
+
+/// Options shared by all experiment drivers.
+#[derive(Debug, Clone)]
+pub struct ExpOptions {
+    /// Paper-scale sizes (N = 1,201,200 Hamiltonian etc.). Default uses
+    /// scaled-down sizes that preserve the memory-bound regime.
+    pub full: bool,
+    /// Quick mode for CI/benches: tiny sizes, shapes only.
+    pub quick: bool,
+    /// Machines to include (defaults to the paper's x86 test bed).
+    pub machines: Vec<MachineSpec>,
+    /// Optional directory to drop one CSV per table into.
+    pub csv_dir: Option<String>,
+}
+
+impl Default for ExpOptions {
+    fn default() -> Self {
+        Self {
+            full: false,
+            quick: false,
+            machines: MachineSpec::all_x86(),
+            csv_dir: None,
+        }
+    }
+}
+
+impl ExpOptions {
+    /// Microbenchmark iteration count.
+    pub fn micro_iters(&self) -> usize {
+        if self.quick {
+            5_000
+        } else if self.full {
+            1_000_000
+        } else {
+            60_000
+        }
+    }
+
+    /// Parameters of the test matrix at the configured scale.
+    pub fn test_params(&self) -> HolsteinHubbardParams {
+        if self.full {
+            HolsteinHubbardParams::paper() // N = 1,201,200
+        } else if self.quick {
+            HolsteinHubbardParams::tiny() // N = 540
+        } else {
+            // N = 369,600 (~5 M nnz): vectors exceed every simulated LLC,
+            // like the paper's full-size Hamiltonian.
+            HolsteinHubbardParams::medium()
+        }
+    }
+
+    /// The paper's test matrix at the configured scale.
+    pub fn test_matrix(&self) -> Coo {
+        gen::holstein_hubbard(&self.test_params())
+    }
+
+    pub fn emit(&self, tables: &[Table]) -> Result<()> {
+        for t in tables {
+            t.print();
+            if let Some(dir) = &self.csv_dir {
+                let slug: String = t
+                    .title
+                    .chars()
+                    .map(|c| if c.is_alphanumeric() { c.to_ascii_lowercase() } else { '_' })
+                    .collect::<String>()
+                    .trim_matches('_')
+                    .chars()
+                    .take(60)
+                    .collect();
+                t.maybe_write_csv(Some(&format!("{dir}/{slug}.csv")))?;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Run an experiment by id ("fig2".."fig9", "all").
+pub fn run(id: &str, opts: &ExpOptions) -> Result<()> {
+    let ids: Vec<&str> = if id == "all" {
+        vec!["fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9"]
+    } else {
+        vec![id]
+    };
+    for id in ids {
+        eprintln!("== running experiment {id} ==");
+        let tables = match id {
+            "fig2" | "table1" => fig2::run(opts),
+            "fig3" | "fig3a" | "fig3b" => fig3::run(opts),
+            "fig4" => fig4::run(opts),
+            "fig5" => fig5::run(opts),
+            "fig6" | "fig6a" | "fig6b" => fig6::run(opts),
+            "fig7" => fig7::run(opts),
+            "fig8" => fig8::run(opts),
+            "fig9" => fig9::run(opts),
+            other => anyhow::bail!("unknown experiment '{other}'"),
+        };
+        opts.emit(&tables)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_options_pick_tiny_sizes() {
+        let o = ExpOptions { quick: true, ..Default::default() };
+        assert_eq!(o.micro_iters(), 5_000);
+        assert_eq!(o.test_matrix().nrows, 540);
+    }
+
+    #[test]
+    fn unknown_experiment_errors() {
+        let o = ExpOptions { quick: true, ..Default::default() };
+        assert!(run("fig99", &o).is_err());
+    }
+}

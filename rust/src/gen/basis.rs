@@ -1,0 +1,263 @@
+//! Combinatorial ranking/unranking utilities for many-body basis
+//! enumeration: fermion occupation bitmasks (fixed particle number) and
+//! truncated bosonic Fock configurations (total occupation bounded).
+
+/// Binomial coefficient table (Pascal's triangle), sized for the largest
+/// (n, k) needed. Values as u64 (dimensions here stay far below 2^63).
+#[derive(Debug, Clone)]
+pub struct Binomials {
+    n_max: usize,
+    c: Vec<u64>,
+}
+
+impl Binomials {
+    pub fn new(n_max: usize) -> Self {
+        let mut c = vec![0u64; (n_max + 1) * (n_max + 1)];
+        for n in 0..=n_max {
+            c[n * (n_max + 1)] = 1;
+            for k in 1..=n {
+                let up = (n - 1) * (n_max + 1);
+                c[n * (n_max + 1) + k] = c[up + k - 1]
+                    .checked_add(if k <= n - 1 { c[up + k] } else { 0 })
+                    .expect("binomial overflow");
+            }
+        }
+        Self { n_max, c }
+    }
+
+    #[inline]
+    pub fn get(&self, n: usize, k: usize) -> u64 {
+        if k > n || n > self.n_max {
+            return 0;
+        }
+        self.c[n * (self.n_max + 1) + k]
+    }
+}
+
+/// Enumeration of `n_bits`-bit masks with exactly `n_set` bits set, in
+/// lexicographic (numeric) order, with O(bits) rank/unrank.
+#[derive(Debug, Clone)]
+pub struct FermionBasis {
+    pub n_bits: usize,
+    pub n_set: usize,
+    bin: Binomials,
+}
+
+impl FermionBasis {
+    pub fn new(n_bits: usize, n_set: usize) -> Self {
+        assert!(n_set <= n_bits && n_bits <= 62);
+        Self { n_bits, n_set, bin: Binomials::new(n_bits) }
+    }
+
+    /// Number of states: C(n_bits, n_set).
+    pub fn len(&self) -> usize {
+        self.bin.get(self.n_bits, self.n_set) as usize
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Rank of a mask among all masks with the same popcount, numeric
+    /// ascending order (combinadic).
+    pub fn rank(&self, mask: u64) -> usize {
+        debug_assert_eq!(mask.count_ones() as usize, self.n_set);
+        let mut rank = 0u64;
+        let mut seen = 0usize; // set bits encountered so far (from LSB)
+        for b in 0..self.n_bits {
+            if mask >> b & 1 == 1 {
+                seen += 1;
+            } else if seen < self.n_set {
+                // A state with a set bit here (instead of a later one)
+                // would precede; count masks with (n_set - seen) bits
+                // among the remaining higher positions... handled via the
+                // standard combinadic formula below instead.
+            }
+        }
+        // Standard combinadic: mask = {p_1 < p_2 < ... < p_k} ranks as
+        // sum C(p_i, i).
+        let mut m = mask;
+        let mut i = 1usize;
+        while m != 0 {
+            let p = m.trailing_zeros() as usize;
+            rank += self.bin.get(p, i);
+            i += 1;
+            m &= m - 1;
+        }
+        let _ = seen;
+        rank as usize
+    }
+
+    /// Inverse of [`FermionBasis::rank`].
+    pub fn unrank(&self, mut rank: usize) -> u64 {
+        let mut mask = 0u64;
+        let mut k = self.n_set;
+        let mut r = rank as u64;
+        while k > 0 {
+            // Largest p with C(p, k) <= r.
+            let mut p = k - 1;
+            while self.bin.get(p + 1, k) <= r {
+                p += 1;
+            }
+            mask |= 1u64 << p;
+            r -= self.bin.get(p, k);
+            k -= 1;
+        }
+        rank = r as usize;
+        debug_assert_eq!(rank, 0);
+        mask
+    }
+}
+
+/// Truncated bosonic Fock basis: occupation vectors `(m_0..m_{sites-1})`
+/// with `sum m_i <= max_total`, ranked lexicographically (site 0 most
+/// significant). Dimension `C(sites + max_total, max_total)`.
+#[derive(Debug, Clone)]
+pub struct BosonBasis {
+    pub sites: usize,
+    pub max_total: usize,
+    bin: Binomials,
+}
+
+impl BosonBasis {
+    pub fn new(sites: usize, max_total: usize) -> Self {
+        Self { sites, max_total, bin: Binomials::new(sites + max_total) }
+    }
+
+    /// Number of configurations with total occupation <= budget over
+    /// `sites_left` sites: C(sites_left + budget, sites_left).
+    #[inline]
+    fn count(&self, sites_left: usize, budget: usize) -> u64 {
+        self.bin.get(sites_left + budget, sites_left)
+    }
+
+    pub fn len(&self) -> usize {
+        self.count(self.sites, self.max_total) as usize
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Rank of an occupation vector.
+    pub fn rank(&self, occ: &[usize]) -> usize {
+        debug_assert_eq!(occ.len(), self.sites);
+        let mut rank = 0u64;
+        let mut budget = self.max_total;
+        for (i, &m) in occ.iter().enumerate() {
+            debug_assert!(m <= budget, "occupation exceeds truncation");
+            let sites_left = self.sites - 1 - i;
+            // All configs with a smaller value at site i come first.
+            for v in 0..m {
+                rank += self.count(sites_left, budget - v);
+            }
+            budget -= m;
+        }
+        rank as usize
+    }
+
+    /// Inverse of [`BosonBasis::rank`]; writes into `occ`.
+    pub fn unrank(&self, mut rank: usize, occ: &mut [usize]) {
+        debug_assert_eq!(occ.len(), self.sites);
+        let mut budget = self.max_total;
+        for i in 0..self.sites {
+            let sites_left = self.sites - 1 - i;
+            let mut v = 0usize;
+            loop {
+                let block = self.count(sites_left, budget - v) as usize;
+                if rank < block {
+                    break;
+                }
+                rank -= block;
+                v += 1;
+            }
+            occ[i] = v;
+            budget -= v;
+        }
+        debug_assert_eq!(rank, 0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn binomials_basic() {
+        let b = Binomials::new(20);
+        assert_eq!(b.get(6, 3), 20);
+        assert_eq!(b.get(14, 8), 3003);
+        assert_eq!(b.get(0, 0), 1);
+        assert_eq!(b.get(5, 7), 0);
+        assert_eq!(b.get(20, 10), 184_756);
+    }
+
+    #[test]
+    fn fermion_rank_unrank_roundtrip() {
+        let fb = FermionBasis::new(6, 3);
+        assert_eq!(fb.len(), 20);
+        let mut masks: Vec<u64> = Vec::new();
+        for r in 0..fb.len() {
+            let m = fb.unrank(r);
+            assert_eq!(m.count_ones(), 3);
+            assert_eq!(fb.rank(m), r);
+            masks.push(m);
+        }
+        // ranks are in ascending numeric mask order
+        assert!(masks.windows(2).all(|w| w[0] < w[1]));
+        // all distinct
+        let mut s = masks.clone();
+        s.dedup();
+        assert_eq!(s.len(), 20);
+    }
+
+    #[test]
+    fn fermion_edge_cases() {
+        let all = FermionBasis::new(5, 5);
+        assert_eq!(all.len(), 1);
+        assert_eq!(all.unrank(0), 0b11111);
+        let none = FermionBasis::new(5, 0);
+        assert_eq!(none.len(), 1);
+        assert_eq!(none.unrank(0), 0);
+    }
+
+    #[test]
+    fn boson_rank_unrank_roundtrip() {
+        let bb = BosonBasis::new(3, 4);
+        assert_eq!(bb.len(), 35); // C(7,3)
+        let mut occ = vec![0usize; 3];
+        for r in 0..bb.len() {
+            bb.unrank(r, &mut occ);
+            assert!(occ.iter().sum::<usize>() <= 4);
+            assert_eq!(bb.rank(&occ), r);
+        }
+    }
+
+    #[test]
+    fn boson_paper_dimension() {
+        // The paper's phonon sector: 6 sites, <= 8 phonons -> C(14,8)=3003.
+        let bb = BosonBasis::new(6, 8);
+        assert_eq!(bb.len(), 3003);
+    }
+
+    #[test]
+    fn boson_lex_order() {
+        let bb = BosonBasis::new(2, 2);
+        // Lexicographic (site 0 major): (0,0),(0,1),(0,2),(1,0),(1,1),(2,0)
+        let expected: Vec<Vec<usize>> =
+            vec![vec![0, 0], vec![0, 1], vec![0, 2], vec![1, 0], vec![1, 1], vec![2, 0]];
+        let mut occ = vec![0; 2];
+        for (r, e) in expected.iter().enumerate() {
+            bb.unrank(r, &mut occ);
+            assert_eq!(&occ, e, "rank {r}");
+        }
+    }
+
+    #[test]
+    fn paper_total_dimension() {
+        // N = C(6,3)^2 * C(14,8) = 20 * 20 * 3003 = 1,201,200 (Fig 5).
+        let f = FermionBasis::new(6, 3);
+        let b = BosonBasis::new(6, 8);
+        assert_eq!(f.len() * f.len() * b.len(), 1_201_200);
+    }
+}

@@ -1,0 +1,10 @@
+//! Matrix generators: the paper's Holstein-Hubbard Hamiltonian
+//! ([`holstein_hubbard`]) built on combinatorial basis enumeration
+//! ([`basis`]), plus synthetic workloads ([`synthetic`]).
+
+pub mod basis;
+pub mod holstein_hubbard;
+pub mod synthetic;
+
+pub use holstein_hubbard::{holstein_hubbard, HolsteinHubbardParams};
+pub use synthetic::{banded, laplacian_1d, laplacian_2d, random_band, random_square};

@@ -1,0 +1,174 @@
+//! Auxiliary matrix generators: discrete Laplacians, banded matrices,
+//! and random matrices with controlled sparsity — workloads for the
+//! microbenchmarks and extra examples beyond the paper's Hamiltonian.
+
+use crate::matrix::Coo;
+use crate::util::rng::Rng;
+
+/// 2D 5-point Laplacian stencil on an `nx × ny` grid (Dirichlet
+/// boundaries): the classic PDE test matrix, dimension `nx*ny`.
+pub fn laplacian_2d(nx: usize, ny: usize) -> Coo {
+    let n = nx * ny;
+    let mut coo = Coo::with_capacity(n, n, 5 * n);
+    let idx = |i: usize, j: usize| i * ny + j;
+    for i in 0..nx {
+        for j in 0..ny {
+            let r = idx(i, j);
+            coo.push(r, r, 4.0);
+            if i > 0 {
+                coo.push(r, idx(i - 1, j), -1.0);
+            }
+            if i + 1 < nx {
+                coo.push(r, idx(i + 1, j), -1.0);
+            }
+            if j > 0 {
+                coo.push(r, idx(i, j - 1), -1.0);
+            }
+            if j + 1 < ny {
+                coo.push(r, idx(i, j + 1), -1.0);
+            }
+        }
+    }
+    coo.normalize();
+    coo
+}
+
+/// 1D Laplacian (tridiagonal), dimension `n`.
+pub fn laplacian_1d(n: usize) -> Coo {
+    let mut coo = Coo::with_capacity(n, n, 3 * n);
+    for i in 0..n {
+        coo.push(i, i, 2.0);
+        if i > 0 {
+            coo.push(i, i - 1, -1.0);
+        }
+        if i + 1 < n {
+            coo.push(i, i + 1, -1.0);
+        }
+    }
+    coo.normalize();
+    coo
+}
+
+/// Dense band matrix: all entries within `|i-j| <= half_bandwidth` filled
+/// with deterministic nonzeros (symmetric positive-ish values).
+pub fn banded(n: usize, half_bandwidth: usize, rng: &mut Rng) -> Coo {
+    let mut coo = Coo::new(n, n);
+    for i in 0..n {
+        let lo = i.saturating_sub(half_bandwidth);
+        let hi = (i + half_bandwidth).min(n - 1);
+        for j in lo..=hi {
+            if j >= i {
+                let v = if i == j { 4.0 } else { rng.f64() - 0.5 };
+                coo.push(i, j, v);
+                if j != i {
+                    coo.push(j, i, v);
+                }
+            }
+        }
+    }
+    coo.normalize();
+    coo
+}
+
+/// Random symmetric matrix with ~`nnz_per_row` non-zeros per row spread
+/// uniformly inside a band of half-width `half_bandwidth` (the "scattered
+/// band" component of the paper's Fig 5 structure, in isolation).
+pub fn random_band(n: usize, nnz_per_row: usize, half_bandwidth: usize, rng: &mut Rng) -> Coo {
+    let mut coo = Coo::new(n, n);
+    for i in 0..n {
+        coo.push(i, i, 2.0 + rng.f64());
+        // upper-triangle draws, mirrored
+        for _ in 0..nnz_per_row / 2 {
+            let span = half_bandwidth.min(n - 1 - i);
+            if span == 0 {
+                continue;
+            }
+            let j = i + 1 + rng.index(span);
+            let v = rng.f64() - 0.5;
+            coo.push(i, j, v);
+            coo.push(j, i, v);
+        }
+    }
+    coo.normalize();
+    coo
+}
+
+/// Random Erdős–Rényi-style square matrix (not symmetric): `nnz` entries
+/// uniformly at random. Used for format stress tests.
+pub fn random_square(n: usize, nnz: usize, rng: &mut Rng) -> Coo {
+    let mut coo = Coo::new(n, n);
+    for _ in 0..nnz {
+        coo.push(rng.index(n), rng.index(n), rng.f64() * 2.0 - 1.0);
+    }
+    coo.normalize();
+    coo
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::SpMv;
+
+    #[test]
+    fn laplacian_2d_structure() {
+        let m = laplacian_2d(4, 5);
+        assert_eq!(m.nrows, 20);
+        assert!(m.is_symmetric());
+        // interior rows have 5 entries
+        let counts = m.row_counts();
+        assert_eq!(*counts.iter().max().unwrap(), 5);
+        assert_eq!(*counts.iter().min().unwrap(), 3); // corners
+        // row sums: interior rows sum to 0, boundary rows > 0
+        let d = m.to_dense();
+        let sums: Vec<f64> = d.iter().map(|r| r.iter().sum()).collect();
+        assert!(sums.iter().all(|&s| s >= -1e-12));
+    }
+
+    #[test]
+    fn laplacian_1d_is_tridiagonal() {
+        let m = laplacian_1d(10);
+        assert_eq!(m.nnz(), 28);
+        assert!(m.is_symmetric());
+        for &(r, c, _) in &m.entries {
+            assert!((r as i64 - c as i64).abs() <= 1);
+        }
+    }
+
+    #[test]
+    fn banded_is_symmetric_with_bounded_band() {
+        let mut rng = Rng::new(8);
+        let m = banded(30, 3, &mut rng);
+        assert!(m.is_symmetric());
+        for &(r, c, _) in &m.entries {
+            assert!((r as i64 - c as i64).abs() <= 3);
+        }
+    }
+
+    #[test]
+    fn random_band_respects_band_and_symmetry() {
+        let mut rng = Rng::new(9);
+        let m = random_band(200, 8, 40, &mut rng);
+        assert!(m.is_symmetric());
+        for &(r, c, _) in &m.entries {
+            assert!((r as i64 - c as i64).abs() <= 40);
+        }
+        let avg = m.nnz() as f64 / m.nrows as f64;
+        assert!(avg > 4.0 && avg < 12.0, "avg {avg}");
+    }
+
+    #[test]
+    fn generators_spmv_smoke() {
+        let mut rng = Rng::new(10);
+        for m in [
+            laplacian_2d(6, 6),
+            laplacian_1d(36),
+            banded(36, 2, &mut rng),
+            random_square(36, 200, &mut rng),
+        ] {
+            let x = vec![1.0; 36];
+            let mut y = vec![0.0; 36];
+            m.spmv(&x, &mut y);
+            assert!(y.iter().all(|v| v.is_finite()));
+        }
+    }
+}

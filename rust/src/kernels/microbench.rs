@@ -1,0 +1,367 @@
+//! The basic sparse vector operations of Table 1 — the building blocks of
+//! the SpMVM inner loops (§4.1).
+//!
+//! | | ADD | SCP |
+//! |---------|---------------------|----------------------------|
+//! | PD | `s += B[i]` | `s += A[i] * B[i]` |
+//! | CS | `s += B[k*i]` | `s += A[i] * B[k*i]` |
+//! | IS / IR | `s += B[ind[i]]` | `s += A[i] * B[ind[i]]` |
+//!
+//! IS uses a constant stride stored in the index array (`ind[i] = k*i`);
+//! IR draws random strides. The paper generates IR by including each
+//! entry of `invec` with probability `1/k`, which makes successive strides
+//! geometric with mean `k`; Fig 4 extends this to Gaussian strides with
+//! independently controlled mean and variance (allowing backward jumps).
+//!
+//! These run both as real host kernels (wall-clock) and as logical access
+//! streams through the memory-hierarchy simulator (the paper's machines).
+
+use crate::util::rng::Rng;
+
+/// How the gather index vector is produced.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum IndexPattern {
+    /// Direct, densely packed access (stride 1), no index array.
+    Dense,
+    /// Direct access with constant stride `k`, no index array.
+    ConstStride(usize),
+    /// Indirect: `ind[i] = k*i` (constant stride through an index array).
+    IndexedStride(usize),
+    /// Indirect: strides `1 + Geometric(1/k)`, strictly monotonic forward,
+    /// mean stride `k` (the paper's IR construction).
+    Geometric { mean: f64 },
+    /// Indirect: strides drawn from a Gaussian with given mean/variance,
+    /// rounded; backward jumps occur when the variance allows (Fig 4).
+    Gaussian { mean: f64, variance: f64 },
+}
+
+/// ADD (no load of A) or SCP (loads A too).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OpKind {
+    Add,
+    Scp,
+}
+
+/// One microbenchmark configuration of Table 1.
+#[derive(Debug, Clone, Copy)]
+pub struct MicroOp {
+    pub kind: OpKind,
+    pub pattern: IndexPattern,
+}
+
+impl MicroOp {
+    pub fn name(&self) -> String {
+        let prefix = match self.pattern {
+            IndexPattern::Dense => "PD".to_string(),
+            IndexPattern::ConstStride(k) => format!("CS(k={k})"),
+            IndexPattern::IndexedStride(k) => format!("IS(k={k})"),
+            IndexPattern::Geometric { mean } => format!("IR(k={mean})"),
+            IndexPattern::Gaussian { mean, variance } => {
+                format!("IRG(m={mean},v={variance})")
+            }
+        };
+        let op = match self.kind {
+            OpKind::Add => "ADD",
+            OpKind::Scp => "SCP",
+        };
+        format!("{prefix}{op}")
+    }
+
+    /// Does this op read an explicit index array?
+    pub fn uses_index_array(&self) -> bool {
+        matches!(
+            self.pattern,
+            IndexPattern::IndexedStride(_)
+                | IndexPattern::Geometric { .. }
+                | IndexPattern::Gaussian { .. }
+        )
+    }
+
+    /// Flops per iteration (ADD: 1 add; SCP: 1 mul + 1 add).
+    pub fn flops_per_iter(&self) -> u64 {
+        match self.kind {
+            OpKind::Add => 1,
+            OpKind::Scp => 2,
+        }
+    }
+
+    /// Minimum bytes that must cross the memory interface per iteration,
+    /// assuming perfect spatial reuse (the algorithmic balance view).
+    pub fn min_bytes_per_iter(&self) -> u64 {
+        let a = if self.kind == OpKind::Scp { 8 } else { 0 };
+        let ind = if self.uses_index_array() { 4 } else { 0 };
+        a + ind + 8 // B element
+    }
+}
+
+/// The named catalogue of Table 1 (plus CSADD, referenced in the text).
+pub fn table1_ops(k: usize) -> Vec<MicroOp> {
+    vec![
+        MicroOp { kind: OpKind::Add, pattern: IndexPattern::Dense },
+        MicroOp { kind: OpKind::Scp, pattern: IndexPattern::Dense },
+        MicroOp { kind: OpKind::Add, pattern: IndexPattern::ConstStride(k) },
+        MicroOp { kind: OpKind::Scp, pattern: IndexPattern::ConstStride(k) },
+        MicroOp { kind: OpKind::Add, pattern: IndexPattern::IndexedStride(k) },
+        MicroOp { kind: OpKind::Scp, pattern: IndexPattern::IndexedStride(k) },
+        MicroOp { kind: OpKind::Add, pattern: IndexPattern::Geometric { mean: k as f64 } },
+        MicroOp { kind: OpKind::Scp, pattern: IndexPattern::Geometric { mean: k as f64 } },
+    ]
+}
+
+/// Build the gather index vector for `n_iters` iterations over a B array
+/// of length `b_len`. Returns indices in `[0, b_len)`.
+pub fn build_index(pattern: IndexPattern, n_iters: usize, b_len: usize, rng: &mut Rng) -> Vec<u32> {
+    assert!(b_len > 0);
+    match pattern {
+        IndexPattern::Dense => (0..n_iters).map(|i| (i % b_len) as u32).collect(),
+        IndexPattern::ConstStride(k) | IndexPattern::IndexedStride(k) => (0..n_iters)
+            .map(|i| ((i * k) % b_len) as u32)
+            .collect(),
+        IndexPattern::Geometric { mean } => {
+            assert!(mean >= 1.0);
+            let p = 1.0 / mean;
+            let mut pos = 0u64;
+            (0..n_iters)
+                .map(|_| {
+                    pos += 1 + rng.geometric(p);
+                    (pos % b_len as u64) as u32
+                })
+                .collect()
+        }
+        IndexPattern::Gaussian { mean, variance } => {
+            let sd = variance.max(0.0).sqrt();
+            let mut pos = 0i64;
+            (0..n_iters)
+                .map(|_| {
+                    let stride = rng.gaussian_with(mean, sd).round() as i64;
+                    pos += stride;
+                    pos = pos.rem_euclid(b_len as i64);
+                    pos as u32
+                })
+                .collect()
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Host kernels (wall-clock measurement). `#[inline(never)]` keeps them
+// visible in profiles; manual 4x unrolling mirrors the paper's
+// "sufficiently unrolled" inner loops.
+// ---------------------------------------------------------------------
+
+#[inline(never)]
+pub fn pd_add(b: &[f64]) -> f64 {
+    let mut s0 = 0.0;
+    let mut s1 = 0.0;
+    let mut s2 = 0.0;
+    let mut s3 = 0.0;
+    let chunks = b.chunks_exact(4);
+    let rem = chunks.remainder();
+    for c in chunks {
+        s0 += c[0];
+        s1 += c[1];
+        s2 += c[2];
+        s3 += c[3];
+    }
+    s0 + s1 + s2 + s3 + rem.iter().sum::<f64>()
+}
+
+#[inline(never)]
+pub fn pd_scp(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let mut s0 = 0.0;
+    let mut s1 = 0.0;
+    let (ca, cb) = (a.chunks_exact(2), b.chunks_exact(2));
+    let (ra, rb) = (ca.remainder(), cb.remainder());
+    for (x, y) in ca.zip(cb) {
+        s0 += x[0] * y[0];
+        s1 += x[1] * y[1];
+    }
+    s0 + s1 + ra.iter().zip(rb).map(|(x, y)| x * y).sum::<f64>()
+}
+
+/// `s += B[k*i]` for `n` iterations (requires `b.len() >= k*(n-1)+1`).
+#[inline(never)]
+pub fn cs_add(b: &[f64], k: usize, n: usize) -> f64 {
+    let mut s = 0.0;
+    let mut idx = 0usize;
+    for _ in 0..n {
+        s += b[idx];
+        idx += k;
+    }
+    s
+}
+
+/// `s += A[i] * B[k*i]`.
+#[inline(never)]
+pub fn cs_scp(a: &[f64], b: &[f64], k: usize) -> f64 {
+    let mut s = 0.0;
+    let mut idx = 0usize;
+    for &x in a {
+        s += x * b[idx];
+        idx += k;
+    }
+    s
+}
+
+/// `s += B[ind[i]]`.
+#[inline(never)]
+pub fn is_add(b: &[f64], ind: &[u32]) -> f64 {
+    let mut s = 0.0;
+    for &j in ind {
+        s += b[j as usize];
+    }
+    s
+}
+
+/// `s += A[i] * B[ind[i]]`.
+#[inline(never)]
+pub fn is_scp(a: &[f64], b: &[f64], ind: &[u32]) -> f64 {
+    assert_eq!(a.len(), ind.len());
+    let mut s = 0.0;
+    for (x, &j) in a.iter().zip(ind) {
+        s += x * b[j as usize];
+    }
+    s
+}
+
+/// Pre-built buffers for running a microbenchmark repeatedly.
+pub struct MicroBuffers {
+    pub a: Vec<f64>,
+    pub b: Vec<f64>,
+    pub ind: Vec<u32>,
+    pub n_iters: usize,
+    pub op: MicroOp,
+}
+
+impl MicroBuffers {
+    /// `n_iters` loop iterations over a B array of `b_len` elements.
+    /// For constant-stride direct ops, B is sized to cover `k * n_iters`.
+    pub fn new(op: MicroOp, n_iters: usize, b_len: usize, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let b_needed = match op.pattern {
+            IndexPattern::Dense => n_iters.max(1),
+            IndexPattern::ConstStride(k) => (k * n_iters).max(1),
+            _ => b_len.max(1),
+        };
+        let mut a = vec![0.0; if op.kind == OpKind::Scp { n_iters } else { 0 }];
+        rng.fill_f64(&mut a, -1.0, 1.0);
+        let mut b = vec![0.0; b_needed];
+        rng.fill_f64(&mut b, -1.0, 1.0);
+        let ind = if op.uses_index_array() {
+            build_index(op.pattern, n_iters, b_needed, &mut rng)
+        } else {
+            Vec::new()
+        };
+        Self { a, b, ind, n_iters, op }
+    }
+
+    /// Execute once, returning the scalar result.
+    #[inline]
+    pub fn run(&self) -> f64 {
+        match (self.op.kind, self.op.pattern) {
+            (OpKind::Add, IndexPattern::Dense) => pd_add(&self.b[..self.n_iters]),
+            (OpKind::Scp, IndexPattern::Dense) => pd_scp(&self.a, &self.b[..self.n_iters]),
+            (OpKind::Add, IndexPattern::ConstStride(k)) => cs_add(&self.b, k, self.n_iters),
+            (OpKind::Scp, IndexPattern::ConstStride(k)) => cs_scp(&self.a, &self.b, k),
+            (OpKind::Add, _) => is_add(&self.b, &self.ind),
+            (OpKind::Scp, _) => is_scp(&self.a, &self.b, &self.ind),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_catalogue_names() {
+        let ops = table1_ops(8);
+        let names: Vec<String> = ops.iter().map(|o| o.name()).collect();
+        assert!(names.contains(&"PDADD".to_string()));
+        assert!(names.contains(&"PDSCP".to_string()));
+        assert!(names.contains(&"CS(k=8)SCP".to_string()));
+        assert!(names.contains(&"IS(k=8)ADD".to_string()));
+        assert!(names.contains(&"IR(k=8)SCP".to_string()));
+        assert_eq!(ops.len(), 8);
+    }
+
+    #[test]
+    fn kernels_compute_correct_sums() {
+        let b: Vec<f64> = (0..100).map(|i| i as f64).collect();
+        assert_eq!(pd_add(&b), 4950.0);
+        let a = vec![2.0; 100];
+        assert_eq!(pd_scp(&a, &b), 9900.0);
+        assert_eq!(cs_add(&b, 10, 10), (0..10).map(|i| (i * 10) as f64).sum());
+        let a3 = vec![1.0; 10];
+        assert_eq!(cs_scp(&a3, &b, 10), (0..10).map(|i| (i * 10) as f64).sum());
+        let ind: Vec<u32> = vec![0, 99, 50];
+        assert_eq!(is_add(&b, &ind), 149.0);
+        let a2 = vec![1.0, 2.0, 3.0];
+        assert_eq!(is_scp(&a2, &b, &ind), 0.0 + 198.0 + 150.0);
+    }
+
+    #[test]
+    fn geometric_index_is_monotone_with_mean_k() {
+        let mut rng = Rng::new(99);
+        let n = 50_000;
+        let k = 16.0;
+        let b_len = 10_000_000;
+        let ind = build_index(IndexPattern::Geometric { mean: k }, n, b_len, &mut rng);
+        // strictly monotonic until wraparound (b_len large enough: no wrap)
+        assert!(ind.windows(2).all(|w| w[1] > w[0]));
+        let mean_stride = (ind[n - 1] as f64 - ind[0] as f64) / (n - 1) as f64;
+        assert!((mean_stride - k).abs() < 0.05 * k, "mean stride {mean_stride}");
+    }
+
+    #[test]
+    fn gaussian_index_allows_backward_jumps() {
+        let mut rng = Rng::new(7);
+        let ind = build_index(
+            IndexPattern::Gaussian { mean: 10.0, variance: 10_000.0 },
+            20_000,
+            1_000_000,
+            &mut rng,
+        );
+        let backward = ind.windows(2).filter(|w| w[1] < w[0]).count();
+        assert!(backward > 1000, "expected many backward jumps, got {backward}");
+        // small variance: (almost) no backward jumps
+        let ind2 = build_index(
+            IndexPattern::Gaussian { mean: 10.0, variance: 1.0 },
+            20_000,
+            100_000_000,
+            &mut rng,
+        );
+        let backward2 = ind2.windows(2).filter(|w| w[1] < w[0]).count();
+        assert_eq!(backward2, 0);
+    }
+
+    #[test]
+    fn buffers_run_all_ops() {
+        for op in table1_ops(8) {
+            let bufs = MicroBuffers::new(op, 1000, 100_000, 42);
+            let v = bufs.run();
+            assert!(v.is_finite(), "{}", op.name());
+        }
+    }
+
+    #[test]
+    fn balance_accounting() {
+        let pdadd = MicroOp { kind: OpKind::Add, pattern: IndexPattern::Dense };
+        assert_eq!(pdadd.min_bytes_per_iter(), 8);
+        assert_eq!(pdadd.flops_per_iter(), 1);
+        let irscp = MicroOp { kind: OpKind::Scp, pattern: IndexPattern::Geometric { mean: 8.0 } };
+        assert_eq!(irscp.min_bytes_per_iter(), 20);
+        assert_eq!(irscp.flops_per_iter(), 2);
+    }
+
+    #[test]
+    fn indexed_stride_wraps() {
+        let mut rng = Rng::new(1);
+        let ind = build_index(IndexPattern::IndexedStride(530), 100, 1000, &mut rng);
+        assert!(ind.iter().all(|&i| (i as usize) < 1000));
+        assert_eq!(ind[0], 0);
+        assert_eq!(ind[1], 530);
+        assert_eq!(ind[2], 60); // 1060 % 1000
+    }
+}

@@ -1,0 +1,8 @@
+//! Compute kernels: the Table-1 microbenchmark loops ([`microbench`]) and
+//! the unified SpMV dispatch over all storage schemes ([`spmv`]).
+
+pub mod microbench;
+pub mod spmv;
+
+pub use microbench::{build_index, table1_ops, IndexPattern, MicroBuffers, MicroOp, OpKind};
+pub use spmv::{SpmvKernel, Workspace};

@@ -1,0 +1,217 @@
+//! Unified SpMV kernel dispatch over all storage schemes, with a
+//! preallocated workspace for hot benchmark loops (a long-lived solver
+//! keeps its vectors in the permuted basis; we do the same so benches
+//! measure the kernel, not the gather/scatter).
+
+use crate::matrix::jds::SpmvVisitor;
+use crate::matrix::{Coo, Crs, Jds, RbJds, Scheme, SoJds, SpMv};
+
+/// A matrix realized in a concrete storage scheme, ready for SpMV.
+pub enum SpmvKernel {
+    Crs(Crs),
+    /// JDS storage with a JDS-family access scheme (JDS/NBJDS/NUJDS).
+    Jds { jds: Jds, scheme: Scheme },
+    Rb(RbJds),
+    So(SoJds),
+}
+
+impl SpmvKernel {
+    pub fn build(coo: &Coo, scheme: Scheme) -> Self {
+        let crs = Crs::from_coo(coo);
+        Self::build_from_crs(&crs, scheme)
+    }
+
+    pub fn build_from_crs(crs: &Crs, scheme: Scheme) -> Self {
+        match scheme {
+            Scheme::Crs => SpmvKernel::Crs(crs.clone()),
+            Scheme::Jds | Scheme::NbJds { .. } | Scheme::NuJds { .. } => {
+                SpmvKernel::Jds { jds: Jds::from_crs(crs), scheme }
+            }
+            Scheme::RbJds { block } => SpmvKernel::Rb(RbJds::from_crs(crs, block)),
+            Scheme::SoJds { block } => SpmvKernel::So(SoJds::from_crs(crs, block)),
+        }
+    }
+
+    pub fn scheme(&self) -> Scheme {
+        match self {
+            SpmvKernel::Crs(_) => Scheme::Crs,
+            SpmvKernel::Jds { scheme, .. } => *scheme,
+            SpmvKernel::Rb(rb) => Scheme::RbJds { block: rb.block },
+            SpmvKernel::So(so) => Scheme::SoJds { block: so.0.block },
+        }
+    }
+
+    pub fn nrows(&self) -> usize {
+        match self {
+            SpmvKernel::Crs(m) => m.nrows,
+            SpmvKernel::Jds { jds, .. } => jds.nrows,
+            SpmvKernel::Rb(m) => m.nrows,
+            SpmvKernel::So(m) => m.0.nrows,
+        }
+    }
+
+    pub fn nnz(&self) -> usize {
+        match self {
+            SpmvKernel::Crs(m) => m.nnz(),
+            SpmvKernel::Jds { jds, .. } => jds.nnz(),
+            SpmvKernel::Rb(m) => m.nnz(),
+            SpmvKernel::So(m) => m.nnz(),
+        }
+    }
+
+    /// SpMV in the original basis (allocates; for correctness paths).
+    pub fn spmv(&self, x: &[f64], y: &mut [f64]) {
+        match self {
+            SpmvKernel::Crs(m) => m.spmv(x, y),
+            SpmvKernel::Jds { jds, scheme } => jds.spmv_scheme(*scheme, x, y),
+            SpmvKernel::Rb(m) => m.spmv(x, y),
+            SpmvKernel::So(m) => m.spmv(x, y),
+        }
+    }
+
+    /// Prepare a hot-loop workspace: input pre-permuted, output buffer
+    /// sized. For CRS the basis is the identity.
+    pub fn workspace(&self, x: &[f64]) -> Workspace {
+        let xp = match self {
+            SpmvKernel::Crs(_) => x.to_vec(),
+            SpmvKernel::Jds { jds, .. } => jds.permute_vec(x),
+            SpmvKernel::Rb(m) => m.permute_vec(x),
+            SpmvKernel::So(m) => m.0.permute_vec(x),
+        };
+        Workspace { xp, yp: vec![0.0; self.nrows()] }
+    }
+
+    /// Hot-path SpMV: permuted-basis kernel only, no allocation.
+    #[inline]
+    pub fn spmv_hot(&self, ws: &mut Workspace) {
+        match self {
+            SpmvKernel::Crs(m) => m.spmv(&ws.xp, &mut ws.yp),
+            SpmvKernel::Jds { jds, scheme } => match scheme {
+                Scheme::Jds => jds.spmv_permuted_jds(&ws.xp, &mut ws.yp),
+                Scheme::NbJds { block } => jds.spmv_permuted_nbjds(*block, &ws.xp, &mut ws.yp),
+                Scheme::NuJds { unroll } => jds.spmv_permuted_nujds(*unroll, &ws.xp, &mut ws.yp),
+                _ => unreachable!(),
+            },
+            SpmvKernel::Rb(m) => m.spmv_permuted(&ws.xp, &mut ws.yp),
+            SpmvKernel::So(m) => m.spmv_permuted(&ws.xp, &mut ws.yp),
+        }
+    }
+
+    /// Recover the original-basis result from the workspace.
+    pub fn unpermute(&self, ws: &Workspace, y: &mut [f64]) {
+        match self {
+            SpmvKernel::Crs(_) => y.copy_from_slice(&ws.yp),
+            SpmvKernel::Jds { jds, .. } => jds.unpermute_vec(&ws.yp, y),
+            SpmvKernel::Rb(m) => m.unpermute_vec(&ws.yp, y),
+            SpmvKernel::So(m) => m.0.unpermute_vec(&ws.yp, y),
+        }
+    }
+
+    /// Drive a visitor over the kernel's logical update stream (the exact
+    /// memory-touch order) — used by the simulator and stride analysis.
+    pub fn walk<V: SpmvVisitor>(&self, v: &mut V) {
+        match self {
+            SpmvKernel::Crs(m) => {
+                // CRS row-major walk: same update semantics.
+                for i in 0..m.nrows {
+                    for j in m.row_ptr[i]..m.row_ptr[i + 1] {
+                        v.update(i, j, m.col_idx[j] as usize);
+                    }
+                }
+            }
+            SpmvKernel::Jds { jds, scheme } => match scheme {
+                Scheme::Jds => jds.walk_jds(v),
+                Scheme::NbJds { block } => jds.walk_nbjds(*block, v),
+                Scheme::NuJds { unroll } => jds.walk_nujds(*unroll, v),
+                _ => unreachable!(),
+            },
+            SpmvKernel::Rb(m) => m.walk(v),
+            SpmvKernel::So(m) => m.walk(v),
+        }
+    }
+}
+
+/// Preallocated permuted-basis vectors for hot SpMV loops.
+pub struct Workspace {
+    pub xp: Vec<f64>,
+    pub yp: Vec<f64>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use crate::util::stats::max_abs_diff;
+
+    fn random_coo(rng: &mut Rng, n: usize, nnz: usize) -> Coo {
+        let mut coo = Coo::new(n, n);
+        for _ in 0..nnz {
+            coo.push(rng.index(n), rng.index(n), rng.f64() * 2.0 - 1.0);
+        }
+        coo.normalize();
+        coo
+    }
+
+    #[test]
+    fn all_schemes_agree_with_crs() {
+        let mut rng = Rng::new(30);
+        let n = 150;
+        let coo = random_coo(&mut rng, n, n * 7);
+        let mut x = vec![0.0; n];
+        rng.fill_f64(&mut x, -1.0, 1.0);
+        let crs = SpmvKernel::build(&coo, Scheme::Crs);
+        let mut y_ref = vec![0.0; n];
+        crs.spmv(&x, &mut y_ref);
+        for scheme in Scheme::all_with(32, 2) {
+            let k = SpmvKernel::build(&coo, scheme);
+            assert_eq!(k.nnz(), crs.nnz());
+            let mut y = vec![0.0; n];
+            k.spmv(&x, &mut y);
+            assert!(
+                max_abs_diff(&y_ref, &y) < 1e-12,
+                "scheme {scheme} disagrees with CRS"
+            );
+        }
+    }
+
+    #[test]
+    fn hot_path_matches_cold_path() {
+        let mut rng = Rng::new(31);
+        let n = 120;
+        let coo = random_coo(&mut rng, n, n * 5);
+        let mut x = vec![0.0; n];
+        rng.fill_f64(&mut x, -1.0, 1.0);
+        for scheme in Scheme::all_with(16, 4) {
+            let k = SpmvKernel::build(&coo, scheme);
+            let mut y_cold = vec![0.0; n];
+            k.spmv(&x, &mut y_cold);
+            let mut ws = k.workspace(&x);
+            k.spmv_hot(&mut ws);
+            let mut y_hot = vec![0.0; n];
+            k.unpermute(&ws, &mut y_hot);
+            assert!(
+                max_abs_diff(&y_cold, &y_hot) < 1e-12,
+                "scheme {scheme}: hot path disagrees"
+            );
+        }
+    }
+
+    #[test]
+    fn walk_touches_every_nnz_once_for_all_schemes() {
+        use crate::matrix::jds::SpmvVisitor;
+        let mut rng = Rng::new(32);
+        let coo = random_coo(&mut rng, 100, 600);
+        struct Count(usize);
+        impl SpmvVisitor for Count {
+            fn update(&mut self, _r: usize, _j: usize, _c: usize) {
+                self.0 += 1;
+            }
+        }
+        for scheme in Scheme::all_with(25, 3) {
+            let k = SpmvKernel::build(&coo, scheme);
+            let mut c = Count(0);
+            k.walk(&mut c);
+            assert_eq!(c.0, k.nnz(), "scheme {scheme}");
+        }
+    }
+}

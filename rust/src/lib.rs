@@ -1,0 +1,40 @@
+//! # spmvperf
+//!
+//! Reproduction of *“Performance limitations for sparse matrix-vector
+//! multiplications on current multicore environments”* (G. Schubert,
+//! G. Hager, H. Fehske, 2009).
+//!
+//! The library provides:
+//!
+//! - all sparse storage schemes from the paper ([`matrix`]): CRS, JDS and
+//!   the blocked/unrolled/reordered/sorted JDS refinements;
+//! - the paper's test matrix — a real Holstein-Hubbard Hamiltonian
+//!   generator — plus auxiliary generators ([`gen`]);
+//! - the microbenchmark kernels of Table 1 ([`kernels`]);
+//! - a trace-driven multicore **memory-hierarchy simulator** standing in
+//!   for the paper's 2009 test bed ([`simulator`]): caches, TLB, hardware
+//!   prefetchers, ccNUMA, OpenMP-style scheduling;
+//! - sparsity/stride analysis and a predictive performance model
+//!   ([`analysis`], [`perfmodel`]);
+//! - a Lanczos eigensolver as the motivating application ([`eigen`]);
+//! - a PJRT runtime that loads the AOT-compiled JAX/Pallas SpMV artifacts
+//!   and a coordinator serving batched SpMV requests ([`runtime`],
+//!   [`coordinator`]);
+//! - experiment drivers regenerating every figure of the paper's
+//!   evaluation ([`experiments`]).
+//!
+//! See DESIGN.md for the architecture and EXPERIMENTS.md for
+//! paper-vs-measured results.
+
+pub mod analysis;
+pub mod coordinator;
+pub mod eigen;
+pub mod experiments;
+pub mod gen;
+pub mod kernels;
+pub mod matrix;
+pub mod perfmodel;
+pub mod runtime;
+pub mod sched;
+pub mod simulator;
+pub mod util;

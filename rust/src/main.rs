@@ -1,0 +1,314 @@
+//! spmvperf CLI — the launcher for experiments, simulation, solvers and
+//! the SpMV service.
+//!
+//! ```text
+//! spmvperf experiment <fig2..fig9|all> [--full|--quick] [--machine m1,m2] [--csv DIR]
+//! spmvperf simulate   [--machine nehalem] [--scheme crs|nbjds:1000|...]
+//!                     [--threads-per-socket T] [--sockets S] [--schedule static|dynamic,C]
+//! spmvperf predict    [--machine nehalem] — perf-model prediction per scheme
+//! spmvperf lanczos    [--sites 6 --electrons 3 --max-phonons 4] [--eigenvalues 1]
+//! spmvperf serve      [--requests 64 --batch-window-us 500] — PJRT service demo
+//! spmvperf matrix     [--out FILE.mtx] — generate + analyze the test matrix
+//! spmvperf info       — platform, machines, artifacts
+//! ```
+
+use anyhow::{bail, Context, Result};
+use spmvperf::coordinator::{BatchExecutor, PjrtExecutor, Service, ServiceConfig};
+use spmvperf::eigen::{lanczos, LanczosConfig};
+use spmvperf::experiments::{self, ExpOptions};
+use spmvperf::gen::{self, HolsteinHubbardParams};
+use spmvperf::kernels::SpmvKernel;
+use spmvperf::matrix::{Crs, EllMatrix, Scheme, SpMv};
+use spmvperf::perfmodel::{predict, CostCurve};
+use spmvperf::runtime::{default_artifacts_dir, Runtime};
+use spmvperf::sched::Schedule;
+use spmvperf::simulator::{simulate_spmv, MachineSpec, Placement, SimOptions};
+use spmvperf::util::cli::Args;
+use spmvperf::util::report::{f, Table};
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let mut args = Args::from_env()?;
+    let cmd = args.take_subcommand().unwrap_or_else(|| "help".to_string());
+    match cmd.as_str() {
+        "experiment" => cmd_experiment(&mut args),
+        "simulate" => cmd_simulate(&args),
+        "predict" => cmd_predict(&args),
+        "lanczos" => cmd_lanczos(&args),
+        "serve" => cmd_serve(&args),
+        "matrix" => cmd_matrix(&args),
+        "info" => cmd_info(&args),
+        "help" | "--help" | "-h" => {
+            println!("{}", HELP);
+            Ok(())
+        }
+        other => bail!("unknown command '{other}' (try `spmvperf help`)"),
+    }
+}
+
+const HELP: &str = r#"spmvperf — SpMV multicore performance study (Schubert/Hager/Fehske 2009)
+
+USAGE:
+  spmvperf experiment <fig2|fig3|fig4|fig5|fig6|fig7|fig8|fig9|all>
+                      [--full|--quick] [--machine woodcrest,nehalem] [--csv DIR]
+  spmvperf simulate   [--machine nehalem] [--scheme crs] [--threads-per-socket 4]
+                      [--sockets 2] [--schedule static] [--block 1000]
+  spmvperf predict    [--machine nehalem] [--block 1000]
+  spmvperf lanczos    [--sites 6 --electrons 3 --max-phonons 4 --eigenvalues 1]
+  spmvperf serve      [--requests 64 --batch-window-us 500]
+  spmvperf matrix     [--out FILE.mtx] [--full|--quick]
+  spmvperf info
+"#;
+
+fn machines_from(args: &Args) -> Result<Vec<MachineSpec>> {
+    let names = args.get_str_list("machine", &[]);
+    if names.is_empty() {
+        Ok(MachineSpec::all_x86())
+    } else {
+        names.iter().map(|n| MachineSpec::by_name(n)).collect()
+    }
+}
+
+fn exp_options(args: &Args) -> Result<ExpOptions> {
+    Ok(ExpOptions {
+        full: args.flag("full"),
+        quick: args.flag("quick"),
+        machines: machines_from(args)?,
+        csv_dir: args.get("csv").map(|s| s.to_string()),
+    })
+}
+
+fn cmd_experiment(args: &mut Args) -> Result<()> {
+    let id = args
+        .take_subcommand()
+        .context("experiment id required (fig2..fig9 or all)")?;
+    let opts = exp_options(args)?;
+    args.finish()?;
+    experiments::run(&id, &opts)
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let machine = MachineSpec::by_name(&args.get_str("machine", "nehalem"))?;
+    let scheme = Scheme::parse(&args.get_str("scheme", "crs"))?;
+    let tps = args.get_usize("threads-per-socket", 1)?;
+    let sockets = args.get_usize("sockets", 1)?;
+    let schedule = Schedule::parse(&args.get_str("schedule", "static"))?;
+    let opts = ExpOptions {
+        full: args.flag("full"),
+        quick: args.flag("quick"),
+        ..Default::default()
+    };
+    args.finish()?;
+    let coo = opts.test_matrix();
+    eprintln!(
+        "matrix: N={} nnz={} ({:.1} nnz/row)",
+        coo.nrows,
+        coo.nnz(),
+        coo.nnz() as f64 / coo.nrows as f64
+    );
+    let kernel = SpmvKernel::build(&coo, scheme);
+    let r = simulate_spmv(
+        &machine,
+        &kernel,
+        tps,
+        sockets,
+        schedule,
+        Placement::FirstTouchStatic,
+        &SimOptions::default(),
+    );
+    let mut t = Table::new(
+        &format!(
+            "simulated SpMV: {} on {} ({tps} thr/socket x {sockets} sockets, {})",
+            scheme.name(),
+            machine.name,
+            schedule.name()
+        ),
+        &["metric", "value"],
+    );
+    t.row(vec!["MFlop/s".into(), f(r.mflops)]);
+    t.row(vec!["cycles/nnz".into(), f(r.cycles_per_update)]);
+    t.row(vec!["time (ms)".into(), f(r.seconds * 1e3)]);
+    t.row(vec!["DRAM traffic (MB)".into(), f(r.dram_bytes / 1e6)]);
+    t.row(vec!["bandwidth utilization".into(), f(r.bw_utilization)]);
+    t.row(vec!["remote traffic fraction".into(), f(r.remote_fraction)]);
+    t.row(vec!["bound by".into(), r.bounded_by.to_string()]);
+    t.row(vec!["TLB misses".into(), r.tlb_misses.to_string()]);
+    t.print();
+    Ok(())
+}
+
+fn cmd_predict(args: &Args) -> Result<()> {
+    let machine = MachineSpec::by_name(&args.get_str("machine", "nehalem"))?;
+    let block = args.get_usize("block", 1000)?;
+    let opts = ExpOptions {
+        full: args.flag("full"),
+        quick: args.flag("quick"),
+        ..Default::default()
+    };
+    args.finish()?;
+    let coo = opts.test_matrix();
+    let crs = Crs::from_coo(&coo);
+    eprintln!("calibrating cost curve on {} ...", machine.name);
+    let curve = CostCurve::calibrate(&machine, 40_000);
+    let mut t = Table::new(
+        &format!("performance-model predictions on {} (paper §1 goal)", machine.name),
+        &["scheme", "pred cycles/nnz", "pred MFlop/s"],
+    );
+    for scheme in Scheme::all_with(block, 2) {
+        let k = SpmvKernel::build_from_crs(&crs, scheme);
+        let p = predict(&machine, &curve, &k);
+        t.row(vec![p.scheme.clone(), f(p.cycles_per_nnz), f(p.mflops)]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_lanczos(args: &Args) -> Result<()> {
+    let p = HolsteinHubbardParams {
+        sites: args.get_usize("sites", 6)?,
+        n_up: args.get_usize("electrons", 3)?,
+        n_down: args.get_usize("electrons", 3)?,
+        max_phonons: args.get_usize("max-phonons", 4)?,
+        t: args.get_f64("t", 1.0)?,
+        u: args.get_f64("u", 4.0)?,
+        g: args.get_f64("g", 1.0)?,
+        omega: args.get_f64("omega", 1.0)?,
+        periodic: true,
+    };
+    let n_eigs = args.get_usize("eigenvalues", 1)?;
+    let iters = args.get_usize("iters", 300)?;
+    args.finish()?;
+    eprintln!("building Holstein-Hubbard Hamiltonian: dim = {}", p.dimension());
+    let h = gen::holstein_hubbard(&p);
+    let crs = Crs::from_coo(&h);
+    let t0 = std::time::Instant::now();
+    let r = lanczos(&crs, n_eigs, &LanczosConfig { max_iters: iters, ..Default::default() });
+    let dt = t0.elapsed();
+    let mut t = Table::new("Lanczos ground state (native CRS SpMV)", &["metric", "value"]);
+    for (i, e) in r.eigenvalues.iter().enumerate() {
+        t.row(vec![format!("E{i}"), format!("{e:.10}")]);
+    }
+    t.row(vec!["iterations".into(), r.iterations.to_string()]);
+    t.row(vec!["converged".into(), r.converged.to_string()]);
+    t.row(vec!["SpMVs".into(), r.spmv_count.to_string()]);
+    t.row(vec!["wall time (s)".into(), f(dt.as_secs_f64())]);
+    t.row(vec![
+        "SpMV throughput (MFlop/s)".into(),
+        f(2.0 * crs.nnz() as f64 * r.spmv_count as f64 / dt.as_secs_f64() / 1e6),
+    ]);
+    t.print();
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let requests = args.get_usize("requests", 64)?;
+    let window_us = args.get_u64("batch-window-us", 500)?;
+    args.finish()?;
+    let h = gen::holstein_hubbard(&HolsteinHubbardParams::tiny());
+    let crs = Crs::from_coo(&h);
+    let ell = EllMatrix::from_crs(&crs, Some(24))?;
+    let n = ell.n;
+    let ell2 = ell.clone();
+    eprintln!("starting PJRT-backed SpMV service (dim {n}) ...");
+    let svc = Service::start(
+        ServiceConfig { batch_window: std::time::Duration::from_micros(window_us) },
+        n,
+        move || {
+            let rt = Runtime::new(&default_artifacts_dir())?;
+            eprintln!("worker: PJRT platform = {}", rt.platform());
+            let bound = rt.bind(&ell2, rt.load("spmv_b8_d24_n540.hlo.txt")?)?;
+            Ok(Box::new(PjrtExecutor { bound }) as Box<dyn BatchExecutor>)
+        },
+    )?;
+    let mut rng = spmvperf::util::rng::Rng::new(7);
+    let t0 = std::time::Instant::now();
+    let rxs: Vec<_> = (0..requests)
+        .map(|_| {
+            let mut x = vec![0.0; n];
+            rng.fill_f64(&mut x, -1.0, 1.0);
+            svc.submit(x).unwrap()
+        })
+        .collect();
+    let mut checksum = 0.0;
+    for rx in rxs {
+        let y = rx.recv().unwrap().map_err(|e| anyhow::anyhow!(e))?;
+        checksum += y[0];
+    }
+    let dt = t0.elapsed();
+    let m = &svc.metrics;
+    use std::sync::atomic::Ordering::Relaxed;
+    let mut t = Table::new("SpMV service run", &["metric", "value"]);
+    t.row(vec!["requests".into(), m.requests.load(Relaxed).to_string()]);
+    t.row(vec!["batches".into(), m.batches.load(Relaxed).to_string()]);
+    t.row(vec!["avg batch size".into(), f(m.avg_batch())]);
+    t.row(vec!["avg latency (us)".into(), f(m.avg_latency_us())]);
+    t.row(vec!["max latency (us)".into(), m.latency_us_max.load(Relaxed).to_string()]);
+    t.row(vec!["throughput (req/s)".into(), f(requests as f64 / dt.as_secs_f64())]);
+    t.row(vec!["checksum".into(), format!("{checksum:.6e}")]);
+    t.print();
+    Ok(())
+}
+
+fn cmd_matrix(args: &Args) -> Result<()> {
+    let opts = ExpOptions {
+        full: args.flag("full"),
+        quick: args.flag("quick"),
+        ..Default::default()
+    };
+    let out = args.get("out").map(|s| s.to_string());
+    args.finish()?;
+    let coo = opts.test_matrix();
+    let profile = spmvperf::analysis::diag_profile(&coo);
+    let mut t = Table::new("Holstein-Hubbard test matrix", &["quantity", "value"]);
+    t.row(vec!["dimension".into(), coo.nrows.to_string()]);
+    t.row(vec!["non-zeros".into(), coo.nnz().to_string()]);
+    t.row(vec!["avg nnz/row".into(), f(coo.nnz() as f64 / coo.nrows as f64)]);
+    t.row(vec!["bandwidth".into(), profile.bandwidth().to_string()]);
+    t.row(vec![
+        "top-12 secondary diag share".into(),
+        f(profile.fraction_in_top_secondary(12)),
+    ]);
+    t.print();
+    if let Some(path) = out {
+        spmvperf::matrix::io::write_matrix_market(&coo, std::path::Path::new(&path))?;
+        eprintln!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    args.finish()?;
+    let mut t = Table::new("machines (paper §3 test bed)", &[
+        "machine", "sockets x cores", "freq GHz", "LLC", "STREAM GB/s", "NUMA",
+    ]);
+    for m in MachineSpec::all_x86().iter().chain([MachineSpec::hlrb2(64)].iter()) {
+        let llc = m.l3.as_ref().map(|c| c.size_bytes).unwrap_or(m.l2.size_bytes);
+        t.row(vec![
+            m.name.to_string(),
+            format!("{} x {}", m.sockets, m.cores_per_socket),
+            f(m.freq_ghz),
+            format!("{} MB", llc >> 20),
+            f(m.node_bw_gbs),
+            m.numa.to_string(),
+        ]);
+    }
+    t.print();
+    let dir = default_artifacts_dir();
+    match Runtime::new(&dir) {
+        Ok(rt) => {
+            println!("PJRT platform: {}", rt.platform());
+            println!("artifacts in {}:", dir.display());
+            for a in rt.available() {
+                println!("  {a}");
+            }
+        }
+        Err(e) => println!("PJRT runtime unavailable: {e:#}"),
+    }
+    Ok(())
+}

@@ -1,0 +1,216 @@
+//! Coordinate (COO) format: the assembly and interchange representation.
+//! All generators produce COO; all compute formats convert from it.
+
+use super::SpMv;
+
+/// A sparse matrix as (row, col, value) triples.
+#[derive(Debug, Clone)]
+pub struct Coo {
+    pub nrows: usize,
+    pub ncols: usize,
+    /// Entries; duplicates are summed on conversion to CRS.
+    pub entries: Vec<(u32, u32, f64)>,
+}
+
+impl Coo {
+    pub fn new(nrows: usize, ncols: usize) -> Self {
+        Self { nrows, ncols, entries: Vec::new() }
+    }
+
+    pub fn with_capacity(nrows: usize, ncols: usize, cap: usize) -> Self {
+        Self { nrows, ncols, entries: Vec::with_capacity(cap) }
+    }
+
+    /// Add an entry. Zero values are kept (some benchmarks want explicit
+    /// zeros); use [`Coo::prune_zeros`] to drop them.
+    pub fn push(&mut self, row: usize, col: usize, val: f64) {
+        debug_assert!(row < self.nrows && col < self.ncols, "({row},{col}) out of bounds");
+        self.entries.push((row as u32, col as u32, val));
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Drop explicitly stored zeros.
+    pub fn prune_zeros(&mut self) {
+        self.entries.retain(|&(_, _, v)| v != 0.0);
+    }
+
+    /// Sort entries row-major (row, then column) and sum duplicates.
+    pub fn normalize(&mut self) {
+        self.entries
+            .sort_unstable_by(|a, b| (a.0, a.1).cmp(&(b.0, b.1)));
+        let mut out: Vec<(u32, u32, f64)> = Vec::with_capacity(self.entries.len());
+        for &(r, c, v) in &self.entries {
+            if let Some(last) = out.last_mut() {
+                if last.0 == r && last.1 == c {
+                    last.2 += v;
+                    continue;
+                }
+            }
+            out.push((r, c, v));
+        }
+        self.entries = out;
+    }
+
+    /// Build from a dense row-major matrix, dropping zeros.
+    pub fn from_dense(dense: &[Vec<f64>]) -> Self {
+        let nrows = dense.len();
+        let ncols = dense.first().map_or(0, |r| r.len());
+        let mut coo = Coo::new(nrows, ncols);
+        for (i, row) in dense.iter().enumerate() {
+            for (j, &v) in row.iter().enumerate() {
+                if v != 0.0 {
+                    coo.push(i, j, v);
+                }
+            }
+        }
+        coo
+    }
+
+    /// Materialize as dense rows (for small-matrix tests only).
+    pub fn to_dense(&self) -> Vec<Vec<f64>> {
+        let mut d = vec![vec![0.0; self.ncols]; self.nrows];
+        for &(r, c, v) in &self.entries {
+            d[r as usize][c as usize] += v;
+        }
+        d
+    }
+
+    /// Transpose.
+    pub fn transpose(&self) -> Coo {
+        Coo {
+            nrows: self.ncols,
+            ncols: self.nrows,
+            entries: self.entries.iter().map(|&(r, c, v)| (c, r, v)).collect(),
+        }
+    }
+
+    /// Check symmetry (exact value match) — Hamiltonians must satisfy this.
+    pub fn is_symmetric(&self) -> bool {
+        if self.nrows != self.ncols {
+            return false;
+        }
+        let mut a = self.clone();
+        a.normalize();
+        let mut b = self.transpose();
+        b.normalize();
+        a.entries.len() == b.entries.len()
+            && a.entries
+                .iter()
+                .zip(&b.entries)
+                .all(|(x, y)| x.0 == y.0 && x.1 == y.1 && (x.2 - y.2).abs() < 1e-12)
+    }
+
+    /// Number of non-zeros per row.
+    pub fn row_counts(&self) -> Vec<usize> {
+        let mut counts = vec![0usize; self.nrows];
+        for &(r, _, _) in &self.entries {
+            counts[r as usize] += 1;
+        }
+        counts
+    }
+}
+
+impl SpMv for Coo {
+    fn nrows(&self) -> usize {
+        self.nrows
+    }
+    fn ncols(&self) -> usize {
+        self.ncols
+    }
+    fn nnz(&self) -> usize {
+        self.entries.len()
+    }
+    fn spmv(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.ncols);
+        assert_eq!(y.len(), self.nrows);
+        y.fill(0.0);
+        for &(r, c, v) in &self.entries {
+            y[r as usize] += v * x[c as usize];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Coo {
+        // [[1, 0, 2],
+        //  [0, 3, 0],
+        //  [4, 0, 5]]
+        let mut m = Coo::new(3, 3);
+        m.push(0, 0, 1.0);
+        m.push(0, 2, 2.0);
+        m.push(1, 1, 3.0);
+        m.push(2, 0, 4.0);
+        m.push(2, 2, 5.0);
+        m
+    }
+
+    #[test]
+    fn spmv_matches_dense() {
+        let m = sample();
+        let x = [1.0, 2.0, 3.0];
+        let mut y = [0.0; 3];
+        m.spmv(&x, &mut y);
+        assert_eq!(y, [7.0, 6.0, 19.0]);
+    }
+
+    #[test]
+    fn normalize_sums_duplicates() {
+        let mut m = Coo::new(2, 2);
+        m.push(0, 0, 1.0);
+        m.push(0, 0, 2.0);
+        m.push(1, 1, 1.0);
+        m.normalize();
+        assert_eq!(m.nnz(), 2);
+        assert_eq!(m.entries[0], (0, 0, 3.0));
+    }
+
+    #[test]
+    fn dense_roundtrip() {
+        let m = sample();
+        let d = m.to_dense();
+        let m2 = Coo::from_dense(&d);
+        assert_eq!(m2.nnz(), m.nnz());
+        assert_eq!(m2.to_dense(), d);
+    }
+
+    #[test]
+    fn symmetry_detection() {
+        let mut s = Coo::new(2, 2);
+        s.push(0, 1, 2.0);
+        s.push(1, 0, 2.0);
+        s.push(0, 0, 1.0);
+        assert!(s.is_symmetric());
+        let mut a = Coo::new(2, 2);
+        a.push(0, 1, 2.0);
+        assert!(!a.is_symmetric());
+    }
+
+    #[test]
+    fn transpose_works() {
+        let m = sample();
+        let t = m.transpose();
+        assert_eq!(t.to_dense()[2][0], 2.0);
+        assert_eq!(t.to_dense()[0][2], 4.0);
+    }
+
+    #[test]
+    fn prune_zeros() {
+        let mut m = Coo::new(2, 2);
+        m.push(0, 0, 0.0);
+        m.push(1, 1, 2.0);
+        m.prune_zeros();
+        assert_eq!(m.nnz(), 1);
+    }
+
+    #[test]
+    fn row_counts() {
+        let m = sample();
+        assert_eq!(m.row_counts(), vec![2, 1, 2]);
+    }
+}

@@ -1,0 +1,188 @@
+//! Compressed row storage (CRS/CSR) — §2 of the paper.
+//!
+//! The SpMV inner loop is a sparse scalar product per row: the result stays
+//! in a register and is written once per row, giving the 10 bytes/flop
+//! algorithmic balance (8 B value + 4 B index per nnz, amortized row
+//! pointer and result traffic) that makes CRS the winner on cache
+//! architectures (Fig 6b).
+
+use super::{Coo, SpMv};
+
+#[derive(Debug, Clone)]
+pub struct Crs {
+    pub nrows: usize,
+    pub ncols: usize,
+    /// Offsets into `val`/`col_idx`; length `nrows + 1`.
+    pub row_ptr: Vec<usize>,
+    pub col_idx: Vec<u32>,
+    pub val: Vec<f64>,
+}
+
+impl Crs {
+    /// Build from COO (normalizes: sorts row-major, sums duplicates).
+    pub fn from_coo(coo: &Coo) -> Self {
+        let mut c = coo.clone();
+        c.normalize();
+        let mut row_ptr = vec![0usize; c.nrows + 1];
+        for &(r, _, _) in &c.entries {
+            row_ptr[r as usize + 1] += 1;
+        }
+        for i in 0..c.nrows {
+            row_ptr[i + 1] += row_ptr[i];
+        }
+        let mut col_idx = Vec::with_capacity(c.entries.len());
+        let mut val = Vec::with_capacity(c.entries.len());
+        for &(_, cidx, v) in &c.entries {
+            col_idx.push(cidx);
+            val.push(v);
+        }
+        Crs { nrows: c.nrows, ncols: c.ncols, row_ptr, col_idx, val }
+    }
+
+    /// Non-zeros in row `i` as (col, val) slices.
+    pub fn row(&self, i: usize) -> (&[u32], &[f64]) {
+        let (a, b) = (self.row_ptr[i], self.row_ptr[i + 1]);
+        (&self.col_idx[a..b], &self.val[a..b])
+    }
+
+    /// Mean non-zeros per row.
+    pub fn avg_nnz_per_row(&self) -> f64 {
+        self.val.len() as f64 / self.nrows.max(1) as f64
+    }
+
+    /// SpMV restricted to a row range — the unit of work for OpenMP-style
+    /// loop scheduling in the parallel experiments (§5).
+    #[inline]
+    pub fn spmv_rows(&self, x: &[f64], y: &mut [f64], row_begin: usize, row_end: usize) {
+        for i in row_begin..row_end {
+            let (a, b) = (self.row_ptr[i], self.row_ptr[i + 1]);
+            let mut sum = 0.0;
+            for j in a..b {
+                // Safety: col_idx entries are validated < ncols at build.
+                sum += self.val[j] * x[self.col_idx[j] as usize];
+            }
+            y[i] = sum;
+        }
+    }
+
+    /// Convert back to COO.
+    pub fn to_coo(&self) -> Coo {
+        let mut coo = Coo::with_capacity(self.nrows, self.ncols, self.val.len());
+        for i in 0..self.nrows {
+            for j in self.row_ptr[i]..self.row_ptr[i + 1] {
+                coo.push(i, self.col_idx[j] as usize, self.val[j]);
+            }
+        }
+        coo
+    }
+
+    /// Bytes touched per SpMV under the paper's traffic model:
+    /// 12 B per nnz (val + col_idx) + 8 B per input-vector element read
+    /// (best case) + 8+4 B per row (result write + row_ptr).
+    pub fn min_bytes_per_spmv(&self) -> u64 {
+        (12 * self.val.len() + 8 * self.ncols + 12 * self.nrows) as u64
+    }
+}
+
+impl SpMv for Crs {
+    fn nrows(&self) -> usize {
+        self.nrows
+    }
+    fn ncols(&self) -> usize {
+        self.ncols
+    }
+    fn nnz(&self) -> usize {
+        self.val.len()
+    }
+    fn spmv(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.ncols);
+        assert_eq!(y.len(), self.nrows);
+        self.spmv_rows(x, y, 0, self.nrows);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_coo(rng: &mut Rng, n: usize, nnz: usize) -> Coo {
+        let mut coo = Coo::new(n, n);
+        for _ in 0..nnz {
+            coo.push(rng.index(n), rng.index(n), rng.f64() * 2.0 - 1.0);
+        }
+        coo.normalize();
+        coo
+    }
+
+    #[test]
+    fn from_coo_sorted_rows() {
+        let mut rng = Rng::new(1);
+        let coo = random_coo(&mut rng, 50, 300);
+        let crs = Crs::from_coo(&coo);
+        assert_eq!(crs.row_ptr.len(), 51);
+        assert_eq!(*crs.row_ptr.last().unwrap(), crs.nnz());
+        for i in 0..50 {
+            let (cols, _) = crs.row(i);
+            for w in cols.windows(2) {
+                assert!(w[0] < w[1], "columns must be strictly increasing");
+            }
+        }
+    }
+
+    #[test]
+    fn spmv_matches_coo() {
+        let mut rng = Rng::new(2);
+        for trial in 0..20 {
+            let n = 10 + rng.index(90);
+            let coo = random_coo(&mut rng, n, n * 5);
+            let crs = Crs::from_coo(&coo);
+            let mut x = vec![0.0; n];
+            rng.fill_f64(&mut x, -1.0, 1.0);
+            let mut y1 = vec![0.0; n];
+            let mut y2 = vec![0.0; n];
+            coo.spmv(&x, &mut y1);
+            crs.spmv(&x, &mut y2);
+            let d = crate::util::stats::max_abs_diff(&y1, &y2);
+            assert!(d < 1e-12, "trial {trial}: diff {d}");
+        }
+    }
+
+    #[test]
+    fn empty_rows_are_fine() {
+        let mut coo = Coo::new(4, 4);
+        coo.push(0, 0, 1.0);
+        coo.push(3, 3, 2.0);
+        let crs = Crs::from_coo(&coo);
+        let x = [1.0, 1.0, 1.0, 1.0];
+        let mut y = [9.0; 4];
+        crs.spmv(&x, &mut y);
+        assert_eq!(y, [1.0, 0.0, 0.0, 2.0]);
+    }
+
+    #[test]
+    fn coo_roundtrip() {
+        let mut rng = Rng::new(3);
+        let coo = random_coo(&mut rng, 30, 100);
+        let crs = Crs::from_coo(&coo);
+        let back = Crs::from_coo(&crs.to_coo());
+        assert_eq!(back.row_ptr, crs.row_ptr);
+        assert_eq!(back.col_idx, crs.col_idx);
+        assert_eq!(back.val, crs.val);
+    }
+
+    #[test]
+    fn partial_rows_spmv() {
+        let mut rng = Rng::new(4);
+        let coo = random_coo(&mut rng, 40, 200);
+        let crs = Crs::from_coo(&coo);
+        let mut x = vec![0.0; 40];
+        rng.fill_f64(&mut x, -1.0, 1.0);
+        let mut y_full = vec![0.0; 40];
+        crs.spmv(&x, &mut y_full);
+        let mut y_parts = vec![0.0; 40];
+        crs.spmv_rows(&x, &mut y_parts, 0, 13);
+        crs.spmv_rows(&x, &mut y_parts, 13, 40);
+        assert!(crate::util::stats::max_abs_diff(&y_full, &y_parts) < 1e-15);
+    }
+}

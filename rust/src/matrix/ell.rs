@@ -1,0 +1,163 @@
+//! Padded-JDS (ELL) storage: the interchange format between the Rust
+//! coordinator and the AOT-compiled JAX/Pallas kernel.
+//!
+//! Rows are JDS-permuted (non-increasing non-zero counts) and each
+//! jagged diagonal is padded to the full matrix dimension, yielding two
+//! dense `(D, N)` planes (`val`, `col`) that map directly onto the
+//! Pallas kernel's VMEM tiles. Padding slots have `val = 0`, `col = 0`.
+
+use super::{Crs, Jds, SpMv};
+
+#[derive(Debug, Clone)]
+pub struct EllMatrix {
+    pub n: usize,
+    /// Number of (padded) diagonals = max non-zeros per row, possibly
+    /// padded up to an artifact's static depth.
+    pub d: usize,
+    /// Row-major `(d, n)`: `val[dd * n + i]`.
+    pub val: Vec<f64>,
+    /// Row-major `(d, n)`, permuted-basis column indices.
+    pub col: Vec<i32>,
+    /// `perm[new] = old` row permutation (same convention as [`Jds`]).
+    pub perm: Vec<u32>,
+}
+
+impl EllMatrix {
+    /// Pack from CRS. `pad_d`: pad the diagonal count up to this depth
+    /// (required to match a fixed artifact shape); must be >= the true
+    /// max row count.
+    pub fn from_crs(crs: &Crs, pad_d: Option<usize>) -> anyhow::Result<Self> {
+        let jds = Jds::from_crs(crs);
+        let n = jds.nrows;
+        let true_d = jds.n_diag();
+        let d = match pad_d {
+            Some(p) => {
+                anyhow::ensure!(
+                    p >= true_d,
+                    "matrix needs {true_d} diagonals but artifact depth is {p}"
+                );
+                p
+            }
+            None => true_d,
+        };
+        let mut val = vec![0.0; d * n];
+        let mut col = vec![0i32; d * n];
+        for dd in 0..true_d {
+            let off = jds.jd_ptr[dd];
+            let len = jds.diag_len(dd);
+            for i in 0..len {
+                val[dd * n + i] = jds.val[off + i];
+                col[dd * n + i] = jds.col_idx[off + i] as i32;
+            }
+        }
+        Ok(EllMatrix { n, d, val, col, perm: jds.perm })
+    }
+
+    /// Gather a vector into the permuted basis.
+    pub fn permute_vec(&self, x: &[f64]) -> Vec<f64> {
+        self.perm.iter().map(|&old| x[old as usize]).collect()
+    }
+
+    /// Scatter a permuted-basis vector back.
+    pub fn unpermute_vec(&self, yp: &[f64], y: &mut [f64]) {
+        for (new, &old) in self.perm.iter().enumerate() {
+            y[old as usize] = yp[new];
+        }
+    }
+
+    /// Native ELL SpMV in the permuted basis (reference / fallback for
+    /// the runtime executor).
+    pub fn spmv_permuted(&self, xp: &[f64], yp: &mut [f64]) {
+        assert_eq!(xp.len(), self.n);
+        assert_eq!(yp.len(), self.n);
+        yp.fill(0.0);
+        for dd in 0..self.d {
+            let base = dd * self.n;
+            for i in 0..self.n {
+                yp[i] += self.val[base + i] * xp[self.col[base + i] as usize];
+            }
+        }
+    }
+
+    /// Stored non-zeros (excluding padding).
+    pub fn nnz(&self) -> usize {
+        self.val.iter().filter(|&&v| v != 0.0).count()
+    }
+}
+
+impl SpMv for EllMatrix {
+    fn nrows(&self) -> usize {
+        self.n
+    }
+    fn ncols(&self) -> usize {
+        self.n
+    }
+    fn nnz(&self) -> usize {
+        EllMatrix::nnz(self)
+    }
+    fn spmv(&self, x: &[f64], y: &mut [f64]) {
+        let xp = self.permute_vec(x);
+        let mut yp = vec![0.0; self.n];
+        self.spmv_permuted(&xp, &mut yp);
+        self.unpermute_vec(&yp, y);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen;
+    use crate::matrix::Coo;
+    use crate::util::rng::Rng;
+    use crate::util::stats::max_abs_diff;
+
+    #[test]
+    fn ell_matches_crs_spmv() {
+        let mut rng = Rng::new(60);
+        let mut coo = Coo::new(50, 50);
+        for _ in 0..300 {
+            coo.push(rng.index(50), rng.index(50), rng.f64() - 0.5);
+        }
+        coo.normalize();
+        let crs = Crs::from_coo(&coo);
+        let ell = EllMatrix::from_crs(&crs, None).unwrap();
+        let mut x = vec![0.0; 50];
+        rng.fill_f64(&mut x, -1.0, 1.0);
+        let mut y1 = vec![0.0; 50];
+        let mut y2 = vec![0.0; 50];
+        crs.spmv(&x, &mut y1);
+        ell.spmv(&x, &mut y2);
+        assert!(max_abs_diff(&y1, &y2) < 1e-12);
+    }
+
+    #[test]
+    fn padding_depth_respected() {
+        let h = gen::holstein_hubbard(&gen::HolsteinHubbardParams::tiny());
+        let crs = Crs::from_coo(&h);
+        let ell = EllMatrix::from_crs(&crs, Some(24)).unwrap();
+        assert_eq!(ell.d, 24);
+        assert_eq!(ell.n, 540);
+        // too-small padding must fail
+        assert!(EllMatrix::from_crs(&crs, Some(2)).is_err());
+        // padded result still correct
+        let mut rng = Rng::new(61);
+        let mut x = vec![0.0; 540];
+        rng.fill_f64(&mut x, -1.0, 1.0);
+        let mut y1 = vec![0.0; 540];
+        let mut y2 = vec![0.0; 540];
+        crs.spmv(&x, &mut y1);
+        ell.spmv(&x, &mut y2);
+        assert!(max_abs_diff(&y1, &y2) < 1e-12);
+    }
+
+    #[test]
+    fn nnz_excludes_padding() {
+        let mut coo = Coo::new(3, 3);
+        coo.push(0, 0, 1.0);
+        coo.push(1, 2, 2.0);
+        let crs = Crs::from_coo(&coo);
+        let ell = EllMatrix::from_crs(&crs, Some(5)).unwrap();
+        assert_eq!(SpMv::nnz(&ell), 2);
+        assert_eq!(ell.val.len(), 15);
+    }
+}

@@ -1,0 +1,186 @@
+//! MatrixMarket (.mtx) coordinate-format reader/writer, so test matrices
+//! can be exchanged with external tools. Supports `matrix coordinate
+//! real/integer/pattern general/symmetric`.
+
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::Coo;
+
+/// Write a COO matrix as MatrixMarket `coordinate real general`.
+pub fn write_matrix_market(coo: &Coo, path: &Path) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let f = std::fs::File::create(path)
+        .with_context(|| format!("creating {}", path.display()))?;
+    let mut w = BufWriter::new(f);
+    writeln!(w, "%%MatrixMarket matrix coordinate real general")?;
+    writeln!(w, "% written by spmvperf")?;
+    writeln!(w, "{} {} {}", coo.nrows, coo.ncols, coo.nnz())?;
+    for &(r, c, v) in &coo.entries {
+        writeln!(w, "{} {} {:.17e}", r + 1, c + 1, v)?;
+    }
+    Ok(())
+}
+
+/// Read a MatrixMarket file into COO. Symmetric matrices are expanded to
+/// general storage (both triangles materialized).
+pub fn read_matrix_market(path: &Path) -> Result<Coo> {
+    let f = std::fs::File::open(path)
+        .with_context(|| format!("opening {}", path.display()))?;
+    let mut lines = BufReader::new(f).lines();
+
+    let header = lines
+        .next()
+        .context("empty file")??
+        .to_ascii_lowercase();
+    if !header.starts_with("%%matrixmarket") {
+        bail!("not a MatrixMarket file: bad header");
+    }
+    let toks: Vec<&str> = header.split_whitespace().collect();
+    if toks.len() < 5 || toks[1] != "matrix" || toks[2] != "coordinate" {
+        bail!("unsupported MatrixMarket header '{header}' (need matrix coordinate)");
+    }
+    let field = toks[3]; // real | integer | pattern
+    let symmetry = toks[4]; // general | symmetric
+    if !matches!(field, "real" | "integer" | "pattern") {
+        bail!("unsupported field type '{field}'");
+    }
+    if !matches!(symmetry, "general" | "symmetric") {
+        bail!("unsupported symmetry '{symmetry}'");
+    }
+
+    // Skip comments, read size line.
+    let size_line = loop {
+        let line = lines.next().context("missing size line")??;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('%') {
+            continue;
+        }
+        break t.to_string();
+    };
+    let dims: Vec<usize> = size_line
+        .split_whitespace()
+        .map(|s| s.parse::<usize>().context("bad size line"))
+        .collect::<Result<_>>()?;
+    if dims.len() != 3 {
+        bail!("size line must have 3 fields, got '{size_line}'");
+    }
+    let (nrows, ncols, nnz) = (dims[0], dims[1], dims[2]);
+    let mut coo = Coo::with_capacity(nrows, ncols, nnz);
+    let mut read = 0usize;
+    for line in lines {
+        let line = line?;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('%') {
+            continue;
+        }
+        let mut it = t.split_whitespace();
+        let r: usize = it.next().context("missing row")?.parse()?;
+        let c: usize = it.next().context("missing col")?.parse()?;
+        let v: f64 = match field {
+            "pattern" => 1.0,
+            _ => it.next().context("missing value")?.parse()?,
+        };
+        if r < 1 || r > nrows || c < 1 || c > ncols {
+            bail!("entry ({r},{c}) out of bounds {nrows}x{ncols}");
+        }
+        coo.push(r - 1, c - 1, v);
+        if symmetry == "symmetric" && r != c {
+            coo.push(c - 1, r - 1, v);
+        }
+        read += 1;
+    }
+    if read != nnz {
+        bail!("expected {nnz} entries, found {read}");
+    }
+    Ok(coo)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn tmpfile(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("spmvperf-io-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn roundtrip_general() {
+        let mut rng = Rng::new(1);
+        let mut coo = Coo::new(20, 30);
+        for _ in 0..100 {
+            coo.push(rng.index(20), rng.index(30), rng.f64() * 10.0 - 5.0);
+        }
+        coo.normalize();
+        let p = tmpfile("rt.mtx");
+        write_matrix_market(&coo, &p).unwrap();
+        let back = read_matrix_market(&p).unwrap();
+        assert_eq!(back.nrows, 20);
+        assert_eq!(back.ncols, 30);
+        assert_eq!(back.nnz(), coo.nnz());
+        let d1 = coo.to_dense();
+        let d2 = back.to_dense();
+        for i in 0..20 {
+            for j in 0..30 {
+                assert!((d1[i][j] - d2[i][j]).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn reads_symmetric_and_pattern() {
+        let p = tmpfile("sym.mtx");
+        std::fs::write(
+            &p,
+            "%%MatrixMarket matrix coordinate real symmetric\n3 3 2\n2 1 5.0\n3 3 1.0\n",
+        )
+        .unwrap();
+        let m = read_matrix_market(&p).unwrap();
+        assert_eq!(m.nnz(), 3); // off-diagonal mirrored
+        let d = m.to_dense();
+        assert_eq!(d[1][0], 5.0);
+        assert_eq!(d[0][1], 5.0);
+
+        let p2 = tmpfile("pat.mtx");
+        std::fs::write(
+            &p2,
+            "%%MatrixMarket matrix coordinate pattern general\n2 2 1\n1 2\n",
+        )
+        .unwrap();
+        let m2 = read_matrix_market(&p2).unwrap();
+        assert_eq!(m2.to_dense()[0][1], 1.0);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let p = tmpfile("bad.mtx");
+        std::fs::write(&p, "hello world\n").unwrap();
+        assert!(read_matrix_market(&p).is_err());
+
+        let p2 = tmpfile("oob.mtx");
+        std::fs::write(
+            &p2,
+            "%%MatrixMarket matrix coordinate real general\n2 2 1\n5 5 1.0\n",
+        )
+        .unwrap();
+        assert!(read_matrix_market(&p2).is_err());
+    }
+
+    #[test]
+    fn rejects_count_mismatch() {
+        let p = tmpfile("cnt.mtx");
+        std::fs::write(
+            &p,
+            "%%MatrixMarket matrix coordinate real general\n2 2 2\n1 1 1.0\n",
+        )
+        .unwrap();
+        assert!(read_matrix_market(&p).is_err());
+    }
+}

@@ -1,0 +1,451 @@
+//! Jagged diagonals storage (JDS) — §2 of the paper — plus the NBJDS
+//! (blocked) and NUJDS (outer-loop-unrolled) *access* schemes that share
+//! its storage layout.
+//!
+//! Construction: rows and columns are symmetrically permuted such that row
+//! non-zero counts decrease with row index; each row's entries are shifted
+//! left; the columns of the resulting staircase ("jagged diagonals") are
+//! stored consecutively. The inner loop is a sparse vector triad
+//! (18 bytes/flop balance): the whole result vector is read+written once
+//! per jagged diagonal.
+//!
+//! All kernels run in the *permuted* basis. The [`SpMv`] impl wraps the
+//! kernel with gather/scatter of the input/output vectors so callers see
+//! the original basis; benchmark paths use the raw `spmv_permuted_*`
+//! kernels with pre-permuted vectors, as a long-lived solver would.
+
+use super::{Coo, Crs, SpMv};
+
+/// Visitor over the logical SpMV update stream of a kernel.
+///
+/// Each call means `y[row] += val[j] * x[col]` where `j` is the storage
+/// offset into `val`/`col_idx`. The *order* of calls is exactly the order
+/// the kernel touches memory, so the same walk drives both the compute
+/// kernels and the memory-hierarchy simulator's trace generation.
+/// Consecutive calls with equal `row` model a register-held accumulator.
+pub trait SpmvVisitor {
+    fn update(&mut self, row: usize, j: usize, col: usize);
+}
+
+/// Compute visitor: performs the actual arithmetic with a register
+/// accumulator for runs of equal `row` (matching CRS/NUJDS codegen).
+pub struct Compute<'a> {
+    pub val: &'a [f64],
+    pub x: &'a [f64],
+    pub y: &'a mut [f64],
+    acc: f64,
+    cur_row: usize,
+}
+
+impl<'a> Compute<'a> {
+    pub fn new(val: &'a [f64], x: &'a [f64], y: &'a mut [f64]) -> Self {
+        y.fill(0.0);
+        Self { val, x, y, acc: 0.0, cur_row: usize::MAX }
+    }
+
+    #[inline]
+    pub fn finish(mut self) {
+        if self.cur_row != usize::MAX {
+            self.y[self.cur_row] += self.acc;
+        }
+        self.cur_row = usize::MAX;
+    }
+}
+
+impl<'a> SpmvVisitor for Compute<'a> {
+    #[inline(always)]
+    fn update(&mut self, row: usize, j: usize, col: usize) {
+        if row != self.cur_row {
+            if self.cur_row != usize::MAX {
+                self.y[self.cur_row] += self.acc;
+            }
+            self.cur_row = row;
+            self.acc = 0.0;
+        }
+        self.acc += self.val[j] * self.x[col];
+    }
+}
+
+/// JDS storage. Shared by the JDS / NBJDS / NUJDS access schemes.
+#[derive(Debug, Clone)]
+pub struct Jds {
+    pub nrows: usize,
+    pub ncols: usize,
+    /// `perm[new] = old`: row `new` of the permuted matrix is row `old`
+    /// of the original.
+    pub perm: Vec<u32>,
+    /// `inv_perm[old] = new`.
+    pub inv_perm: Vec<u32>,
+    /// Offsets of each jagged diagonal into `val`/`col_idx`; length
+    /// `n_diag + 1`. Diagonal lengths are non-increasing.
+    pub jd_ptr: Vec<usize>,
+    /// Column indices in the permuted basis.
+    pub col_idx: Vec<u32>,
+    pub val: Vec<f64>,
+}
+
+impl Jds {
+    /// Build from CRS. Requires a square matrix (the paper permutes rows
+    /// and columns symmetrically).
+    pub fn from_crs(crs: &Crs) -> Self {
+        assert_eq!(crs.nrows, crs.ncols, "JDS requires a square matrix");
+        let n = crs.nrows;
+        // Sort rows by descending nnz (stable: ties keep original order).
+        let mut order: Vec<u32> = (0..n as u32).collect();
+        order.sort_by_key(|&i| {
+            let i = i as usize;
+            std::cmp::Reverse(crs.row_ptr[i + 1] - crs.row_ptr[i])
+        });
+        let perm = order;
+        let mut inv_perm = vec![0u32; n];
+        for (new, &old) in perm.iter().enumerate() {
+            inv_perm[old as usize] = new as u32;
+        }
+        // Permuted rows with relabeled, re-sorted columns.
+        let mut rows: Vec<Vec<(u32, f64)>> = Vec::with_capacity(n);
+        for &old in &perm {
+            let (cols, vals) = crs.row(old as usize);
+            let mut row: Vec<(u32, f64)> = cols
+                .iter()
+                .zip(vals)
+                .map(|(&c, &v)| (inv_perm[c as usize], v))
+                .collect();
+            row.sort_unstable_by_key(|&(c, _)| c);
+            rows.push(row);
+        }
+        Self::from_permuted_rows(n, crs.ncols, perm, inv_perm, &rows)
+    }
+
+    /// Assemble jagged diagonals from permuted per-row (col, val) lists
+    /// whose lengths are non-increasing.
+    pub(crate) fn from_permuted_rows(
+        nrows: usize,
+        ncols: usize,
+        perm: Vec<u32>,
+        inv_perm: Vec<u32>,
+        rows: &[Vec<(u32, f64)>],
+    ) -> Self {
+        let max_nnz = rows.first().map_or(0, |r| r.len());
+        debug_assert!(rows.windows(2).all(|w| w[0].len() >= w[1].len()));
+        let nnz: usize = rows.iter().map(|r| r.len()).sum();
+        let mut jd_ptr = Vec::with_capacity(max_nnz + 1);
+        let mut col_idx = Vec::with_capacity(nnz);
+        let mut val = Vec::with_capacity(nnz);
+        jd_ptr.push(0);
+        for d in 0..max_nnz {
+            for row in rows {
+                if row.len() > d {
+                    col_idx.push(row[d].0);
+                    val.push(row[d].1);
+                } else {
+                    break; // row lengths are non-increasing
+                }
+            }
+            jd_ptr.push(col_idx.len());
+        }
+        Jds { nrows, ncols, perm, inv_perm, jd_ptr, col_idx, val }
+    }
+
+    pub fn from_coo(coo: &Coo) -> Self {
+        Self::from_crs(&Crs::from_coo(coo))
+    }
+
+    /// Number of jagged diagonals.
+    pub fn n_diag(&self) -> usize {
+        self.jd_ptr.len() - 1
+    }
+
+    /// Length of diagonal `d`.
+    #[inline]
+    pub fn diag_len(&self, d: usize) -> usize {
+        self.jd_ptr[d + 1] - self.jd_ptr[d]
+    }
+
+    /// Gather `x` into the permuted basis.
+    pub fn permute_vec(&self, x: &[f64]) -> Vec<f64> {
+        self.perm.iter().map(|&old| x[old as usize]).collect()
+    }
+
+    /// Scatter a permuted-basis result back to the original basis.
+    pub fn unpermute_vec(&self, yp: &[f64], y: &mut [f64]) {
+        for (new, &old) in self.perm.iter().enumerate() {
+            y[old as usize] = yp[new];
+        }
+    }
+
+    // ---------------------------------------------------------------
+    // Access schemes. Each `walk_*` drives a visitor in the exact order
+    // the corresponding kernel touches memory.
+    // ---------------------------------------------------------------
+
+    /// Plain JDS: diagonal-major traversal (the vector-machine kernel).
+    pub fn walk_jds<V: SpmvVisitor>(&self, v: &mut V) {
+        for d in 0..self.n_diag() {
+            let off = self.jd_ptr[d];
+            let len = self.diag_len(d);
+            for i in 0..len {
+                v.update(i, off + i, self.col_idx[off + i] as usize);
+            }
+        }
+    }
+
+    /// NBJDS: diagonals cut into row blocks of `block`; the block of the
+    /// result vector stays in cache across diagonals (§2).
+    pub fn walk_nbjds<V: SpmvVisitor>(&self, block: usize, v: &mut V) {
+        assert!(block > 0);
+        let nd = self.n_diag();
+        let longest = if nd == 0 { 0 } else { self.diag_len(0) };
+        let mut b0 = 0;
+        while b0 < longest {
+            let b1 = (b0 + block).min(longest);
+            for d in 0..nd {
+                let len = self.diag_len(d);
+                if len <= b0 {
+                    break; // lengths non-increasing: no later diag reaches
+                }
+                let off = self.jd_ptr[d];
+                let end = b1.min(len);
+                for i in b0..end {
+                    v.update(i, off + i, self.col_idx[off + i] as usize);
+                }
+            }
+            b0 = b1;
+        }
+    }
+
+    /// NUJDS: outer (diagonal) loop unrolled by `unroll`; each result
+    /// element is updated by several diagonals at once and held in a
+    /// register. With `unroll >= n_diag` this degenerates to CRS order in
+    /// the permuted basis (§2).
+    pub fn walk_nujds<V: SpmvVisitor>(&self, unroll: usize, v: &mut V) {
+        assert!(unroll > 0);
+        let nd = self.n_diag();
+        let mut d = 0;
+        while d < nd {
+            let dmax = (d + unroll).min(nd);
+            // Shortest diagonal in the group bounds the fused range.
+            let common = self.diag_len(dmax - 1);
+            for i in 0..common {
+                for dd in d..dmax {
+                    let off = self.jd_ptr[dd];
+                    v.update(i, off + i, self.col_idx[off + i] as usize);
+                }
+            }
+            // Tails where only a prefix of the group has entries: keep
+            // row-major order (as the unrolled remainder loop does) so a
+            // register still accumulates each result element.
+            let longest = self.diag_len(d);
+            for i in common..longest {
+                for dd in d..dmax {
+                    if self.diag_len(dd) <= i {
+                        break; // lengths non-increasing within the group
+                    }
+                    let off = self.jd_ptr[dd];
+                    v.update(i, off + i, self.col_idx[off + i] as usize);
+                }
+            }
+            d = dmax;
+        }
+    }
+
+    // ---------------------------------------------------------------
+    // Permuted-basis SpMV kernels (no gather/scatter).
+    // ---------------------------------------------------------------
+
+    pub fn spmv_permuted_jds(&self, xp: &[f64], yp: &mut [f64]) {
+        let mut c = Compute::new(&self.val, xp, yp);
+        self.walk_jds(&mut c);
+        c.finish();
+    }
+
+    pub fn spmv_permuted_nbjds(&self, block: usize, xp: &[f64], yp: &mut [f64]) {
+        let mut c = Compute::new(&self.val, xp, yp);
+        self.walk_nbjds(block, &mut c);
+        c.finish();
+    }
+
+    pub fn spmv_permuted_nujds(&self, unroll: usize, xp: &[f64], yp: &mut [f64]) {
+        let mut c = Compute::new(&self.val, xp, yp);
+        self.walk_nujds(unroll, &mut c);
+        c.finish();
+    }
+
+    /// Full SpMV in the original basis via a chosen access scheme.
+    pub fn spmv_scheme(&self, scheme: super::Scheme, x: &[f64], y: &mut [f64]) {
+        let xp = self.permute_vec(x);
+        let mut yp = vec![0.0; self.nrows];
+        match scheme {
+            super::Scheme::Jds => self.spmv_permuted_jds(&xp, &mut yp),
+            super::Scheme::NbJds { block } => self.spmv_permuted_nbjds(block, &xp, &mut yp),
+            super::Scheme::NuJds { unroll } => self.spmv_permuted_nujds(unroll, &xp, &mut yp),
+            other => panic!("scheme {other} does not use Jds storage"),
+        }
+        self.unpermute_vec(&yp, y);
+    }
+}
+
+impl SpMv for Jds {
+    fn nrows(&self) -> usize {
+        self.nrows
+    }
+    fn ncols(&self) -> usize {
+        self.ncols
+    }
+    fn nnz(&self) -> usize {
+        self.val.len()
+    }
+    fn spmv(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.ncols);
+        assert_eq!(y.len(), self.nrows);
+        self.spmv_scheme(super::Scheme::Jds, x, y);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use crate::util::stats::max_abs_diff;
+
+    fn random_square(rng: &mut Rng, n: usize, nnz: usize) -> (Coo, Crs) {
+        let mut coo = Coo::new(n, n);
+        for _ in 0..nnz {
+            coo.push(rng.index(n), rng.index(n), rng.f64() * 2.0 - 1.0);
+        }
+        coo.normalize();
+        let crs = Crs::from_coo(&coo);
+        (coo, crs)
+    }
+
+    #[test]
+    fn diag_lengths_non_increasing() {
+        let mut rng = Rng::new(10);
+        let (_, crs) = random_square(&mut rng, 80, 500);
+        let jds = Jds::from_crs(&crs);
+        for d in 1..jds.n_diag() {
+            assert!(jds.diag_len(d) <= jds.diag_len(d - 1));
+        }
+        assert_eq!(jds.nnz(), crs.nnz());
+    }
+
+    #[test]
+    fn perm_is_permutation_sorted_by_nnz() {
+        let mut rng = Rng::new(11);
+        let (_, crs) = random_square(&mut rng, 60, 400);
+        let jds = Jds::from_crs(&crs);
+        let mut seen = vec![false; 60];
+        for &p in &jds.perm {
+            assert!(!seen[p as usize]);
+            seen[p as usize] = true;
+        }
+        // nnz per permuted row non-increasing
+        let counts: Vec<usize> = jds
+            .perm
+            .iter()
+            .map(|&old| crs.row_ptr[old as usize + 1] - crs.row_ptr[old as usize])
+            .collect();
+        assert!(counts.windows(2).all(|w| w[0] >= w[1]));
+    }
+
+    #[test]
+    fn jds_spmv_matches_crs() {
+        let mut rng = Rng::new(12);
+        for _ in 0..10 {
+            let n = 20 + rng.index(100);
+            let (_, crs) = random_square(&mut rng, n, n * 6);
+            let jds = Jds::from_crs(&crs);
+            let mut x = vec![0.0; n];
+            rng.fill_f64(&mut x, -1.0, 1.0);
+            let mut y1 = vec![0.0; n];
+            let mut y2 = vec![0.0; n];
+            crs.spmv(&x, &mut y1);
+            jds.spmv(&x, &mut y2);
+            assert!(max_abs_diff(&y1, &y2) < 1e-12);
+        }
+    }
+
+    #[test]
+    fn nbjds_matches_for_various_blocks() {
+        let mut rng = Rng::new(13);
+        let n = 120;
+        let (_, crs) = random_square(&mut rng, n, n * 5);
+        let jds = Jds::from_crs(&crs);
+        let mut x = vec![0.0; n];
+        rng.fill_f64(&mut x, -1.0, 1.0);
+        let mut y_ref = vec![0.0; n];
+        crs.spmv(&x, &mut y_ref);
+        for block in [1, 2, 7, 16, 64, 119, 120, 1000] {
+            let mut y = vec![0.0; n];
+            jds.spmv_scheme(crate::matrix::Scheme::NbJds { block }, &x, &mut y);
+            assert!(max_abs_diff(&y_ref, &y) < 1e-12, "block {block}");
+        }
+    }
+
+    #[test]
+    fn nujds_matches_for_various_unrolls() {
+        let mut rng = Rng::new(14);
+        let n = 90;
+        let (_, crs) = random_square(&mut rng, n, n * 4);
+        let jds = Jds::from_crs(&crs);
+        let mut x = vec![0.0; n];
+        rng.fill_f64(&mut x, -1.0, 1.0);
+        let mut y_ref = vec![0.0; n];
+        crs.spmv(&x, &mut y_ref);
+        for unroll in [1, 2, 3, 4, 8, 1000] {
+            let mut y = vec![0.0; n];
+            jds.spmv_scheme(crate::matrix::Scheme::NuJds { unroll }, &x, &mut y);
+            assert!(max_abs_diff(&y_ref, &y) < 1e-12, "unroll {unroll}");
+        }
+    }
+
+    #[test]
+    fn nujds_full_unroll_is_row_major() {
+        // With unroll >= n_diag, the update order must be row-major in the
+        // permuted basis, i.e. CRS order (§2).
+        let mut rng = Rng::new(15);
+        let (_, crs) = random_square(&mut rng, 40, 200);
+        let jds = Jds::from_crs(&crs);
+        struct Rows(Vec<usize>);
+        impl SpmvVisitor for Rows {
+            fn update(&mut self, row: usize, _j: usize, _col: usize) {
+                self.0.push(row);
+            }
+        }
+        let mut rows = Rows(Vec::new());
+        jds.walk_nujds(jds.n_diag().max(1), &mut rows);
+        assert!(rows.0.windows(2).all(|w| w[0] <= w[1]), "row order must be monotone");
+    }
+
+    #[test]
+    fn walk_visits_each_nnz_once() {
+        let mut rng = Rng::new(16);
+        let (_, crs) = random_square(&mut rng, 70, 350);
+        let jds = Jds::from_crs(&crs);
+        struct Count(Vec<u32>);
+        impl SpmvVisitor for Count {
+            fn update(&mut self, _row: usize, j: usize, _col: usize) {
+                self.0[j] += 1;
+            }
+        }
+        for walk in 0..3 {
+            let mut c = Count(vec![0; jds.nnz()]);
+            match walk {
+                0 => jds.walk_jds(&mut c),
+                1 => jds.walk_nbjds(13, &mut c),
+                _ => jds.walk_nujds(3, &mut c),
+            }
+            assert!(c.0.iter().all(|&n| n == 1), "walk {walk} must touch each nnz once");
+        }
+    }
+
+    #[test]
+    fn empty_matrix() {
+        let coo = Coo::new(5, 5);
+        let jds = Jds::from_coo(&coo);
+        assert_eq!(jds.n_diag(), 0);
+        let x = vec![1.0; 5];
+        let mut y = vec![9.0; 5];
+        jds.spmv(&x, &mut y);
+        assert_eq!(y, vec![0.0; 5]);
+    }
+}

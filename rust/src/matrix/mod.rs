@@ -1,0 +1,129 @@
+//! Sparse matrix storage schemes from §2 of the paper.
+//!
+//! - [`coo`]: coordinate triples — the assembly/interchange format.
+//! - [`crs`]: compressed row storage — the cache-architecture workhorse
+//!   (10 bytes/flop algorithmic balance).
+//! - [`jds`]: jagged diagonals storage — the vector-architecture layout
+//!   (18 bytes/flop), shared by the JDS / NBJDS / NUJDS access schemes.
+//! - [`blocked`]: the paper's refined layouts RBJDS (block-consecutive
+//!   storage) and SOJDS (stride-sorted block storage).
+//! - [`io`]: MatrixMarket read/write.
+//!
+//! All formats store values as `f64` and column indices as `u32`, matching
+//! the 8-byte value + 4-byte index assumption behind the paper's balance
+//! numbers.
+
+pub mod blocked;
+pub mod ell;
+pub mod coo;
+pub mod crs;
+pub mod io;
+pub mod jds;
+
+pub use blocked::{RbJds, SoJds};
+pub use coo::Coo;
+pub use ell::EllMatrix;
+pub use crs::Crs;
+pub use jds::Jds;
+
+/// The storage/access scheme taxonomy of the paper (§2, Fig 1).
+///
+/// JDS, NBJDS and NUJDS share the *storage* layout of [`Jds`] and differ in
+/// access pattern only; RBJDS and SOJDS change the storage order itself.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scheme {
+    /// Compressed row storage.
+    Crs,
+    /// Plain jagged diagonals: diagonal-major traversal.
+    Jds,
+    /// JDS with outer (diagonal) loop unrolling by the given factor.
+    NuJds { unroll: usize },
+    /// JDS blocked over rows with the given block size.
+    NbJds { block: usize },
+    /// Block-reordered JDS storage (elements of a block stored
+    /// consecutively), given block size.
+    RbJds { block: usize },
+    /// Stride-sorted block JDS storage, given block size.
+    SoJds { block: usize },
+}
+
+impl Scheme {
+    pub fn name(&self) -> String {
+        match self {
+            Scheme::Crs => "CRS".to_string(),
+            Scheme::Jds => "JDS".to_string(),
+            Scheme::NuJds { unroll } => format!("NUJDS(u={unroll})"),
+            Scheme::NbJds { block } => format!("NBJDS(b={block})"),
+            Scheme::RbJds { block } => format!("RBJDS(b={block})"),
+            Scheme::SoJds { block } => format!("SOJDS(b={block})"),
+        }
+    }
+
+    /// Parse e.g. "crs", "jds", "nbjds:1000", "nujds:2".
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        let (name, param) = match s.split_once(':') {
+            Some((n, p)) => (n, Some(p.parse::<usize>()?)),
+            None => (s, None),
+        };
+        Ok(match name.to_ascii_lowercase().as_str() {
+            "crs" | "csr" => Scheme::Crs,
+            "jds" => Scheme::Jds,
+            "nujds" => Scheme::NuJds { unroll: param.unwrap_or(2) },
+            "nbjds" => Scheme::NbJds { block: param.unwrap_or(1000) },
+            "rbjds" => Scheme::RbJds { block: param.unwrap_or(1000) },
+            "sojds" => Scheme::SoJds { block: param.unwrap_or(1000) },
+            other => anyhow::bail!("unknown scheme '{other}'"),
+        })
+    }
+
+    /// All schemes evaluated in Fig 6/7, with a given block/unroll choice.
+    pub fn all_with(block: usize, unroll: usize) -> Vec<Scheme> {
+        vec![
+            Scheme::Crs,
+            Scheme::Jds,
+            Scheme::NuJds { unroll },
+            Scheme::NbJds { block },
+            Scheme::RbJds { block },
+            Scheme::SoJds { block },
+        ]
+    }
+}
+
+impl std::fmt::Display for Scheme {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.name())
+    }
+}
+
+/// Matrix-vector product interface implemented by every storage scheme.
+pub trait SpMv {
+    fn nrows(&self) -> usize;
+    fn ncols(&self) -> usize;
+    fn nnz(&self) -> usize;
+    /// y = A x. `x.len() == ncols`, `y.len() == nrows`. Overwrites `y`.
+    fn spmv(&self, x: &[f64], y: &mut [f64]);
+    /// Flops per SpMV (2 per stored non-zero; padding does not count).
+    fn flops(&self) -> u64 {
+        2 * self.nnz() as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scheme_parse_roundtrip() {
+        assert_eq!(Scheme::parse("crs").unwrap(), Scheme::Crs);
+        assert_eq!(Scheme::parse("CSR").unwrap(), Scheme::Crs);
+        assert_eq!(Scheme::parse("nbjds:64").unwrap(), Scheme::NbJds { block: 64 });
+        assert_eq!(Scheme::parse("nujds:4").unwrap(), Scheme::NuJds { unroll: 4 });
+        assert!(Scheme::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn scheme_names() {
+        assert_eq!(Scheme::Crs.name(), "CRS");
+        assert_eq!(Scheme::NbJds { block: 1000 }.name(), "NBJDS(b=1000)");
+    }
+}

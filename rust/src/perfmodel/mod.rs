@@ -1,0 +1,259 @@
+//! Predictive SpMV performance model — the paper's stated goal (§1):
+//! *"A successful performance model will be predictive for the expected
+//! performance of various SpMVM implementations for a given matrix on the
+//! basis of its sparsity pattern, and give a hint to the respective
+//! optimal storage scheme."*
+//!
+//! The model combines:
+//! 1. a **machine cost curve** `c(k)`: cycles per update of the IRSCP
+//!    microbenchmark at mean gather stride `k` (calibrated once per
+//!    machine on the simulator — on real hardware this would be a
+//!    measured curve, Fig 3a);
+//! 2. the **matrix fingerprint**: the stride distribution of the chosen
+//!    storage scheme's access pattern (Fig 6a);
+//! 3. scheme-dependent overheads: result-vector traffic per row-run and
+//!    inner-loop startup costs.
+
+use crate::analysis::StrideDistribution;
+use crate::kernels::{IndexPattern, MicroOp, OpKind, SpmvKernel};
+use crate::matrix::jds::SpmvVisitor;
+use crate::simulator::{simulate_microbench, MachineSpec, SimOptions};
+
+/// Calibrated per-machine gather cost curve.
+#[derive(Debug, Clone)]
+pub struct CostCurve {
+    pub machine: String,
+    /// (mean stride, cycles per IRSCP update)
+    pub points: Vec<(f64, f64)>,
+    /// Dense-stream baseline (PDSCP cycles per update).
+    pub dense: f64,
+}
+
+impl CostCurve {
+    /// Calibrate on the simulator with geometric-stride IRSCP runs.
+    pub fn calibrate(machine: &MachineSpec, n_iters: usize) -> Self {
+        let opts = SimOptions { warmup: false, ..Default::default() };
+        let strides = [1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0, 128.0, 256.0, 512.0];
+        let b_len = (n_iters * 600).max(1 << 20);
+        let points = strides
+            .iter()
+            .map(|&k| {
+                let op = MicroOp { kind: OpKind::Scp, pattern: IndexPattern::Geometric { mean: k } };
+                let r = simulate_microbench(machine, op, n_iters, b_len, &opts, 42);
+                (k, r.cycles_per_update)
+            })
+            .collect();
+        let dense = simulate_microbench(
+            machine,
+            MicroOp { kind: OpKind::Scp, pattern: IndexPattern::Dense },
+            n_iters,
+            b_len,
+            &opts,
+            42,
+        )
+        .cycles_per_update;
+        CostCurve { machine: machine.name.to_string(), points, dense }
+    }
+
+    /// Interpolated cycles/update at mean |stride| `k` (log-linear).
+    pub fn cost(&self, k: f64) -> f64 {
+        let k = k.max(1.0);
+        let pts = &self.points;
+        if k <= pts[0].0 {
+            return pts[0].1;
+        }
+        if k >= pts[pts.len() - 1].0 {
+            return pts[pts.len() - 1].1;
+        }
+        for w in pts.windows(2) {
+            let (k0, c0) = w[0];
+            let (k1, c1) = w[1];
+            if k >= k0 && k <= k1 {
+                let t = (k.ln() - k0.ln()) / (k1.ln() - k0.ln());
+                return c0 + t * (c1 - c0);
+            }
+        }
+        pts[pts.len() - 1].1
+    }
+}
+
+/// Prediction for one storage scheme on one machine.
+#[derive(Debug, Clone)]
+pub struct Prediction {
+    pub scheme: String,
+    pub cycles_per_nnz: f64,
+    pub mflops: f64,
+}
+
+/// Row-run statistics of a kernel walk (how often the result register is
+/// flushed, and how many inner loops start).
+fn run_stats(kernel: &SpmvKernel) -> (u64, u64) {
+    struct S {
+        prev: usize,
+        row_changes: u64,
+        loop_starts: u64,
+        row_major: bool,
+    }
+    impl SpmvVisitor for S {
+        fn update(&mut self, row: usize, _j: usize, _c: usize) {
+            if row != self.prev {
+                self.row_changes += 1;
+            }
+            let new_loop = if self.row_major {
+                row != self.prev
+            } else {
+                row != self.prev.wrapping_add(1)
+            };
+            if new_loop {
+                self.loop_starts += 1;
+            }
+            self.prev = row;
+        }
+    }
+    let row_major = matches!(
+        kernel.scheme(),
+        crate::matrix::Scheme::Crs | crate::matrix::Scheme::NuJds { .. }
+    );
+    let mut s = S { prev: usize::MAX, row_changes: 0, loop_starts: 0, row_major };
+    kernel.walk(&mut s);
+    (s.row_changes, s.loop_starts)
+}
+
+/// Predict cycles/nnz for `kernel` on `machine` from its stride
+/// distribution alone (no full simulation).
+pub fn predict(machine: &MachineSpec, curve: &CostCurve, kernel: &SpmvKernel) -> Prediction {
+    let dist = StrideDistribution::from_kernel(kernel);
+    let nnz = kernel.nnz().max(1) as f64;
+
+    // Gather cost: expectation of the cost curve over the |stride|
+    // distribution. Backward jumps break prefetch streams — charge them
+    // at the random-access end of the curve.
+    let worst = curve.points.last().map(|p| p.1).unwrap_or(0.0);
+    let mut gather = 0.0;
+    for (&s, &c) in &dist.counts {
+        let frac = c as f64 / dist.total.max(1) as f64;
+        let cost = if s < 0 {
+            worst.max(curve.cost(s.unsigned_abs() as f64))
+        } else {
+            curve.cost(s as f64)
+        };
+        gather += frac * cost;
+    }
+
+    // Result-vector traffic: each row-run flush is a read+write of 8 B
+    // (16 B of traffic) — but only if the line was evicted since its
+    // last touch. The reuse span of a diag-major scheme is its block
+    // (plain JDS: the whole matrix); if one sweep over that span fits in
+    // the LLC, repeated flushes are free and y streams only once.
+    let (row_changes, loop_starts) = run_stats(kernel);
+    let hz = machine.hz();
+    let bw_bytes_per_cycle = machine.node_bw_gbs / machine.sockets as f64 * 1e9 / hz;
+    let nrows = kernel.nrows() as f64;
+    let span_rows = match kernel.scheme() {
+        crate::matrix::Scheme::Jds => nrows,
+        crate::matrix::Scheme::NbJds { block }
+        | crate::matrix::Scheme::RbJds { block }
+        | crate::matrix::Scheme::SoJds { block } => (block as f64).min(nrows),
+        _ => 1.0, // CRS/NUJDS hold the row in a register
+    };
+    let llc = machine.l3.map(|c| c.size_bytes).unwrap_or(machine.l2.size_bytes) as f64;
+    let sweep_bytes = span_rows * (nnz / nrows * 12.0 + 16.0);
+    let y_flushes = if sweep_bytes > llc { row_changes as f64 } else { nrows };
+    let y_cycles = y_flushes * 16.0 / bw_bytes_per_cycle / nnz;
+    let loop_cycles = loop_starts as f64 * machine.loop_overhead_cycles / nnz;
+
+    let cycles_per_nnz = gather + y_cycles + loop_cycles;
+    Prediction {
+        scheme: kernel.scheme().name(),
+        cycles_per_nnz,
+        mflops: 2.0 * hz / cycles_per_nnz / 1e6,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen;
+    use crate::matrix::Scheme;
+    use crate::sched::Schedule;
+    use crate::simulator::{simulate_spmv, Placement};
+
+    #[test]
+    fn cost_curve_is_monotone_enough() {
+        let m = MachineSpec::nehalem();
+        let c = CostCurve::calibrate(&m, 20_000);
+        // dense much cheaper than sparse gather at k=8
+        assert!(c.dense < c.cost(8.0));
+        // large strides cost more than unit stride
+        assert!(c.cost(256.0) > c.cost(1.0));
+        // interpolation between calibrated points is bounded
+        let mid = c.cost(12.0);
+        assert!(mid >= c.cost(8.0).min(c.cost(16.0)) - 1e-9);
+        assert!(mid <= c.cost(8.0).max(c.cost(16.0)) + 1e-9);
+    }
+
+    use std::sync::OnceLock;
+
+    /// Memory-bound validation workload: the input vector alone exceeds
+    /// the Woodcrest LLC, and gather strides are wide — the regime the
+    /// fingerprint model is built for.
+    fn big_band() -> &'static crate::matrix::Coo {
+        static COO: OnceLock<crate::matrix::Coo> = OnceLock::new();
+        COO.get_or_init(|| {
+            let mut rng = crate::util::rng::Rng::new(3);
+            gen::random_band(700_000, 14, 400_000, &mut rng)
+        })
+    }
+
+    #[test]
+    fn model_predicts_scheme_ordering() {
+        // The model must reproduce the paper's central result: CRS is
+        // the fastest scheme and blocking recovers most of JDS's loss
+        // (Fig 6b) — in the memory-bound regime.
+        let m = MachineSpec::woodcrest();
+        let curve = CostCurve::calibrate(&m, 20_000);
+        let crs = predict(&m, &curve, &SpmvKernel::build(big_band(), Scheme::Crs));
+        let jds = predict(&m, &curve, &SpmvKernel::build(big_band(), Scheme::Jds));
+        assert!(
+            crs.cycles_per_nnz < jds.cycles_per_nnz,
+            "CRS {:.2} must beat plain JDS {:.2}",
+            crs.cycles_per_nnz,
+            jds.cycles_per_nnz
+        );
+        let nb = predict(
+            &m,
+            &curve,
+            &SpmvKernel::build(big_band(), Scheme::NbJds { block: 1000 }),
+        );
+        assert!(
+            nb.cycles_per_nnz < jds.cycles_per_nnz,
+            "NBJDS {:.2} must beat plain JDS {:.2}",
+            nb.cycles_per_nnz,
+            jds.cycles_per_nnz
+        );
+    }
+
+    #[test]
+    fn prediction_within_factor_of_simulation() {
+        let m = MachineSpec::woodcrest();
+        let curve = CostCurve::calibrate(&m, 20_000);
+        for scheme in [Scheme::Crs, Scheme::NbJds { block: 1000 }] {
+            let k = SpmvKernel::build(big_band(), scheme);
+            let pred = predict(&m, &curve, &k);
+            let sim = simulate_spmv(
+                &m,
+                &k,
+                1,
+                1,
+                Schedule::Static { chunk: None },
+                Placement::FirstTouchStatic,
+                &SimOptions { warmup: false, ..Default::default() },
+            );
+            let ratio = pred.cycles_per_nnz / (sim.cycles / sim.updates as f64);
+            assert!(
+                (0.33..3.0).contains(&ratio),
+                "{scheme:?}: prediction/simulation ratio {ratio:.2}"
+            );
+        }
+    }
+}

@@ -1,0 +1,259 @@
+//! PJRT runtime: loads the AOT-compiled HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the CPU PJRT client.
+//! Python never runs here — the artifacts are self-contained.
+//!
+//! Artifact naming convention (shapes are static in XLA):
+//! `spmv_d{D}_n{N}.hlo.txt`, `spmv_b{B}_d{D}_n{N}.hlo.txt`,
+//! `lanczos_step_d{D}_n{N}.hlo.txt`, `power_step_d{D}_n{N}.hlo.txt`.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::eigen::LinearOp;
+use crate::matrix::EllMatrix;
+
+/// Shape metadata parsed from an artifact file name.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArtifactMeta {
+    pub kind: String,
+    pub batch: Option<usize>,
+    pub d: usize,
+    pub n: usize,
+}
+
+/// Parse e.g. "spmv_b8_d24_n540.hlo.txt".
+pub fn parse_artifact_name(name: &str) -> Result<ArtifactMeta> {
+    let stem = name
+        .strip_suffix(".hlo.txt")
+        .with_context(|| format!("artifact '{name}' must end in .hlo.txt"))?;
+    let mut batch = None;
+    let mut d = None;
+    let mut n = None;
+    let mut kind_parts: Vec<&str> = Vec::new();
+    for part in stem.split('_') {
+        if let Some(v) = part.strip_prefix('b').and_then(|v| v.parse::<usize>().ok()) {
+            batch = Some(v);
+        } else if let Some(v) = part.strip_prefix('d').and_then(|v| v.parse::<usize>().ok()) {
+            d = Some(v);
+        } else if let Some(v) = part.strip_prefix('n').and_then(|v| v.parse::<usize>().ok()) {
+            n = Some(v);
+        } else {
+            kind_parts.push(part);
+        }
+    }
+    Ok(ArtifactMeta {
+        kind: kind_parts.join("_"),
+        batch,
+        d: d.context("artifact name missing d<depth>")?,
+        n: n.context("artifact name missing n<dim>")?,
+    })
+}
+
+/// Default artifacts directory (./artifacts, overridable via
+/// SPMVPERF_ARTIFACTS).
+pub fn default_artifacts_dir() -> PathBuf {
+    std::env::var("SPMVPERF_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+/// The PJRT CPU runtime: one client, many loaded executables.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub artifacts_dir: PathBuf,
+}
+
+impl Runtime {
+    pub fn new(artifacts_dir: &Path) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client, artifacts_dir: artifacts_dir.to_path_buf() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one artifact by file name.
+    pub fn load(&self, file_name: &str) -> Result<Loaded> {
+        let meta = parse_artifact_name(file_name)?;
+        let path = self.artifacts_dir.join(file_name);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).context("PJRT compile")?;
+        Ok(Loaded { exe, meta })
+    }
+
+    /// List artifact file names available in the artifacts directory.
+    pub fn available(&self) -> Vec<String> {
+        let mut v: Vec<String> = std::fs::read_dir(&self.artifacts_dir)
+            .map(|rd| {
+                rd.filter_map(|e| e.ok())
+                    .filter_map(|e| e.file_name().into_string().ok())
+                    .filter(|n| n.ends_with(".hlo.txt"))
+                    .collect()
+            })
+            .unwrap_or_default();
+        v.sort();
+        v
+    }
+
+    /// Bind an SpMV-family artifact to a concrete matrix (uploads the
+    /// `val`/`col` planes once; they are reused across requests).
+    pub fn bind(&self, ell: &EllMatrix, loaded: Loaded) -> Result<BoundSpmv> {
+        let meta = &loaded.meta;
+        if !matches!(meta.kind.as_str(), "spmv" | "lanczos_step" | "power_step") {
+            bail!("cannot bind '{}' as an SpMV-family module", meta.kind);
+        }
+        if meta.d != ell.d || meta.n != ell.n {
+            bail!(
+                "artifact shape (d={}, n={}) does not match matrix (d={}, n={})",
+                meta.d,
+                meta.n,
+                ell.d,
+                ell.n
+            );
+        }
+        let val = xla::Literal::vec1(&ell.val).reshape(&[ell.d as i64, ell.n as i64])?;
+        let col = xla::Literal::vec1(&ell.col).reshape(&[ell.d as i64, ell.n as i64])?;
+        Ok(BoundSpmv { exe: loaded.exe, meta: loaded.meta, val, col, n: ell.n })
+    }
+}
+
+/// One compiled artifact.
+pub struct Loaded {
+    pub exe: xla::PjRtLoadedExecutable,
+    pub meta: ArtifactMeta,
+}
+
+/// An SpMV-family executable with the matrix operands prepared.
+/// Operates in the *permuted* basis (like all hot-path kernels).
+pub struct BoundSpmv {
+    exe: xla::PjRtLoadedExecutable,
+    pub meta: ArtifactMeta,
+    val: xla::Literal,
+    col: xla::Literal,
+    pub n: usize,
+}
+
+impl BoundSpmv {
+    /// y = A x (single vector; requires a `spmv` artifact without batch).
+    pub fn spmv(&self, x: &[f64]) -> Result<Vec<f64>> {
+        anyhow::ensure!(x.len() == self.n, "input length {} != {}", x.len(), self.n);
+        let xl = xla::Literal::vec1(x);
+        let result = self.exe.execute::<&xla::Literal>(&[&self.val, &self.col, &xl])?[0][0]
+            .to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f64>()?)
+    }
+
+    /// Batched SpMV (requires a batched `spmv` artifact). Short batches
+    /// are padded with zero vectors and truncated on return.
+    pub fn spmv_batched(&self, xs: &[Vec<f64>]) -> Result<Vec<Vec<f64>>> {
+        let b = self
+            .meta
+            .batch
+            .context("artifact was not built with a batch dimension")?;
+        anyhow::ensure!(
+            xs.len() <= b,
+            "batch size {} exceeds artifact batch {b}",
+            xs.len()
+        );
+        let mut flat = Vec::with_capacity(b * self.n);
+        for x in xs {
+            anyhow::ensure!(x.len() == self.n);
+            flat.extend_from_slice(x);
+        }
+        flat.resize(b * self.n, 0.0); // pad
+        let xl = xla::Literal::vec1(&flat).reshape(&[b as i64, self.n as i64])?;
+        let result = self.exe.execute::<&xla::Literal>(&[&self.val, &self.col, &xl])?[0][0]
+            .to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        let flat_out = out.to_vec::<f64>()?;
+        Ok(flat_out
+            .chunks(self.n)
+            .take(xs.len())
+            .map(|c| c.to_vec())
+            .collect())
+    }
+
+    /// One Lanczos step (requires a `lanczos_step` artifact):
+    /// returns (alpha, beta_new, v_next).
+    pub fn lanczos_step(
+        &self,
+        v_prev: &[f64],
+        v_cur: &[f64],
+        beta: f64,
+    ) -> Result<(f64, f64, Vec<f64>)> {
+        anyhow::ensure!(self.meta.kind == "lanczos_step");
+        let vp = xla::Literal::vec1(v_prev);
+        let vc = xla::Literal::vec1(v_cur);
+        let b = xla::Literal::scalar(beta);
+        let result = self
+            .exe
+            .execute::<&xla::Literal>(&[&self.val, &self.col, &vp, &vc, &b])?[0][0]
+            .to_literal_sync()?;
+        let (a, bn, vn) = result.to_tuple3()?;
+        Ok((
+            a.to_vec::<f64>()?[0],
+            bn.to_vec::<f64>()?[0],
+            vn.to_vec::<f64>()?,
+        ))
+    }
+
+    /// One power-iteration step (requires a `power_step` artifact):
+    /// returns (v_next, rayleigh).
+    pub fn power_step(&self, v: &[f64], shift: f64) -> Result<(Vec<f64>, f64)> {
+        anyhow::ensure!(self.meta.kind == "power_step");
+        let vl = xla::Literal::vec1(v);
+        let s = xla::Literal::scalar(shift);
+        let result = self
+            .exe
+            .execute::<&xla::Literal>(&[&self.val, &self.col, &vl, &s])?[0][0]
+            .to_literal_sync()?;
+        let (vn, r) = result.to_tuple2()?;
+        Ok((vn.to_vec::<f64>()?, r.to_vec::<f64>()?[0]))
+    }
+}
+
+/// Original-basis linear operator over a PJRT-bound SpMV: lets the Rust
+/// Lanczos drive the AOT'd Pallas kernel transparently.
+pub struct PjrtOp<'a> {
+    pub bound: &'a BoundSpmv,
+    pub ell: &'a EllMatrix,
+}
+
+impl<'a> LinearOp for PjrtOp<'a> {
+    fn dim(&self) -> usize {
+        self.ell.n
+    }
+    fn apply(&self, x: &[f64], y: &mut [f64]) {
+        let xp = self.ell.permute_vec(x);
+        let yp = self.bound.spmv(&xp).expect("PJRT SpMV failed");
+        self.ell.unpermute_vec(&yp, y);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_artifact_names() {
+        let m = parse_artifact_name("spmv_d24_n540.hlo.txt").unwrap();
+        assert_eq!(m, ArtifactMeta { kind: "spmv".into(), batch: None, d: 24, n: 540 });
+        let m = parse_artifact_name("spmv_b8_d24_n540.hlo.txt").unwrap();
+        assert_eq!(m.batch, Some(8));
+        assert_eq!(m.kind, "spmv");
+        let m = parse_artifact_name("lanczos_step_d24_n540.hlo.txt").unwrap();
+        assert_eq!(m.kind, "lanczos_step");
+        assert!(parse_artifact_name("bogus.txt").is_err());
+        assert!(parse_artifact_name("spmv_n540.hlo.txt").is_err());
+    }
+
+    // Execution tests live in rust/tests/runtime_integration.rs (they
+    // need artifacts built by `make artifacts`).
+}

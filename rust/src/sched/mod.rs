@@ -1,0 +1,294 @@
+//! OpenMP-style loop scheduling (§5): static / dynamic / guided with
+//! chunk sizes, plus a real thread-pool executor for wall-clock parallel
+//! SpMV on the host.
+//!
+//! The simulator consumes the *assignment* (which thread owns which
+//! iteration); the host executor actually runs it with `std::thread`.
+
+use crate::matrix::Crs;
+
+/// OpenMP-like scheduling policy.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Schedule {
+    /// `schedule(static[, chunk])`. `chunk = None` means contiguous
+    /// near-equal blocks (the OpenMP default).
+    Static { chunk: Option<usize> },
+    /// `schedule(dynamic, chunk)`: threads grab the next chunk when idle.
+    Dynamic { chunk: usize },
+    /// `schedule(guided, min_chunk)`: exponentially shrinking chunks.
+    Guided { min_chunk: usize },
+}
+
+impl Schedule {
+    pub fn name(&self) -> String {
+        match self {
+            Schedule::Static { chunk: None } => "static".to_string(),
+            Schedule::Static { chunk: Some(c) } => format!("static,{c}"),
+            Schedule::Dynamic { chunk } => format!("dynamic,{chunk}"),
+            Schedule::Guided { min_chunk } => format!("guided,{min_chunk}"),
+        }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        let (name, chunk) = match s.split_once(',') {
+            Some((n, c)) => (n, Some(c.trim().parse::<usize>()?)),
+            None => (s, None),
+        };
+        Ok(match name.trim().to_ascii_lowercase().as_str() {
+            "static" => Schedule::Static { chunk },
+            "dynamic" => Schedule::Dynamic { chunk: chunk.unwrap_or(1) },
+            "guided" => Schedule::Guided { min_chunk: chunk.unwrap_or(1) },
+            other => anyhow::bail!("unknown schedule '{other}'"),
+        })
+    }
+}
+
+/// The result of scheduling `n_items` iterations onto `n_threads`.
+#[derive(Debug, Clone)]
+pub struct Assignment {
+    /// Owner thread of each iteration.
+    pub owner: Vec<u16>,
+    pub n_threads: usize,
+    /// Chunks as (start, end, thread), in dispatch order.
+    pub chunks: Vec<(usize, usize, u16)>,
+}
+
+impl Assignment {
+    /// Iterations owned by `t`, as ranges.
+    pub fn ranges_of(&self, t: u16) -> Vec<(usize, usize)> {
+        self.chunks
+            .iter()
+            .filter(|&&(_, _, th)| th == t)
+            .map(|&(a, b, _)| (a, b))
+            .collect()
+    }
+
+    /// Total weight per thread (for imbalance diagnostics).
+    pub fn load_per_thread(&self, weights: &[f64]) -> Vec<f64> {
+        let mut load = vec![0.0; self.n_threads];
+        for (i, &t) in self.owner.iter().enumerate() {
+            load[t as usize] += weights[i];
+        }
+        load
+    }
+}
+
+/// Build the iteration→thread assignment for a policy. `weights[i]` is
+/// the estimated cost of iteration `i` (e.g. nnz of row i); dynamic and
+/// guided policies dispatch each chunk to the earliest-finishing thread,
+/// which is the deterministic idealization of work stealing.
+pub fn assign(policy: Schedule, n_items: usize, weights: &[f64], n_threads: usize) -> Assignment {
+    assert!(n_threads > 0);
+    assert_eq!(weights.len(), n_items);
+    let mut owner = vec![0u16; n_items];
+    let mut chunks = Vec::new();
+    match policy {
+        Schedule::Static { chunk: None } => {
+            // Contiguous blocks of ~n/threads.
+            let per = n_items.div_ceil(n_threads.max(1));
+            for t in 0..n_threads {
+                let a = (t * per).min(n_items);
+                let b = ((t + 1) * per).min(n_items);
+                if a < b {
+                    owner[a..b].fill(t as u16);
+                    chunks.push((a, b, t as u16));
+                }
+            }
+        }
+        Schedule::Static { chunk: Some(c) } => {
+            let c = c.max(1);
+            let mut start = 0;
+            let mut idx = 0usize;
+            while start < n_items {
+                let end = (start + c).min(n_items);
+                let t = (idx % n_threads) as u16;
+                owner[start..end].fill(t);
+                chunks.push((start, end, t));
+                start = end;
+                idx += 1;
+            }
+        }
+        Schedule::Dynamic { chunk } => {
+            let c = chunk.max(1);
+            let mut busy = vec![0.0f64; n_threads];
+            let mut start = 0;
+            while start < n_items {
+                let end = (start + c).min(n_items);
+                // earliest-finishing thread takes the next chunk
+                let t = (0..n_threads)
+                    .min_by(|&a, &b| busy[a].partial_cmp(&busy[b]).unwrap())
+                    .unwrap();
+                let w: f64 = weights[start..end].iter().sum();
+                busy[t] += w;
+                owner[start..end].fill(t as u16);
+                chunks.push((start, end, t as u16));
+                start = end;
+            }
+        }
+        Schedule::Guided { min_chunk } => {
+            let mc = min_chunk.max(1);
+            let mut busy = vec![0.0f64; n_threads];
+            let mut start = 0;
+            while start < n_items {
+                let remaining = n_items - start;
+                let c = (remaining.div_ceil(n_threads)).max(mc);
+                let end = (start + c).min(n_items);
+                let t = (0..n_threads)
+                    .min_by(|&a, &b| busy[a].partial_cmp(&busy[b]).unwrap())
+                    .unwrap();
+                let w: f64 = weights[start..end].iter().sum();
+                busy[t] += w;
+                owner[start..end].fill(t as u16);
+                chunks.push((start, end, t as u16));
+                start = end;
+            }
+        }
+    }
+    Assignment { owner, n_threads, chunks }
+}
+
+/// Row weights for SpMV scheduling: nnz per row.
+pub fn row_weights(crs: &Crs) -> Vec<f64> {
+    (0..crs.nrows)
+        .map(|i| (crs.row_ptr[i + 1] - crs.row_ptr[i]) as f64)
+        .collect()
+}
+
+/// Real OpenMP-style parallel CRS SpMV on host threads. Each row has
+/// exactly one owner, so per-thread writes to `y` are disjoint.
+pub fn parallel_spmv(crs: &Crs, x: &[f64], y: &mut [f64], assignment: &Assignment) {
+    assert_eq!(x.len(), crs.ncols);
+    assert_eq!(y.len(), crs.nrows);
+    struct SendPtr(*mut f64);
+    unsafe impl Send for SendPtr {}
+    unsafe impl Sync for SendPtr {}
+    let y_ptr = SendPtr(y.as_mut_ptr());
+    let y_ref = &y_ptr;
+    std::thread::scope(|scope| {
+        for t in 0..assignment.n_threads as u16 {
+            let ranges = assignment.ranges_of(t);
+            if ranges.is_empty() {
+                continue;
+            }
+            scope.spawn(move || {
+                for (a, b) in ranges {
+                    for i in a..b {
+                        let mut sum = 0.0;
+                        for j in crs.row_ptr[i]..crs.row_ptr[i + 1] {
+                            sum += crs.val[j] * x[crs.col_idx[j] as usize];
+                        }
+                        // Safety: row ownership is disjoint across threads.
+                        unsafe { *y_ref.0.add(i) = sum };
+                    }
+                }
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn static_default_is_contiguous() {
+        let w = vec![1.0; 10];
+        let a = assign(Schedule::Static { chunk: None }, 10, &w, 3);
+        assert_eq!(a.owner, vec![0, 0, 0, 0, 1, 1, 1, 1, 2, 2]);
+        assert_eq!(a.chunks.len(), 3);
+    }
+
+    #[test]
+    fn static_chunked_round_robin() {
+        let w = vec![1.0; 8];
+        let a = assign(Schedule::Static { chunk: Some(2) }, 8, &w, 2);
+        assert_eq!(a.owner, vec![0, 0, 1, 1, 0, 0, 1, 1]);
+    }
+
+    #[test]
+    fn dynamic_balances_skewed_weights() {
+        // One heavy iteration; dynamic should not pile more work on the
+        // thread that got it.
+        let mut w = vec![1.0; 100];
+        w[0] = 200.0;
+        let a = assign(Schedule::Dynamic { chunk: 1 }, 100, &w, 4);
+        let load = a.load_per_thread(&w);
+        let heavy = load.iter().cloned().fold(f64::MIN, f64::max);
+        let light: f64 = load.iter().sum::<f64>() - heavy;
+        // heavy thread got essentially just the big item
+        assert!(heavy <= 201.0);
+        assert!(light >= 98.0);
+    }
+
+    #[test]
+    fn guided_chunks_shrink() {
+        let w = vec![1.0; 1000];
+        let a = assign(Schedule::Guided { min_chunk: 4 }, 1000, &w, 4);
+        let sizes: Vec<usize> = a.chunks.iter().map(|&(s, e, _)| e - s).collect();
+        assert!(sizes[0] > *sizes.last().unwrap());
+        assert!(*sizes.last().unwrap() >= 4 || sizes.iter().sum::<usize>() == 1000);
+        assert!(sizes.windows(2).all(|p| p[0] >= p[1] || p[1] >= 4));
+    }
+
+    #[test]
+    fn every_item_owned_once() {
+        let w = vec![1.0; 777];
+        for pol in [
+            Schedule::Static { chunk: None },
+            Schedule::Static { chunk: Some(10) },
+            Schedule::Dynamic { chunk: 16 },
+            Schedule::Guided { min_chunk: 8 },
+        ] {
+            let a = assign(pol, 777, &w, 5);
+            let total: usize = a.chunks.iter().map(|&(s, e, _)| e - s).sum();
+            assert_eq!(total, 777, "{pol:?}");
+            // chunks cover [0,777) in order without overlap
+            let mut pos = 0;
+            for &(s, e, _) in &a.chunks {
+                assert_eq!(s, pos);
+                pos = e;
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_spmv_matches_serial() {
+        use crate::matrix::{Crs, SpMv};
+        let mut rng = Rng::new(50);
+        let coo = gen::random_band(500, 8, 60, &mut rng);
+        let crs = Crs::from_coo(&coo);
+        let mut x = vec![0.0; 500];
+        rng.fill_f64(&mut x, -1.0, 1.0);
+        let mut y_ser = vec![0.0; 500];
+        crs.spmv(&x, &mut y_ser);
+        let w = row_weights(&crs);
+        for pol in [
+            Schedule::Static { chunk: None },
+            Schedule::Static { chunk: Some(7) },
+            Schedule::Dynamic { chunk: 13 },
+            Schedule::Guided { min_chunk: 2 },
+        ] {
+            let a = assign(pol, 500, &w, 4);
+            let mut y_par = vec![0.0; 500];
+            parallel_spmv(&crs, &x, &mut y_par, &a);
+            assert!(
+                crate::util::stats::max_abs_diff(&y_ser, &y_par) < 1e-14,
+                "{pol:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn schedule_parse() {
+        assert_eq!(Schedule::parse("static").unwrap(), Schedule::Static { chunk: None });
+        assert_eq!(
+            Schedule::parse("static,100").unwrap(),
+            Schedule::Static { chunk: Some(100) }
+        );
+        assert_eq!(Schedule::parse("dynamic,8").unwrap(), Schedule::Dynamic { chunk: 8 });
+        assert_eq!(Schedule::parse("guided").unwrap(), Schedule::Guided { min_chunk: 1 });
+        assert!(Schedule::parse("bogus").is_err());
+    }
+}

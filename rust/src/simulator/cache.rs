@@ -1,0 +1,312 @@
+//! Set-associative LRU cache model with dirty lines (write-back,
+//! write-allocate) and prefetch tagging, used for every level of the
+//! simulated hierarchy.
+
+use super::topology::CacheSpec;
+
+/// Outcome of a cache lookup.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Lookup {
+    Hit,
+    /// Hit on a line brought in by the prefetcher and not yet used.
+    HitPrefetched,
+    Miss,
+}
+
+/// A line evicted by an insertion; `addr` is the line's base address.
+/// Dirty evictions must be propagated to the next level (or DRAM).
+#[derive(Debug, Clone, Copy)]
+pub struct Eviction {
+    pub addr: u64,
+    pub dirty: bool,
+}
+
+#[derive(Debug, Clone, Copy, Default)]
+struct Line {
+    tag: u64,
+    valid: bool,
+    dirty: bool,
+    /// Inserted by prefetch, not yet demanded.
+    prefetched: bool,
+    stamp: u64,
+}
+
+/// One cache instance.
+#[derive(Debug, Clone)]
+pub struct Cache {
+    sets: usize,
+    assoc: usize,
+    line_shift: u32,
+    lines: Vec<Line>,
+    clock: u64,
+    // statistics
+    pub hits: u64,
+    pub misses: u64,
+    pub prefetch_inserts: u64,
+    pub prefetch_useful: u64,
+    pub prefetch_wasted: u64,
+    pub writebacks: u64,
+}
+
+impl Cache {
+    /// Build from a spec with an optional capacity divisor (shared caches
+    /// are modeled per-thread with `capacity / sharers`).
+    pub fn new(spec: &CacheSpec, capacity_divisor: usize) -> Self {
+        let line = spec.line_bytes;
+        assert!(line.is_power_of_two());
+        let size = (spec.size_bytes / capacity_divisor.max(1)).max(line * spec.assoc);
+        let sets = (size / line / spec.assoc).max(1);
+        // Round set count down to a power of two for cheap indexing (real
+        // caches have power-of-two sets as well).
+        let sets = if sets.is_power_of_two() {
+            sets
+        } else {
+            1 << (usize::BITS - 1 - sets.leading_zeros())
+        };
+        Cache {
+            sets,
+            assoc: spec.assoc,
+            line_shift: line.trailing_zeros(),
+            lines: vec![Line::default(); sets * spec.assoc],
+            clock: 0,
+            hits: 0,
+            misses: 0,
+            prefetch_inserts: 0,
+            prefetch_useful: 0,
+            prefetch_wasted: 0,
+            writebacks: 0,
+        }
+    }
+
+    pub fn line_bytes(&self) -> usize {
+        1usize << self.line_shift
+    }
+
+    #[inline]
+    fn set_and_tag(&self, addr: u64) -> (usize, u64) {
+        let lineno = addr >> self.line_shift;
+        ((lineno as usize) & (self.sets - 1), lineno)
+    }
+
+    /// Demand access to `addr`. On a miss the line is inserted (write
+    /// allocate); the victim's dirty state increments `writebacks` and is
+    /// returned so the caller can propagate it down the hierarchy.
+    pub fn access(&mut self, addr: u64, write: bool) -> (Lookup, Option<Eviction>) {
+        self.clock += 1;
+        let (set, tag) = self.set_and_tag(addr);
+        let base = set * self.assoc;
+        let ways = &mut self.lines[base..base + self.assoc];
+        for l in ways.iter_mut() {
+            if l.valid && l.tag == tag {
+                l.stamp = self.clock;
+                l.dirty |= write;
+                if l.prefetched {
+                    l.prefetched = false;
+                    self.prefetch_useful += 1;
+                    self.hits += 1;
+                    return (Lookup::HitPrefetched, None);
+                }
+                self.hits += 1;
+                return (Lookup::Hit, None);
+            }
+        }
+        self.misses += 1;
+        let ev = self.insert(set, tag, write, false);
+        (Lookup::Miss, ev)
+    }
+
+    /// Mark a resident line dirty (a dirty eviction from the level above
+    /// landed here). Returns false if the line is not present — the
+    /// caller should then treat it as a DRAM writeback.
+    pub fn mark_dirty(&mut self, addr: u64) -> bool {
+        let (set, tag) = self.set_and_tag(addr);
+        let base = set * self.assoc;
+        for l in self.lines[base..base + self.assoc].iter_mut() {
+            if l.valid && l.tag == tag {
+                l.dirty = true;
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Probe without modifying state (used by inclusive-hierarchy checks).
+    pub fn probe(&self, addr: u64) -> bool {
+        let (set, tag) = self.set_and_tag(addr);
+        let base = set * self.assoc;
+        self.lines[base..base + self.assoc]
+            .iter()
+            .any(|l| l.valid && l.tag == tag)
+    }
+
+    /// Prefetch insert: brings the line in marked `prefetched` unless
+    /// already present. Returns (inserted?, eviction): `inserted` means a
+    /// new line actually arrived (i.e. memory traffic happened).
+    pub fn prefetch(&mut self, addr: u64) -> (bool, Option<Eviction>) {
+        self.clock += 1;
+        let (set, tag) = self.set_and_tag(addr);
+        let base = set * self.assoc;
+        if self.lines[base..base + self.assoc]
+            .iter()
+            .any(|l| l.valid && l.tag == tag)
+        {
+            return (false, None);
+        }
+        self.prefetch_inserts += 1;
+        let ev = self.insert(set, tag, false, true);
+        (true, ev)
+    }
+
+    fn insert(&mut self, set: usize, tag: u64, dirty: bool, prefetched: bool) -> Option<Eviction> {
+        let base = set * self.assoc;
+        let ways = &mut self.lines[base..base + self.assoc];
+        // LRU victim (or first invalid way).
+        let mut victim = 0;
+        let mut oldest = u64::MAX;
+        for (i, l) in ways.iter().enumerate() {
+            if !l.valid {
+                victim = i;
+                break;
+            }
+            if l.stamp < oldest {
+                oldest = l.stamp;
+                victim = i;
+            }
+        }
+        let v = &mut ways[victim];
+        let mut ev = None;
+        if v.valid {
+            if v.dirty {
+                self.writebacks += 1;
+            }
+            if v.prefetched {
+                self.prefetch_wasted += 1;
+            }
+            ev = Some(Eviction { addr: v.tag << self.line_shift, dirty: v.dirty });
+        }
+        *v = Line { tag, valid: true, dirty, prefetched, stamp: self.clock };
+        ev
+    }
+
+    /// Fraction of demand accesses that hit.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+
+    pub fn reset_stats(&mut self) {
+        self.hits = 0;
+        self.misses = 0;
+        self.prefetch_inserts = 0;
+        self.prefetch_useful = 0;
+        self.prefetch_wasted = 0;
+        self.writebacks = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simulator::topology::CacheSpec;
+
+    fn spec(size: usize, assoc: usize) -> CacheSpec {
+        CacheSpec { size_bytes: size, assoc, line_bytes: 64, latency_cycles: 1.0, shared_by: 1 }
+    }
+
+    #[test]
+    fn hits_within_line() {
+        let mut c = Cache::new(&spec(4096, 4), 1);
+        assert_eq!(c.access(0, false).0, Lookup::Miss);
+        assert_eq!(c.access(8, false).0, Lookup::Hit);
+        assert_eq!(c.access(63, false).0, Lookup::Hit);
+        assert_eq!(c.access(64, false).0, Lookup::Miss);
+    }
+
+    #[test]
+    fn lru_eviction_order() {
+        // 2 sets x 2 ways x 64B = 256B cache. Addresses in the same set
+        // differ by 128.
+        let mut c = Cache::new(&spec(256, 2), 1);
+        assert_eq!(c.access(0, false).0, Lookup::Miss);
+        assert_eq!(c.access(128, false).0, Lookup::Miss);
+        assert_eq!(c.access(0, false).0, Lookup::Hit); // refresh 0
+        assert_eq!(c.access(256, false).0, Lookup::Miss); // evicts 128 (LRU)
+        assert_eq!(c.access(0, false).0, Lookup::Hit);
+        assert_eq!(c.access(128, false).0, Lookup::Miss);
+    }
+
+    #[test]
+    fn writeback_counting_and_eviction_propagation() {
+        let mut c = Cache::new(&spec(128, 1), 1); // 2 sets, direct mapped
+        c.access(0, true); // dirty
+        let (_, ev) = c.access(128, false); // evicts dirty line 0
+        assert_eq!(c.writebacks, 1);
+        let ev = ev.expect("eviction expected");
+        assert!(ev.dirty);
+        assert_eq!(ev.addr, 0);
+        let (_, ev2) = c.access(256, false); // evicts clean 128
+        assert_eq!(c.writebacks, 1);
+        assert!(!ev2.unwrap().dirty);
+    }
+
+    #[test]
+    fn mark_dirty_propagation() {
+        let mut c = Cache::new(&spec(4096, 4), 1);
+        c.access(0, false);
+        assert!(c.mark_dirty(0));
+        assert!(!c.mark_dirty(64)); // absent line
+    }
+
+    #[test]
+    fn prefetch_tracking() {
+        let mut c = Cache::new(&spec(4096, 4), 1);
+        assert!(c.prefetch(0).0);
+        assert!(!c.prefetch(0).0); // already present
+        assert_eq!(c.access(0, false).0, Lookup::HitPrefetched);
+        assert_eq!(c.access(0, false).0, Lookup::Hit); // flag cleared
+        assert_eq!(c.prefetch_useful, 1);
+        // wasted prefetch: insert then evict before use
+        let mut c2 = Cache::new(&spec(128, 1), 1);
+        c2.prefetch(0);
+        c2.access(128, false); // same set, evicts the prefetched line
+        assert_eq!(c2.prefetch_wasted, 1);
+    }
+
+    #[test]
+    fn capacity_divisor_shrinks() {
+        let full = Cache::new(&spec(1 << 20, 8), 1);
+        let half = Cache::new(&spec(1 << 20, 8), 2);
+        assert_eq!(half.sets * 2, full.sets);
+    }
+
+    #[test]
+    fn power_of_two_stride_causes_conflicts() {
+        // 32 KiB, 8-way, 64B lines: 64 sets. Stride 4096 maps every
+        // access to the same set -> only 8 lines retained.
+        let mut c = Cache::new(&spec(32 << 10, 8), 1);
+        for rep in 0..2 {
+            for i in 0..16u64 {
+                c.access(i * 4096, false);
+            }
+            if rep == 0 {
+                c.reset_stats();
+            }
+        }
+        assert_eq!(c.hits, 0, "16 conflicting lines in an 8-way set must all miss");
+        // Non-power-of-two stride of similar size spreads across sets.
+        let mut c2 = Cache::new(&spec(32 << 10, 8), 1);
+        for rep in 0..2 {
+            for i in 0..16u64 {
+                c2.access(i * 4160, false); // 4096 + 64
+            }
+            if rep == 0 {
+                c2.reset_stats();
+            }
+        }
+        assert_eq!(c2.misses, 0, "spread lines must all be retained");
+    }
+}

@@ -1,0 +1,663 @@
+//! Trace-driven simulation engine: maps kernel walks onto per-thread
+//! core models, applies ccNUMA first-touch page placement and OpenMP
+//! scheduling, and combines per-thread cycle/traffic accounts into a
+//! roofline-style total (compute vs per-thread MLP vs socket/node/link
+//! bandwidth — whichever binds).
+
+use crate::kernels::{IndexPattern, MicroOp, OpKind, SpmvKernel};
+use crate::matrix::jds::SpmvVisitor;
+use crate::matrix::Scheme;
+use crate::sched::{assign, Schedule};
+use crate::util::rng::Rng;
+
+use super::core::CoreSim;
+use super::topology::MachineSpec;
+
+/// Disjoint address regions for the simulated arrays, 4 GiB apart so the
+/// region id is `addr >> 32`.
+pub const REGION_SHIFT: u32 = 32;
+pub const BASE_VAL: u64 = 1 << REGION_SHIFT;
+pub const BASE_COL: u64 = 2 << REGION_SHIFT;
+pub const BASE_X: u64 = 3 << REGION_SHIFT;
+pub const BASE_Y: u64 = 4 << REGION_SHIFT;
+pub const BASE_AUX: u64 = 5 << REGION_SHIFT; // row_ptr / index vector
+pub const BASE_A: u64 = 6 << REGION_SHIFT;
+
+/// STREAM-measured bandwidth numbers include only "useful" bytes; with
+/// write-allocate the raw transfer is 4/3 higher for triad-like kernels.
+/// Our caps act on raw line traffic, so scale the measured figures up.
+const WRITE_ALLOCATE_FACTOR: f64 = 4.0 / 3.0;
+
+/// Simulation options.
+#[derive(Debug, Clone)]
+pub struct SimOptions {
+    /// Override machine default prefetcher settings.
+    pub sp: Option<bool>,
+    pub ap: Option<bool>,
+    /// Run one unaccounted warm-up pass before the measured pass
+    /// (steady-state solver behaviour; matters when working sets fit in
+    /// cache, e.g. HLRB-II §5.3).
+    pub warmup: bool,
+}
+
+impl Default for SimOptions {
+    fn default() -> Self {
+        Self { sp: None, ap: None, warmup: true }
+    }
+}
+
+/// Aggregated result of a simulated kernel execution.
+#[derive(Debug, Clone)]
+pub struct SimResult {
+    pub cycles: f64,
+    pub seconds: f64,
+    pub updates: u64,
+    pub cycles_per_update: f64,
+    pub mflops: f64,
+    /// Total DRAM traffic (demand + prefetch + writeback), bytes.
+    pub dram_bytes: f64,
+    /// Fraction of node bandwidth used during the run.
+    pub bw_utilization: f64,
+    /// Which term bound the runtime: "cpu", "thread-bw", "socket-bw",
+    /// "node-bw", "link-bw".
+    pub bounded_by: &'static str,
+    pub per_thread_cpu_cycles: Vec<f64>,
+    pub tlb_misses: u64,
+    pub remote_fraction: f64,
+}
+
+/// Placement policy for the paper's ccNUMA experiments.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Placement {
+    /// Pages homed by a first-touch *parallel* initialization with the
+    /// default static schedule (the paper's proper init, §5.2).
+    FirstTouchStatic,
+    /// All pages on domain 0 (serial initialization — the ccNUMA
+    /// anti-pattern).
+    Serial,
+}
+
+/// Per-region page→domain maps.
+struct PlacementMap {
+    page_shift: u32,
+    /// region id (1..=6) → page domains
+    regions: Vec<Vec<u8>>,
+}
+
+impl PlacementMap {
+    fn new(page_bytes: usize) -> Self {
+        PlacementMap {
+            page_shift: page_bytes.trailing_zeros(),
+            regions: vec![Vec::new(); 7],
+        }
+    }
+
+    /// Record a first touch (no-op if the page is already homed).
+    fn touch(&mut self, addr: u64, domain: u8) {
+        let region = (addr >> REGION_SHIFT) as usize;
+        let page = ((addr & ((1u64 << REGION_SHIFT) - 1)) >> self.page_shift) as usize;
+        let v = &mut self.regions[region];
+        if v.len() <= page {
+            v.resize(page + 1, u8::MAX);
+        }
+        if v[page] == u8::MAX {
+            v[page] = domain;
+        }
+    }
+
+    #[inline]
+    fn home(&self, addr: u64) -> u8 {
+        let region = (addr >> REGION_SHIFT) as usize;
+        let page = ((addr & ((1u64 << REGION_SHIFT) - 1)) >> self.page_shift) as usize;
+        let v = &self.regions[region];
+        if page < v.len() && v[page] != u8::MAX {
+            v[page]
+        } else {
+            0
+        }
+    }
+}
+
+/// Maps one thread's SpMV update stream to memory accesses on its core.
+struct SpmvAdapter<'a> {
+    core: &'a mut CoreSim,
+    placement: &'a PlacementMap,
+    machine: &'a MachineSpec,
+    /// Row-major schemes (CRS, NUJDS) start an inner loop per row;
+    /// diagonal-major schemes start one whenever the vertical run breaks.
+    row_major: bool,
+    /// CRS reads row_ptr at every row change.
+    has_row_ptr: bool,
+    prev_row: usize,
+    my_thread: u16,
+    owner: &'a [u16],
+}
+
+impl<'a> SpmvAdapter<'a> {
+    #[inline]
+    fn touch(&mut self, addr: u64, write: bool) {
+        let home = self.placement.home(addr);
+        self.core.access(addr, write, home != self.core.domain);
+    }
+}
+
+impl<'a> SpmvVisitor for SpmvAdapter<'a> {
+    #[inline]
+    fn update(&mut self, row: usize, j: usize, col: usize) {
+        if self.owner[row] != self.my_thread {
+            return;
+        }
+        let new_loop = if self.row_major {
+            row != self.prev_row
+        } else {
+            row != self.prev_row.wrapping_add(1)
+        };
+        let row_change = row != self.prev_row;
+        self.core.issue(self.machine.issue_cycles_per_update);
+        if new_loop || self.prev_row == usize::MAX {
+            self.core.issue(self.machine.loop_overhead_cycles);
+            if self.core.accounting {
+                self.core.stats.loop_starts += 1;
+            }
+        }
+        if self.core.accounting {
+            self.core.stats.updates += 1;
+        }
+        // val and col_idx streams
+        self.touch(BASE_VAL + (j as u64) * 8, false);
+        self.touch(BASE_COL + (j as u64) * 4, false);
+        // input vector gather
+        self.touch(BASE_X + (col as u64) * 8, false);
+        // result vector: register-held within a run of equal rows
+        if row_change {
+            let ya = BASE_Y + (row as u64) * 8;
+            self.touch(ya, false);
+            self.touch(ya, true);
+            if self.has_row_ptr {
+                self.touch(BASE_AUX + (row as u64) * 4, false);
+            }
+        }
+        self.prev_row = row;
+    }
+}
+
+/// Record which thread first touches each element (for first-touch
+/// placement): walks the kernel with the *initialization* assignment.
+struct PlacementVisitor<'a> {
+    placement: &'a mut PlacementMap,
+    owner: &'a [u16],
+    domain_of_thread: &'a [u8],
+}
+
+impl<'a> SpmvVisitor for PlacementVisitor<'a> {
+    #[inline]
+    fn update(&mut self, row: usize, j: usize, col: usize) {
+        let d = self.domain_of_thread[self.owner[row] as usize];
+        self.placement.touch(BASE_VAL + (j as u64) * 8, d);
+        self.placement.touch(BASE_COL + (j as u64) * 4, d);
+        self.placement.touch(BASE_Y + (row as u64) * 8, d);
+        self.placement.touch(BASE_AUX + (row as u64) * 4, d);
+        // The input vector is placed like the result vector (x[i] homed
+        // with row i — the paper's "placement of the input vector is
+        // imperfect by design" for gathers into other threads' partitions).
+        self.placement.touch(BASE_X + (row as u64) * 8, d);
+        let _ = col;
+    }
+}
+
+/// Thread→socket pinning: fill each used socket with `threads_per_socket`
+/// threads (the paper pins explicitly; §5).
+pub fn pin_threads(threads_per_socket: usize, sockets: usize) -> Vec<u8> {
+    let mut v = Vec::new();
+    for s in 0..sockets {
+        for _ in 0..threads_per_socket {
+            v.push(s as u8);
+        }
+    }
+    v
+}
+
+/// Active sharers of one L2/L3 instance given threads pinned per socket.
+fn sharers(machine: &MachineSpec, spec_shared_by: usize, tps: usize) -> usize {
+    let instances_per_socket = (machine.cores_per_socket / spec_shared_by).max(1);
+    tps.div_ceil(instances_per_socket).clamp(1, spec_shared_by)
+}
+
+/// Count per-row update weights (nnz per kernel row index).
+fn kernel_row_weights(kernel: &SpmvKernel) -> Vec<f64> {
+    struct W(Vec<f64>);
+    impl SpmvVisitor for W {
+        fn update(&mut self, row: usize, _j: usize, _c: usize) {
+            if self.0.len() <= row {
+                self.0.resize(row + 1, 0.0);
+            }
+            self.0[row] += 1.0;
+        }
+    }
+    let mut w = W(vec![0.0; kernel.nrows()]);
+    kernel.walk(&mut w);
+    w.0
+}
+
+/// Simulate a (possibly multi-threaded) SpMV on a machine model.
+#[allow(clippy::too_many_arguments)]
+pub fn simulate_spmv(
+    machine: &MachineSpec,
+    kernel: &SpmvKernel,
+    threads_per_socket: usize,
+    sockets_used: usize,
+    schedule: Schedule,
+    placement_policy: Placement,
+    opts: &SimOptions,
+) -> SimResult {
+    assert!(sockets_used >= 1 && sockets_used <= machine.sockets);
+    assert!(threads_per_socket >= 1 && threads_per_socket <= machine.cores_per_socket);
+    let domains = pin_threads(threads_per_socket, sockets_used);
+    let n_threads = domains.len();
+    let nrows = kernel.nrows();
+    let weights = kernel_row_weights(kernel);
+
+    // Compute-loop assignment.
+    let assignment = assign(schedule, nrows, &weights, n_threads);
+    // Initialization (first-touch) assignment: default static.
+    let init_assignment = assign(Schedule::Static { chunk: None }, nrows, &weights, n_threads);
+
+    // Build page placement.
+    let mut placement = PlacementMap::new(machine.page_bytes);
+    match placement_policy {
+        Placement::Serial => {
+            // Everything homed on domain 0: emulate by touching with a
+            // single pseudo-thread on domain 0.
+            let owner = vec![0u16; nrows];
+            let dom = vec![0u8];
+            let mut pv = PlacementVisitor {
+                placement: &mut placement,
+                owner: &owner,
+                domain_of_thread: &dom,
+            };
+            kernel.walk(&mut pv);
+        }
+        Placement::FirstTouchStatic => {
+            let mut pv = PlacementVisitor {
+                placement: &mut placement,
+                owner: &init_assignment.owner,
+                domain_of_thread: &domains,
+            };
+            kernel.walk(&mut pv);
+        }
+    }
+
+    // Cores.
+    let sp_on = opts.sp.unwrap_or(machine.sp_default);
+    let ap_on = opts.ap.unwrap_or(machine.ap_default);
+    let l2_sharers = sharers(machine, machine.l2.shared_by, threads_per_socket);
+    let l3_sharers = machine
+        .l3
+        .as_ref()
+        .map(|l3| sharers(machine, l3.shared_by, threads_per_socket))
+        .unwrap_or(1);
+    let mut cores: Vec<CoreSim> = domains
+        .iter()
+        .map(|&d| CoreSim::new(machine, d, l2_sharers, l3_sharers, sp_on, ap_on))
+        .collect();
+
+    let (row_major, has_row_ptr) = match kernel.scheme() {
+        Scheme::Crs => (true, true),
+        Scheme::NuJds { .. } => (true, false),
+        _ => (false, false),
+    };
+
+    let passes: &[bool] = if opts.warmup { &[false, true] } else { &[true] };
+    for &accounted in passes {
+        for (t, core) in cores.iter_mut().enumerate() {
+            core.accounting = accounted;
+            let mut adapter = SpmvAdapter {
+                core,
+                placement: &placement,
+                machine,
+                row_major,
+                has_row_ptr,
+                prev_row: usize::MAX,
+                my_thread: t as u16,
+                owner: &assignment.owner,
+            };
+            kernel.walk(&mut adapter);
+        }
+    }
+    for core in cores.iter_mut() {
+        core.harvest_writebacks();
+    }
+
+    combine(machine, &domains, &cores, kernel.nnz() as u64 * 2)
+}
+
+/// Simulate one of the Table-1 microbenchmarks (single thread).
+pub fn simulate_microbench(
+    machine: &MachineSpec,
+    op: MicroOp,
+    n_iters: usize,
+    b_len: usize,
+    opts: &SimOptions,
+    seed: u64,
+) -> SimResult {
+    let mut rng = Rng::new(seed);
+    let b_elems = match op.pattern {
+        IndexPattern::Dense => n_iters.max(1),
+        IndexPattern::ConstStride(k) => (k * n_iters).max(1),
+        _ => b_len.max(1),
+    };
+    let ind = if op.uses_index_array() {
+        crate::kernels::build_index(op.pattern, n_iters, b_elems, &mut rng)
+    } else {
+        Vec::new()
+    };
+    let sp_on = opts.sp.unwrap_or(machine.sp_default);
+    let ap_on = opts.ap.unwrap_or(machine.ap_default);
+    let mut core = CoreSim::new(machine, 0, 1, 1, sp_on, ap_on);
+    let placement = PlacementMap::new(machine.page_bytes); // all local
+
+    let passes: &[bool] = if opts.warmup { &[false, true] } else { &[true] };
+    for &accounted in passes {
+        core.accounting = accounted;
+        core.issue(machine.loop_overhead_cycles);
+        for i in 0..n_iters {
+            core.issue(machine.issue_cycles_per_update);
+            if core.accounting {
+                core.stats.updates += 1;
+            }
+            if op.kind == OpKind::Scp {
+                let a = BASE_A + (i as u64) * 8;
+                core.access(a, false, placement.home(a) != 0);
+            }
+            let idx = match op.pattern {
+                IndexPattern::Dense => i as u64,
+                IndexPattern::ConstStride(k) => ((i * k) % b_elems) as u64,
+                _ => {
+                    let a = BASE_AUX + (i as u64) * 4;
+                    core.access(a, false, false);
+                    ind[i] as u64
+                }
+            };
+            core.access(BASE_X + idx * 8, false, false);
+        }
+    }
+    core.harvest_writebacks();
+    let flops = op.flops_per_iter() * n_iters as u64;
+    combine(machine, &[0], std::slice::from_ref(&core), flops)
+}
+
+/// Combine per-thread accounts into the total runtime (roofline max).
+fn combine(
+    machine: &MachineSpec,
+    domains: &[u8],
+    cores: &[CoreSim],
+    flops: u64,
+) -> SimResult {
+    let hz = machine.hz();
+    let line = machine.l1.line_bytes;
+    let n_domains = machine.sockets;
+    let raw_socket_bpc = machine.socket_bw_gbs * WRITE_ALLOCATE_FACTOR * 1e9 / hz;
+    let raw_node_bpc = machine.node_bw_gbs * WRITE_ALLOCATE_FACTOR * 1e9 / hz;
+    let link_bpc = machine.interconnect_bw_gbs * WRITE_ALLOCATE_FACTOR * 1e9 / hz;
+
+    let mut t_cpu_max = 0.0f64;
+    let mut t_thread_bw_max = 0.0f64;
+    let mut per_thread_cpu = Vec::with_capacity(cores.len());
+    let mut bytes_total = 0.0f64;
+    let mut bytes_remote = 0.0f64;
+    let mut bytes_by_requester_socket = vec![0.0f64; n_domains];
+    let mut tlb_misses = 0u64;
+    let mut updates = 0u64;
+
+    let sp_on = cores
+        .first()
+        .map(|_| true)
+        .unwrap_or(true);
+    let bw_thread_bpc = machine.per_thread_bw_gbs(sp_on) * 1e9 / hz;
+
+    for (i, core) in cores.iter().enumerate() {
+        let s = &core.stats;
+        let t_cpu = s.issue_cycles + s.stall_cycles;
+        per_thread_cpu.push(t_cpu);
+        t_cpu_max = t_cpu_max.max(t_cpu);
+        let bytes = s.dram_bytes(line);
+        bytes_total += bytes;
+        bytes_remote += s.remote_bytes(line);
+        bytes_by_requester_socket[domains[i] as usize] += bytes;
+        t_thread_bw_max = t_thread_bw_max.max(bytes / bw_thread_bpc);
+        tlb_misses += s.tlb_misses;
+        updates += s.updates;
+    }
+
+    // Socket bandwidth: for NUMA machines local traffic is served by the
+    // requester's own domain (placement makes most traffic local); remote
+    // traffic additionally crosses the link. UMA (FSB) machines cap the
+    // per-socket bus share and the chipset total.
+    let t_socket = bytes_by_requester_socket
+        .iter()
+        .cloned()
+        .fold(0.0, f64::max)
+        / raw_socket_bpc;
+    let t_node = bytes_total / raw_node_bpc;
+    let t_link = if machine.numa && bytes_remote > 0.0 {
+        bytes_remote / link_bpc
+    } else {
+        0.0
+    };
+
+    let candidates = [
+        (t_cpu_max, "cpu"),
+        (t_thread_bw_max, "thread-bw"),
+        (t_socket, "socket-bw"),
+        (t_node, "node-bw"),
+        (t_link, "link-bw"),
+    ];
+    let (cycles, bounded_by) = candidates
+        .iter()
+        .cloned()
+        .fold((0.0, "cpu"), |acc, c| if c.0 > acc.0 { c } else { acc });
+
+    let seconds = cycles / hz;
+    SimResult {
+        cycles,
+        seconds,
+        updates,
+        cycles_per_update: if updates > 0 { cycles / updates as f64 } else { 0.0 },
+        mflops: if seconds > 0.0 { flops as f64 / seconds / 1e6 } else { 0.0 },
+        dram_bytes: bytes_total,
+        bw_utilization: if cycles > 0.0 {
+            (bytes_total / cycles) / raw_node_bpc
+        } else {
+            0.0
+        },
+        bounded_by,
+        per_thread_cpu_cycles: per_thread_cpu,
+        tlb_misses,
+        remote_fraction: if bytes_total > 0.0 { bytes_remote / bytes_total } else { 0.0 },
+    }
+}
+
+/// Simulated STREAM triad (a[i] = b[i] + s*c[i]) for calibration: the
+/// reported *useful* bandwidth (24 B/iter) should match the paper's
+/// measured numbers within tolerance.
+pub fn simulate_stream_triad(
+    machine: &MachineSpec,
+    threads_per_socket: usize,
+    sockets_used: usize,
+    n: usize,
+) -> f64 {
+    let domains = pin_threads(threads_per_socket, sockets_used);
+    let n_threads = domains.len();
+    let l2_sharers = sharers(machine, machine.l2.shared_by, threads_per_socket);
+    let l3_sharers = machine
+        .l3
+        .as_ref()
+        .map(|l3| sharers(machine, l3.shared_by, threads_per_socket))
+        .unwrap_or(1);
+    let mut cores: Vec<CoreSim> = domains
+        .iter()
+        .map(|&d| CoreSim::new(machine, d, l2_sharers, l3_sharers, machine.sp_default, machine.ap_default))
+        .collect();
+    // Static contiguous partition; first-touch => all local.
+    let per = n.div_ceil(n_threads);
+    for (t, core) in cores.iter_mut().enumerate() {
+        let lo = (t * per).min(n);
+        let hi = ((t + 1) * per).min(n);
+        for i in lo..hi {
+            core.issue(machine.issue_cycles_per_update);
+            core.access(BASE_X + (i as u64) * 8, false, false); // b
+            core.access(BASE_A + (i as u64) * 8, false, false); // c
+            core.access(BASE_Y + (i as u64) * 8, true, false); // a (WA)
+        }
+    }
+    for core in cores.iter_mut() {
+        core.harvest_writebacks();
+    }
+    let r = combine(machine, &domains, &cores, 2 * n as u64);
+    // useful bytes: 24 per iteration
+    24.0 * n as f64 / r.seconds / 1e9
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen;
+    use crate::kernels::SpmvKernel;
+    use crate::matrix::Scheme;
+
+    /// A memory-scale banded matrix in the paper's regime (~14 nnz/row,
+    /// working set tens of MB — far beyond the LLC). Cached via
+    /// `OnceLock` because generation dominates test time.
+    fn big_kernel(scheme: Scheme) -> SpmvKernel {
+        use std::sync::OnceLock;
+        static COO: OnceLock<crate::matrix::Coo> = OnceLock::new();
+        let coo = COO.get_or_init(|| {
+            let mut rng = crate::util::rng::Rng::new(77);
+            gen::random_band(150_000, 14, 3000, &mut rng)
+        });
+        SpmvKernel::build(coo, scheme)
+    }
+
+    #[test]
+    fn stream_triad_calibration() {
+        // Full-node simulated STREAM must land near the paper's §3
+        // numbers (±25%).
+        for (m, tps) in [
+            (MachineSpec::woodcrest(), 2),
+            (MachineSpec::shanghai(), 4),
+            (MachineSpec::nehalem(), 4),
+        ] {
+            let bw = simulate_stream_triad(&m, tps, 2, 2_000_000);
+            let expect = m.node_bw_gbs;
+            assert!(
+                (bw - expect).abs() / expect < 0.25,
+                "{}: simulated triad {bw:.1} GB/s vs measured {expect}",
+                m.name
+            );
+        }
+    }
+
+    #[test]
+    fn spmv_single_thread_is_memory_bound_and_slow() {
+        let m = MachineSpec::nehalem();
+        let k = big_kernel(Scheme::Crs);
+        let r = simulate_spmv(
+            &m,
+            &k,
+            1,
+            1,
+            Schedule::Static { chunk: None },
+            Placement::FirstTouchStatic,
+            &SimOptions::default(),
+        );
+        // far below peak (peak = 4 flop/cycle * 2.66 GHz = 10640 MFlop/s)
+        assert!(r.mflops < 2000.0, "mflops {}", r.mflops);
+        assert!(r.mflops > 50.0, "mflops {}", r.mflops);
+        assert!(r.updates as usize == k.nnz());
+    }
+
+    #[test]
+    fn multithread_scales_until_bandwidth() {
+        let m = MachineSpec::nehalem();
+        let k = big_kernel(Scheme::Crs);
+        let opts = SimOptions::default();
+        let mf: Vec<f64> = [1usize, 2, 4]
+            .iter()
+            .map(|&tps| {
+                simulate_spmv(
+                    &m,
+                    &k,
+                    tps,
+                    1,
+                    Schedule::Static { chunk: None },
+                    Placement::FirstTouchStatic,
+                    &opts,
+                )
+                .mflops
+            })
+            .collect();
+        assert!(mf[1] > mf[0] * 1.3, "2 threads {:.0} vs 1 thread {:.0}", mf[1], mf[0]);
+        assert!(mf[2] >= mf[1] * 0.95, "4 threads should not regress");
+    }
+
+    #[test]
+    fn two_sockets_beat_one_on_numa() {
+        let m = MachineSpec::shanghai();
+        let k = big_kernel(Scheme::Crs);
+        let opts = SimOptions::default();
+        let one = simulate_spmv(&m, &k, 4, 1, Schedule::Static { chunk: None }, Placement::FirstTouchStatic, &opts);
+        let two = simulate_spmv(&m, &k, 4, 2, Schedule::Static { chunk: None }, Placement::FirstTouchStatic, &opts);
+        assert!(
+            two.mflops > 1.5 * one.mflops,
+            "ccNUMA scaling: 2 sockets {:.0} vs 1 socket {:.0}",
+            two.mflops,
+            one.mflops
+        );
+    }
+
+    #[test]
+    fn serial_placement_hurts_two_socket_numa() {
+        let m = MachineSpec::nehalem();
+        let k = big_kernel(Scheme::Crs);
+        let opts = SimOptions::default();
+        let good = simulate_spmv(&m, &k, 4, 2, Schedule::Static { chunk: None }, Placement::FirstTouchStatic, &opts);
+        let bad = simulate_spmv(&m, &k, 4, 2, Schedule::Static { chunk: None }, Placement::Serial, &opts);
+        assert!(
+            bad.mflops < 0.8 * good.mflops,
+            "serial init {:.0} must trail first-touch {:.0}",
+            bad.mflops,
+            good.mflops
+        );
+        assert!(bad.remote_fraction > good.remote_fraction);
+    }
+
+    #[test]
+    fn microbench_dense_faster_than_indirect() {
+        let m = MachineSpec::woodcrest();
+        let opts = SimOptions::default();
+        let n = 200_000;
+        let blen = 4_000_000;
+        let pd = simulate_microbench(
+            &m,
+            MicroOp { kind: OpKind::Scp, pattern: IndexPattern::Dense },
+            n,
+            blen,
+            &opts,
+            1,
+        );
+        let ir = simulate_microbench(
+            &m,
+            MicroOp { kind: OpKind::Scp, pattern: IndexPattern::Geometric { mean: 8.0 } },
+            n,
+            blen,
+            &opts,
+            1,
+        );
+        assert!(
+            ir.cycles_per_update > 2.0 * pd.cycles_per_update,
+            "IRSCP(k=8) {:.1} cyc must be much slower than PDSCP {:.1} cyc",
+            ir.cycles_per_update,
+            pd.cycles_per_update
+        );
+    }
+}

@@ -1,0 +1,26 @@
+//! Trace-driven multicore memory-hierarchy simulator — the substitute
+//! for the paper's 2009 test bed (see DESIGN.md §1 and §4).
+//!
+//! - [`topology`]: machine models (Woodcrest, Shanghai, Nehalem, HLRB-II)
+//!   calibrated to §3 of the paper.
+//! - [`cache`] / [`tlb`]: set-associative LRU caches with write-back and
+//!   prefetch tagging; a 4-way data TLB.
+//! - [`prefetch`]: the strided stream prefetcher (SP); the adjacent-line
+//!   prefetcher (AP) lives in the core model.
+//! - [`core`]: per-thread hierarchy + cycle/traffic accounting.
+//! - [`engine`]: kernel walks → per-thread traces → roofline combination
+//!   (CPU vs per-thread MLP vs socket/node/link bandwidth), with ccNUMA
+//!   first-touch placement and OpenMP scheduling.
+
+pub mod cache;
+pub mod core;
+pub mod engine;
+pub mod prefetch;
+pub mod tlb;
+pub mod topology;
+
+pub use engine::{
+    pin_threads, simulate_microbench, simulate_spmv, simulate_stream_triad, Placement,
+    SimOptions, SimResult,
+};
+pub use topology::MachineSpec;

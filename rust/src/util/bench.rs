@@ -1,0 +1,194 @@
+//! Minimal wall-clock benchmark harness (criterion is not available in this
+//! offline environment). Provides warmup, repeated timed runs, and robust
+//! summary statistics. All `cargo bench` targets are `harness = false`
+//! binaries built on this module.
+
+use std::time::{Duration, Instant};
+
+use super::stats;
+
+/// Result of one benchmark: per-iteration wall times in seconds.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    /// Seconds per timed run (each run may wrap `inner_iters` kernel calls).
+    pub samples: Vec<f64>,
+    /// Number of kernel invocations folded into each sample.
+    pub inner_iters: usize,
+    /// Work items (e.g. non-zeros) processed per kernel invocation; used for
+    /// derived throughput metrics.
+    pub items_per_iter: u64,
+    /// Floating-point operations per kernel invocation.
+    pub flops_per_iter: u64,
+}
+
+impl BenchResult {
+    /// Median seconds for a single kernel invocation.
+    pub fn median_secs(&self) -> f64 {
+        stats::median(&self.samples) / self.inner_iters as f64
+    }
+
+    pub fn min_secs(&self) -> f64 {
+        stats::min(&self.samples) / self.inner_iters as f64
+    }
+
+    /// Median absolute deviation of the per-invocation time.
+    pub fn mad_secs(&self) -> f64 {
+        stats::mad(&self.samples) / self.inner_iters as f64
+    }
+
+    /// MFlop/s at the median.
+    pub fn mflops(&self) -> f64 {
+        if self.flops_per_iter == 0 {
+            return 0.0;
+        }
+        self.flops_per_iter as f64 / self.median_secs() / 1e6
+    }
+
+    /// Items (nnz, elements) per second at the median.
+    pub fn items_per_sec(&self) -> f64 {
+        self.items_per_iter as f64 / self.median_secs()
+    }
+
+    /// Nanoseconds per item at the median.
+    pub fn ns_per_item(&self) -> f64 {
+        if self.items_per_iter == 0 {
+            return 0.0;
+        }
+        self.median_secs() * 1e9 / self.items_per_iter as f64
+    }
+
+    /// One-line human-readable summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "{:<40} median {:>10.3} us  (mad {:>8.3} us)  {:>10.1} MFlop/s  {:>8.2} ns/item",
+            self.name,
+            self.median_secs() * 1e6,
+            self.mad_secs() * 1e6,
+            self.mflops(),
+            self.ns_per_item()
+        )
+    }
+}
+
+/// Benchmark configuration.
+#[derive(Debug, Clone)]
+pub struct Bench {
+    pub warmup: Duration,
+    pub samples: usize,
+    pub min_sample_time: Duration,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self {
+            warmup: Duration::from_millis(200),
+            samples: 11,
+            min_sample_time: Duration::from_millis(20),
+        }
+    }
+}
+
+impl Bench {
+    pub fn quick() -> Self {
+        Self {
+            warmup: Duration::from_millis(50),
+            samples: 5,
+            min_sample_time: Duration::from_millis(5),
+        }
+    }
+
+    /// Run `f` under this configuration. `f` must perform one logical kernel
+    /// invocation per call and return a value that is consumed via
+    /// `std::hint::black_box` to defeat dead-code elimination.
+    pub fn run<T, F: FnMut() -> T>(
+        &self,
+        name: &str,
+        items_per_iter: u64,
+        flops_per_iter: u64,
+        mut f: F,
+    ) -> BenchResult {
+        // Warmup, and measure single-call cost to size inner_iters.
+        let warm_start = Instant::now();
+        let mut calls = 0u64;
+        let mut one = Duration::from_secs(0);
+        while warm_start.elapsed() < self.warmup || calls < 3 {
+            let t = Instant::now();
+            std::hint::black_box(f());
+            one = t.elapsed();
+            calls += 1;
+            if calls > 1_000_000 {
+                break;
+            }
+        }
+        let inner_iters = if one >= self.min_sample_time {
+            1
+        } else {
+            ((self.min_sample_time.as_secs_f64() / one.as_secs_f64().max(1e-9)).ceil() as usize)
+                .clamp(1, 1_000_000)
+        };
+        let mut samples = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t = Instant::now();
+            for _ in 0..inner_iters {
+                std::hint::black_box(f());
+            }
+            samples.push(t.elapsed().as_secs_f64());
+        }
+        BenchResult {
+            name: name.to_string(),
+            samples,
+            inner_iters,
+            items_per_iter,
+            flops_per_iter,
+        }
+    }
+}
+
+/// Convenience: is the process running in "quick bench" mode? Set by the
+/// Makefile / CI via SPMVPERF_BENCH_QUICK=1 to keep bench suites fast.
+pub fn quick_mode() -> bool {
+    std::env::var("SPMVPERF_BENCH_QUICK").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Standard bench configuration honoring quick mode.
+pub fn default_bench() -> Bench {
+    if quick_mode() {
+        Bench::quick()
+    } else {
+        Bench::default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let b = Bench {
+            warmup: Duration::from_millis(1),
+            samples: 3,
+            min_sample_time: Duration::from_micros(200),
+        };
+        let data: Vec<f64> = (0..1000).map(|i| i as f64).collect();
+        let r = b.run("sum", 1000, 1000, || data.iter().sum::<f64>());
+        assert_eq!(r.samples.len(), 3);
+        assert!(r.median_secs() > 0.0);
+        assert!(r.mflops() > 0.0);
+    }
+
+    #[test]
+    fn summary_formats() {
+        let r = BenchResult {
+            name: "x".into(),
+            samples: vec![0.001, 0.001, 0.001],
+            inner_iters: 10,
+            items_per_iter: 100,
+            flops_per_iter: 200,
+        };
+        let s = r.summary();
+        assert!(s.contains("median"));
+        assert!(s.contains("MFlop/s"));
+    }
+}

@@ -1,0 +1,216 @@
+//! Tiny command-line argument parser (clap is not available offline).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, and positional
+//! arguments. Subcommand dispatch is handled by the caller (main.rs) by
+//! peeling the first positional.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+/// Parsed arguments: options (`--key ...`) and positionals, in order.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positionals: Vec<String>,
+    /// Keys that were actually consumed via get_*; used by `finish()` to
+    /// reject typos.
+    consumed: std::cell::RefCell<Vec<String>>,
+}
+
+/// Option names that take a value. Anything else starting with `--` is a
+/// boolean flag. Keeping a central registry avoids `--size 100` being
+/// parsed as flag `--size` + positional `100`.
+const VALUE_OPTS: &[&str] = &[
+    "size", "n", "nnz-per-row", "seed", "machine", "scheme", "schemes", "block",
+    "blocks", "threads", "sockets", "chunk", "schedule", "stride", "strides",
+    "mean", "variance", "k", "len", "reps", "out", "format", "artifact",
+    "artifacts-dir", "matrix", "sites", "electrons", "phonons", "max-phonons",
+    "t", "u", "g", "omega", "iters", "tol", "port", "batch", "batch-window-us",
+    "requests", "workers", "op", "ops", "dim", "bandwidth", "density",
+    "block-size", "chunk-sizes", "threads-per-socket", "output", "scale",
+    "eigenvalues", "csv",
+];
+
+impl Args {
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Result<Self> {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(rest) = tok.strip_prefix("--") {
+                if rest.is_empty() {
+                    // `--` separator: rest are positionals
+                    out.positionals.extend(it);
+                    break;
+                }
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if VALUE_OPTS.contains(&rest) {
+                    let v = it
+                        .next()
+                        .with_context(|| format!("option --{rest} expects a value"))?;
+                    out.opts.insert(rest.to_string(), v);
+                } else {
+                    out.flags.push(rest.to_string());
+                }
+            } else {
+                out.positionals.push(tok);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> Result<Self> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    /// First positional (subcommand), removed from the list.
+    pub fn take_subcommand(&mut self) -> Option<String> {
+        if self.positionals.is_empty() {
+            None
+        } else {
+            Some(self.positionals.remove(0))
+        }
+    }
+
+    pub fn positionals(&self) -> &[String] {
+        &self.positionals
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.consumed.borrow_mut().push(name.to_string());
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.consumed.borrow_mut().push(name.to_string());
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_str(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<usize>()
+                .with_context(|| format!("--{name} expects an unsigned integer, got '{v}'")),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<u64>()
+                .with_context(|| format!("--{name} expects an unsigned integer, got '{v}'")),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<f64>()
+                .with_context(|| format!("--{name} expects a number, got '{v}'")),
+        }
+    }
+
+    /// Comma-separated list of usizes, e.g. `--blocks 16,64,256`.
+    pub fn get_usize_list(&self, name: &str, default: &[usize]) -> Result<Vec<usize>> {
+        match self.get(name) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|s| {
+                    s.trim()
+                        .parse::<usize>()
+                        .with_context(|| format!("--{name}: bad element '{s}'"))
+                })
+                .collect(),
+        }
+    }
+
+    /// Comma-separated list of strings.
+    pub fn get_str_list(&self, name: &str, default: &[&str]) -> Vec<String> {
+        match self.get(name) {
+            None => default.iter().map(|s| s.to_string()).collect(),
+            Some(v) => v.split(',').map(|s| s.trim().to_string()).collect(),
+        }
+    }
+
+    /// Error on unknown options that were never consumed (catches typos).
+    pub fn finish(&self) -> Result<()> {
+        let consumed = self.consumed.borrow();
+        for k in self.opts.keys() {
+            if !consumed.iter().any(|c| c == k) {
+                bail!("unknown option --{k}");
+            }
+        }
+        for f in &self.flags {
+            if !consumed.iter().any(|c| c == f) {
+                bail!("unknown flag --{f}");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string())).unwrap()
+    }
+
+    #[test]
+    fn parses_kv_and_flags() {
+        let a = parse("experiment fig2 --machine nehalem --full --size=1000");
+        let mut a = a;
+        assert_eq!(a.take_subcommand().as_deref(), Some("experiment"));
+        assert_eq!(a.take_subcommand().as_deref(), Some("fig2"));
+        assert_eq!(a.get("machine"), Some("nehalem"));
+        assert!(a.flag("full"));
+        assert_eq!(a.get_usize("size", 0).unwrap(), 1000);
+    }
+
+    #[test]
+    fn value_opts_consume_next_token() {
+        let a = parse("--threads 8 pos");
+        assert_eq!(a.get_usize("threads", 0).unwrap(), 8);
+        assert_eq!(a.positionals(), &["pos".to_string()]);
+    }
+
+    #[test]
+    fn lists_parse() {
+        let a = parse("--blocks 1,2,4");
+        assert_eq!(a.get_usize_list("blocks", &[]).unwrap(), vec![1, 2, 4]);
+        let b = parse("--schemes crs,jds");
+        assert_eq!(b.get_str_list("schemes", &[]), vec!["crs", "jds"]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("");
+        assert_eq!(a.get_usize("size", 42).unwrap(), 42);
+        assert_eq!(a.get_str("machine", "woodcrest"), "woodcrest");
+        assert!(!a.flag("full"));
+    }
+
+    #[test]
+    fn finish_rejects_unknown() {
+        let a = parse("--machine x --bogus-value=1");
+        let _ = a.get("machine");
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn bad_int_is_error() {
+        let a = parse("--size abc");
+        assert!(a.get_usize("size", 0).is_err());
+    }
+}

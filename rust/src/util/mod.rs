@@ -1,0 +1,9 @@
+//! Shared infrastructure: RNG, statistics, bench harness, CLI parsing,
+//! report/table rendering. All built from scratch — no external crates for
+//! these exist in the offline vendor set.
+
+pub mod bench;
+pub mod cli;
+pub mod report;
+pub mod rng;
+pub mod stats;

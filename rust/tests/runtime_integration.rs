@@ -1,0 +1,225 @@
+//! Integration tests over the PJRT runtime + AOT artifacts: the full
+//! L1 (Pallas) → L2 (JAX) → artifacts → L3 (Rust) chain. These require
+//! `make artifacts` to have run; they are skipped (with a note) if the
+//! artifacts directory is missing so bare `cargo test` stays green.
+
+use spmvperf::coordinator::{BatchExecutor, PjrtExecutor, Service, ServiceConfig};
+use spmvperf::eigen::{jacobi_eigen, lanczos, LanczosConfig};
+use spmvperf::gen;
+use spmvperf::matrix::{Crs, EllMatrix, SpMv};
+use spmvperf::runtime::{default_artifacts_dir, PjrtOp, Runtime};
+use spmvperf::util::rng::Rng;
+use spmvperf::util::stats::max_abs_diff;
+
+const D: usize = 24;
+const N: usize = 540;
+
+fn artifacts_ready() -> bool {
+    let dir = default_artifacts_dir();
+    let ok = dir.join(format!("spmv_d{D}_n{N}.hlo.txt")).exists();
+    if !ok {
+        eprintln!(
+            "SKIP: artifacts missing under {} — run `make artifacts`",
+            dir.display()
+        );
+    }
+    ok
+}
+
+fn tiny_system() -> (Crs, EllMatrix) {
+    let h = gen::holstein_hubbard(&gen::HolsteinHubbardParams::tiny());
+    let crs = Crs::from_coo(&h);
+    let ell = EllMatrix::from_crs(&crs, Some(D)).unwrap();
+    assert_eq!(ell.n, N);
+    (crs, ell)
+}
+
+#[test]
+fn pjrt_spmv_matches_native() {
+    if !artifacts_ready() {
+        return;
+    }
+    let (crs, ell) = tiny_system();
+    let rt = Runtime::new(&default_artifacts_dir()).unwrap();
+    let bound = rt.bind(&ell, rt.load(&format!("spmv_d{D}_n{N}.hlo.txt")).unwrap()).unwrap();
+    let mut rng = Rng::new(1);
+    for _ in 0..3 {
+        let mut x = vec![0.0; N];
+        rng.fill_f64(&mut x, -1.0, 1.0);
+        // native original-basis result
+        let mut want = vec![0.0; N];
+        crs.spmv(&x, &mut want);
+        // PJRT path (permuted basis kernel wrapped by PjrtOp)
+        let op = PjrtOp { bound: &bound, ell: &ell };
+        use spmvperf::eigen::LinearOp;
+        let mut got = vec![0.0; N];
+        op.apply(&x, &mut got);
+        assert!(
+            max_abs_diff(&want, &got) < 1e-10,
+            "PJRT SpMV deviates: {}",
+            max_abs_diff(&want, &got)
+        );
+    }
+}
+
+#[test]
+fn pjrt_batched_spmv_matches_native() {
+    if !artifacts_ready() {
+        return;
+    }
+    let (_, ell) = tiny_system();
+    let rt = Runtime::new(&default_artifacts_dir()).unwrap();
+    let bound = rt
+        .bind(&ell, rt.load(&format!("spmv_b8_d{D}_n{N}.hlo.txt")).unwrap())
+        .unwrap();
+    let mut rng = Rng::new(2);
+    let xs: Vec<Vec<f64>> = (0..5) // short batch: exercises padding
+        .map(|_| {
+            let mut x = vec![0.0; N];
+            rng.fill_f64(&mut x, -1.0, 1.0);
+            x
+        })
+        .collect();
+    let got = bound.spmv_batched(&xs).unwrap();
+    assert_eq!(got.len(), 5);
+    let mut want = vec![0.0; N];
+    for (x, y) in xs.iter().zip(&got) {
+        ell.spmv_permuted(x, &mut want);
+        assert!(max_abs_diff(&want, y) < 1e-10);
+    }
+}
+
+#[test]
+fn pjrt_lanczos_step_consistent_with_full_solver() {
+    if !artifacts_ready() {
+        return;
+    }
+    let (crs, ell) = tiny_system();
+    let rt = Runtime::new(&default_artifacts_dir()).unwrap();
+    let bound = rt
+        .bind(&ell, rt.load(&format!("lanczos_step_d{D}_n{N}.hlo.txt")).unwrap())
+        .unwrap();
+
+    // Drive the plain three-term recurrence through the artifact.
+    let mut rng = Rng::new(3);
+    let mut v = vec![0.0; N];
+    rng.fill_f64(&mut v, -1.0, 1.0);
+    let norm: f64 = v.iter().map(|x| x * x).sum::<f64>().sqrt();
+    v.iter_mut().for_each(|x| *x /= norm);
+    let mut v_prev = vec![0.0; N];
+    let mut beta = 0.0;
+    let mut alphas = Vec::new();
+    let mut betas = Vec::new();
+    for _ in 0..60 {
+        let (a, b, v_next) = bound.lanczos_step(&v_prev, &v, beta).unwrap();
+        alphas.push(a);
+        v_prev = v;
+        v = v_next;
+        beta = b;
+        betas.push(b);
+    }
+    betas.pop();
+    let evals = spmvperf::eigen::tridiag_eigenvalues(&alphas, &betas);
+    // Reference: Rust Lanczos (full reorthogonalization) on native CRS.
+    let reference = lanczos(&crs, 1, &LanczosConfig::default());
+    // No reorthogonalization in the artifact loop: coarse tolerance.
+    assert!(
+        (evals[0] - reference.eigenvalues[0]).abs() < 1e-4,
+        "artifact Lanczos {} vs native {}",
+        evals[0],
+        reference.eigenvalues[0]
+    );
+}
+
+#[test]
+fn pjrt_power_step_finds_extremal_eigenvalue() {
+    if !artifacts_ready() {
+        return;
+    }
+    let (crs, ell) = tiny_system();
+    let rt = Runtime::new(&default_artifacts_dir()).unwrap();
+    let bound = rt
+        .bind(&ell, rt.load(&format!("power_step_d{D}_n{N}.hlo.txt")).unwrap())
+        .unwrap();
+    let mut rng = Rng::new(4);
+    let mut v = vec![0.0; N];
+    rng.fill_f64(&mut v, -1.0, 1.0);
+    let norm: f64 = v.iter().map(|x| x * x).sum::<f64>().sqrt();
+    v.iter_mut().for_each(|x| *x /= norm);
+    // Power iteration on (shift - A) in the permuted basis.
+    let shift = 30.0;
+    let mut rayleigh = 0.0;
+    for _ in 0..800 {
+        let (v_next, r) = bound.power_step(&v, shift).unwrap();
+        v = v_next;
+        rayleigh = r;
+    }
+    let reference = lanczos(&crs, 1, &LanczosConfig::default());
+    assert!(
+        (rayleigh - reference.eigenvalues[0]).abs() < 1e-3,
+        "power {} vs lanczos {}",
+        rayleigh,
+        reference.eigenvalues[0]
+    );
+}
+
+#[test]
+fn full_stack_eigensolver_matches_dense_reference() {
+    if !artifacts_ready() {
+        return;
+    }
+    // Small enough for dense Jacobi: L=3 chain inside the same artifact
+    // shape is not possible (static shapes), so validate the tiny HH
+    // system against the Rust Lanczos which is itself validated against
+    // Jacobi elsewhere — and drive THIS solve fully through PJRT.
+    let (crs, ell) = tiny_system();
+    let rt = Runtime::new(&default_artifacts_dir()).unwrap();
+    let bound = rt.bind(&ell, rt.load(&format!("spmv_d{D}_n{N}.hlo.txt")).unwrap()).unwrap();
+    let op = PjrtOp { bound: &bound, ell: &ell };
+    let via_pjrt = lanczos(&op, 1, &LanczosConfig::default());
+    let via_native = lanczos(&crs, 1, &LanczosConfig::default());
+    assert!(via_pjrt.converged);
+    assert!(
+        (via_pjrt.eigenvalues[0] - via_native.eigenvalues[0]).abs() < 1e-8,
+        "pjrt {} vs native {}",
+        via_pjrt.eigenvalues[0],
+        via_native.eigenvalues[0]
+    );
+    // and sanity against dense on a really tiny system
+    let p = gen::HolsteinHubbardParams {
+        sites: 2,
+        n_up: 1,
+        n_down: 1,
+        max_phonons: 1,
+        ..gen::HolsteinHubbardParams::tiny()
+    };
+    let h = gen::holstein_hubbard(&p);
+    let (dense_evals, _) = jacobi_eigen(&h.to_dense(), false);
+    let lz = lanczos(&Crs::from_coo(&h), 1, &LanczosConfig::default());
+    assert!((dense_evals[0] - lz.eigenvalues[0]).abs() < 1e-8);
+}
+
+#[test]
+fn service_over_pjrt_executor() {
+    if !artifacts_ready() {
+        return;
+    }
+    let (_, ell) = tiny_system();
+    let ell2 = ell.clone();
+    let svc = Service::start(ServiceConfig::default(), N, move || {
+        let rt = Runtime::new(&default_artifacts_dir())?;
+        let bound = rt.bind(&ell2, rt.load(&format!("spmv_b8_d{D}_n{N}.hlo.txt"))?)?;
+        Ok(Box::new(PjrtExecutor { bound }) as Box<dyn BatchExecutor>)
+    })
+    .unwrap();
+    let mut rng = Rng::new(5);
+    let mut want = vec![0.0; N];
+    for _ in 0..10 {
+        let mut x = vec![0.0; N];
+        rng.fill_f64(&mut x, -1.0, 1.0);
+        let y = svc.submit_wait(x.clone()).unwrap();
+        ell.spmv_permuted(&x, &mut want);
+        assert!(max_abs_diff(&want, &y) < 1e-10);
+    }
+    assert_eq!(svc.metrics.requests.load(std::sync::atomic::Ordering::Relaxed), 10);
+}
