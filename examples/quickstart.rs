@@ -32,7 +32,7 @@ fn main() {
         "SpMV on the Holstein-Hubbard matrix — all storage schemes (host CPU)",
         &["scheme", "max |err| vs CRS", "host MFlop/s", "ns per nnz"],
     );
-    for scheme in Scheme::all_with(1000, 2) {
+    for scheme in Scheme::all_extended(1000, 2, 32, 256) {
         let kernel = SpmvKernel::build(&h, scheme);
         let mut y = vec![0.0; h.nrows];
         kernel.spmv(&x, &mut y);

@@ -42,7 +42,9 @@ fn main() -> anyhow::Result<()> {
                 let bound = rt.bind(&ell_worker, rt.load("spmv_b8_d24_n540.hlo.txt")?)?;
                 Ok(Box::new(PjrtExecutor { bound }) as Box<dyn BatchExecutor>)
             } else {
-                Ok(Box::new(NativeExecutor { ell: ell_worker, max_batch: 8 }) as Box<dyn BatchExecutor>)
+                // Engine-backed parallel fallback (capped at 4 threads:
+                // SpMV saturates memory bandwidth before core count).
+                Ok(Box::new(NativeExecutor::parallel(ell_worker, 8, 4)) as Box<dyn BatchExecutor>)
             }
         },
     )?;

@@ -7,3 +7,64 @@ jax.config.update("jax_enable_x64", True)
 
 # Allow `import compile...` when pytest runs from python/.
 sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+# The test suite uses hypothesis for property sweeps. Offline images may
+# lack it; fall back to a deterministic shim that runs each property over
+# a fixed sample drawn from the declared strategies, so the suite still
+# exercises the same code paths (with less input diversity).
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    import random
+    import types
+
+    class _Strategy:
+        def __init__(self, sample):
+            self._sample = sample
+
+        def sample(self, rng):
+            return self._sample(rng)
+
+    def _integers(min_value=0, max_value=2**31 - 1):
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    def _sampled_from(seq):
+        seq = list(seq)
+        return _Strategy(lambda rng: seq[rng.randrange(len(seq))])
+
+    def _settings(max_examples=20, deadline=None, **_kw):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+
+        return deco
+
+    def _given(**strategies):
+        def deco(fn):
+            # No functools.wraps: pytest must not see the strategy
+            # parameters as fixture requests.
+            def wrapper(*args, **kwargs):
+                # @settings sits above @given and stamps _max_examples on
+                # this wrapper after it is built; read it at call time.
+                n = getattr(wrapper, "_max_examples", 20)
+                rng = random.Random(0xC0FFEE)
+                for _ in range(n):
+                    drawn = {k: s.sample(rng) for k, s in strategies.items()}
+                    fn(*args, **kwargs, **drawn)
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.hypothesis_shim = True
+            return wrapper
+
+        return deco
+
+    _mod = types.ModuleType("hypothesis")
+    _mod.given = _given
+    _mod.settings = _settings
+    _strategies = types.ModuleType("hypothesis.strategies")
+    _strategies.integers = _integers
+    _strategies.sampled_from = _sampled_from
+    _mod.strategies = _strategies
+    sys.modules["hypothesis"] = _mod
+    sys.modules["hypothesis.strategies"] = _strategies

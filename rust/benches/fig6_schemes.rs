@@ -1,3 +1,115 @@
-//! cargo-bench target regenerating the paper's fig6 (see DESIGN.md §3).
-include!("common.rs");
-fn main() { run_experiment_bench("fig6"); }
+//! Fig 6 (host edition): wall-clock SpMV throughput of every storage
+//! scheme — the paper's six plus SELL-C-σ — through the plan/execute
+//! engine at 1/2/4 threads on the Holstein-Hubbard test matrix.
+//!
+//! Emits the `BENCH_*.json` perf-trajectory format to
+//! `results/BENCH_fig6_schemes.json` in addition to the text table.
+//! Scale: `SPMVPERF_BENCH_QUICK=1` for a smoke pass.
+
+use std::fmt::Write as _;
+
+use spmvperf::engine::{Engine, SpmvPlan};
+use spmvperf::gen::{self, HolsteinHubbardParams};
+use spmvperf::kernels::SpmvKernel;
+use spmvperf::matrix::Scheme;
+use spmvperf::sched::Schedule;
+use spmvperf::util::bench::default_bench;
+use spmvperf::util::report::{f, Table};
+use spmvperf::util::rng::Rng;
+
+fn main() {
+    let quick = std::env::var("SPMVPERF_BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
+    let params = if quick { HolsteinHubbardParams::tiny() } else { HolsteinHubbardParams::small() };
+    eprintln!("generating HH matrix (N = {}) ...", params.dimension());
+    let h = gen::holstein_hubbard(&params);
+    let mut rng = Rng::new(11);
+    let mut x = vec![0.0; h.nrows];
+    rng.fill_f64(&mut x, -1.0, 1.0);
+    let b = default_bench();
+    let thread_counts: [usize; 3] = [1, 2, 4];
+
+    let mut t = Table::new(
+        "Fig 6 (host) — SpMV through the plan/execute engine",
+        &["scheme", "threads", "MFlop/s", "ns/nnz", "speedup vs serial CRS"],
+    );
+    let mut entries: Vec<String> = Vec::new();
+    let mut serial_crs = 0.0f64;
+    let mut crs4 = 0.0f64;
+    for scheme in Scheme::all_extended(1000, 2, 32, 256) {
+        let kernel = SpmvKernel::build(&h, scheme);
+        let padding = match &kernel {
+            SpmvKernel::Sell(m) => m.padding_overhead(),
+            _ => 0.0,
+        };
+        let mut ws = kernel.workspace(&x);
+        for &nt in &thread_counts {
+            let engine = Engine::new(nt);
+            let plan = SpmvPlan::new(&kernel, Schedule::Static { chunk: None }, nt);
+            let r = b.run(
+                &format!("{} x{nt}", scheme.name()),
+                kernel.nnz() as u64,
+                2 * kernel.nnz() as u64,
+                || {
+                    plan.execute_permuted(&engine, &kernel, &ws.xp, &mut ws.yp);
+                    ws.yp[0]
+                },
+            );
+            println!("{}", r.summary());
+            let mflops = r.mflops();
+            if scheme == Scheme::Crs && nt == 1 {
+                serial_crs = mflops;
+            }
+            if scheme == Scheme::Crs && nt == 4 {
+                crs4 = mflops;
+            }
+            let speedup = if serial_crs > 0.0 { mflops / serial_crs } else { 0.0 };
+            t.row(vec![
+                scheme.name(),
+                nt.to_string(),
+                f(mflops),
+                f(r.ns_per_item()),
+                f(speedup),
+            ]);
+            entries.push(format!(
+                concat!(
+                    "    {{\"scheme\": \"{}\", \"spec\": \"{}\", \"threads\": {}, ",
+                    "\"schedule\": \"static\", \"mflops\": {:.3}, \"ns_per_nnz\": {:.4}, ",
+                    "\"speedup_vs_serial_crs\": {:.4}, \"padding_overhead\": {:.6}}}"
+                ),
+                scheme.name(),
+                scheme.spec(),
+                nt,
+                mflops,
+                r.ns_per_item(),
+                speedup,
+                padding,
+            ));
+        }
+    }
+    t.print();
+    if serial_crs > 0.0 && crs4 > 0.0 {
+        println!("engine speedup, CRS 4 threads vs serial CRS: {:.2}x", crs4 / serial_crs);
+    }
+
+    let mut json = String::new();
+    let _ = writeln!(json, "{{");
+    let _ = writeln!(json, "  \"bench\": \"fig6_schemes\",");
+    let _ = writeln!(
+        json,
+        "  \"matrix\": {{\"name\": \"holstein-hubbard\", \"n\": {}, \"nnz\": {}}},",
+        h.nrows,
+        h.nnz()
+    );
+    let _ = writeln!(json, "  \"results\": [");
+    let _ = writeln!(json, "{}", entries.join(",\n"));
+    let _ = writeln!(json, "  ]");
+    let _ = writeln!(json, "}}");
+    let path = "results/BENCH_fig6_schemes.json";
+    if let Err(e) = std::fs::create_dir_all("results")
+        .and_then(|_| std::fs::write(path, json.as_bytes()))
+    {
+        eprintln!("could not write {path}: {e}");
+    } else {
+        eprintln!("wrote {path}");
+    }
+}

@@ -1,10 +1,14 @@
 //! Host wall-clock benchmarks of the native SpMV kernels for every
 //! storage scheme (and the Table-1 microbenchmark loops) — real
 //! measurements on the host CPU, complementing the simulated figures.
+//! SpMV runs through the plan/execute engine: serial and 4-thread
+//! partitioned execution of the same plans.
 
+use spmvperf::engine::{Engine, SpmvPlan};
 use spmvperf::gen::{self, HolsteinHubbardParams};
 use spmvperf::kernels::{table1_ops, MicroBuffers, SpmvKernel};
 use spmvperf::matrix::Scheme;
+use spmvperf::sched::Schedule;
 use spmvperf::util::bench::default_bench;
 use spmvperf::util::report::{f, Table};
 use spmvperf::util::rng::Rng;
@@ -19,16 +23,35 @@ fn main() {
     rng.fill_f64(&mut x, -1.0, 1.0);
     let b = default_bench();
 
-    let mut t = Table::new("native SpMV kernels (host CPU)", &["scheme", "MFlop/s", "ns/nnz"]);
-    for scheme in Scheme::all_with(1000, 2) {
+    let engine1 = Engine::new(1);
+    let engine4 = Engine::new(4);
+    let mut t = Table::new(
+        "native SpMV kernels via plan/execute (host CPU)",
+        &["scheme", "serial MFlop/s", "4T MFlop/s", "speedup", "ns/nnz (4T)"],
+    );
+    for scheme in Scheme::all_extended(1000, 2, 32, 256) {
         let kernel = SpmvKernel::build(&h, scheme);
         let mut ws = kernel.workspace(&x);
-        let r = b.run(&scheme.name(), kernel.nnz() as u64, 2 * kernel.nnz() as u64, || {
-            kernel.spmv_hot(&mut ws);
+        let nnz = kernel.nnz() as u64;
+        let plan1 = SpmvPlan::new(&kernel, Schedule::Static { chunk: None }, 1);
+        let r1 = b.run(&format!("{} serial", scheme.name()), nnz, 2 * nnz, || {
+            plan1.execute_permuted(&engine1, &kernel, &ws.xp, &mut ws.yp);
             ws.yp[0]
         });
-        println!("{}", r.summary());
-        t.row(vec![scheme.name(), f(r.mflops()), f(r.ns_per_item())]);
+        println!("{}", r1.summary());
+        let plan4 = SpmvPlan::new(&kernel, Schedule::Static { chunk: None }, 4);
+        let r4 = b.run(&format!("{} x4", scheme.name()), nnz, 2 * nnz, || {
+            plan4.execute_permuted(&engine4, &kernel, &ws.xp, &mut ws.yp);
+            ws.yp[0]
+        });
+        println!("{}", r4.summary());
+        t.row(vec![
+            scheme.name(),
+            f(r1.mflops()),
+            f(r4.mflops()),
+            f(r4.mflops() / r1.mflops()),
+            f(r4.ns_per_item()),
+        ]);
     }
     t.print();
 

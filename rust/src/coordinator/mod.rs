@@ -14,7 +14,9 @@ use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
+use crate::engine::Engine;
 use crate::matrix::EllMatrix;
+use crate::sched::{assign, Schedule};
 
 /// Batch executor abstraction: the service is agnostic of what actually
 /// multiplies. Executors are constructed *inside* the worker thread (a
@@ -26,10 +28,52 @@ pub trait BatchExecutor {
     fn run_batch(&self, xs: &[Vec<f64>]) -> Result<Vec<Vec<f64>>>;
 }
 
-/// Native ELL executor (fallback / testing).
+/// Parallel path of the native executor: a long-lived engine plus static
+/// per-thread row partitions over the ELL planes (every padded row costs
+/// the same `d` updates, so uniform weights are exact).
+struct NativePar {
+    engine: Engine,
+    ranges: Vec<Vec<(usize, usize)>>,
+}
+
+/// Native ELL executor (fallback / testing). Serial by default;
+/// [`NativeExecutor::parallel`] routes each SpMV through the execution
+/// engine's partitioned kernel instead.
 pub struct NativeExecutor {
     pub ell: EllMatrix,
     pub max_batch: usize,
+    par: Option<NativePar>,
+}
+
+impl NativeExecutor {
+    /// Single-threaded reference executor.
+    pub fn serial(ell: EllMatrix, max_batch: usize) -> Self {
+        NativeExecutor { ell, max_batch, par: None }
+    }
+
+    /// Engine-backed executor running each SpMV on `n_threads` threads.
+    /// Output is identical to the serial executor (same per-row
+    /// accumulation order).
+    pub fn parallel(ell: EllMatrix, max_batch: usize, n_threads: usize) -> Self {
+        let n_threads = n_threads.max(1);
+        let weights = vec![1.0; ell.n];
+        let a = assign(Schedule::Static { chunk: None }, ell.n, &weights, n_threads);
+        let ranges = (0..n_threads).map(|t| a.ranges_of(t as u16)).collect();
+        NativeExecutor {
+            ell,
+            max_batch,
+            par: Some(NativePar { engine: Engine::new(n_threads), ranges }),
+        }
+    }
+
+    fn spmv(&self, x: &[f64], y: &mut [f64]) {
+        match &self.par {
+            None => self.ell.spmv_permuted(x, y),
+            Some(par) => par.engine.run_chunks(&par.ranges, y, |a, b, out| {
+                self.ell.spmv_rows_permuted(a, b, x, out);
+            }),
+        }
+    }
 }
 
 impl BatchExecutor for NativeExecutor {
@@ -43,7 +87,7 @@ impl BatchExecutor for NativeExecutor {
         let mut out = Vec::with_capacity(xs.len());
         let mut y = vec![0.0; self.ell.n];
         for x in xs {
-            self.ell.spmv_permuted(x, &mut y);
+            self.spmv(x, &mut y);
             out.push(y.clone());
         }
         Ok(out)
@@ -290,10 +334,60 @@ mod tests {
         let svc = Service::start(
             ServiceConfig { batch_window: window },
             dim,
-            move || Ok(Box::new(NativeExecutor { ell: ell2, max_batch }) as Box<dyn BatchExecutor>),
+            move || Ok(Box::new(NativeExecutor::serial(ell2, max_batch)) as Box<dyn BatchExecutor>),
         )
         .unwrap();
         (svc, ell)
+    }
+
+    #[test]
+    fn parallel_executor_matches_serial() {
+        let ell = tiny_ell();
+        let serial = NativeExecutor::serial(ell.clone(), 8);
+        let mut rng = crate::util::rng::Rng::new(9);
+        let xs: Vec<Vec<f64>> = (0..6)
+            .map(|_| {
+                let mut x = vec![0.0; ell.n];
+                rng.fill_f64(&mut x, -1.0, 1.0);
+                x
+            })
+            .collect();
+        let want = serial.run_batch(&xs).unwrap();
+        for n_threads in [1usize, 2, 4] {
+            let par = NativeExecutor::parallel(ell.clone(), 8, n_threads);
+            let got = par.run_batch(&xs).unwrap();
+            for (w, g) in want.iter().zip(&got) {
+                assert_eq!(
+                    crate::util::stats::max_abs_diff(w, g),
+                    0.0,
+                    "{n_threads}-thread executor deviates"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn service_over_parallel_native_executor() {
+        let ell = tiny_ell();
+        let dim = ell.n;
+        let ell2 = ell.clone();
+        let svc = Service::start(
+            ServiceConfig { batch_window: Duration::from_micros(100) },
+            dim,
+            move || {
+                Ok(Box::new(NativeExecutor::parallel(ell2, 8, 4)) as Box<dyn BatchExecutor>)
+            },
+        )
+        .unwrap();
+        let mut rng = crate::util::rng::Rng::new(10);
+        let mut want = vec![0.0; dim];
+        for _ in 0..5 {
+            let mut x = vec![0.0; dim];
+            rng.fill_f64(&mut x, -1.0, 1.0);
+            let y = svc.submit_wait(x.clone()).unwrap();
+            ell.spmv_permuted(&x, &mut want);
+            assert!(crate::util::stats::max_abs_diff(&y, &want) < 1e-12);
+        }
     }
 
     #[test]

@@ -5,4 +5,6 @@ pub mod dense;
 pub mod lanczos;
 
 pub use dense::{jacobi_eigen, tridiag_eigenvalues};
-pub use lanczos::{inverse_shifted_power, lanczos, LanczosConfig, LanczosResult, LinearOp};
+pub use lanczos::{
+    inverse_shifted_power, lanczos, lanczos_with_engine, LanczosConfig, LanczosResult, LinearOp,
+};

@@ -1,0 +1,543 @@
+//! Parallel SpMV execution engine: the **plan / execute** split.
+//!
+//! The paper's central result is that storage scheme × access scheme ×
+//! thread scheduling must be co-designed; this layer is where the three
+//! meet at run time:
+//!
+//! - [`SpmvPlan`] (**plan**, built once): binds a [`Scheme`] +
+//!   [`Schedule`] + thread count to concrete per-thread row partitions
+//!   (per-diagonal-segment for the JDS family, per-slice-row for
+//!   SELL-C-σ) and a preallocated permuted-basis [`Workspace`]. The
+//!   *same* plan drives the host threads here and the machine-model
+//!   simulator ([`crate::simulator::engine::simulate_spmv_plan`]), so
+//!   measured and simulated runs share one scheduling decision.
+//! - [`Engine`] (**execute**, long-lived): a scoped pool of worker
+//!   threads parked on channels. `execute` dispatches the partitioned
+//!   range-restricted kernels ([`SpmvKernel::spmv_rows_permuted`]) with
+//!   no per-call thread spawn and no allocation beyond a completion
+//!   latch.
+//!
+//! Because every range-restricted kernel reproduces its serial kernel's
+//! per-row accumulation order, engine output is identical to the serial
+//! reference for every scheme under every schedule — floating-point
+//! reproducibility is a property of the plan, not of thread timing.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+use crate::eigen::LinearOp;
+use crate::kernels::{SpmvKernel, Workspace};
+use crate::matrix::Scheme;
+use crate::sched::{assign, Assignment, Schedule};
+
+/// Completion latch: `run` waits until every dispatched job finished.
+/// `poisoned` records whether any job panicked.
+struct Latch {
+    remaining: Mutex<usize>,
+    cv: Condvar,
+    poisoned: std::sync::atomic::AtomicBool,
+}
+
+impl Latch {
+    fn new(n: usize) -> Self {
+        Latch {
+            remaining: Mutex::new(n),
+            cv: Condvar::new(),
+            poisoned: std::sync::atomic::AtomicBool::new(false),
+        }
+    }
+
+    fn count_down(&self) {
+        let mut r = self.remaining.lock().unwrap();
+        *r -= 1;
+        if *r == 0 {
+            self.cv.notify_all();
+        }
+    }
+
+    fn wait(&self) {
+        let mut r = self.remaining.lock().unwrap();
+        while *r > 0 {
+            r = self.cv.wait(r).unwrap();
+        }
+    }
+}
+
+/// Waits for the latch even when the caller's own partition panics:
+/// workers still hold the lifetime-erased closure borrow, so `run`
+/// must not unwind past them.
+struct WaitOnDrop<'a>(&'a Latch);
+
+impl Drop for WaitOnDrop<'_> {
+    fn drop(&mut self) {
+        self.0.wait();
+    }
+}
+
+/// One dispatched unit: run the shared closure as thread `tid`.
+struct Job {
+    /// Borrow of the caller's closure with the lifetime erased; `run`
+    /// blocks on the latch before returning, which keeps it valid.
+    f: &'static (dyn Fn(usize) + Sync),
+    tid: usize,
+    done: Arc<Latch>,
+}
+
+/// A long-lived scoped thread pool for partitioned SpMV execution.
+///
+/// `Engine::new(t)` spawns `t - 1` workers (the calling thread executes
+/// partition 0 itself); `run(f)` invokes `f(tid)` for every
+/// `tid in 0..t` and returns when all are done. With `t == 1` everything
+/// runs inline and no threads exist.
+pub struct Engine {
+    senders: Vec<mpsc::Sender<Job>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl Engine {
+    pub fn new(n_threads: usize) -> Self {
+        assert!(n_threads > 0, "engine needs at least one thread");
+        let n_workers = n_threads - 1;
+        let mut senders = Vec::with_capacity(n_workers);
+        let mut workers = Vec::with_capacity(n_workers);
+        for w in 0..n_workers {
+            let (tx, rx) = mpsc::channel::<Job>();
+            senders.push(tx);
+            let handle = std::thread::Builder::new()
+                .name(format!("spmv-engine-{}", w + 1))
+                .spawn(move || {
+                    for job in rx {
+                        // Contain panics so the worker survives, the
+                        // dispatcher never deadlocks, and the failure is
+                        // propagated (not swallowed) after the latch.
+                        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                            (job.f)(job.tid)
+                        }));
+                        if r.is_err() {
+                            job.done.poisoned.store(true, std::sync::atomic::Ordering::SeqCst);
+                        }
+                        job.done.count_down();
+                    }
+                })
+                .expect("spawning engine worker");
+            workers.push(handle);
+        }
+        Engine { senders, workers }
+    }
+
+    /// An engine sized to the host (capped — SpMV saturates memory
+    /// bandwidth long before core count, per the paper's Fig 8).
+    pub fn with_host_threads(cap: usize) -> Self {
+        let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        Self::new(hw.min(cap.max(1)))
+    }
+
+    pub fn n_threads(&self) -> usize {
+        self.senders.len() + 1
+    }
+
+    /// Run `f(tid)` for every thread id, caller included, and return
+    /// once all invocations completed. No thread spawn on this path.
+    pub fn run<F: Fn(usize) + Sync>(&self, f: F) {
+        if self.senders.is_empty() {
+            f(0);
+            return;
+        }
+        let latch = Arc::new(Latch::new(self.senders.len()));
+        let fr: &(dyn Fn(usize) + Sync) = &f;
+        // Safety: `latch.wait()` below blocks until every worker dropped
+        // its job guard, so the erased borrow cannot outlive `f`.
+        let fr: &'static (dyn Fn(usize) + Sync) = unsafe { std::mem::transmute(fr) };
+        for (i, tx) in self.senders.iter().enumerate() {
+            let job = Job { f: fr, tid: i + 1, done: latch.clone() };
+            if let Err(mpsc::SendError(job)) = tx.send(job) {
+                // Worker gone (should not happen: panics are contained):
+                // degrade to inline execution, containing panics so the
+                // dispatch loop itself never unwinds mid-flight.
+                let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    (job.f)(job.tid)
+                }));
+                if r.is_err() {
+                    job.done.poisoned.store(true, std::sync::atomic::Ordering::SeqCst);
+                }
+                job.done.count_down();
+            }
+        }
+        {
+            // If f(0) panics below, this guard still waits for the
+            // workers before the unwind tears down the caller's frame —
+            // they hold the lifetime-erased borrow of `f` and its
+            // captures.
+            let guard = WaitOnDrop(&latch);
+            f(0);
+            drop(guard); // normal path: wait here
+        }
+        if latch.poisoned.load(std::sync::atomic::Ordering::SeqCst) {
+            panic!("engine worker panicked during partitioned execution");
+        }
+    }
+}
+
+impl Engine {
+    /// Partitioned dispatch over one output vector: for every chunk
+    /// `(a, b)` of partition `t`, calls `f(a, b, out)` on thread `t`
+    /// with `out = &mut y[a..b]`. This is the single place the
+    /// disjoint-write raw-pointer carving lives; [`SpmvPlan`] and the
+    /// coordinator's parallel executor both dispatch through it.
+    ///
+    /// Requirements (checked in debug builds): `partitions.len() ==
+    /// n_threads()`, every chunk in bounds, and chunks disjoint across
+    /// the whole partition set — which `sched::assign` guarantees.
+    pub fn run_chunks<F>(&self, partitions: &[Vec<(usize, usize)>], y: &mut [f64], f: F)
+    where
+        F: Fn(usize, usize, &mut [f64]) + Sync,
+    {
+        assert_eq!(partitions.len(), self.n_threads());
+        let n = y.len();
+        for part in partitions {
+            for &(a, b) in part {
+                assert!(a <= b && b <= n, "chunk ({a}, {b}) out of bounds for len {n}");
+            }
+        }
+        #[cfg(debug_assertions)]
+        {
+            let mut seen = vec![false; n];
+            for part in partitions {
+                for &(a, b) in part {
+                    for s in seen.iter_mut().take(b).skip(a) {
+                        assert!(!*s, "overlapping chunks in partitioned dispatch");
+                        *s = true;
+                    }
+                }
+            }
+        }
+        let base = SendPtr(y.as_mut_ptr());
+        let base = &base;
+        let parts = partitions;
+        self.run(|t| {
+            for &(a, b) in &parts[t] {
+                // Safety: chunks are disjoint across threads (caller
+                // contract, validated in debug builds) and in bounds
+                // (checked above), so each sub-slice has one owner.
+                let out = unsafe { std::slice::from_raw_parts_mut(base.0.add(a), b - a) };
+                f(a, b, out);
+            }
+        });
+    }
+}
+
+impl Drop for Engine {
+    fn drop(&mut self) {
+        self.senders.clear(); // close channels; workers drain and exit
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Pointer wrapper so disjoint row partitions can write one output
+/// vector from several threads.
+struct SendPtr(*mut f64);
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
+/// A persistent, reusable execution plan for one kernel: scheme +
+/// schedule + thread count resolved to per-thread row partitions, plus a
+/// preallocated permuted-basis workspace for original-basis calls.
+pub struct SpmvPlan {
+    pub scheme: Scheme,
+    pub schedule: Schedule,
+    pub n_threads: usize,
+    pub nrows: usize,
+    /// The iteration→thread assignment (also consumed by the simulator).
+    pub assignment: Assignment,
+    /// Per-row scheduling weights (nnz per permuted row).
+    pub weights: Vec<f64>,
+    /// Per-thread chunk lists in dispatch order.
+    ranges: Vec<Vec<(usize, usize)>>,
+    /// Preallocated workspace for the original-basis `execute` path.
+    ws: Mutex<Workspace>,
+}
+
+impl SpmvPlan {
+    /// Plan `kernel` for `schedule` on `n_threads` threads.
+    pub fn new(kernel: &SpmvKernel, schedule: Schedule, n_threads: usize) -> Self {
+        assert!(n_threads > 0);
+        let nrows = kernel.nrows();
+        let weights = kernel.row_weights();
+        let assignment = assign(schedule, nrows, &weights, n_threads);
+        let ranges: Vec<Vec<(usize, usize)>> =
+            (0..n_threads).map(|t| assignment.ranges_of(t as u16)).collect();
+        SpmvPlan {
+            scheme: kernel.scheme(),
+            schedule,
+            n_threads,
+            nrows,
+            assignment,
+            weights,
+            ranges,
+            ws: Mutex::new(Workspace { xp: vec![0.0; nrows], yp: vec![0.0; nrows] }),
+        }
+    }
+
+    /// Chunks owned by thread `t`, in dispatch order.
+    pub fn ranges_of(&self, t: usize) -> &[(usize, usize)] {
+        &self.ranges[t]
+    }
+
+    fn check(&self, engine: &Engine, kernel: &SpmvKernel) {
+        assert_eq!(
+            kernel.nrows(),
+            self.nrows,
+            "plan was built for a {}-row kernel",
+            self.nrows
+        );
+        assert_eq!(
+            kernel.scheme(),
+            self.scheme,
+            "plan was built for scheme {}",
+            self.scheme
+        );
+        assert_eq!(
+            engine.n_threads(),
+            self.n_threads,
+            "plan was built for {} threads, engine has {}",
+            self.n_threads,
+            engine.n_threads()
+        );
+    }
+
+    /// Permuted-basis parallel SpMV (the hot path: no allocation, no
+    /// gather/scatter). `yp` is fully overwritten.
+    pub fn execute_permuted(
+        &self,
+        engine: &Engine,
+        kernel: &SpmvKernel,
+        xp: &[f64],
+        yp: &mut [f64],
+    ) {
+        self.check(engine, kernel);
+        assert_eq!(xp.len(), self.nrows);
+        assert_eq!(yp.len(), self.nrows);
+        engine.run_chunks(&self.ranges, yp, |a, b, out| {
+            kernel.spmv_rows_permuted(a, b, xp, out);
+        });
+    }
+
+    /// Original-basis parallel SpMV through the plan's preallocated
+    /// workspace: gather, partitioned kernel, scatter.
+    pub fn execute(&self, engine: &Engine, kernel: &SpmvKernel, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.nrows);
+        assert_eq!(y.len(), self.nrows);
+        let mut guard = self.ws.lock().unwrap();
+        let Workspace { xp, yp } = &mut *guard;
+        kernel.permute_into(x, xp);
+        self.execute_permuted(engine, kernel, xp, yp);
+        kernel.unpermute_into(yp, y);
+    }
+}
+
+/// A kernel + engine + plan bound together as a [`LinearOp`], so the
+/// Lanczos solver (and anything else operator-driven) runs its hot loop
+/// through the parallel engine.
+pub struct EngineOp<'a> {
+    pub kernel: &'a SpmvKernel,
+    pub engine: &'a Engine,
+    pub plan: &'a SpmvPlan,
+}
+
+impl LinearOp for EngineOp<'_> {
+    fn dim(&self) -> usize {
+        self.kernel.nrows()
+    }
+
+    fn apply(&self, x: &[f64], y: &mut [f64]) {
+        self.plan.execute(self.engine, self.kernel, x, y);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen;
+    use crate::matrix::Coo;
+    use crate::util::rng::Rng;
+    use crate::util::stats::max_abs_diff;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn engine_runs_every_partition_exactly_once() {
+        let engine = Engine::new(4);
+        assert_eq!(engine.n_threads(), 4);
+        let mask = AtomicUsize::new(0);
+        engine.run(|t| {
+            mask.fetch_or(1 << t, Ordering::SeqCst);
+        });
+        assert_eq!(mask.load(Ordering::SeqCst), 0b1111);
+        // Reuse without respawn.
+        let count = AtomicUsize::new(0);
+        for _ in 0..50 {
+            engine.run(|_| {
+                count.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        assert_eq!(count.load(Ordering::SeqCst), 200);
+    }
+
+    #[test]
+    fn worker_panic_is_propagated_and_engine_survives() {
+        let engine = Engine::new(3);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            engine.run(|t| {
+                if t == 2 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(r.is_err(), "worker panic must propagate to the dispatcher");
+        // The pool survives a poisoned dispatch and stays usable.
+        let count = AtomicUsize::new(0);
+        engine.run(|_| {
+            count.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(count.load(Ordering::SeqCst), 3);
+    }
+
+    #[test]
+    fn single_thread_engine_runs_inline() {
+        let engine = Engine::new(1);
+        assert_eq!(engine.n_threads(), 1);
+        let count = AtomicUsize::new(0);
+        engine.run(|t| {
+            assert_eq!(t, 0);
+            count.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(count.load(Ordering::SeqCst), 1);
+    }
+
+    fn random_coo(rng: &mut Rng, n: usize, nnz: usize) -> Coo {
+        let mut coo = Coo::new(n, n);
+        for _ in 0..nnz {
+            coo.push(rng.index(n), rng.index(n), rng.f64() * 2.0 - 1.0);
+        }
+        coo.normalize();
+        coo
+    }
+
+    fn schedules() -> Vec<Schedule> {
+        vec![
+            Schedule::Static { chunk: None },
+            Schedule::Static { chunk: Some(7) },
+            Schedule::Dynamic { chunk: 13 },
+            Schedule::Guided { min_chunk: 4 },
+        ]
+    }
+
+    #[test]
+    fn parallel_identical_to_serial_all_schemes_schedules_threads() {
+        let mut rng = Rng::new(70);
+        let n = 160;
+        let coo = random_coo(&mut rng, n, n * 6);
+        let mut x = vec![0.0; n];
+        rng.fill_f64(&mut x, -1.0, 1.0);
+        for n_threads in [1usize, 2, 4] {
+            let engine = Engine::new(n_threads);
+            for scheme in Scheme::all_extended(16, 3, 8, 32) {
+                let kernel = SpmvKernel::build(&coo, scheme);
+                let mut y_serial = vec![0.0; n];
+                kernel.spmv(&x, &mut y_serial);
+                for schedule in schedules() {
+                    let plan = SpmvPlan::new(&kernel, schedule, n_threads);
+                    let mut y_par = vec![0.0; n];
+                    plan.execute(&engine, &kernel, &x, &mut y_par);
+                    assert_eq!(
+                        max_abs_diff(&y_serial, &y_par),
+                        0.0,
+                        "{scheme} × {} × {n_threads} threads deviates from serial",
+                        schedule.name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_identical_to_serial_on_holstein_hubbard() {
+        let h = gen::holstein_hubbard(&gen::HolsteinHubbardParams::tiny());
+        let n = h.nrows;
+        let mut rng = Rng::new(71);
+        let mut x = vec![0.0; n];
+        rng.fill_f64(&mut x, -1.0, 1.0);
+        let engine = Engine::new(4);
+        for scheme in Scheme::all_extended(64, 2, 32, 256) {
+            let kernel = SpmvKernel::build(&h, scheme);
+            let mut y_serial = vec![0.0; n];
+            kernel.spmv(&x, &mut y_serial);
+            let plan = SpmvPlan::new(&kernel, Schedule::Static { chunk: None }, 4);
+            let mut y_par = vec![0.0; n];
+            plan.execute(&engine, &kernel, &x, &mut y_par);
+            assert_eq!(max_abs_diff(&y_serial, &y_par), 0.0, "{scheme} on HH");
+        }
+    }
+
+    #[test]
+    fn plan_is_reusable_across_calls() {
+        let mut rng = Rng::new(72);
+        let n = 100;
+        let coo = random_coo(&mut rng, n, 700);
+        let kernel = SpmvKernel::build(&coo, Scheme::SellCs { c: 8, sigma: 32 });
+        let engine = Engine::new(3);
+        let plan = SpmvPlan::new(&kernel, Schedule::Dynamic { chunk: 9 }, 3);
+        let mut want = vec![0.0; n];
+        let mut got = vec![0.0; n];
+        for trial in 0..10 {
+            let mut x = vec![0.0; n];
+            rng.fill_f64(&mut x, -1.0, 1.0);
+            kernel.spmv(&x, &mut want);
+            plan.execute(&engine, &kernel, &x, &mut got);
+            assert_eq!(max_abs_diff(&want, &got), 0.0, "trial {trial}");
+        }
+    }
+
+    #[test]
+    fn plan_partitions_cover_all_rows_once() {
+        let mut rng = Rng::new(73);
+        let coo = random_coo(&mut rng, 211, 1500);
+        let kernel = SpmvKernel::build(&coo, Scheme::Crs);
+        for schedule in schedules() {
+            for n_threads in [1usize, 2, 4, 7] {
+                let plan = SpmvPlan::new(&kernel, schedule, n_threads);
+                let mut seen = vec![0u8; 211];
+                for t in 0..n_threads {
+                    for &(a, b) in plan.ranges_of(t) {
+                        for s in seen.iter_mut().take(b).skip(a) {
+                            *s += 1;
+                        }
+                    }
+                }
+                assert!(
+                    seen.iter().all(|&c| c == 1),
+                    "{} × {n_threads}: rows not covered exactly once",
+                    schedule.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn engine_op_drives_linear_op_consumers() {
+        let coo = gen::laplacian_1d(120);
+        let kernel = SpmvKernel::build(&coo, Scheme::SellCs { c: 16, sigma: 64 });
+        let engine = Engine::new(2);
+        let plan = SpmvPlan::new(&kernel, Schedule::Static { chunk: None }, 2);
+        let op = EngineOp { kernel: &kernel, engine: &engine, plan: &plan };
+        assert_eq!(op.dim(), 120);
+        let x = vec![1.0; 120];
+        let mut y = vec![0.0; 120];
+        op.apply(&x, &mut y);
+        let mut want = vec![0.0; 120];
+        kernel.spmv(&x, &mut want);
+        assert_eq!(max_abs_diff(&want, &y), 0.0);
+    }
+}

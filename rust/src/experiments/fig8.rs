@@ -9,26 +9,25 @@
 //! partition fits the aggregated L3, and NBJDS overtakes CRS at large
 //! thread counts (short inner loops hurt the in-order Itanium2).
 
+use crate::engine::SpmvPlan;
 use crate::kernels::SpmvKernel;
 use crate::matrix::{Crs, Scheme};
 use crate::sched::Schedule;
-use crate::simulator::{simulate_spmv, MachineSpec, Placement, SimOptions};
+use crate::simulator::{simulate_spmv_plan, MachineSpec, Placement, SimOptions};
 use crate::util::report::{f, Table};
 
 use super::ExpOptions;
 
-fn mflops(
-    m: &MachineSpec,
-    k: &SpmvKernel,
-    tps: usize,
-    sockets: usize,
-) -> f64 {
-    simulate_spmv(
+/// Simulate through the shared plan/execute API: the same [`SpmvPlan`]
+/// the host engine would run is handed to the machine model.
+fn mflops(m: &MachineSpec, k: &SpmvKernel, tps: usize, sockets: usize) -> f64 {
+    let plan = SpmvPlan::new(k, Schedule::Static { chunk: None }, tps * sockets);
+    simulate_spmv_plan(
         m,
         k,
+        &plan,
         tps,
         sockets,
-        Schedule::Static { chunk: None },
         Placement::FirstTouchStatic,
         &SimOptions::default(),
     )

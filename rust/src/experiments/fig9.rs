@@ -6,10 +6,11 @@
 //! are hazardous; dynamic/guided scheduling disrupts NUMA locality; large
 //! blocks × large chunks underutilize threads (too few chunks).
 
+use crate::engine::SpmvPlan;
 use crate::kernels::SpmvKernel;
 use crate::matrix::{Crs, Scheme};
 use crate::sched::Schedule;
-use crate::simulator::{simulate_spmv, MachineSpec, Placement, SimOptions};
+use crate::simulator::{simulate_spmv_plan, MachineSpec, Placement, SimOptions};
 use crate::util::report::{f, Table};
 
 use super::ExpOptions;
@@ -22,13 +23,17 @@ pub fn chunks(quick: bool) -> Vec<usize> {
     }
 }
 
+/// Simulate through the shared plan/execute API (2 sockets fully
+/// populated): schedule × chunk decisions live in the [`SpmvPlan`].
 fn mflops(m: &MachineSpec, k: &SpmvKernel, schedule: Schedule) -> f64 {
-    simulate_spmv(
+    let tps = m.cores_per_socket;
+    let plan = SpmvPlan::new(k, schedule, tps * 2);
+    simulate_spmv_plan(
         m,
         k,
-        m.cores_per_socket,
+        &plan,
+        tps,
         2,
-        schedule,
         Placement::FirstTouchStatic,
         &SimOptions::default(),
     )

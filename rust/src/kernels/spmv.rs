@@ -2,9 +2,15 @@
 //! preallocated workspace for hot benchmark loops (a long-lived solver
 //! keeps its vectors in the permuted basis; we do the same so benches
 //! measure the kernel, not the gather/scatter).
+//!
+//! Every scheme also exposes a **range-restricted kernel**
+//! ([`SpmvKernel::spmv_rows_permuted`]): the unit of work the parallel
+//! execution engine ([`crate::engine`]) schedules onto threads. The
+//! restricted kernels reproduce the serial kernels' per-row accumulation
+//! order, so partitioned execution is bit-compatible with serial runs.
 
 use crate::matrix::jds::SpmvVisitor;
-use crate::matrix::{Coo, Crs, Jds, RbJds, Scheme, SoJds, SpMv};
+use crate::matrix::{Coo, Crs, Jds, RbJds, Scheme, SellCs, SoJds, SpMv};
 
 /// A matrix realized in a concrete storage scheme, ready for SpMV.
 pub enum SpmvKernel {
@@ -13,6 +19,7 @@ pub enum SpmvKernel {
     Jds { jds: Jds, scheme: Scheme },
     Rb(RbJds),
     So(SoJds),
+    Sell(SellCs),
 }
 
 impl SpmvKernel {
@@ -29,6 +36,7 @@ impl SpmvKernel {
             }
             Scheme::RbJds { block } => SpmvKernel::Rb(RbJds::from_crs(crs, block)),
             Scheme::SoJds { block } => SpmvKernel::So(SoJds::from_crs(crs, block)),
+            Scheme::SellCs { c, sigma } => SpmvKernel::Sell(SellCs::from_crs(crs, c, sigma)),
         }
     }
 
@@ -38,6 +46,7 @@ impl SpmvKernel {
             SpmvKernel::Jds { scheme, .. } => *scheme,
             SpmvKernel::Rb(rb) => Scheme::RbJds { block: rb.block },
             SpmvKernel::So(so) => Scheme::SoJds { block: so.0.block },
+            SpmvKernel::Sell(m) => Scheme::SellCs { c: m.c, sigma: m.sigma },
         }
     }
 
@@ -47,6 +56,7 @@ impl SpmvKernel {
             SpmvKernel::Jds { jds, .. } => jds.nrows,
             SpmvKernel::Rb(m) => m.nrows,
             SpmvKernel::So(m) => m.0.nrows,
+            SpmvKernel::Sell(m) => m.nrows,
         }
     }
 
@@ -56,7 +66,61 @@ impl SpmvKernel {
             SpmvKernel::Jds { jds, .. } => jds.nnz(),
             SpmvKernel::Rb(m) => m.nnz(),
             SpmvKernel::So(m) => m.nnz(),
+            SpmvKernel::Sell(m) => m.nnz(),
         }
+    }
+
+    /// The row permutation into the kernel's working basis (`perm[new] =
+    /// old`); `None` for CRS (identity).
+    pub fn perm(&self) -> Option<&[u32]> {
+        match self {
+            SpmvKernel::Crs(_) => None,
+            SpmvKernel::Jds { jds, .. } => Some(&jds.perm),
+            SpmvKernel::Rb(m) => Some(&m.perm),
+            SpmvKernel::So(m) => Some(&m.0.perm),
+            SpmvKernel::Sell(m) => Some(&m.perm),
+        }
+    }
+
+    /// Gather `x` into the permuted basis without allocating.
+    pub fn permute_into(&self, x: &[f64], xp: &mut [f64]) {
+        match self.perm() {
+            None => xp.copy_from_slice(x),
+            Some(p) => {
+                for (new, &old) in p.iter().enumerate() {
+                    xp[new] = x[old as usize];
+                }
+            }
+        }
+    }
+
+    /// Scatter a permuted-basis result back without allocating.
+    pub fn unpermute_into(&self, yp: &[f64], y: &mut [f64]) {
+        match self.perm() {
+            None => y.copy_from_slice(yp),
+            Some(p) => {
+                for (new, &old) in p.iter().enumerate() {
+                    y[old as usize] = yp[new];
+                }
+            }
+        }
+    }
+
+    /// Non-zeros per permuted row — the iteration weights for OpenMP-style
+    /// scheduling (shared by the host engine and the simulator).
+    pub fn row_weights(&self) -> Vec<f64> {
+        struct W(Vec<f64>);
+        impl SpmvVisitor for W {
+            fn update(&mut self, row: usize, _j: usize, _c: usize) {
+                if self.0.len() <= row {
+                    self.0.resize(row + 1, 0.0);
+                }
+                self.0[row] += 1.0;
+            }
+        }
+        let mut w = W(vec![0.0; self.nrows()]);
+        self.walk(&mut w);
+        w.0
     }
 
     /// SpMV in the original basis (allocates; for correctness paths).
@@ -66,17 +130,16 @@ impl SpmvKernel {
             SpmvKernel::Jds { jds, scheme } => jds.spmv_scheme(*scheme, x, y),
             SpmvKernel::Rb(m) => m.spmv(x, y),
             SpmvKernel::So(m) => m.spmv(x, y),
+            SpmvKernel::Sell(m) => m.spmv(x, y),
         }
     }
 
     /// Prepare a hot-loop workspace: input pre-permuted, output buffer
     /// sized. For CRS the basis is the identity.
     pub fn workspace(&self, x: &[f64]) -> Workspace {
-        let xp = match self {
-            SpmvKernel::Crs(_) => x.to_vec(),
-            SpmvKernel::Jds { jds, .. } => jds.permute_vec(x),
-            SpmvKernel::Rb(m) => m.permute_vec(x),
-            SpmvKernel::So(m) => m.0.permute_vec(x),
+        let xp = match self.perm() {
+            None => x.to_vec(),
+            Some(p) => p.iter().map(|&old| x[old as usize]).collect(),
         };
         Workspace { xp, yp: vec![0.0; self.nrows()] }
     }
@@ -94,17 +157,35 @@ impl SpmvKernel {
             },
             SpmvKernel::Rb(m) => m.spmv_permuted(&ws.xp, &mut ws.yp),
             SpmvKernel::So(m) => m.spmv_permuted(&ws.xp, &mut ws.yp),
+            SpmvKernel::Sell(m) => m.spmv_permuted(&ws.xp, &mut ws.yp),
+        }
+    }
+
+    /// Range-restricted permuted-basis SpMV — the parallel engine's unit
+    /// of work. Computes permuted rows `[row_begin, row_end)` into
+    /// `out[i - row_begin]`; disjoint row partitions may therefore write
+    /// through disjoint output slices concurrently.
+    #[inline]
+    pub fn spmv_rows_permuted(&self, row_begin: usize, row_end: usize, xp: &[f64], out: &mut [f64]) {
+        match self {
+            SpmvKernel::Crs(m) => m.spmv_rows_into(row_begin, row_end, xp, out),
+            SpmvKernel::Jds { jds, scheme } => match scheme {
+                Scheme::Jds => jds.spmv_rows_jds(row_begin, row_end, xp, out),
+                Scheme::NbJds { block } => jds.spmv_rows_nbjds(*block, row_begin, row_end, xp, out),
+                Scheme::NuJds { unroll } => {
+                    jds.spmv_rows_nujds(*unroll, row_begin, row_end, xp, out)
+                }
+                _ => unreachable!(),
+            },
+            SpmvKernel::Rb(m) => m.spmv_rows_permuted(row_begin, row_end, xp, out),
+            SpmvKernel::So(m) => m.spmv_rows_permuted(row_begin, row_end, xp, out),
+            SpmvKernel::Sell(m) => m.spmv_rows_permuted(row_begin, row_end, xp, out),
         }
     }
 
     /// Recover the original-basis result from the workspace.
     pub fn unpermute(&self, ws: &Workspace, y: &mut [f64]) {
-        match self {
-            SpmvKernel::Crs(_) => y.copy_from_slice(&ws.yp),
-            SpmvKernel::Jds { jds, .. } => jds.unpermute_vec(&ws.yp, y),
-            SpmvKernel::Rb(m) => m.unpermute_vec(&ws.yp, y),
-            SpmvKernel::So(m) => m.0.unpermute_vec(&ws.yp, y),
-        }
+        self.unpermute_into(&ws.yp, y);
     }
 
     /// Drive a visitor over the kernel's logical update stream (the exact
@@ -127,6 +208,7 @@ impl SpmvKernel {
             },
             SpmvKernel::Rb(m) => m.walk(v),
             SpmvKernel::So(m) => m.walk(v),
+            SpmvKernel::Sell(m) => m.walk(v),
         }
     }
 }
@@ -162,7 +244,10 @@ mod tests {
         let crs = SpmvKernel::build(&coo, Scheme::Crs);
         let mut y_ref = vec![0.0; n];
         crs.spmv(&x, &mut y_ref);
-        for scheme in Scheme::all_with(32, 2) {
+        let mut schemes = Scheme::all_extended(32, 2, 8, 64);
+        schemes.push(Scheme::SellCs { c: 32, sigma: 32 });
+        schemes.push(Scheme::SellCs { c: 1, sigma: 1 });
+        for scheme in schemes {
             let k = SpmvKernel::build(&coo, scheme);
             assert_eq!(k.nnz(), crs.nnz());
             let mut y = vec![0.0; n];
@@ -175,13 +260,34 @@ mod tests {
     }
 
     #[test]
+    fn all_schemes_agree_with_crs_on_holstein_hubbard() {
+        let h = crate::gen::holstein_hubbard(&crate::gen::HolsteinHubbardParams::tiny());
+        let n = h.nrows;
+        let mut rng = Rng::new(33);
+        let mut x = vec![0.0; n];
+        rng.fill_f64(&mut x, -1.0, 1.0);
+        let crs = SpmvKernel::build(&h, Scheme::Crs);
+        let mut y_ref = vec![0.0; n];
+        crs.spmv(&x, &mut y_ref);
+        for scheme in Scheme::all_extended(64, 2, 32, 256) {
+            let k = SpmvKernel::build(&h, scheme);
+            let mut y = vec![0.0; n];
+            k.spmv(&x, &mut y);
+            assert!(
+                max_abs_diff(&y_ref, &y) < 1e-12,
+                "scheme {scheme} disagrees with CRS on HH"
+            );
+        }
+    }
+
+    #[test]
     fn hot_path_matches_cold_path() {
         let mut rng = Rng::new(31);
         let n = 120;
         let coo = random_coo(&mut rng, n, n * 5);
         let mut x = vec![0.0; n];
         rng.fill_f64(&mut x, -1.0, 1.0);
-        for scheme in Scheme::all_with(16, 4) {
+        for scheme in Scheme::all_extended(16, 4, 8, 32) {
             let k = SpmvKernel::build(&coo, scheme);
             let mut y_cold = vec![0.0; n];
             k.spmv(&x, &mut y_cold);
@@ -197,6 +303,59 @@ mod tests {
     }
 
     #[test]
+    fn range_restricted_dispatch_matches_hot_path_exactly() {
+        let mut rng = Rng::new(34);
+        let n = 141;
+        let coo = random_coo(&mut rng, n, n * 6);
+        for scheme in Scheme::all_extended(16, 3, 8, 32) {
+            let k = SpmvKernel::build(&coo, scheme);
+            let mut x = vec![0.0; n];
+            rng.fill_f64(&mut x, -1.0, 1.0);
+            let mut ws = k.workspace(&x);
+            k.spmv_hot(&mut ws);
+            let mut pieced = vec![0.0; n];
+            for (a, b) in [(0usize, 1usize), (1, 52), (52, 107), (107, n)] {
+                let (head, _) = pieced.split_at_mut(b);
+                k.spmv_rows_permuted(a, b, &ws.xp, &mut head[a..]);
+            }
+            assert_eq!(
+                max_abs_diff(&ws.yp, &pieced),
+                0.0,
+                "scheme {scheme}: restricted kernel deviates from serial"
+            );
+        }
+    }
+
+    #[test]
+    fn row_weights_sum_to_nnz() {
+        let mut rng = Rng::new(35);
+        let coo = random_coo(&mut rng, 90, 500);
+        for scheme in Scheme::all_extended(20, 2, 8, 16) {
+            let k = SpmvKernel::build(&coo, scheme);
+            let w = k.row_weights();
+            assert_eq!(w.len(), k.nrows());
+            let total: f64 = w.iter().sum();
+            assert_eq!(total as usize, k.nnz(), "scheme {scheme}");
+        }
+    }
+
+    #[test]
+    fn permute_roundtrip() {
+        let mut rng = Rng::new(36);
+        let coo = random_coo(&mut rng, 70, 400);
+        for scheme in Scheme::all_extended(16, 2, 8, 24) {
+            let k = SpmvKernel::build(&coo, scheme);
+            let mut x = vec![0.0; 70];
+            rng.fill_f64(&mut x, -1.0, 1.0);
+            let mut xp = vec![0.0; 70];
+            k.permute_into(&x, &mut xp);
+            let mut back = vec![0.0; 70];
+            k.unpermute_into(&xp, &mut back);
+            assert_eq!(x, back, "scheme {scheme}");
+        }
+    }
+
+    #[test]
     fn walk_touches_every_nnz_once_for_all_schemes() {
         use crate::matrix::jds::SpmvVisitor;
         let mut rng = Rng::new(32);
@@ -207,7 +366,7 @@ mod tests {
                 self.0 += 1;
             }
         }
-        for scheme in Scheme::all_with(25, 3) {
+        for scheme in Scheme::all_extended(25, 3, 8, 40) {
             let k = SpmvKernel::build(&coo, scheme);
             let mut c = Count(0);
             k.walk(&mut c);

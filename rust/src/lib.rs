@@ -7,7 +7,13 @@
 //! The library provides:
 //!
 //! - all sparse storage schemes from the paper ([`matrix`]): CRS, JDS and
-//!   the blocked/unrolled/reordered/sorted JDS refinements;
+//!   the blocked/unrolled/reordered/sorted JDS refinements, plus the
+//!   post-paper SELL-C-σ layout;
+//! - a parallel SpMV **execution engine** ([`engine`]) with a
+//!   plan/execute split: a persistent [`engine::SpmvPlan`] binds scheme ×
+//!   schedule × thread count to per-thread partitions, and a long-lived
+//!   [`engine::Engine`] thread pool runs the partitioned kernels with no
+//!   per-call spawn;
 //! - the paper's test matrix — a real Holstein-Hubbard Hamiltonian
 //!   generator — plus auxiliary generators ([`gen`]);
 //! - the microbenchmark kernels of Table 1 ([`kernels`]);
@@ -29,6 +35,7 @@
 pub mod analysis;
 pub mod coordinator;
 pub mod eigen;
+pub mod engine;
 pub mod experiments;
 pub mod gen;
 pub mod kernels;

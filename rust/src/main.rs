@@ -7,6 +7,7 @@
 //!                     [--threads-per-socket T] [--sockets S] [--schedule static|dynamic,C]
 //! spmvperf predict    [--machine nehalem] — perf-model prediction per scheme
 //! spmvperf lanczos    [--sites 6 --electrons 3 --max-phonons 4] [--eigenvalues 1]
+//!                     [--threads T] [--scheme crs|sellcs:32:256|...]
 //! spmvperf serve      [--requests 64 --batch-window-us 500] — PJRT service demo
 //! spmvperf matrix     [--out FILE.mtx] — generate + analyze the test matrix
 //! spmvperf info       — platform, machines, artifacts
@@ -14,7 +15,7 @@
 
 use anyhow::{bail, Context, Result};
 use spmvperf::coordinator::{BatchExecutor, PjrtExecutor, Service, ServiceConfig};
-use spmvperf::eigen::{lanczos, LanczosConfig};
+use spmvperf::eigen::LanczosConfig;
 use spmvperf::experiments::{self, ExpOptions};
 use spmvperf::gen::{self, HolsteinHubbardParams};
 use spmvperf::kernels::SpmvKernel;
@@ -61,6 +62,7 @@ USAGE:
                       [--sockets 2] [--schedule static] [--block 1000]
   spmvperf predict    [--machine nehalem] [--block 1000]
   spmvperf lanczos    [--sites 6 --electrons 3 --max-phonons 4 --eigenvalues 1]
+                      [--threads T] [--scheme crs|sellcs:32:256]
   spmvperf serve      [--requests 64 --batch-window-us 500]
   spmvperf matrix     [--out FILE.mtx] [--full|--quick]
   spmvperf info
@@ -160,7 +162,7 @@ fn cmd_predict(args: &Args) -> Result<()> {
         &format!("performance-model predictions on {} (paper §1 goal)", machine.name),
         &["scheme", "pred cycles/nnz", "pred MFlop/s"],
     );
-    for scheme in Scheme::all_with(block, 2) {
+    for scheme in Scheme::all_extended(block, 2, 32, 256) {
         let k = SpmvKernel::build_from_crs(&crs, scheme);
         let p = predict(&machine, &curve, &k);
         t.row(vec![p.scheme.clone(), f(p.cycles_per_nnz), f(p.mflops)]);
@@ -183,14 +185,30 @@ fn cmd_lanczos(args: &Args) -> Result<()> {
     };
     let n_eigs = args.get_usize("eigenvalues", 1)?;
     let iters = args.get_usize("iters", 300)?;
+    let threads = args.get_usize("threads", 1)?;
+    let scheme = Scheme::parse(&args.get_str("scheme", "crs"))?;
     args.finish()?;
     eprintln!("building Holstein-Hubbard Hamiltonian: dim = {}", p.dimension());
     let h = gen::holstein_hubbard(&p);
     let crs = Crs::from_coo(&h);
+    let cfg = LanczosConfig { max_iters: iters, ..Default::default() };
+    // Hot loop through the plan/execute engine for any thread count —
+    // a 1-thread engine runs inline, so the chosen scheme is always
+    // honored.
+    let kernel = SpmvKernel::build_from_crs(&crs, scheme);
+    let engine = spmvperf::engine::Engine::new(threads.max(1));
+    let plan = spmvperf::engine::SpmvPlan::new(
+        &kernel,
+        Schedule::Static { chunk: None },
+        threads.max(1),
+    );
     let t0 = std::time::Instant::now();
-    let r = lanczos(&crs, n_eigs, &LanczosConfig { max_iters: iters, ..Default::default() });
+    let r = spmvperf::eigen::lanczos_with_engine(&kernel, &engine, &plan, n_eigs, &cfg);
     let dt = t0.elapsed();
-    let mut t = Table::new("Lanczos ground state (native CRS SpMV)", &["metric", "value"]);
+    let mut t = Table::new(
+        &format!("Lanczos ground state ({} SpMV, {threads} thread(s))", scheme.name()),
+        &["metric", "value"],
+    );
     for (i, e) in r.eigenvalues.iter().enumerate() {
         t.row(vec![format!("E{i}"), format!("{e:.10}")]);
     }

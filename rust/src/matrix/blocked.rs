@@ -136,6 +136,58 @@ impl RbJds {
         self.walk(&mut c);
         c.finish();
     }
+
+    /// Range-restricted permuted-basis kernel for the parallel engine:
+    /// computes permuted rows `[row_begin, row_end)` into
+    /// `out[i - row_begin]`, touching only the blocks that intersect the
+    /// range and skipping over non-intersecting diagonal segments in the
+    /// block-consecutive storage. Per-row accumulation order (ascending
+    /// diagonal) matches the serial kernel, including its register runs:
+    /// in a block of width > 1, diagonal segments that cover only the
+    /// block's first row emit it consecutively, so the serial
+    /// [`Compute`] visitor pre-sums them before a single flush —
+    /// replicated via `tail_acc` so results are identical.
+    pub fn spmv_rows_permuted(&self, row_begin: usize, row_end: usize, xp: &[f64], out: &mut [f64]) {
+        debug_assert_eq!(out.len(), row_end - row_begin);
+        out.fill(0.0);
+        let longest = self.diag_len.first().copied().unwrap_or(0);
+        let mut bi = row_begin / self.block;
+        loop {
+            let b0 = bi * self.block;
+            if b0 >= longest || b0 >= row_end {
+                break;
+            }
+            let b1 = (b0 + self.block).min(longest);
+            let width = b1 - b0;
+            let lo = row_begin.max(b0);
+            let hi = row_end.min(b1);
+            let mut seg_start = self.block_ptr[bi];
+            let mut tail_acc = 0.0;
+            for &len in &self.diag_len {
+                if len <= b0 {
+                    break;
+                }
+                let end = b1.min(len);
+                // Rows b0..end of this diagonal occupy
+                // seg_start..seg_start + (end - b0) consecutively.
+                let e = hi.min(end);
+                for i in lo..e {
+                    let off = seg_start + (i - b0);
+                    let p = self.val[off] * xp[self.col_idx[off] as usize];
+                    if width > 1 && i == b0 && len == b0 + 1 {
+                        tail_acc += p; // register run onto the block's first row
+                    } else {
+                        out[i - row_begin] += p;
+                    }
+                }
+                seg_start += end - b0;
+            }
+            if width > 1 && b0 >= row_begin && b0 < row_end {
+                out[b0 - row_begin] += tail_acc;
+            }
+            bi += 1;
+        }
+    }
 }
 
 impl SpMv for RbJds {
@@ -180,6 +232,10 @@ impl SoJds {
 
     pub fn spmv_permuted(&self, xp: &[f64], yp: &mut [f64]) {
         self.0.spmv_permuted(xp, yp)
+    }
+
+    pub fn spmv_rows_permuted(&self, row_begin: usize, row_end: usize, xp: &[f64], out: &mut [f64]) {
+        self.0.spmv_rows_permuted(row_begin, row_end, xp, out)
     }
 }
 
@@ -427,6 +483,30 @@ mod tests {
             jump_so <= jump_rb,
             "SOJDS total stride deviation {jump_so} should not exceed RBJDS {jump_rb}"
         );
+    }
+
+    #[test]
+    fn range_restricted_kernel_matches_serial_exactly() {
+        let mut rng = Rng::new(25);
+        let n = 120;
+        let crs = random_square(&mut rng, n, n * 6);
+        let mut xp = vec![0.0; n];
+        rng.fill_f64(&mut xp, -1.0, 1.0);
+        for block in [1, 7, 16, 120, 1000] {
+            let rb = RbJds::from_crs(&crs, block);
+            let mut serial = vec![0.0; n];
+            rb.spmv_permuted(&xp, &mut serial);
+            let mut pieced = vec![0.0; n];
+            for (a, b) in [(0usize, 5usize), (5, 64), (64, 65), (65, n)] {
+                let (head, _) = pieced.split_at_mut(b);
+                rb.spmv_rows_permuted(a, b, &xp, &mut head[a..]);
+            }
+            assert_eq!(
+                crate::util::stats::max_abs_diff(&serial, &pieced),
+                0.0,
+                "block {block}"
+            );
+        }
     }
 
     #[test]

@@ -54,6 +54,15 @@ impl Crs {
     /// loop scheduling in the parallel experiments (§5).
     #[inline]
     pub fn spmv_rows(&self, x: &[f64], y: &mut [f64], row_begin: usize, row_end: usize) {
+        self.spmv_rows_into(row_begin, row_end, x, &mut y[row_begin..row_end]);
+    }
+
+    /// Range-restricted kernel for the parallel engine: computes rows
+    /// `[row_begin, row_end)` into `out[i - row_begin]`, so disjoint row
+    /// partitions can write through disjoint output slices.
+    #[inline]
+    pub fn spmv_rows_into(&self, row_begin: usize, row_end: usize, x: &[f64], out: &mut [f64]) {
+        debug_assert_eq!(out.len(), row_end - row_begin);
         for i in row_begin..row_end {
             let (a, b) = (self.row_ptr[i], self.row_ptr[i + 1]);
             let mut sum = 0.0;
@@ -61,7 +70,7 @@ impl Crs {
                 // Safety: col_idx entries are validated < ncols at build.
                 sum += self.val[j] * x[self.col_idx[j] as usize];
             }
-            y[i] = sum;
+            out[i - row_begin] = sum;
         }
     }
 

@@ -79,6 +79,24 @@ impl EllMatrix {
         }
     }
 
+    /// Range-restricted permuted-basis kernel for the parallel engine:
+    /// computes permuted rows `[row_begin, row_end)` into
+    /// `out[i - row_begin]`. Per-row accumulation order (ascending
+    /// diagonal, padding included) matches [`EllMatrix::spmv_permuted`],
+    /// so partitioned and serial runs agree exactly.
+    pub fn spmv_rows_permuted(&self, row_begin: usize, row_end: usize, xp: &[f64], out: &mut [f64]) {
+        debug_assert!(row_end <= self.n);
+        debug_assert_eq!(out.len(), row_end - row_begin);
+        for i in row_begin..row_end {
+            let mut acc = 0.0;
+            for dd in 0..self.d {
+                let idx = dd * self.n + i;
+                acc += self.val[idx] * xp[self.col[idx] as usize];
+            }
+            out[i - row_begin] = acc;
+        }
+    }
+
     /// Stored non-zeros (excluding padding).
     pub fn nnz(&self) -> usize {
         self.val.iter().filter(|&&v| v != 0.0).count()
@@ -148,6 +166,27 @@ mod tests {
         crs.spmv(&x, &mut y1);
         ell.spmv(&x, &mut y2);
         assert!(max_abs_diff(&y1, &y2) < 1e-12);
+    }
+
+    #[test]
+    fn range_restricted_kernel_matches_full() {
+        let mut rng = Rng::new(62);
+        let mut coo = Coo::new(60, 60);
+        for _ in 0..400 {
+            coo.push(rng.index(60), rng.index(60), rng.f64() - 0.5);
+        }
+        coo.normalize();
+        let ell = EllMatrix::from_crs(&Crs::from_coo(&coo), None).unwrap();
+        let mut xp = vec![0.0; 60];
+        rng.fill_f64(&mut xp, -1.0, 1.0);
+        let mut full = vec![0.0; 60];
+        ell.spmv_permuted(&xp, &mut full);
+        let mut pieced = vec![0.0; 60];
+        for (a, b) in [(0usize, 17usize), (17, 40), (40, 60)] {
+            let (head, _) = pieced.split_at_mut(b);
+            ell.spmv_rows_permuted(a, b, &xp, &mut head[a..]);
+        }
+        assert_eq!(max_abs_diff(&full, &pieced), 0.0);
     }
 
     #[test]

@@ -270,6 +270,145 @@ impl Jds {
         c.finish();
     }
 
+    // ---------------------------------------------------------------
+    // Range-restricted permuted-basis kernels (per-diagonal-segment) for
+    // the parallel execution engine. Each computes permuted rows
+    // [row_begin, row_end) into out[i - row_begin], touching only the
+    // diagonal segments that intersect the range, and reproduces the
+    // serial kernels' per-row accumulation order (ascending diagonal,
+    // grouped by `unroll` for NUJDS) so partitioned and serial runs
+    // produce identical results.
+    // ---------------------------------------------------------------
+
+    /// Plain JDS restricted to a row range. Per-row accumulation is
+    /// ascending-diagonal, with one exception mirroring the serial
+    /// walk's register runs: trailing length-1 diagonals all emit row 0
+    /// consecutively, so the serial [`Compute`] visitor pre-sums them in
+    /// a register before a single flush — replicated here so the result
+    /// is identical to [`Jds::spmv_permuted_jds`].
+    pub fn spmv_rows_jds(&self, row_begin: usize, row_end: usize, xp: &[f64], out: &mut [f64]) {
+        debug_assert_eq!(out.len(), row_end - row_begin);
+        let nd = self.n_diag();
+        let longest = if nd == 0 { 0 } else { self.diag_len(0) };
+        for i in row_begin..row_end {
+            let mut y = 0.0;
+            let mut d = 0;
+            while d < nd {
+                let len = self.diag_len(d);
+                if len <= i {
+                    break; // lengths non-increasing
+                }
+                if longest > 1 && i == 0 && len == 1 {
+                    break; // register-run tail handled below
+                }
+                let off = self.jd_ptr[d] + i;
+                y += self.val[off] * xp[self.col_idx[off] as usize];
+                d += 1;
+            }
+            // Register-run tail: length-1 diagonals accumulate before a
+            // single flush onto row 0.
+            let mut acc = 0.0;
+            while d < nd && self.diag_len(d) > i {
+                let off = self.jd_ptr[d] + i;
+                acc += self.val[off] * xp[self.col_idx[off] as usize];
+                d += 1;
+            }
+            y += acc;
+            out[i - row_begin] = y;
+        }
+    }
+
+    /// NBJDS restricted to a row range. Mirrors the serial blocked
+    /// walk's register runs: within a block `[b0, b1)` of width > 1,
+    /// diagonals ending exactly at row `b0` emit that row consecutively
+    /// and accumulate in a register before one flush.
+    pub fn spmv_rows_nbjds(
+        &self,
+        block: usize,
+        row_begin: usize,
+        row_end: usize,
+        xp: &[f64],
+        out: &mut [f64],
+    ) {
+        assert!(block > 0);
+        debug_assert_eq!(out.len(), row_end - row_begin);
+        let nd = self.n_diag();
+        let longest = if nd == 0 { 0 } else { self.diag_len(0) };
+        for i in row_begin..row_end {
+            let b0 = (i / block) * block;
+            let width = (b0 + block).min(longest).saturating_sub(b0);
+            let mut y = 0.0;
+            let mut d = 0;
+            while d < nd {
+                let len = self.diag_len(d);
+                if len <= i {
+                    break;
+                }
+                if width > 1 && i == b0 && len == i + 1 {
+                    break; // register-run tail handled below
+                }
+                let off = self.jd_ptr[d] + i;
+                y += self.val[off] * xp[self.col_idx[off] as usize];
+                d += 1;
+            }
+            let mut acc = 0.0;
+            while d < nd && self.diag_len(d) > i {
+                let off = self.jd_ptr[d] + i;
+                acc += self.val[off] * xp[self.col_idx[off] as usize];
+                d += 1;
+            }
+            y += acc;
+            out[i - row_begin] = y;
+        }
+    }
+
+    /// NUJDS restricted to a row range: per row, diagonals are grouped by
+    /// `unroll` with a register accumulator per group, matching the
+    /// unrolled kernel's rounding exactly. Groups made up entirely of
+    /// length-1 diagonals emit row 0 back-to-back in the serial walk and
+    /// therefore merge into one register run.
+    pub fn spmv_rows_nujds(
+        &self,
+        unroll: usize,
+        row_begin: usize,
+        row_end: usize,
+        xp: &[f64],
+        out: &mut [f64],
+    ) {
+        assert!(unroll > 0);
+        debug_assert_eq!(out.len(), row_end - row_begin);
+        let nd = self.n_diag();
+        for i in row_begin..row_end {
+            let mut total = 0.0;
+            let mut d = 0;
+            while d < nd && self.diag_len(d) > i {
+                if i == 0 && self.diag_len(d) == 1 {
+                    // Trailing all-length-1 groups: one merged run.
+                    let mut acc = 0.0;
+                    while d < nd {
+                        let off = self.jd_ptr[d];
+                        acc += self.val[off] * xp[self.col_idx[off] as usize];
+                        d += 1;
+                    }
+                    total += acc;
+                    break;
+                }
+                let dmax = (d + unroll).min(nd);
+                let mut acc = 0.0;
+                for dd in d..dmax {
+                    if self.diag_len(dd) <= i {
+                        break; // lengths non-increasing within the group
+                    }
+                    let off = self.jd_ptr[dd] + i;
+                    acc += self.val[off] * xp[self.col_idx[off] as usize];
+                }
+                total += acc;
+                d = dmax;
+            }
+            out[i - row_begin] = total;
+        }
+    }
+
     /// Full SpMV in the original basis via a chosen access scheme.
     pub fn spmv_scheme(&self, scheme: super::Scheme, x: &[f64], y: &mut [f64]) {
         let xp = self.permute_vec(x);
@@ -435,6 +574,43 @@ mod tests {
                 _ => jds.walk_nujds(3, &mut c),
             }
             assert!(c.0.iter().all(|&n| n == 1), "walk {walk} must touch each nnz once");
+        }
+    }
+
+    #[test]
+    fn range_restricted_kernels_match_serial_exactly() {
+        let mut rng = Rng::new(17);
+        let n = 113;
+        let (_, crs) = random_square(&mut rng, n, n * 6);
+        let jds = Jds::from_crs(&crs);
+        let mut xp = vec![0.0; n];
+        rng.fill_f64(&mut xp, -1.0, 1.0);
+        let cuts = [(0usize, 31usize), (31, 32), (32, 90), (90, n)];
+        // (serial kernel, pieced kernel) per access scheme
+        let mut serial = vec![0.0; n];
+        let mut pieced = vec![0.0; n];
+
+        jds.spmv_permuted_jds(&xp, &mut serial);
+        for &(a, b) in &cuts {
+            let (head, _) = pieced.split_at_mut(b);
+            jds.spmv_rows_jds(a, b, &xp, &mut head[a..]);
+        }
+        assert_eq!(max_abs_diff(&serial, &pieced), 0.0, "JDS");
+
+        jds.spmv_permuted_nbjds(13, &xp, &mut serial);
+        for &(a, b) in &cuts {
+            let (head, _) = pieced.split_at_mut(b);
+            jds.spmv_rows_nbjds(13, a, b, &xp, &mut head[a..]);
+        }
+        assert_eq!(max_abs_diff(&serial, &pieced), 0.0, "NBJDS");
+
+        for unroll in [1, 3, 8] {
+            jds.spmv_permuted_nujds(unroll, &xp, &mut serial);
+            for &(a, b) in &cuts {
+                let (head, _) = pieced.split_at_mut(b);
+                jds.spmv_rows_nujds(unroll, a, b, &xp, &mut head[a..]);
+            }
+            assert_eq!(max_abs_diff(&serial, &pieced), 0.0, "NUJDS u={unroll}");
         }
     }
 

@@ -1,35 +1,61 @@
-//! Sparse matrix storage schemes from §2 of the paper.
+//! Sparse matrix storage schemes: §2 of the paper plus the post-paper
+//! SELL-C-σ layout.
 //!
+//! - [`blocked`]: the paper's refined layouts RBJDS (block-consecutive
+//!   storage) and SOJDS (stride-sorted block storage).
 //! - [`coo`]: coordinate triples — the assembly/interchange format.
 //! - [`crs`]: compressed row storage — the cache-architecture workhorse
 //!   (10 bytes/flop algorithmic balance).
+//! - [`ell`]: padded JDS (ELL) — the dense-plane interchange format
+//!   between the Rust coordinator and the AOT-compiled Pallas kernel.
+//! - [`io`]: MatrixMarket read/write.
 //! - [`jds`]: jagged diagonals storage — the vector-architecture layout
 //!   (18 bytes/flop), shared by the JDS / NBJDS / NUJDS access schemes.
-//! - [`blocked`]: the paper's refined layouts RBJDS (block-consecutive
-//!   storage) and SOJDS (stride-sorted block storage).
-//! - [`io`]: MatrixMarket read/write.
+//! - [`sell`]: SELL-C-σ — sliced, σ-window-sorted ELL (Kreutzer et al.
+//!   2013), the modern successor of the JDS refinements and the layout
+//!   the parallel execution engine targets.
 //!
 //! All formats store values as `f64` and column indices as `u32`, matching
 //! the 8-byte value + 4-byte index assumption behind the paper's balance
 //! numbers.
 
 pub mod blocked;
-pub mod ell;
 pub mod coo;
 pub mod crs;
+pub mod ell;
 pub mod io;
 pub mod jds;
+pub mod sell;
 
 pub use blocked::{RbJds, SoJds};
 pub use coo::Coo;
-pub use ell::EllMatrix;
 pub use crs::Crs;
+pub use ell::EllMatrix;
 pub use jds::Jds;
+pub use sell::SellCs;
 
-/// The storage/access scheme taxonomy of the paper (§2, Fig 1).
+/// The storage/access scheme taxonomy of the paper (§2, Fig 1), extended
+/// with SELL-C-σ.
 ///
 /// JDS, NBJDS and NUJDS share the *storage* layout of [`Jds`] and differ in
 /// access pattern only; RBJDS and SOJDS change the storage order itself.
+///
+/// # SELL-C-σ and the padding-vs-locality trade-off
+///
+/// [`Scheme::SellCs`] cuts the matrix into slices of `c` rows, each padded
+/// to its own longest row, after sorting rows by length within windows of
+/// `sigma` rows. The two parameters span a design space:
+///
+/// - **σ = 1** keeps the original row order: gather locality of the input
+///   vector is untouched, but a single long row inflates its whole slice
+///   (padding overhead up to `c × max_len / nnz`).
+/// - **σ = nrows** is a full JDS-style sort: slices are length-uniform and
+///   padding is minimal, but the symmetric permutation scrambles the
+///   input-vector access pattern (the paper's Fig 6a effect).
+/// - In between, σ (a small multiple of `c`, e.g. `σ = 8·c`) keeps the
+///   permutation local to σ-row neighbourhoods while removing most
+///   padding — the setting Kreutzer et al. recommend and the default
+///   here. `SellCs::padding_overhead` reports the realized cost.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Scheme {
     /// Compressed row storage.
@@ -45,6 +71,8 @@ pub enum Scheme {
     RbJds { block: usize },
     /// Stride-sorted block JDS storage, given block size.
     SoJds { block: usize },
+    /// SELL-C-σ: slice height `c`, sort window `sigma`.
+    SellCs { c: usize, sigma: usize },
 }
 
 impl Scheme {
@@ -56,27 +84,49 @@ impl Scheme {
             Scheme::NbJds { block } => format!("NBJDS(b={block})"),
             Scheme::RbJds { block } => format!("RBJDS(b={block})"),
             Scheme::SoJds { block } => format!("SOJDS(b={block})"),
+            Scheme::SellCs { c, sigma } => format!("SELL-{c}-{sigma}"),
         }
     }
 
-    /// Parse e.g. "crs", "jds", "nbjds:1000", "nujds:2".
+    /// Canonical parseable spec string: `Scheme::parse(&s.spec()) == s`.
+    pub fn spec(&self) -> String {
+        match self {
+            Scheme::Crs => "crs".to_string(),
+            Scheme::Jds => "jds".to_string(),
+            Scheme::NuJds { unroll } => format!("nujds:{unroll}"),
+            Scheme::NbJds { block } => format!("nbjds:{block}"),
+            Scheme::RbJds { block } => format!("rbjds:{block}"),
+            Scheme::SoJds { block } => format!("sojds:{block}"),
+            Scheme::SellCs { c, sigma } => format!("sellcs:{c}:{sigma}"),
+        }
+    }
+
+    /// Parse e.g. "crs", "jds", "nbjds:1000", "nujds:2", "sellcs:32:256".
+    /// SELL-C-σ defaults: c = 32; σ = 8·c when omitted.
     pub fn parse(s: &str) -> anyhow::Result<Self> {
-        let (name, param) = match s.split_once(':') {
-            Some((n, p)) => (n, Some(p.parse::<usize>()?)),
-            None => (s, None),
-        };
-        Ok(match name.to_ascii_lowercase().as_str() {
+        let mut parts = s.split(':');
+        let name = parts.next().unwrap_or("");
+        let params = parts
+            .map(|p| p.trim().parse::<usize>())
+            .collect::<Result<Vec<usize>, _>>()?;
+        let p0 = params.first().copied();
+        Ok(match name.trim().to_ascii_lowercase().as_str() {
             "crs" | "csr" => Scheme::Crs,
             "jds" => Scheme::Jds,
-            "nujds" => Scheme::NuJds { unroll: param.unwrap_or(2) },
-            "nbjds" => Scheme::NbJds { block: param.unwrap_or(1000) },
-            "rbjds" => Scheme::RbJds { block: param.unwrap_or(1000) },
-            "sojds" => Scheme::SoJds { block: param.unwrap_or(1000) },
+            "nujds" => Scheme::NuJds { unroll: p0.unwrap_or(2) },
+            "nbjds" => Scheme::NbJds { block: p0.unwrap_or(1000) },
+            "rbjds" => Scheme::RbJds { block: p0.unwrap_or(1000) },
+            "sojds" => Scheme::SoJds { block: p0.unwrap_or(1000) },
+            "sellcs" | "sell" => {
+                let c = p0.unwrap_or(32).max(1);
+                let sigma = params.get(1).copied().unwrap_or(8 * c).max(1);
+                Scheme::SellCs { c, sigma }
+            }
             other => anyhow::bail!("unknown scheme '{other}'"),
         })
     }
 
-    /// All schemes evaluated in Fig 6/7, with a given block/unroll choice.
+    /// The paper's scheme set of Fig 6/7, with a given block/unroll choice.
     pub fn all_with(block: usize, unroll: usize) -> Vec<Scheme> {
         vec![
             Scheme::Crs,
@@ -86,6 +136,14 @@ impl Scheme {
             Scheme::RbJds { block },
             Scheme::SoJds { block },
         ]
+    }
+
+    /// Every scheme including SELL-C-σ — the set the parallel engine and
+    /// its tests/benches sweep.
+    pub fn all_extended(block: usize, unroll: usize, c: usize, sigma: usize) -> Vec<Scheme> {
+        let mut v = Self::all_with(block, unroll);
+        v.push(Scheme::SellCs { c, sigma });
+        v
     }
 }
 
@@ -122,8 +180,34 @@ mod tests {
     }
 
     #[test]
+    fn sellcs_parse_roundtrip() {
+        assert_eq!(
+            Scheme::parse("sellcs:32:256").unwrap(),
+            Scheme::SellCs { c: 32, sigma: 256 }
+        );
+        assert_eq!(
+            Scheme::parse("sell:8").unwrap(),
+            Scheme::SellCs { c: 8, sigma: 64 }
+        );
+        assert_eq!(
+            Scheme::parse("sellcs").unwrap(),
+            Scheme::SellCs { c: 32, sigma: 256 }
+        );
+        assert!(Scheme::parse("sellcs:0:x").is_err());
+    }
+
+    #[test]
+    fn spec_roundtrips_for_all_schemes() {
+        for s in Scheme::all_extended(1000, 2, 32, 256) {
+            let spec = s.spec();
+            assert_eq!(Scheme::parse(&spec).unwrap(), s, "spec '{spec}'");
+        }
+    }
+
+    #[test]
     fn scheme_names() {
         assert_eq!(Scheme::Crs.name(), "CRS");
         assert_eq!(Scheme::NbJds { block: 1000 }.name(), "NBJDS(b=1000)");
+        assert_eq!(Scheme::SellCs { c: 32, sigma: 256 }.name(), "SELL-32-256");
     }
 }

@@ -1,0 +1,408 @@
+//! SELL-C-σ storage — the modern successor of the paper's JDS
+//! refinements (Kreutzer, Hager, Wellein, Fehske, Bishop 2013: *"A
+//! unified sparse matrix data format for efficient general sparse
+//! matrix-vector multiply on modern processors with wide SIMD units"*).
+//!
+//! Rows are sorted by descending non-zero count **within windows of σ
+//! rows** (σ = `sigma`), then cut into **slices of C rows** (C = `c`).
+//! Each slice is padded to the width of its longest row and stored
+//! column-major within the slice, so a SIMD unit (or the engine's
+//! per-thread loop) streams `val`/`col_idx` with stride one while C rows
+//! advance in lockstep — the paper's NBJDS blocking and RBJDS
+//! block-consecutive storage rolled into one layout.
+//!
+//! The σ knob trades permutation locality against padding: σ = 1 keeps
+//! the original row order (padding up to the slice maximum, like a
+//! per-slice ELL), σ = nrows is a full JDS sort (minimal padding, fully
+//! scrambled gather locality). `padding_overhead` quantifies the cost.
+//!
+//! Like the JDS family, rows and columns are permuted symmetrically so
+//! all kernels run in the permuted basis; [`SpMv`] wraps gather/scatter.
+
+use super::jds::SpmvVisitor;
+use super::{Coo, Crs, SpMv};
+
+/// A matrix in SELL-C-σ storage.
+#[derive(Debug, Clone)]
+pub struct SellCs {
+    pub nrows: usize,
+    pub ncols: usize,
+    /// Slice height C.
+    pub c: usize,
+    /// Sort-window size σ.
+    pub sigma: usize,
+    /// `perm[new] = old` (same convention as [`super::Jds`]).
+    pub perm: Vec<u32>,
+    /// `inv_perm[old] = new`.
+    pub inv_perm: Vec<u32>,
+    /// Offset of each slice into `val`/`col_idx`; length `n_slices + 1`.
+    pub slice_ptr: Vec<usize>,
+    /// Width (padded row length) of each slice.
+    pub slice_width: Vec<usize>,
+    /// Non-zeros per permuted row (distinguishes entries from padding).
+    pub row_nnz: Vec<u32>,
+    /// Column indices in the permuted basis; padding slots hold 0.
+    pub col_idx: Vec<u32>,
+    /// Values; padding slots hold 0.0.
+    pub val: Vec<f64>,
+    nnz: usize,
+}
+
+impl SellCs {
+    /// Build from CRS with slice height `c` and sort window `sigma`.
+    /// Requires a square matrix (rows and columns are permuted
+    /// symmetrically, as in the JDS family).
+    pub fn from_crs(crs: &Crs, c: usize, sigma: usize) -> Self {
+        assert!(c > 0, "SELL-C-σ slice height must be positive");
+        assert!(sigma > 0, "SELL-C-σ sort window must be positive");
+        assert_eq!(crs.nrows, crs.ncols, "SELL-C-σ requires a square matrix");
+        let n = crs.nrows;
+
+        // Sort rows by descending nnz within each σ window (stable).
+        let mut perm: Vec<u32> = (0..n as u32).collect();
+        for win in perm.chunks_mut(sigma) {
+            win.sort_by_key(|&i| {
+                let i = i as usize;
+                std::cmp::Reverse(crs.row_ptr[i + 1] - crs.row_ptr[i])
+            });
+        }
+        let mut inv_perm = vec![0u32; n];
+        for (new, &old) in perm.iter().enumerate() {
+            inv_perm[old as usize] = new as u32;
+        }
+
+        // Permuted rows with relabeled, ascending columns.
+        let rows: Vec<Vec<(u32, f64)>> = perm
+            .iter()
+            .map(|&old| {
+                let (cols, vals) = crs.row(old as usize);
+                let mut row: Vec<(u32, f64)> = cols
+                    .iter()
+                    .zip(vals)
+                    .map(|(&cc, &v)| (inv_perm[cc as usize], v))
+                    .collect();
+                row.sort_unstable_by_key(|&(cc, _)| cc);
+                row
+            })
+            .collect();
+        let row_nnz: Vec<u32> = rows.iter().map(|r| r.len() as u32).collect();
+
+        // Pack slices column-major, padded to the slice maximum.
+        let n_slices = n.div_ceil(c);
+        let mut slice_ptr = Vec::with_capacity(n_slices + 1);
+        let mut slice_width = Vec::with_capacity(n_slices);
+        slice_ptr.push(0);
+        let mut col_idx = Vec::new();
+        let mut val = Vec::new();
+        for s in 0..n_slices {
+            let lo = s * c;
+            let hi = ((s + 1) * c).min(n);
+            let h = hi - lo;
+            let w = rows[lo..hi].iter().map(|r| r.len()).max().unwrap_or(0);
+            for k in 0..w {
+                for row in &rows[lo..hi] {
+                    if let Some(&(cc, v)) = row.get(k) {
+                        col_idx.push(cc);
+                        val.push(v);
+                    } else {
+                        col_idx.push(0);
+                        val.push(0.0);
+                    }
+                }
+            }
+            debug_assert_eq!(col_idx.len() - slice_ptr[s], w * h);
+            slice_ptr.push(col_idx.len());
+            slice_width.push(w);
+        }
+
+        SellCs {
+            nrows: n,
+            ncols: crs.ncols,
+            c,
+            sigma,
+            perm,
+            inv_perm,
+            slice_ptr,
+            slice_width,
+            row_nnz,
+            col_idx,
+            val,
+            nnz: crs.nnz(),
+        }
+    }
+
+    pub fn from_coo(coo: &Coo, c: usize, sigma: usize) -> Self {
+        Self::from_crs(&Crs::from_coo(coo), c, sigma)
+    }
+
+    pub fn n_slices(&self) -> usize {
+        self.slice_ptr.len() - 1
+    }
+
+    /// Permuted row range `[lo, hi)` of slice `s`.
+    #[inline]
+    pub fn slice_rows(&self, s: usize) -> (usize, usize) {
+        (s * self.c, ((s + 1) * self.c).min(self.nrows))
+    }
+
+    /// Stored non-zeros (excluding padding).
+    pub fn nnz(&self) -> usize {
+        self.nnz
+    }
+
+    /// Total stored slots, padding included.
+    pub fn padded_len(&self) -> usize {
+        self.val.len()
+    }
+
+    /// Padding overhead `padded/nnz - 1` — the σ-vs-padding trade-off
+    /// metric (0.0 = no padding, as with c = 1 or a fully sorted σ on a
+    /// row-uniform matrix).
+    pub fn padding_overhead(&self) -> f64 {
+        if self.nnz == 0 {
+            return 0.0;
+        }
+        self.padded_len() as f64 / self.nnz as f64 - 1.0
+    }
+
+    /// Gather a vector into the permuted basis.
+    pub fn permute_vec(&self, x: &[f64]) -> Vec<f64> {
+        self.perm.iter().map(|&old| x[old as usize]).collect()
+    }
+
+    /// Scatter a permuted-basis vector back.
+    pub fn unpermute_vec(&self, yp: &[f64], y: &mut [f64]) {
+        for (new, &old) in self.perm.iter().enumerate() {
+            y[old as usize] = yp[new];
+        }
+    }
+
+    /// Permuted-basis SpMV, slice-major (the SIMD-friendly order).
+    /// Per-row accumulation order is ascending `k`, identical to
+    /// [`SellCs::spmv_rows_permuted`], so serial and engine-partitioned
+    /// runs produce identical results.
+    pub fn spmv_permuted(&self, xp: &[f64], yp: &mut [f64]) {
+        assert_eq!(xp.len(), self.nrows);
+        assert_eq!(yp.len(), self.nrows);
+        self.spmv_rows_permuted(0, self.nrows, xp, yp);
+    }
+
+    /// Range-restricted permuted-basis kernel for the parallel engine:
+    /// computes permuted rows `[row_begin, row_end)` into
+    /// `out[i - row_begin]`. Touches only those rows' slices.
+    pub fn spmv_rows_permuted(&self, row_begin: usize, row_end: usize, xp: &[f64], out: &mut [f64]) {
+        debug_assert!(row_end <= self.nrows);
+        debug_assert_eq!(out.len(), row_end - row_begin);
+        for i in row_begin..row_end {
+            let s = i / self.c;
+            let (lo, hi) = self.slice_rows(s);
+            let h = hi - lo;
+            let lane = i - lo;
+            let base = self.slice_ptr[s];
+            let mut acc = 0.0;
+            for k in 0..self.row_nnz[i] as usize {
+                let idx = base + k * h + lane;
+                acc += self.val[idx] * xp[self.col_idx[idx] as usize];
+            }
+            out[i - row_begin] = acc;
+        }
+    }
+
+    /// Drive a visitor over the non-padding entries in storage (slice-
+    /// major) order — feeds the simulator and stride analysis.
+    pub fn walk<V: SpmvVisitor>(&self, v: &mut V) {
+        for s in 0..self.n_slices() {
+            let (lo, hi) = self.slice_rows(s);
+            let h = hi - lo;
+            let base = self.slice_ptr[s];
+            for k in 0..self.slice_width[s] {
+                for lane in 0..h {
+                    let row = lo + lane;
+                    if (k as u32) < self.row_nnz[row] {
+                        let idx = base + k * h + lane;
+                        v.update(row, idx, self.col_idx[idx] as usize);
+                    }
+                }
+            }
+        }
+    }
+}
+
+impl SpMv for SellCs {
+    fn nrows(&self) -> usize {
+        self.nrows
+    }
+    fn ncols(&self) -> usize {
+        self.ncols
+    }
+    fn nnz(&self) -> usize {
+        SellCs::nnz(self)
+    }
+    fn spmv(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.ncols);
+        assert_eq!(y.len(), self.nrows);
+        let xp = self.permute_vec(x);
+        let mut yp = vec![0.0; self.nrows];
+        self.spmv_permuted(&xp, &mut yp);
+        self.unpermute_vec(&yp, y);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen;
+    use crate::util::rng::Rng;
+    use crate::util::stats::max_abs_diff;
+
+    fn random_square(rng: &mut Rng, n: usize, nnz: usize) -> Crs {
+        let mut coo = Coo::new(n, n);
+        for _ in 0..nnz {
+            coo.push(rng.index(n), rng.index(n), rng.f64() * 2.0 - 1.0);
+        }
+        coo.normalize();
+        Crs::from_coo(&coo)
+    }
+
+    #[test]
+    fn sell_matches_crs_over_c_sigma_grid() {
+        let mut rng = Rng::new(40);
+        let n = 150;
+        let crs = random_square(&mut rng, n, n * 7);
+        let mut x = vec![0.0; n];
+        rng.fill_f64(&mut x, -1.0, 1.0);
+        let mut y_ref = vec![0.0; n];
+        crs.spmv(&x, &mut y_ref);
+        for c in [1, 2, 7, 32, 150, 1000] {
+            for sigma in [1, 8, 64, 150, 4096] {
+                let sell = SellCs::from_crs(&crs, c, sigma);
+                assert_eq!(sell.nnz(), crs.nnz(), "c={c} sigma={sigma}");
+                let mut y = vec![0.0; n];
+                sell.spmv(&x, &mut y);
+                assert!(
+                    max_abs_diff(&y_ref, &y) < 1e-12,
+                    "SELL-{c}-{sigma} disagrees with CRS"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn sell_matches_crs_on_holstein_hubbard() {
+        let h = gen::holstein_hubbard(&gen::HolsteinHubbardParams::tiny());
+        let crs = Crs::from_coo(&h);
+        let n = crs.nrows;
+        let mut rng = Rng::new(41);
+        let mut x = vec![0.0; n];
+        rng.fill_f64(&mut x, -1.0, 1.0);
+        let mut y_ref = vec![0.0; n];
+        crs.spmv(&x, &mut y_ref);
+        for (c, sigma) in [(32, 256), (8, 64), (64, 540)] {
+            let sell = SellCs::from_crs(&crs, c, sigma);
+            let mut y = vec![0.0; n];
+            sell.spmv(&x, &mut y);
+            assert!(max_abs_diff(&y_ref, &y) < 1e-12, "SELL-{c}-{sigma} on HH");
+        }
+    }
+
+    #[test]
+    fn perm_is_windowed_sort() {
+        let mut rng = Rng::new(42);
+        let n = 120;
+        let crs = random_square(&mut rng, n, n * 5);
+        let sigma = 30;
+        let sell = SellCs::from_crs(&crs, 8, sigma);
+        // perm is a permutation
+        let mut seen = vec![false; n];
+        for &p in &sell.perm {
+            assert!(!seen[p as usize]);
+            seen[p as usize] = true;
+        }
+        // nnz non-increasing within each σ window, and windows keep
+        // their original row population.
+        for (w, win) in sell.perm.chunks(sigma).enumerate() {
+            let counts: Vec<usize> = win
+                .iter()
+                .map(|&old| crs.row_ptr[old as usize + 1] - crs.row_ptr[old as usize])
+                .collect();
+            assert!(counts.windows(2).all(|p| p[0] >= p[1]), "window {w} not sorted");
+            for &old in win {
+                let home = old as usize / sigma;
+                assert_eq!(home, w, "row {old} escaped its σ window");
+            }
+        }
+    }
+
+    #[test]
+    fn padding_shrinks_as_sigma_grows() {
+        // Wider sort windows group similar row lengths into slices, so
+        // padding must be monotonically non-increasing in σ (for σ a
+        // multiple of C) and minimal at σ = n.
+        let mut rng = Rng::new(43);
+        let n = 256;
+        let crs = random_square(&mut rng, n, n * 6);
+        let c = 16;
+        let mut prev = f64::INFINITY;
+        for sigma in [16, 64, 256] {
+            let sell = SellCs::from_crs(&crs, c, sigma);
+            let ovh = sell.padding_overhead();
+            assert!(
+                ovh <= prev + 1e-12,
+                "padding overhead grew from {prev:.4} to {ovh:.4} at sigma={sigma}"
+            );
+            prev = ovh;
+        }
+        // c = 1 is padding-free regardless of σ.
+        let unit = SellCs::from_crs(&crs, 1, 1);
+        assert_eq!(unit.padded_len(), unit.nnz());
+        assert_eq!(unit.padding_overhead(), 0.0);
+    }
+
+    #[test]
+    fn walk_touches_every_nnz_once() {
+        let mut rng = Rng::new(44);
+        let crs = random_square(&mut rng, 100, 600);
+        let sell = SellCs::from_crs(&crs, 8, 32);
+        struct Count(Vec<u32>, usize);
+        impl SpmvVisitor for Count {
+            fn update(&mut self, _row: usize, j: usize, _col: usize) {
+                self.0[j] += 1;
+                self.1 += 1;
+            }
+        }
+        let mut c = Count(vec![0; sell.padded_len()], 0);
+        sell.walk(&mut c);
+        assert_eq!(c.1, sell.nnz());
+        assert!(c.0.iter().all(|&k| k <= 1));
+    }
+
+    #[test]
+    fn range_restricted_kernel_matches_full() {
+        let mut rng = Rng::new(45);
+        let n = 131; // deliberately not a multiple of any slice height
+        let crs = random_square(&mut rng, n, n * 6);
+        let sell = SellCs::from_crs(&crs, 16, 64);
+        let mut xp = vec![0.0; n];
+        rng.fill_f64(&mut xp, -1.0, 1.0);
+        let mut full = vec![0.0; n];
+        sell.spmv_permuted(&xp, &mut full);
+        let mut pieced = vec![0.0; n];
+        for (a, b) in [(0usize, 13usize), (13, 16), (16, 97), (97, n)] {
+            let (head, _) = pieced.split_at_mut(b);
+            sell.spmv_rows_permuted(a, b, &xp, &mut head[a..]);
+        }
+        assert_eq!(max_abs_diff(&full, &pieced), 0.0, "must be bit-identical");
+    }
+
+    #[test]
+    fn empty_matrix() {
+        let coo = Coo::new(5, 5);
+        let sell = SellCs::from_coo(&coo, 4, 16);
+        assert_eq!(sell.nnz(), 0);
+        assert_eq!(sell.padded_len(), 0);
+        let x = vec![1.0; 5];
+        let mut y = vec![9.0; 5];
+        sell.spmv(&x, &mut y);
+        assert_eq!(y, vec![0.0; 5]);
+    }
+}

@@ -154,6 +154,8 @@ pub fn predict(machine: &MachineSpec, curve: &CostCurve, kernel: &SpmvKernel) ->
         crate::matrix::Scheme::NbJds { block }
         | crate::matrix::Scheme::RbJds { block }
         | crate::matrix::Scheme::SoJds { block } => (block as f64).min(nrows),
+        // SELL-C-σ revisits a slice of C rows across its diagonals.
+        crate::matrix::Scheme::SellCs { c, .. } => (c as f64).min(nrows),
         _ => 1.0, // CRS/NUJDS hold the row in a register
     };
     let llc = machine.l3.map(|c| c.size_bytes).unwrap_or(machine.l2.size_bytes) as f64;

@@ -4,6 +4,7 @@
 //! roofline-style total (compute vs per-thread MLP vs socket/node/link
 //! bandwidth — whichever binds).
 
+use crate::engine::SpmvPlan;
 use crate::kernels::{IndexPattern, MicroOp, OpKind, SpmvKernel};
 use crate::matrix::jds::SpmvVisitor;
 use crate::matrix::Scheme;
@@ -223,23 +224,11 @@ fn sharers(machine: &MachineSpec, spec_shared_by: usize, tps: usize) -> usize {
     tps.div_ceil(instances_per_socket).clamp(1, spec_shared_by)
 }
 
-/// Count per-row update weights (nnz per kernel row index).
-fn kernel_row_weights(kernel: &SpmvKernel) -> Vec<f64> {
-    struct W(Vec<f64>);
-    impl SpmvVisitor for W {
-        fn update(&mut self, row: usize, _j: usize, _c: usize) {
-            if self.0.len() <= row {
-                self.0.resize(row + 1, 0.0);
-            }
-            self.0[row] += 1.0;
-        }
-    }
-    let mut w = W(vec![0.0; kernel.nrows()]);
-    kernel.walk(&mut w);
-    w.0
-}
-
 /// Simulate a (possibly multi-threaded) SpMV on a machine model.
+///
+/// Thin wrapper: builds the same [`SpmvPlan`] the host engine executes
+/// and hands it to [`simulate_spmv_plan`] — one scheduling decision for
+/// both measured and simulated runs.
 #[allow(clippy::too_many_arguments)]
 pub fn simulate_spmv(
     machine: &MachineSpec,
@@ -250,17 +239,46 @@ pub fn simulate_spmv(
     placement_policy: Placement,
     opts: &SimOptions,
 ) -> SimResult {
+    let plan = SpmvPlan::new(kernel, schedule, threads_per_socket * sockets_used);
+    simulate_spmv_plan(
+        machine,
+        kernel,
+        &plan,
+        threads_per_socket,
+        sockets_used,
+        placement_policy,
+        opts,
+    )
+}
+
+/// Simulate a partitioned SpMV from a prebuilt execution plan — the
+/// plan/execute API shared with the host engine ([`crate::engine`]).
+#[allow(clippy::too_many_arguments)]
+pub fn simulate_spmv_plan(
+    machine: &MachineSpec,
+    kernel: &SpmvKernel,
+    plan: &SpmvPlan,
+    threads_per_socket: usize,
+    sockets_used: usize,
+    placement_policy: Placement,
+    opts: &SimOptions,
+) -> SimResult {
     assert!(sockets_used >= 1 && sockets_used <= machine.sockets);
     assert!(threads_per_socket >= 1 && threads_per_socket <= machine.cores_per_socket);
     let domains = pin_threads(threads_per_socket, sockets_used);
     let n_threads = domains.len();
+    assert_eq!(
+        plan.n_threads, n_threads,
+        "plan was built for {} threads, topology pins {n_threads}",
+        plan.n_threads
+    );
     let nrows = kernel.nrows();
-    let weights = kernel_row_weights(kernel);
+    assert_eq!(plan.nrows, nrows, "plan/kernel row mismatch");
 
-    // Compute-loop assignment.
-    let assignment = assign(schedule, nrows, &weights, n_threads);
+    // Compute-loop assignment comes from the plan.
+    let assignment = &plan.assignment;
     // Initialization (first-touch) assignment: default static.
-    let init_assignment = assign(Schedule::Static { chunk: None }, nrows, &weights, n_threads);
+    let init_assignment = assign(Schedule::Static { chunk: None }, nrows, &plan.weights, n_threads);
 
     // Build page placement.
     let mut placement = PlacementMap::new(machine.page_bytes);

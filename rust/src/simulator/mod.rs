@@ -20,7 +20,7 @@ pub mod tlb;
 pub mod topology;
 
 pub use engine::{
-    pin_threads, simulate_microbench, simulate_spmv, simulate_stream_triad, Placement,
-    SimOptions, SimResult,
+    pin_threads, simulate_microbench, simulate_spmv, simulate_spmv_plan, simulate_stream_triad,
+    Placement, SimOptions, SimResult,
 };
 pub use topology::MachineSpec;

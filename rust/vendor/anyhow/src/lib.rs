@@ -1,0 +1,198 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! The real crate is unavailable in this offline build environment, so
+//! this shim implements the subset of the API the workspace uses:
+//!
+//! - [`Error`]: a message-chain error type. `{}` prints the outermost
+//!   message, `{:#}` prints the whole chain joined by `": "` (matching
+//!   anyhow's alternate formatting).
+//! - [`Result<T>`] with the `E = Error` default parameter.
+//! - The [`Context`] extension trait (`context` / `with_context`) on
+//!   both `Result` and `Option`.
+//! - The [`anyhow!`], [`bail!`] and [`ensure!`] macros.
+//! - A blanket `From<E: std::error::Error>` so `?` converts library
+//!   errors, preserving their `source()` chain.
+
+use std::fmt::{self, Debug, Display};
+
+/// `Result` with [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A chain of error messages, outermost first.
+pub struct Error {
+    msgs: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from a single displayable message.
+    pub fn msg<M: Display>(m: M) -> Self {
+        Error { msgs: vec![m.to_string()] }
+    }
+
+    fn push_context(mut self, c: String) -> Self {
+        self.msgs.insert(0, c);
+        self
+    }
+
+    /// The messages of the chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.msgs.iter().map(|s| s.as_str())
+    }
+
+    /// The innermost (root) message.
+    pub fn root_cause(&self) -> &str {
+        self.msgs.last().map(|s| s.as_str()).unwrap_or("")
+    }
+}
+
+impl Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.msgs.join(": "))
+        } else {
+            write!(f, "{}", self.msgs.first().map(String::as_str).unwrap_or(""))
+        }
+    }
+}
+
+impl Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msgs.first().map(String::as_str).unwrap_or(""))?;
+        if self.msgs.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for m in &self.msgs[1..] {
+                write!(f, "\n    {m}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// Note: `Error` deliberately does NOT implement `std::error::Error`, so
+// this blanket impl does not overlap with the reflexive `From<T> for T`.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        let mut msgs = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            msgs.push(s.to_string());
+            src = s.source();
+        }
+        Error { msgs }
+    }
+}
+
+/// Extension trait attaching context to errors (and to `None`).
+pub trait Context<T>: Sized {
+    fn context<C: Display>(self, c: C) -> Result<T, Error>;
+    fn with_context<C: Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: Into<Error>> Context<T> for Result<T, E> {
+    fn context<C: Display>(self, c: C) -> Result<T, Error> {
+        self.map_err(|e| e.into().push_context(c.to_string()))
+    }
+
+    fn with_context<C: Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| e.into().push_context(f().to_string()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: Display>(self, c: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+
+    fn with_context<C: Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or any displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::anyhow!(concat!("condition failed: ", stringify!($cond))));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse_ctx(s: &str) -> Result<u32> {
+        let v: u32 = s.parse().context("parsing a number")?;
+        Ok(v)
+    }
+
+    #[test]
+    fn context_and_alternate_format() {
+        let e = parse_ctx("nope").unwrap_err();
+        assert_eq!(format!("{e}"), "parsing a number");
+        let full = format!("{e:#}");
+        assert!(full.starts_with("parsing a number: "), "{full}");
+    }
+
+    #[test]
+    fn option_context() {
+        let x: Option<u32> = None;
+        let e = x.context("missing value").unwrap_err();
+        assert_eq!(format!("{e:#}"), "missing value");
+    }
+
+    #[test]
+    fn macros_work() {
+        fn f(flag: bool) -> Result<u32> {
+            ensure!(flag, "flag was {}", flag);
+            ensure!(flag);
+            if !flag {
+                bail!("unreachable");
+            }
+            Err(anyhow!("value {}", 42))
+        }
+        let e = f(true).unwrap_err();
+        assert_eq!(format!("{e}"), "value 42");
+        let e = f(false).unwrap_err();
+        assert_eq!(format!("{e}"), "flag was false");
+        let from_string = anyhow!(String::from("boxed message"));
+        assert_eq!(format!("{from_string}"), "boxed message");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<String> {
+            let s = std::fs::read_to_string("/definitely/not/a/file")?;
+            Ok(s)
+        }
+        assert!(f().is_err());
+    }
+}
