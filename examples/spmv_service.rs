@@ -16,6 +16,7 @@ use spmvperf::coordinator::{
 use spmvperf::gen::{holstein_hubbard, HolsteinHubbardParams};
 use spmvperf::matrix::{Crs, EllMatrix};
 use spmvperf::runtime::{default_artifacts_dir, Runtime};
+use spmvperf::tune::{SpmvContext, TuningPolicy};
 use spmvperf::util::report::{f, Table};
 use spmvperf::util::rng::Rng;
 
@@ -33,6 +34,7 @@ fn main() -> anyhow::Result<()> {
     eprintln!("starting service: dim {n}, backend {backend}, window {window_us}us");
 
     let ell_worker = ell.clone();
+    let h_worker = h.clone();
     let svc = Service::start(
         ServiceConfig { batch_window: Duration::from_micros(window_us) },
         n,
@@ -42,9 +44,25 @@ fn main() -> anyhow::Result<()> {
                 let bound = rt.bind(&ell_worker, rt.load("spmv_b8_d24_n540.hlo.txt")?)?;
                 Ok(Box::new(PjrtExecutor { bound }) as Box<dyn BatchExecutor>)
             } else {
-                // Engine-backed parallel fallback (capped at 4 threads:
-                // SpMV saturates memory bandwidth before core count).
-                Ok(Box::new(NativeExecutor::parallel(ell_worker, 8, 4)) as Box<dyn BatchExecutor>)
+                // Auto-tuned native fallback: the tuning layer picks the
+                // (scheme, C, σ, schedule) co-design for this matrix and
+                // each coalesced batch runs as one fused engine dispatch.
+                // Basis caveat: this executor interprets requests in the
+                // ORIGINAL basis, while the PJRT artifact uses its ELL
+                // permuted basis — so the printed checksum is NOT
+                // comparable across the two backends for the same seed;
+                // it only guards against regressions within one backend.
+                let ctx = SpmvContext::builder(&h_worker)
+                    .policy(TuningPolicy::Heuristic)
+                    .threads(4)
+                    .quick(true)
+                    .build()?;
+                eprintln!(
+                    "worker: tuned native fallback -> {} under {}",
+                    ctx.scheme().name(),
+                    ctx.schedule().name()
+                );
+                Ok(Box::new(NativeExecutor::from_context(ctx, 8)) as Box<dyn BatchExecutor>)
             }
         },
     )?;

@@ -8,20 +8,20 @@
 
 use std::fmt::Write as _;
 
-use spmvperf::engine::{Engine, SpmvPlan};
 use spmvperf::gen::{self, HolsteinHubbardParams};
-use spmvperf::kernels::SpmvKernel;
-use spmvperf::matrix::Scheme;
+use spmvperf::matrix::{Crs, Scheme};
 use spmvperf::sched::Schedule;
-use spmvperf::util::bench::default_bench;
+use spmvperf::tune::{SpmvContext, TuningPolicy};
+use spmvperf::util::bench::{default_bench, quick_mode, write_bench_json};
 use spmvperf::util::report::{f, Table};
 use spmvperf::util::rng::Rng;
 
 fn main() {
-    let quick = std::env::var("SPMVPERF_BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
+    let quick = quick_mode();
     let params = if quick { HolsteinHubbardParams::tiny() } else { HolsteinHubbardParams::small() };
     eprintln!("generating HH matrix (N = {}) ...", params.dimension());
     let h = gen::holstein_hubbard(&params);
+    let crs = Crs::from_coo(&h);
     let mut rng = Rng::new(11);
     let mut x = vec![0.0; h.nrows];
     rng.fill_f64(&mut x, -1.0, 1.0);
@@ -29,28 +29,29 @@ fn main() {
     let thread_counts: [usize; 3] = [1, 2, 4];
 
     let mut t = Table::new(
-        "Fig 6 (host) — SpMV through the plan/execute engine",
+        "Fig 6 (host) — SpMV through tuned SpmvContexts",
         &["scheme", "threads", "MFlop/s", "ns/nnz", "speedup vs serial CRS"],
     );
     let mut entries: Vec<String> = Vec::new();
     let mut serial_crs = 0.0f64;
     let mut crs4 = 0.0f64;
     for scheme in Scheme::all_extended(1000, 2, 32, 256) {
-        let kernel = SpmvKernel::build(&h, scheme);
-        let padding = match &kernel {
-            SpmvKernel::Sell(m) => m.padding_overhead(),
-            _ => 0.0,
-        };
-        let mut ws = kernel.workspace(&x);
+        let base = SpmvContext::builder_from_crs(&crs)
+            .policy(TuningPolicy::Fixed(scheme, Schedule::Static { chunk: None }))
+            .threads(1)
+            .build()
+            .expect("fixed-policy context");
+        let padding = base.report().padding_overhead;
+        let mut ws = base.kernel().workspace(&x);
         for &nt in &thread_counts {
-            let engine = Engine::new(nt);
-            let plan = SpmvPlan::new(&kernel, Schedule::Static { chunk: None }, nt);
+            let ctx = base.replanned(Schedule::Static { chunk: None }, nt);
+            let nnz = ctx.kernel().nnz();
             let r = b.run(
                 &format!("{} x{nt}", scheme.name()),
-                kernel.nnz() as u64,
-                2 * kernel.nnz() as u64,
+                nnz as u64,
+                2 * nnz as u64,
                 || {
-                    plan.execute_permuted(&engine, &kernel, &ws.xp, &mut ws.yp);
+                    ctx.spmv_permuted(&ws.xp, &mut ws.yp);
                     ws.yp[0]
                 },
             );
@@ -104,12 +105,5 @@ fn main() {
     let _ = writeln!(json, "{}", entries.join(",\n"));
     let _ = writeln!(json, "  ]");
     let _ = writeln!(json, "}}");
-    let path = "results/BENCH_fig6_schemes.json";
-    if let Err(e) = std::fs::create_dir_all("results")
-        .and_then(|_| std::fs::write(path, json.as_bytes()))
-    {
-        eprintln!("could not write {path}: {e}");
-    } else {
-        eprintln!("wrote {path}");
-    }
+    write_bench_json("BENCH_fig6_schemes.json", &json);
 }

@@ -4,44 +4,46 @@
 //! SpMV runs through the plan/execute engine: serial and 4-thread
 //! partitioned execution of the same plans.
 
-use spmvperf::engine::{Engine, SpmvPlan};
 use spmvperf::gen::{self, HolsteinHubbardParams};
-use spmvperf::kernels::{table1_ops, MicroBuffers, SpmvKernel};
-use spmvperf::matrix::Scheme;
+use spmvperf::kernels::{table1_ops, MicroBuffers};
+use spmvperf::matrix::{Crs, Scheme};
 use spmvperf::sched::Schedule;
-use spmvperf::util::bench::default_bench;
+use spmvperf::tune::{SpmvContext, TuningPolicy};
+use spmvperf::util::bench::{default_bench, quick_mode};
 use spmvperf::util::report::{f, Table};
 use spmvperf::util::rng::Rng;
 
 fn main() {
-    let quick = std::env::var("SPMVPERF_BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
+    let quick = quick_mode();
     let params = if quick { HolsteinHubbardParams::tiny() } else { HolsteinHubbardParams::small() };
     eprintln!("generating HH matrix (N = {}) ...", params.dimension());
     let h = gen::holstein_hubbard(&params);
+    let crs = Crs::from_coo(&h);
     let mut rng = Rng::new(9);
     let mut x = vec![0.0; h.nrows];
     rng.fill_f64(&mut x, -1.0, 1.0);
     let b = default_bench();
 
-    let engine1 = Engine::new(1);
-    let engine4 = Engine::new(4);
     let mut t = Table::new(
-        "native SpMV kernels via plan/execute (host CPU)",
+        "native SpMV kernels via tuned contexts (host CPU)",
         &["scheme", "serial MFlop/s", "4T MFlop/s", "speedup", "ns/nnz (4T)"],
     );
     for scheme in Scheme::all_extended(1000, 2, 32, 256) {
-        let kernel = SpmvKernel::build(&h, scheme);
-        let mut ws = kernel.workspace(&x);
-        let nnz = kernel.nnz() as u64;
-        let plan1 = SpmvPlan::new(&kernel, Schedule::Static { chunk: None }, 1);
+        let ctx1 = SpmvContext::builder_from_crs(&crs)
+            .policy(TuningPolicy::Fixed(scheme, Schedule::Static { chunk: None }))
+            .threads(1)
+            .build()
+            .expect("fixed-policy context");
+        let ctx4 = ctx1.replanned(Schedule::Static { chunk: None }, 4);
+        let mut ws = ctx1.kernel().workspace(&x);
+        let nnz = ctx1.kernel().nnz() as u64;
         let r1 = b.run(&format!("{} serial", scheme.name()), nnz, 2 * nnz, || {
-            plan1.execute_permuted(&engine1, &kernel, &ws.xp, &mut ws.yp);
+            ctx1.spmv_permuted(&ws.xp, &mut ws.yp);
             ws.yp[0]
         });
         println!("{}", r1.summary());
-        let plan4 = SpmvPlan::new(&kernel, Schedule::Static { chunk: None }, 4);
         let r4 = b.run(&format!("{} x4", scheme.name()), nnz, 2 * nnz, || {
-            plan4.execute_permuted(&engine4, &kernel, &ws.xp, &mut ws.yp);
+            ctx4.spmv_permuted(&ws.xp, &mut ws.yp);
             ws.yp[0]
         });
         println!("{}", r4.summary());

@@ -1,0 +1,182 @@
+//! Tuner trajectory bench: the auto-picked (scheme, C, σ, schedule)
+//! versus the fixed `sellcs:32:256` default, plus the fused-batch
+//! dispatch versus per-vector execution — evidence that the tuning
+//! layer pays off matrix by matrix.
+//!
+//! Emits `results/BENCH_tune.json`. Scale: `SPMVPERF_BENCH_QUICK=1`
+//! for a smoke pass.
+
+use std::fmt::Write as _;
+
+use spmvperf::gen::{self, HolsteinHubbardParams};
+use spmvperf::matrix::{Coo, Crs, Scheme};
+use spmvperf::sched::Schedule;
+use spmvperf::tune::{sell_params, SpmvContext, TuningPolicy};
+use spmvperf::util::bench::{default_bench, quick_mode, write_bench_json};
+use spmvperf::util::report::{f, Table};
+use spmvperf::util::rng::Rng;
+
+const BATCH: usize = 8;
+
+fn main() {
+    let quick = quick_mode();
+    let b = default_bench();
+    let threads = 4usize;
+
+    let hh_params =
+        if quick { HolsteinHubbardParams::tiny() } else { HolsteinHubbardParams::small() };
+    let band_n = if quick { 2_000 } else { 60_000 };
+    let mut band_rng = Rng::new(21);
+    let matrices: Vec<(&str, Coo)> = vec![
+        ("holstein-hubbard", gen::holstein_hubbard(&hh_params)),
+        ("random-band", gen::random_band(band_n, 12, band_n / 8, &mut band_rng)),
+    ];
+
+    let policies: Vec<(&str, TuningPolicy)> = vec![
+        (
+            "fixed-sellcs-32-256",
+            TuningPolicy::Fixed(
+                Scheme::SellCs { c: 32, sigma: 256 },
+                Schedule::Static { chunk: None },
+            ),
+        ),
+        ("heuristic", TuningPolicy::Heuristic),
+        ("measured", TuningPolicy::Measured),
+    ];
+
+    let mut entries: Vec<String> = Vec::new();
+    let mut summaries: Vec<String> = Vec::new();
+    for (mname, coo) in &matrices {
+        eprintln!("matrix {mname}: N={} nnz={}", coo.nrows, coo.nnz());
+        let crs = Crs::from_coo(coo);
+        let n = crs.nrows;
+        let mut rng = Rng::new(13);
+        let mut x = vec![0.0; n];
+        rng.fill_f64(&mut x, -1.0, 1.0);
+        let xs: Vec<Vec<f64>> = (0..BATCH)
+            .map(|_| {
+                let mut v = vec![0.0; n];
+                rng.fill_f64(&mut v, -1.0, 1.0);
+                v
+            })
+            .collect();
+
+        let mut t = Table::new(
+            &format!("tuning policies on {mname} ({threads} threads)"),
+            &["policy", "picked", "schedule", "MFlop/s", "ns/nnz", "padding", "batch amort."],
+        );
+        let mut fixed_mflops = 0.0f64;
+        let mut heuristic_mflops = 0.0f64;
+        for (pname, policy) in &policies {
+            let ctx = SpmvContext::builder_from_crs(&crs)
+                .policy(*policy)
+                .threads(threads)
+                .quick(quick)
+                .build()
+                .expect("tuning context");
+            let nnz = ctx.kernel().nnz() as u64;
+            let mut ws = ctx.kernel().workspace(&x);
+            let r = b.run(&format!("{mname}/{pname}"), nnz, 2 * nnz, || {
+                ctx.spmv_permuted(&ws.xp, &mut ws.yp);
+                ws.yp[0]
+            });
+            println!("{}", r.summary());
+            // Fused single-dispatch batch vs the pre-fusion coordinator
+            // loop (one spmv + one output clone per vector, as the old
+            // NativeExecutor::run_batch did) — both return owned batch
+            // results, so the metric compares the two service paths.
+            let r_fused = b.run(
+                &format!("{mname}/{pname} batch{BATCH} fused"),
+                BATCH as u64 * nnz,
+                2 * BATCH as u64 * nnz,
+                || {
+                    let ys = ctx.spmv_batch(&xs);
+                    ys[0][0]
+                },
+            );
+            let r_pervec = b.run(
+                &format!("{mname}/{pname} batch{BATCH} per-vec"),
+                BATCH as u64 * nnz,
+                2 * BATCH as u64 * nnz,
+                || {
+                    let mut ys = Vec::with_capacity(xs.len());
+                    let mut y = vec![0.0; n];
+                    for xv in &xs {
+                        ctx.spmv(xv, &mut y);
+                        ys.push(y.clone());
+                    }
+                    ys[0][0]
+                },
+            );
+            let amortization = r_pervec.median_secs() / r_fused.median_secs();
+            let mflops = r.mflops();
+            if *pname == "fixed-sellcs-32-256" {
+                fixed_mflops = mflops;
+            }
+            if *pname == "heuristic" {
+                heuristic_mflops = mflops;
+            }
+            let (c, sigma) = sell_params(ctx.scheme());
+            t.row(vec![
+                pname.to_string(),
+                ctx.scheme().name(),
+                ctx.schedule().name(),
+                f(mflops),
+                f(r.ns_per_item()),
+                f(ctx.report().padding_overhead),
+                f(amortization),
+            ]);
+            entries.push(format!(
+                concat!(
+                    "    {{\"matrix\": \"{}\", \"n\": {}, \"nnz\": {}, \"policy\": \"{}\", ",
+                    "\"scheme\": \"{}\", \"spec\": \"{}\", \"c\": {}, \"sigma\": {}, ",
+                    "\"schedule\": \"{}\", \"threads\": {}, \"mflops\": {:.3}, ",
+                    "\"ns_per_nnz\": {:.4}, \"padding_overhead\": {:.6}, ",
+                    "\"batch{}_fused_mflops\": {:.3}, \"batch_amortization\": {:.4}}}"
+                ),
+                mname,
+                n,
+                ctx.kernel().nnz(),
+                pname,
+                ctx.scheme().name(),
+                ctx.scheme().spec(),
+                c,
+                sigma,
+                ctx.schedule().name(),
+                threads,
+                mflops,
+                r.ns_per_item(),
+                ctx.report().padding_overhead,
+                BATCH,
+                r_fused.mflops(),
+                amortization,
+            ));
+        }
+        t.print();
+        let paying_off = heuristic_mflops >= fixed_mflops;
+        println!(
+            "{mname}: heuristic {heuristic_mflops:.1} vs fixed sellcs:32:256 {fixed_mflops:.1} MFlop/s -> tuner {}",
+            if paying_off { "pays off" } else { "trails the default here" }
+        );
+        summaries.push(format!(
+            concat!(
+                "    {{\"matrix\": \"{}\", \"fixed_mflops\": {:.3}, ",
+                "\"heuristic_mflops\": {:.3}, \"heuristic_ge_fixed\": {}}}"
+            ),
+            mname, fixed_mflops, heuristic_mflops, paying_off
+        ));
+    }
+
+    let mut json = String::new();
+    let _ = writeln!(json, "{{");
+    let _ = writeln!(json, "  \"bench\": \"tune_policies\",");
+    let _ = writeln!(json, "  \"threads\": {threads},");
+    let _ = writeln!(json, "  \"results\": [");
+    let _ = writeln!(json, "{}", entries.join(",\n"));
+    let _ = writeln!(json, "  ],");
+    let _ = writeln!(json, "  \"summary\": [");
+    let _ = writeln!(json, "{}", summaries.join(",\n"));
+    let _ = writeln!(json, "  ]");
+    let _ = writeln!(json, "}}");
+    write_bench_json("BENCH_tune.json", &json);
+}

@@ -3,8 +3,10 @@
 //! vectors) arrive on a queue; a worker thread coalesces them into
 //! batches (up to the artifact's batch size, within a latency window)
 //! and dispatches them to an executor — either the PJRT-compiled
-//! JAX/Pallas artifact or a native fallback. Python is never on this
-//! path.
+//! JAX/Pallas artifact or the native [`NativeExecutor`], which is
+//! scheme-generic over a tuned [`crate::tune::SpmvContext`] and runs
+//! each coalesced batch as a single fused engine dispatch. Python is
+//! never on this path.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -14,83 +16,101 @@ use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
-use crate::engine::Engine;
-use crate::matrix::EllMatrix;
-use crate::sched::{assign, Schedule};
+use crate::matrix::{Coo, EllMatrix, Scheme};
+use crate::sched::Schedule;
+use crate::tune::{SpmvContext, TuningPolicy};
 
 /// Batch executor abstraction: the service is agnostic of what actually
 /// multiplies. Executors are constructed *inside* the worker thread (a
 /// PJRT client is not `Send`).
+///
+/// The working basis is executor-defined and part of each executor's
+/// contract: [`NativeExecutor::from_context`] serves the **original**
+/// basis (the context gathers/scatters internally), while
+/// [`PjrtExecutor`] and the deprecated ELL shims serve the ELL
+/// **permuted** basis of their artifact/matrix. A deployment must pick
+/// one executor per service and submit vectors in that executor's basis.
 pub trait BatchExecutor {
     fn dim(&self) -> usize;
     fn max_batch(&self) -> usize;
-    /// Multiply each input vector (permuted basis).
+    /// Multiply each input vector (in the executor's working basis).
     fn run_batch(&self, xs: &[Vec<f64>]) -> Result<Vec<Vec<f64>>>;
 }
 
-/// Parallel path of the native executor: a long-lived engine plus static
-/// per-thread row partitions over the ELL planes (every padded row costs
-/// the same `d` updates, so uniform weights are exact).
-struct NativePar {
-    engine: Engine,
-    ranges: Vec<Vec<(usize, usize)>>,
-}
-
-/// Native ELL executor (fallback / testing). Serial by default;
-/// [`NativeExecutor::parallel`] routes each SpMV through the execution
-/// engine's partitioned kernel instead.
+/// Native executor (fallback / testing): **scheme-generic** over a tuned
+/// [`SpmvContext`] — any storage scheme, schedule and thread count the
+/// tuning layer can produce is servable. Whole batches run as a single
+/// fused engine dispatch ([`SpmvContext::spmv_batch`]), so the engine's
+/// completion latch is paid once per batch, not once per vector.
 pub struct NativeExecutor {
-    pub ell: EllMatrix,
+    ctx: SpmvContext,
     pub max_batch: usize,
-    par: Option<NativePar>,
 }
 
 impl NativeExecutor {
-    /// Single-threaded reference executor.
+    /// Wrap any tuned context as a batch executor — the scheme-generic
+    /// constructor every new consumer should use.
+    pub fn from_context(ctx: SpmvContext, max_batch: usize) -> Self {
+        NativeExecutor { ctx, max_batch: max_batch.max(1) }
+    }
+
+    /// The tuned context serving this executor.
+    pub fn context(&self) -> &SpmvContext {
+        &self.ctx
+    }
+
+    /// Rebuild the ELL planes (permuted basis, padding dropped) as a CRS
+    /// context so the legacy constructors keep their contract: requests
+    /// are vectors in the ELL's permuted basis, and per-row accumulation
+    /// order matches [`EllMatrix::spmv_permuted`] entry for entry (the
+    /// ELL diagonal order is ascending permuted column — `Jds::from_crs`
+    /// sorts each relabeled row — and `Coo::normalize` restores the same
+    /// order here). Two finite-input-invisible caveats: padding slots'
+    /// trailing `+0.0` terms disappear, and explicitly stored `0.0`
+    /// entries are dropped, so `-0.0` signs and NaN/∞ propagation at
+    /// exactly those slots can differ from the old executor.
+    fn ell_context(ell: &EllMatrix, n_threads: usize) -> SpmvContext {
+        let mut coo = Coo::new(ell.n, ell.n);
+        for dd in 0..ell.d {
+            for i in 0..ell.n {
+                let v = ell.val[dd * ell.n + i];
+                if v != 0.0 {
+                    coo.push(i, ell.col[dd * ell.n + i] as usize, v);
+                }
+            }
+        }
+        coo.normalize();
+        SpmvContext::builder(&coo)
+            .policy(TuningPolicy::Fixed(Scheme::Crs, Schedule::Static { chunk: None }))
+            .threads(n_threads)
+            .build()
+            .expect("fixed-policy context construction cannot fail")
+    }
+
+    /// Single-threaded reference executor over an ELL matrix.
+    #[deprecated(note = "use NativeExecutor::from_context with a tuned SpmvContext")]
     pub fn serial(ell: EllMatrix, max_batch: usize) -> Self {
-        NativeExecutor { ell, max_batch, par: None }
+        Self::from_context(Self::ell_context(&ell, 1), max_batch)
     }
 
-    /// Engine-backed executor running each SpMV on `n_threads` threads.
-    /// Output is identical to the serial executor (same per-row
-    /// accumulation order).
+    /// Engine-backed ELL executor on `n_threads` threads. Output is
+    /// identical to the serial executor (same per-row accumulation
+    /// order).
+    #[deprecated(note = "use NativeExecutor::from_context with a tuned SpmvContext")]
     pub fn parallel(ell: EllMatrix, max_batch: usize, n_threads: usize) -> Self {
-        let n_threads = n_threads.max(1);
-        let weights = vec![1.0; ell.n];
-        let a = assign(Schedule::Static { chunk: None }, ell.n, &weights, n_threads);
-        let ranges = (0..n_threads).map(|t| a.ranges_of(t as u16)).collect();
-        NativeExecutor {
-            ell,
-            max_batch,
-            par: Some(NativePar { engine: Engine::new(n_threads), ranges }),
-        }
-    }
-
-    fn spmv(&self, x: &[f64], y: &mut [f64]) {
-        match &self.par {
-            None => self.ell.spmv_permuted(x, y),
-            Some(par) => par.engine.run_chunks(&par.ranges, y, |a, b, out| {
-                self.ell.spmv_rows_permuted(a, b, x, out);
-            }),
-        }
+        Self::from_context(Self::ell_context(&ell, n_threads.max(1)), max_batch)
     }
 }
 
 impl BatchExecutor for NativeExecutor {
     fn dim(&self) -> usize {
-        self.ell.n
+        crate::matrix::SpMv::nrows(&self.ctx)
     }
     fn max_batch(&self) -> usize {
         self.max_batch
     }
     fn run_batch(&self, xs: &[Vec<f64>]) -> Result<Vec<Vec<f64>>> {
-        let mut out = Vec::with_capacity(xs.len());
-        let mut y = vec![0.0; self.ell.n];
-        for x in xs {
-            self.spmv(x, &mut y);
-            out.push(y.clone());
-        }
-        Ok(out)
+        Ok(self.ctx.spmv_batch(xs))
     }
 }
 
@@ -327,6 +347,7 @@ mod tests {
         EllMatrix::from_crs(&Crs::from_coo(&h), None).unwrap()
     }
 
+    #[allow(deprecated)]
     fn start_native(max_batch: usize, window: Duration) -> (Service, EllMatrix) {
         let ell = tiny_ell();
         let dim = ell.n;
@@ -341,6 +362,7 @@ mod tests {
     }
 
     #[test]
+    #[allow(deprecated)]
     fn parallel_executor_matches_serial() {
         let ell = tiny_ell();
         let serial = NativeExecutor::serial(ell.clone(), 8);
@@ -367,6 +389,76 @@ mod tests {
     }
 
     #[test]
+    fn from_context_serves_any_scheme() {
+        // The service layer is no longer ELL-bound: a SELL-C-σ tuned
+        // context (original basis) is just as servable, and its batched
+        // path is bit-identical to per-vector execution.
+        let h = gen::holstein_hubbard(&gen::HolsteinHubbardParams::tiny());
+        let crs = Crs::from_coo(&h);
+        let n = crs.nrows;
+        let ctx = crate::tune::SpmvContext::builder(&h)
+            .policy(TuningPolicy::Fixed(
+                Scheme::SellCs { c: 32, sigma: 256 },
+                Schedule::Static { chunk: None },
+            ))
+            .threads(4)
+            .build()
+            .unwrap();
+        let exec = NativeExecutor::from_context(ctx, 8);
+        assert_eq!(exec.dim(), n);
+        let mut rng = crate::util::rng::Rng::new(11);
+        let xs: Vec<Vec<f64>> = (0..5)
+            .map(|_| {
+                let mut x = vec![0.0; n];
+                rng.fill_f64(&mut x, -1.0, 1.0);
+                x
+            })
+            .collect();
+        let got = exec.run_batch(&xs).unwrap();
+        let mut want = vec![0.0; n];
+        for (x, y) in xs.iter().zip(&got) {
+            crs.spmv(x, &mut want);
+            assert!(
+                crate::util::stats::max_abs_diff(y, &want) < 1e-12,
+                "SELL-backed executor deviates from CRS reference"
+            );
+        }
+    }
+
+    #[test]
+    fn service_over_context_executor() {
+        let h = gen::holstein_hubbard(&gen::HolsteinHubbardParams::tiny());
+        let crs = Crs::from_coo(&h);
+        let n = crs.nrows;
+        let svc = Service::start(
+            ServiceConfig { batch_window: Duration::from_micros(100) },
+            n,
+            move || {
+                let ctx = crate::tune::SpmvContext::builder_from_crs(&crs)
+                    .policy(TuningPolicy::Fixed(
+                        Scheme::SellCs { c: 16, sigma: 128 },
+                        Schedule::Static { chunk: None },
+                    ))
+                    .threads(2)
+                    .build()?;
+                Ok(Box::new(NativeExecutor::from_context(ctx, 8)) as Box<dyn BatchExecutor>)
+            },
+        )
+        .unwrap();
+        let crs2 = Crs::from_coo(&h);
+        let mut rng = crate::util::rng::Rng::new(12);
+        let mut want = vec![0.0; n];
+        for _ in 0..4 {
+            let mut x = vec![0.0; n];
+            rng.fill_f64(&mut x, -1.0, 1.0);
+            let y = svc.submit_wait(x.clone()).unwrap();
+            crs2.spmv(&x, &mut want);
+            assert!(crate::util::stats::max_abs_diff(&y, &want) < 1e-12);
+        }
+    }
+
+    #[test]
+    #[allow(deprecated)]
     fn service_over_parallel_native_executor() {
         let ell = tiny_ell();
         let dim = ell.n;

@@ -147,12 +147,23 @@ pub fn lanczos(op: &dyn LinearOp, n_eigs: usize, cfg: &LanczosConfig) -> Lanczos
     }
 }
 
-/// Lanczos with the hot-loop SpMV routed through the parallel execution
-/// engine: the kernel/plan/engine triple is bound as a [`LinearOp`]
-/// ([`crate::engine::EngineOp`]), so every operator application runs the
-/// partitioned range-restricted kernels on the engine's thread pool.
-/// Results are identical to the serial solver (the engine is
-/// bit-compatible with the serial kernels).
+/// Lanczos with the hot-loop SpMV routed through a tuned
+/// [`crate::tune::SpmvContext`]: every operator application runs the
+/// context's partitioned range-restricted kernels on its engine thread
+/// pool. Results are identical to the serial solver of the tuned scheme
+/// (the engine is bit-compatible with the serial kernels).
+pub fn lanczos_with_context(
+    ctx: &crate::tune::SpmvContext,
+    n_eigs: usize,
+    cfg: &LanczosConfig,
+) -> LanczosResult {
+    lanczos(ctx, n_eigs, cfg)
+}
+
+/// Lanczos over a hand-assembled kernel/plan/engine triple.
+#[deprecated(
+    note = "build a tune::SpmvContext and call lanczos_with_context — hand-assembled plans bypass the tuning layer"
+)]
 pub fn lanczos_with_engine(
     kernel: &crate::kernels::SpmvKernel,
     engine: &crate::engine::Engine,
@@ -272,27 +283,51 @@ mod tests {
     }
 
     #[test]
-    fn engine_backed_lanczos_matches_serial() {
-        use crate::engine::{Engine, SpmvPlan};
-        use crate::kernels::SpmvKernel;
+    fn context_backed_lanczos_matches_serial() {
         use crate::matrix::Scheme;
         use crate::sched::Schedule;
+        use crate::tune::{SpmvContext, TuningPolicy};
         let h = gen::holstein_hubbard(&gen::HolsteinHubbardParams::tiny());
         let crs = Crs::from_coo(&h);
         let serial = lanczos(&crs, 1, &LanczosConfig::default());
-        let engine = Engine::new(4);
         for scheme in [Scheme::Crs, Scheme::SellCs { c: 32, sigma: 256 }] {
-            let kernel = SpmvKernel::build_from_crs(&crs, scheme);
-            let plan = SpmvPlan::new(&kernel, Schedule::Static { chunk: None }, 4);
-            let r = lanczos_with_engine(&kernel, &engine, &plan, 1, &LanczosConfig::default());
+            let ctx = SpmvContext::builder_from_crs(&crs)
+                .policy(TuningPolicy::Fixed(scheme, Schedule::Static { chunk: None }))
+                .threads(4)
+                .build()
+                .unwrap();
+            let r = lanczos_with_context(&ctx, 1, &LanczosConfig::default());
             assert!(r.converged);
             assert!(
                 (r.eigenvalues[0] - serial.eigenvalues[0]).abs() < 1e-10,
-                "{scheme}: engine {} vs serial {}",
+                "{scheme}: context {} vs serial {}",
                 r.eigenvalues[0],
                 serial.eigenvalues[0]
             );
         }
+    }
+
+    #[test]
+    fn heuristic_tuned_lanczos_matches_serial() {
+        use crate::tune::{SpmvContext, TuningPolicy};
+        let h = gen::holstein_hubbard(&gen::HolsteinHubbardParams::tiny());
+        let crs = Crs::from_coo(&h);
+        let serial = lanczos(&crs, 1, &LanczosConfig::default());
+        let ctx = SpmvContext::builder(&h)
+            .policy(TuningPolicy::Heuristic)
+            .threads(2)
+            .quick(true)
+            .build()
+            .unwrap();
+        let r = lanczos_with_context(&ctx, 1, &LanczosConfig::default());
+        assert!(r.converged);
+        assert!(
+            (r.eigenvalues[0] - serial.eigenvalues[0]).abs() < 1e-10,
+            "tuned ({}) {} vs serial {}",
+            ctx.scheme(),
+            r.eigenvalues[0],
+            serial.eigenvalues[0]
+        );
     }
 
     #[test]

@@ -182,9 +182,10 @@ impl Engine {
 impl Engine {
     /// Partitioned dispatch over one output vector: for every chunk
     /// `(a, b)` of partition `t`, calls `f(a, b, out)` on thread `t`
-    /// with `out = &mut y[a..b]`. This is the single place the
-    /// disjoint-write raw-pointer carving lives; [`SpmvPlan`] and the
-    /// coordinator's parallel executor both dispatch through it.
+    /// with `out = &mut y[a..b]`. [`SpmvPlan`] and the coordinator's
+    /// executors dispatch through this (or its batched sibling
+    /// [`Engine::run_chunks_batch`]); both funnel into the shared
+    /// [`Engine::run_chunks_ptrs`] carving.
     ///
     /// Requirements (checked in debug builds): `partitions.len() ==
     /// n_threads()`, every chunk in bounds, and chunks disjoint across
@@ -193,8 +194,26 @@ impl Engine {
     where
         F: Fn(usize, usize, &mut [f64]) + Sync,
     {
-        assert_eq!(partitions.len(), self.n_threads());
         let n = y.len();
+        let bases = [SendPtr(y.as_mut_ptr())];
+        self.run_chunks_ptrs(partitions, n, &bases, |_bi, a, b, out| f(a, b, out));
+    }
+
+    /// The **single place** the disjoint-write raw-pointer carving
+    /// lives: validates the partition set against length `n` (bounds
+    /// always; chunk disjointness in debug builds), then runs
+    /// `f(bi, a, b, out)` on the owning thread for every chunk `(a, b)`
+    /// × output base `bi`.
+    fn run_chunks_ptrs<F>(
+        &self,
+        partitions: &[Vec<(usize, usize)>],
+        n: usize,
+        bases: &[SendPtr],
+        f: F,
+    ) where
+        F: Fn(usize, usize, usize, &mut [f64]) + Sync,
+    {
+        assert_eq!(partitions.len(), self.n_threads());
         for part in partitions {
             for &(a, b) in part {
                 assert!(a <= b && b <= n, "chunk ({a}, {b}) out of bounds for len {n}");
@@ -212,18 +231,43 @@ impl Engine {
                 }
             }
         }
-        let base = SendPtr(y.as_mut_ptr());
-        let base = &base;
-        let parts = partitions;
         self.run(|t| {
-            for &(a, b) in &parts[t] {
-                // Safety: chunks are disjoint across threads (caller
-                // contract, validated in debug builds) and in bounds
-                // (checked above), so each sub-slice has one owner.
-                let out = unsafe { std::slice::from_raw_parts_mut(base.0.add(a), b - a) };
-                f(a, b, out);
+            for &(a, b) in &partitions[t] {
+                for (bi, base) in bases.iter().enumerate() {
+                    // Safety: chunks are disjoint across threads (caller
+                    // contract, validated in debug builds) and in bounds
+                    // (checked above), and every base points at its own
+                    // allocation — each sub-slice has exactly one owner.
+                    let out = unsafe { std::slice::from_raw_parts_mut(base.0.add(a), b - a) };
+                    f(bi, a, b, out);
+                }
             }
         });
+    }
+}
+
+impl Engine {
+    /// Batched partitioned dispatch: like [`Engine::run_chunks`] but over
+    /// `ys.len()` output vectors in **one** dispatch — the completion
+    /// latch is paid once per batch, not once per vector. For every chunk
+    /// `(a, b)` of partition `t` and every batch index `bi`, calls
+    /// `f(bi, a, b, out)` on thread `t` with `out = &mut ys[bi][a..b]`.
+    ///
+    /// Requirements mirror `run_chunks` (all vectors share one length,
+    /// chunks in bounds and disjoint across the partition set).
+    pub fn run_chunks_batch<F>(&self, partitions: &[Vec<(usize, usize)>], ys: &mut [Vec<f64>], f: F)
+    where
+        F: Fn(usize, usize, usize, &mut [f64]) + Sync,
+    {
+        if ys.is_empty() {
+            return;
+        }
+        let n = ys[0].len();
+        for y in ys.iter() {
+            assert_eq!(y.len(), n, "batch outputs must share one length");
+        }
+        let bases: Vec<SendPtr> = ys.iter_mut().map(|y| SendPtr(y.as_mut_ptr())).collect();
+        self.run_chunks_ptrs(partitions, n, &bases, f);
     }
 }
 
@@ -335,6 +379,71 @@ impl SpmvPlan {
         kernel.permute_into(x, xp);
         self.execute_permuted(engine, kernel, xp, yp);
         kernel.unpermute_into(yp, y);
+    }
+
+    /// Batched permuted-basis parallel SpMV: every vector of the batch is
+    /// computed in a **single** engine dispatch
+    /// ([`Engine::run_chunks_batch`]), amortizing the completion latch
+    /// over the batch instead of paying it per vector. Each `yps[i]` is
+    /// bit-identical to a per-vector [`SpmvPlan::execute_permuted`] call
+    /// (same chunks, same range-restricted kernels).
+    pub fn execute_batch_permuted(
+        &self,
+        engine: &Engine,
+        kernel: &SpmvKernel,
+        xps: &[Vec<f64>],
+        yps: &mut [Vec<f64>],
+    ) {
+        self.check(engine, kernel);
+        assert_eq!(xps.len(), yps.len());
+        for (xp, yp) in xps.iter().zip(yps.iter()) {
+            assert_eq!(xp.len(), self.nrows);
+            assert_eq!(yp.len(), self.nrows);
+        }
+        engine.run_chunks_batch(&self.ranges, yps, |bi, a, b, out| {
+            kernel.spmv_rows_permuted(a, b, &xps[bi], out);
+        });
+    }
+
+    /// Original-basis batched SpMV: gathers every input into the permuted
+    /// basis, runs one fused engine dispatch, scatters every result back.
+    /// Identity-permutation kernels (CRS) read the callers' inputs
+    /// directly and skip the gather/scatter copies entirely; permuted
+    /// kernels scatter back into the already-consumed gather buffers, so
+    /// at most two batch-sized buffer sets are ever allocated.
+    pub fn execute_batch(
+        &self,
+        engine: &Engine,
+        kernel: &SpmvKernel,
+        xs: &[Vec<f64>],
+    ) -> Vec<Vec<f64>> {
+        if xs.is_empty() {
+            return Vec::new();
+        }
+        for x in xs {
+            assert_eq!(x.len(), self.nrows);
+        }
+        let mut yps: Vec<Vec<f64>> = xs.iter().map(|_| vec![0.0; self.nrows]).collect();
+        if kernel.perm().is_none() {
+            self.check(engine, kernel);
+            engine.run_chunks_batch(&self.ranges, &mut yps, |bi, a, b, out| {
+                kernel.spmv_rows_permuted(a, b, &xs[bi], out);
+            });
+            return yps;
+        }
+        let mut xps: Vec<Vec<f64>> = xs
+            .iter()
+            .map(|x| {
+                let mut xp = vec![0.0; self.nrows];
+                kernel.permute_into(x, &mut xp);
+                xp
+            })
+            .collect();
+        self.execute_batch_permuted(engine, kernel, &xps, &mut yps);
+        for (xp, yp) in xps.iter_mut().zip(&yps) {
+            kernel.unpermute_into(yp, xp);
+        }
+        xps
     }
 }
 
@@ -523,6 +632,51 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn batched_execute_identical_to_per_vector() {
+        let mut rng = Rng::new(74);
+        let n = 137;
+        let coo = random_coo(&mut rng, n, n * 6);
+        let xs: Vec<Vec<f64>> = (0..5)
+            .map(|_| {
+                let mut x = vec![0.0; n];
+                rng.fill_f64(&mut x, -1.0, 1.0);
+                x
+            })
+            .collect();
+        for n_threads in [1usize, 3] {
+            let engine = Engine::new(n_threads);
+            for scheme in Scheme::all_extended(16, 3, 8, 32) {
+                let kernel = SpmvKernel::build(&coo, scheme);
+                for schedule in schedules() {
+                    let plan = SpmvPlan::new(&kernel, schedule, n_threads);
+                    let batched = plan.execute_batch(&engine, &kernel, &xs);
+                    assert_eq!(batched.len(), xs.len());
+                    for (x, yb) in xs.iter().zip(&batched) {
+                        let mut y = vec![0.0; n];
+                        plan.execute(&engine, &kernel, x, &mut y);
+                        assert_eq!(
+                            max_abs_diff(&y, yb),
+                            0.0,
+                            "{scheme} × {} × {n_threads}T: batch deviates from per-vector",
+                            schedule.name()
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn empty_batch_is_a_noop() {
+        let mut rng = Rng::new(75);
+        let coo = random_coo(&mut rng, 40, 200);
+        let kernel = SpmvKernel::build(&coo, Scheme::Crs);
+        let engine = Engine::new(2);
+        let plan = SpmvPlan::new(&kernel, Schedule::Static { chunk: None }, 2);
+        assert!(plan.execute_batch(&engine, &kernel, &[]).is_empty());
     }
 
     #[test]

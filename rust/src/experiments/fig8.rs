@@ -9,23 +9,22 @@
 //! partition fits the aggregated L3, and NBJDS overtakes CRS at large
 //! thread counts (short inner loops hurt the in-order Itanium2).
 
-use crate::engine::SpmvPlan;
-use crate::kernels::SpmvKernel;
 use crate::matrix::{Crs, Scheme};
 use crate::sched::Schedule;
 use crate::simulator::{simulate_spmv_plan, MachineSpec, Placement, SimOptions};
+use crate::tune::SpmvContext;
 use crate::util::report::{f, Table};
 
-use super::ExpOptions;
+use super::{fixed_ctx, ExpOptions};
 
-/// Simulate through the shared plan/execute API: the same [`SpmvPlan`]
-/// the host engine would run is handed to the machine model.
-fn mflops(m: &MachineSpec, k: &SpmvKernel, tps: usize, sockets: usize) -> f64 {
-    let plan = SpmvPlan::new(k, Schedule::Static { chunk: None }, tps * sockets);
+/// Simulate through the shared plan/execute API: the same plan the
+/// context's host engine would run is handed to the machine model.
+fn mflops(m: &MachineSpec, ctx: &SpmvContext, tps: usize, sockets: usize) -> f64 {
+    let c = ctx.replanned(Schedule::Static { chunk: None }, tps * sockets);
     simulate_spmv_plan(
         m,
-        k,
-        &plan,
+        c.kernel(),
+        c.plan(),
         tps,
         sockets,
         Placement::FirstTouchStatic,
@@ -38,8 +37,8 @@ pub fn run(opts: &ExpOptions) -> Vec<Table> {
     let coo = opts.test_matrix();
     let crs = Crs::from_coo(&coo);
     let block = if opts.quick { 64 } else { 1000 };
-    let k_crs = SpmvKernel::build_from_crs(&crs, Scheme::Crs);
-    let k_nb = SpmvKernel::build_from_crs(&crs, Scheme::NbJds { block });
+    let k_crs = fixed_ctx(&crs, Scheme::Crs);
+    let k_nb = fixed_ctx(&crs, Scheme::NbJds { block });
     let mut tables = Vec::new();
 
     // --- x86 machines: threads/socket × sockets ---
@@ -117,7 +116,7 @@ mod tests {
 
     #[test]
     fn nehalem_roughly_twice_shanghai_full_node() {
-        let k = SpmvKernel::build_from_crs(medium_crs(), Scheme::Crs);
+        let k = fixed_ctx(medium_crs(), Scheme::Crs);
         let neh = mflops(&MachineSpec::nehalem(), &k, 4, 2);
         let sha = mflops(&MachineSpec::shanghai(), &k, 4, 2);
         let ratio = neh / sha;
@@ -129,7 +128,7 @@ mod tests {
 
     #[test]
     fn woodcrest_second_thread_gains_nothing() {
-        let k = SpmvKernel::build_from_crs(medium_crs(), Scheme::Crs);
+        let k = fixed_ctx(medium_crs(), Scheme::Crs);
         let m = MachineSpec::woodcrest();
         let one = mflops(&m, &k, 1, 1);
         let two = mflops(&m, &k, 2, 1);
@@ -141,7 +140,7 @@ mod tests {
 
     #[test]
     fn woodcrest_second_socket_gains_about_half() {
-        let k = SpmvKernel::build_from_crs(medium_crs(), Scheme::Crs);
+        let k = fixed_ctx(medium_crs(), Scheme::Crs);
         let m = MachineSpec::woodcrest();
         let one = mflops(&m, &k, 2, 1);
         let two = mflops(&m, &k, 2, 2);
@@ -157,8 +156,8 @@ mod tests {
         // With enough threads the matrix partitions fit the Itanium L3s:
         // superlinear CRS speedup; and NBJDS (long loops) must overtake
         // CRS (short loops, heavy in-order loop startup) at high counts.
-        let k_crs = SpmvKernel::build_from_crs(medium_crs(), Scheme::Crs);
-        let k_nb = SpmvKernel::build_from_crs(medium_crs(), Scheme::NbJds { block: 1000 });
+        let k_crs = fixed_ctx(medium_crs(), Scheme::Crs);
+        let k_nb = fixed_ctx(medium_crs(), Scheme::NbJds { block: 1000 });
         let m = MachineSpec::hlrb2(32);
         let base = mflops(&m, &k_crs, 2, 1);
         let crs64 = mflops(&m, &k_crs, 2, 32);

@@ -6,14 +6,13 @@
 //! are hazardous; dynamic/guided scheduling disrupts NUMA locality; large
 //! blocks × large chunks underutilize threads (too few chunks).
 
-use crate::engine::SpmvPlan;
-use crate::kernels::SpmvKernel;
 use crate::matrix::{Crs, Scheme};
 use crate::sched::Schedule;
 use crate::simulator::{simulate_spmv_plan, MachineSpec, Placement, SimOptions};
+use crate::tune::SpmvContext;
 use crate::util::report::{f, Table};
 
-use super::ExpOptions;
+use super::{fixed_ctx, ExpOptions};
 
 pub fn chunks(quick: bool) -> Vec<usize> {
     if quick {
@@ -24,14 +23,14 @@ pub fn chunks(quick: bool) -> Vec<usize> {
 }
 
 /// Simulate through the shared plan/execute API (2 sockets fully
-/// populated): schedule × chunk decisions live in the [`SpmvPlan`].
-fn mflops(m: &MachineSpec, k: &SpmvKernel, schedule: Schedule) -> f64 {
+/// populated): schedule × chunk decisions live in the context's plan.
+fn mflops(m: &MachineSpec, ctx: &SpmvContext, schedule: Schedule) -> f64 {
     let tps = m.cores_per_socket;
-    let plan = SpmvPlan::new(k, schedule, tps * 2);
+    let c = ctx.replanned(schedule, tps * 2);
     simulate_spmv_plan(
         m,
-        k,
-        &plan,
+        c.kernel(),
+        c.plan(),
         tps,
         2,
         Placement::FirstTouchStatic,
@@ -60,7 +59,7 @@ pub fn run(opts: &ExpOptions) -> Vec<Table> {
         "Fig 9 — CRS on Nehalem 2x4 threads: MFlop/s by schedule and chunk",
         &href,
     );
-    let k_crs = SpmvKernel::build_from_crs(&crs, Scheme::Crs);
+    let k_crs = fixed_ctx(&crs, Scheme::Crs);
     let default = mflops(&m, &k_crs, Schedule::Static { chunk: None });
     t.row({
         let mut r = vec!["static(default)".to_string()];
@@ -97,7 +96,7 @@ pub fn run(opts: &ExpOptions) -> Vec<Table> {
                 "RBJDS" => Scheme::RbJds { block: b },
                 _ => Scheme::SoJds { block: b },
             };
-            let k = SpmvKernel::build_from_crs(&crs, scheme);
+            let k = fixed_ctx(&crs, scheme);
             let mut row = vec![b.to_string()];
             for &c in &ch {
                 row.push(f(mflops(&m, &k, Schedule::Static { chunk: Some(c) })));
@@ -130,7 +129,7 @@ mod tests {
     fn static_default_beats_dynamic_small_chunks() {
         // Dynamic scheduling with small chunks disrupts NUMA locality.
         let m = MachineSpec::nehalem();
-        let k = SpmvKernel::build_from_crs(medium_crs(), Scheme::Crs);
+        let k = fixed_ctx(medium_crs(), Scheme::Crs);
         let stat = mflops(&m, &k, Schedule::Static { chunk: None });
         let dyn_small = mflops(&m, &k, Schedule::Dynamic { chunk: 16 });
         assert!(
@@ -144,7 +143,7 @@ mod tests {
         // Chunks far below a page (512 rows x 8 B = 4 KiB) randomize
         // placement: static,16 must trail static,{>=512}.
         let m = MachineSpec::nehalem();
-        let k = SpmvKernel::build_from_crs(medium_crs(), Scheme::Crs);
+        let k = fixed_ctx(medium_crs(), Scheme::Crs);
         let tiny = mflops(&m, &k, Schedule::Static { chunk: Some(16) });
         let page = mflops(&m, &k, Schedule::Static { chunk: Some(4096) });
         assert!(

@@ -16,9 +16,23 @@ pub mod fig9;
 use anyhow::Result;
 
 use crate::gen::{self, HolsteinHubbardParams};
-use crate::matrix::Coo;
+use crate::matrix::{Coo, Crs, Scheme};
+use crate::sched::Schedule;
 use crate::simulator::MachineSpec;
+use crate::tune::{SpmvContext, TuningPolicy};
 use crate::util::report::Table;
+
+/// A fixed-policy, single-thread context for one scheme — the shared
+/// starting point of the fig 8/9 sweeps, which re-plan it per data point
+/// via [`SpmvContext::replanned`] (the kernel is shared, nothing is
+/// re-tuned).
+pub(crate) fn fixed_ctx(crs: &Crs, scheme: Scheme) -> SpmvContext {
+    SpmvContext::builder_from_crs(crs)
+        .policy(TuningPolicy::Fixed(scheme, Schedule::Static { chunk: None }))
+        .threads(1)
+        .build()
+        .expect("fixed-policy context on a square matrix cannot fail")
+}
 
 /// Options shared by all experiment drivers.
 #[derive(Debug, Clone)]

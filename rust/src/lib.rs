@@ -14,6 +14,11 @@
 //!   schedule × thread count to per-thread partitions, and a long-lived
 //!   [`engine::Engine`] thread pool runs the partitioned kernels with no
 //!   per-call spawn;
+//! - an **auto-tuning layer** ([`tune`]): [`tune::SpmvContext`] bundles
+//!   kernel + plan + engine behind one builder API, with a
+//!   [`tune::TuningPolicy`] that picks scheme, SELL (C, σ) and schedule
+//!   per matrix (fixed / fingerprint-heuristic / measured bake-off) and a
+//!   [`tune::TuningReport`] explaining the decision;
 //! - the paper's test matrix — a real Holstein-Hubbard Hamiltonian
 //!   generator — plus auxiliary generators ([`gen`]);
 //! - the microbenchmark kernels of Table 1 ([`kernels`]);
@@ -44,4 +49,5 @@ pub mod perfmodel;
 pub mod runtime;
 pub mod sched;
 pub mod simulator;
+pub mod tune;
 pub mod util;

@@ -6,8 +6,10 @@
 //! spmvperf simulate   [--machine nehalem] [--scheme crs|nbjds:1000|...]
 //!                     [--threads-per-socket T] [--sockets S] [--schedule static|dynamic,C]
 //! spmvperf predict    [--machine nehalem] — perf-model prediction per scheme
+//! spmvperf tune       [--policy heuristic|measured|fixed] [--threads T]
+//!                     [--machine nehalem] [--quick] — auto-tuned SpmvContext + report
 //! spmvperf lanczos    [--sites 6 --electrons 3 --max-phonons 4] [--eigenvalues 1]
-//!                     [--threads T] [--scheme crs|sellcs:32:256|...]
+//!                     [--threads T] [--scheme auto|crs|sellcs:32:256|...]
 //! spmvperf serve      [--requests 64 --batch-window-us 500] — PJRT service demo
 //! spmvperf matrix     [--out FILE.mtx] — generate + analyze the test matrix
 //! spmvperf info       — platform, machines, artifacts
@@ -24,6 +26,7 @@ use spmvperf::perfmodel::{predict, CostCurve};
 use spmvperf::runtime::{default_artifacts_dir, Runtime};
 use spmvperf::sched::Schedule;
 use spmvperf::simulator::{simulate_spmv, MachineSpec, Placement, SimOptions};
+use spmvperf::tune::{SpmvContext, TuningPolicy};
 use spmvperf::util::cli::Args;
 use spmvperf::util::report::{f, Table};
 
@@ -41,6 +44,7 @@ fn run() -> Result<()> {
         "experiment" => cmd_experiment(&mut args),
         "simulate" => cmd_simulate(&args),
         "predict" => cmd_predict(&args),
+        "tune" => cmd_tune(&args),
         "lanczos" => cmd_lanczos(&args),
         "serve" => cmd_serve(&args),
         "matrix" => cmd_matrix(&args),
@@ -61,8 +65,11 @@ USAGE:
   spmvperf simulate   [--machine nehalem] [--scheme crs] [--threads-per-socket 4]
                       [--sockets 2] [--schedule static] [--block 1000]
   spmvperf predict    [--machine nehalem] [--block 1000]
+  spmvperf tune       [--policy heuristic|measured|fixed] [--scheme sellcs:32:256]
+                      [--schedule static] [--threads 4] [--machine nehalem]
+                      [--quick|--full]
   spmvperf lanczos    [--sites 6 --electrons 3 --max-phonons 4 --eigenvalues 1]
-                      [--threads T] [--scheme crs|sellcs:32:256]
+                      [--threads T] [--scheme auto|crs|sellcs:32:256] [--quick]
   spmvperf serve      [--requests 64 --batch-window-us 500]
   spmvperf matrix     [--out FILE.mtx] [--full|--quick]
   spmvperf info
@@ -171,6 +178,105 @@ fn cmd_predict(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `spmvperf tune` — run a tuning policy on the test matrix, print the
+/// decision + candidate scoreboard, and spot-check the tuned context
+/// against the serial CRS reference.
+fn cmd_tune(args: &Args) -> Result<()> {
+    let quick = args.flag("quick");
+    let full = args.flag("full");
+    let policy_name = args.get_str("policy", "heuristic");
+    let threads = args.get_usize("threads", 4)?.max(1);
+    let machine_arg = args.get("machine").map(str::to_string);
+    let scheme_arg = args.get("scheme").map(str::to_string);
+    let schedule_arg = args.get("schedule").map(str::to_string);
+    args.finish()?;
+    // Each flag belongs to one tier; reject combinations that would be
+    // silently ignored: --scheme/--schedule feed only the fixed policy,
+    // --machine only the heuristic's performance model.
+    let fixed_only_flags = scheme_arg.is_none() && schedule_arg.is_none();
+    let policy = match policy_name.as_str() {
+        "heuristic" => {
+            anyhow::ensure!(
+                fixed_only_flags,
+                "--scheme/--schedule only apply to --policy fixed (heuristic picks them itself)"
+            );
+            TuningPolicy::Heuristic
+        }
+        "measured" => {
+            anyhow::ensure!(
+                fixed_only_flags,
+                "--scheme/--schedule only apply to --policy fixed (measured picks them itself)"
+            );
+            anyhow::ensure!(
+                machine_arg.is_none(),
+                "--machine only applies to --policy heuristic (measured times the host itself)"
+            );
+            TuningPolicy::Measured
+        }
+        "fixed" => {
+            anyhow::ensure!(
+                machine_arg.is_none(),
+                "--machine only applies to --policy heuristic (fixed does no tuning)"
+            );
+            TuningPolicy::Fixed(
+                Scheme::parse(scheme_arg.as_deref().unwrap_or("sellcs:32:256"))?,
+                Schedule::parse(schedule_arg.as_deref().unwrap_or("static"))?,
+            )
+        }
+        other => bail!("unknown policy '{other}' (expected heuristic|measured|fixed)"),
+    };
+    let machine = MachineSpec::by_name(machine_arg.as_deref().unwrap_or("nehalem"))?;
+    let opts = ExpOptions { full, quick, ..Default::default() };
+    let coo = opts.test_matrix();
+    eprintln!(
+        "tuning on the Holstein-Hubbard test matrix: N={} nnz={} ({} policy, {threads} threads)",
+        coo.nrows,
+        coo.nnz(),
+        policy_name
+    );
+    let t0 = std::time::Instant::now();
+    let ctx = SpmvContext::builder(&coo)
+        .policy(policy)
+        .threads(threads)
+        .machine(machine)
+        .quick(quick)
+        .build()?;
+    let tune_time = t0.elapsed();
+    for t in ctx.report().tables() {
+        t.print();
+    }
+    // Spot-check the tuned context against the serial CRS reference.
+    let crs = Crs::from_coo(&coo);
+    let n = crs.nrows;
+    let mut rng = spmvperf::util::rng::Rng::new(5);
+    let mut x = vec![0.0; n];
+    rng.fill_f64(&mut x, -1.0, 1.0);
+    let mut y_ref = vec![0.0; n];
+    crs.spmv(&x, &mut y_ref);
+    let mut y = vec![0.0; n];
+    ctx.spmv(&x, &mut y);
+    let err = spmvperf::util::stats::max_abs_diff(&y_ref, &y);
+    anyhow::ensure!(err < 1e-12, "tuned context deviates from serial CRS by {err:.2e}");
+    // Quick throughput sample of the tuned pick.
+    let mut ws = ctx.kernel().workspace(&x);
+    let reps = if quick { 5 } else { 20 };
+    let t0 = std::time::Instant::now();
+    for _ in 0..reps {
+        ctx.spmv_permuted(&ws.xp, &mut ws.yp);
+        std::hint::black_box(ws.yp[0]);
+    }
+    let dt = t0.elapsed().as_secs_f64() / reps as f64;
+    let mut t = Table::new("tuned context", &["metric", "value"]);
+    t.row(vec!["tuning wall time (ms)".into(), f(tune_time.as_secs_f64() * 1e3)]);
+    t.row(vec!["max |err| vs serial CRS".into(), format!("{err:.2e}")]);
+    t.row(vec![
+        "tuned SpMV throughput (MFlop/s)".into(),
+        f(2.0 * ctx.kernel().nnz() as f64 / dt / 1e6),
+    ]);
+    t.print();
+    Ok(())
+}
+
 fn cmd_lanczos(args: &Args) -> Result<()> {
     let p = HolsteinHubbardParams {
         sites: args.get_usize("sites", 6)?,
@@ -185,28 +291,38 @@ fn cmd_lanczos(args: &Args) -> Result<()> {
     };
     let n_eigs = args.get_usize("eigenvalues", 1)?;
     let iters = args.get_usize("iters", 300)?;
-    let threads = args.get_usize("threads", 1)?;
-    let scheme = Scheme::parse(&args.get_str("scheme", "crs"))?;
+    let threads = args.get_usize("threads", 1)?.max(1);
+    let scheme_arg = args.get_str("scheme", "crs");
+    let quick = args.flag("quick");
     args.finish()?;
     eprintln!("building Holstein-Hubbard Hamiltonian: dim = {}", p.dimension());
     let h = gen::holstein_hubbard(&p);
     let crs = Crs::from_coo(&h);
     let cfg = LanczosConfig { max_iters: iters, ..Default::default() };
-    // Hot loop through the plan/execute engine for any thread count —
-    // a 1-thread engine runs inline, so the chosen scheme is always
-    // honored.
-    let kernel = SpmvKernel::build_from_crs(&crs, scheme);
-    let engine = spmvperf::engine::Engine::new(threads.max(1));
-    let plan = spmvperf::engine::SpmvPlan::new(
-        &kernel,
-        Schedule::Static { chunk: None },
-        threads.max(1),
-    );
+    // Hot loop through a tuned SpmvContext for any thread count — a
+    // 1-thread engine runs inline, so the chosen scheme is always
+    // honored. `--scheme auto` hands the choice to the tuning layer.
+    let policy = if scheme_arg == "auto" {
+        TuningPolicy::Heuristic
+    } else {
+        TuningPolicy::Fixed(Scheme::parse(&scheme_arg)?, Schedule::Static { chunk: None })
+    };
+    let ctx = SpmvContext::builder_from_crs(&crs)
+        .policy(policy)
+        .threads(threads)
+        .quick(quick)
+        .build()?;
+    if scheme_arg == "auto" {
+        eprintln!("auto-tuned scheme: {} ({})", ctx.scheme().name(), ctx.schedule().name());
+        for t in ctx.report().tables() {
+            t.print();
+        }
+    }
     let t0 = std::time::Instant::now();
-    let r = spmvperf::eigen::lanczos_with_engine(&kernel, &engine, &plan, n_eigs, &cfg);
+    let r = spmvperf::eigen::lanczos_with_context(&ctx, n_eigs, &cfg);
     let dt = t0.elapsed();
     let mut t = Table::new(
-        &format!("Lanczos ground state ({} SpMV, {threads} thread(s))", scheme.name()),
+        &format!("Lanczos ground state ({} SpMV, {threads} thread(s))", ctx.scheme().name()),
         &["metric", "value"],
     );
     for (i, e) in r.eigenvalues.iter().enumerate() {

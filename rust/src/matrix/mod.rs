@@ -102,7 +102,8 @@ impl Scheme {
     }
 
     /// Parse e.g. "crs", "jds", "nbjds:1000", "nujds:2", "sellcs:32:256".
-    /// SELL-C-σ defaults: c = 32; σ = 8·c when omitted.
+    /// SELL-C-σ defaults: c = 32; σ = 8·c when omitted. Surplus
+    /// parameters are an error, not silently dropped.
     pub fn parse(s: &str) -> anyhow::Result<Self> {
         let mut parts = s.split(':');
         let name = parts.next().unwrap_or("");
@@ -110,7 +111,19 @@ impl Scheme {
             .map(|p| p.trim().parse::<usize>())
             .collect::<Result<Vec<usize>, _>>()?;
         let p0 = params.first().copied();
-        Ok(match name.trim().to_ascii_lowercase().as_str() {
+        let name = name.trim().to_ascii_lowercase();
+        let max_params = match name.as_str() {
+            "crs" | "csr" | "jds" => 0,
+            "nujds" | "nbjds" | "rbjds" | "sojds" => 1,
+            "sellcs" | "sell" => 2,
+            _ => usize::MAX, // unknown name: the match below reports it
+        };
+        anyhow::ensure!(
+            params.len() <= max_params,
+            "scheme '{name}' takes at most {max_params} parameter(s), got {} in '{s}'",
+            params.len()
+        );
+        Ok(match name.as_str() {
             "crs" | "csr" => Scheme::Crs,
             "jds" => Scheme::Jds,
             "nujds" => Scheme::NuJds { unroll: p0.unwrap_or(2) },
@@ -194,6 +207,14 @@ mod tests {
             Scheme::SellCs { c: 32, sigma: 256 }
         );
         assert!(Scheme::parse("sellcs:0:x").is_err());
+    }
+
+    #[test]
+    fn surplus_parameters_are_rejected() {
+        assert!(Scheme::parse("crs:1").is_err());
+        assert!(Scheme::parse("nbjds:1000:5").is_err());
+        assert!(Scheme::parse("sellcs:32:256:7").is_err());
+        assert!(Scheme::parse("bogus:1:2:3").is_err());
     }
 
     #[test]

@@ -123,6 +123,18 @@ fn run_stats(kernel: &SpmvKernel) -> (u64, u64) {
 /// distribution alone (no full simulation).
 pub fn predict(machine: &MachineSpec, curve: &CostCurve, kernel: &SpmvKernel) -> Prediction {
     let dist = StrideDistribution::from_kernel(kernel);
+    predict_with_dist(machine, curve, kernel, &dist)
+}
+
+/// [`predict`] with a caller-supplied stride distribution — avoids a
+/// redundant O(nnz) kernel walk when the fingerprint is already in hand
+/// (the tuning layer computes it once per matrix).
+pub fn predict_with_dist(
+    machine: &MachineSpec,
+    curve: &CostCurve,
+    kernel: &SpmvKernel,
+    dist: &StrideDistribution,
+) -> Prediction {
     let nnz = kernel.nnz().max(1) as f64;
 
     // Gather cost: expectation of the cost curve over the |stride|

@@ -1,0 +1,817 @@
+//! Auto-tuned SpMV contexts: **one build→tune→plan→execute API** for
+//! every layer of the stack.
+//!
+//! The paper's central finding is that storage scheme × access pattern ×
+//! thread scheduling must be co-designed *per matrix*. The lower layers
+//! expose the ingredients ([`SpmvKernel`], [`SpmvPlan`], [`Engine`]);
+//! this module is where the co-design decision is actually **made**:
+//!
+//! ```text
+//! SpmvContext::builder(&coo)
+//!     .policy(TuningPolicy::Heuristic)   // or Fixed(..) / Measured
+//!     .threads(4)
+//!     .build()?                          // kernel + plan + engine bundle
+//! ```
+//!
+//! [`TuningPolicy`] has three tiers:
+//!
+//! - [`TuningPolicy::Fixed`]: the caller names scheme and schedule —
+//!   no tuning, the zero-cost escape hatch.
+//! - [`TuningPolicy::Heuristic`]: scheme, SELL (C, σ) and schedule are
+//!   chosen from the matrix **stride-distribution fingerprint**
+//!   ([`StrideDistribution`], Fig 6a),
+//!   [`crate::matrix::SellCs::padding_overhead`], and
+//!   the predictive performance model ([`crate::perfmodel::predict`]) —
+//!   the feature-based selection of Elafrou et al. 2017 on top of the
+//!   (C, σ) guidance of Kreutzer et al. 2013.
+//! - [`TuningPolicy::Measured`]: a short candidate bake-off timed on the
+//!   host — ground truth where a few milliseconds of probing are
+//!   acceptable.
+//!
+//! Every decision is documented in a [`TuningReport`] (candidates,
+//! scores, fingerprint, rationale), so a tuned context can always explain
+//! itself. The resulting [`SpmvContext`] exposes [`SpmvContext::spmv`],
+//! [`SpmvContext::spmv_batch`] (the whole batch fused into a single
+//! engine dispatch — one completion latch per batch, not per vector) and
+//! implements [`crate::matrix::SpMv`], so solvers, the coordinator
+//! service, experiments and benches all consume the same tuned bundle.
+
+use std::borrow::Cow;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::analysis::StrideDistribution;
+use crate::engine::{Engine, SpmvPlan};
+use crate::kernels::SpmvKernel;
+use crate::matrix::{Coo, Crs, Scheme, SpMv};
+use crate::perfmodel::{predict, predict_with_dist, CostCurve};
+use crate::sched::Schedule;
+use crate::simulator::MachineSpec;
+use crate::util::report::{f, Table};
+use crate::util::rng::Rng;
+
+/// How an [`SpmvContext`] picks its (scheme, (C, σ), schedule) triple.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum TuningPolicy {
+    /// No tuning: use exactly this scheme and schedule.
+    Fixed(Scheme, Schedule),
+    /// Pick scheme, SELL (C, σ) and schedule from the stride-distribution
+    /// fingerprint + padding overhead + the predictive performance model.
+    Heuristic,
+    /// Short host-side bake-off: build every candidate, time it, keep the
+    /// fastest.
+    Measured,
+}
+
+impl TuningPolicy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            TuningPolicy::Fixed(..) => "fixed",
+            TuningPolicy::Heuristic => "heuristic",
+            TuningPolicy::Measured => "measured",
+        }
+    }
+}
+
+/// One candidate considered during tuning, with its score(s).
+#[derive(Debug, Clone)]
+pub struct CandidateReport {
+    pub scheme: Scheme,
+    pub schedule: Schedule,
+    /// Performance-model score (heuristic tier), padding-adjusted.
+    pub predicted_cycles_per_nnz: Option<f64>,
+    /// Host bake-off score (measured tier).
+    pub measured_ns_per_nnz: Option<f64>,
+    pub padding_overhead: f64,
+    pub chosen: bool,
+}
+
+/// Why a context looks the way it does: the decision, the candidates it
+/// beat, and the matrix features that drove the choice.
+#[derive(Debug, Clone)]
+pub struct TuningReport {
+    pub policy: String,
+    pub scheme: Scheme,
+    pub schedule: Schedule,
+    pub n_threads: usize,
+    pub nrows: usize,
+    pub nnz: usize,
+    /// Fraction of backward jumps in the CRS-walk stride fingerprint
+    /// (`None` when the policy did not analyze the matrix).
+    pub backward_fraction: Option<f64>,
+    /// Mean |stride| of the CRS-walk fingerprint.
+    pub mean_abs_stride: Option<f64>,
+    /// Fraction of strides with |stride| <= 8 elements (one cache line).
+    pub small_stride_fraction: Option<f64>,
+    /// Coefficient of variation of nnz per row (load-imbalance feature
+    /// driving the schedule choice).
+    pub row_imbalance_cv: f64,
+    /// Realized padding overhead of the chosen kernel (0 for unpadded
+    /// schemes).
+    pub padding_overhead: f64,
+    pub candidates: Vec<CandidateReport>,
+    /// Human-readable decision trail.
+    pub rationale: Vec<String>,
+}
+
+impl TuningReport {
+    /// Render the decision and the candidate scoreboard as text tables.
+    pub fn tables(&self) -> Vec<Table> {
+        let mut decision = Table::new(
+            &format!("tuning decision ({} policy)", self.policy),
+            &["quantity", "value"],
+        );
+        decision.row(vec!["scheme".into(), self.scheme.name()]);
+        decision.row(vec!["spec".into(), self.scheme.spec()]);
+        decision.row(vec!["schedule".into(), self.schedule.name()]);
+        decision.row(vec!["threads".into(), self.n_threads.to_string()]);
+        decision.row(vec!["matrix".into(), format!("N={} nnz={}", self.nrows, self.nnz)]);
+        if let Some(b) = self.backward_fraction {
+            decision.row(vec!["backward stride fraction".into(), f(b)]);
+        }
+        if let Some(m) = self.mean_abs_stride {
+            decision.row(vec!["mean |stride|".into(), f(m)]);
+        }
+        if let Some(s) = self.small_stride_fraction {
+            decision.row(vec!["|stride| <= 8 fraction".into(), f(s)]);
+        }
+        decision.row(vec!["row imbalance (CV)".into(), f(self.row_imbalance_cv)]);
+        decision.row(vec!["padding overhead".into(), f(self.padding_overhead)]);
+        for (i, r) in self.rationale.iter().enumerate() {
+            decision.row(vec![format!("rationale {}", i + 1), r.clone()]);
+        }
+        let mut tables = vec![decision];
+        if !self.candidates.is_empty() {
+            let mut t = Table::new(
+                "tuning candidates",
+                &["scheme", "schedule", "pred cycles/nnz", "measured ns/nnz", "padding", "chosen"],
+            );
+            for c in &self.candidates {
+                t.row(vec![
+                    c.scheme.name(),
+                    c.schedule.name(),
+                    c.predicted_cycles_per_nnz.map(f).unwrap_or_else(|| "-".into()),
+                    c.measured_ns_per_nnz.map(f).unwrap_or_else(|| "-".into()),
+                    f(c.padding_overhead),
+                    if c.chosen { "<-".into() } else { String::new() },
+                ]);
+            }
+            tables.push(t);
+        }
+        tables
+    }
+}
+
+/// Builder for [`SpmvContext`]; see the module docs for the lifecycle.
+/// Borrows the CRS when the caller already holds one
+/// ([`SpmvContext::builder_from_crs`]) — tuning only reads it.
+pub struct SpmvContextBuilder<'a> {
+    crs: Cow<'a, Crs>,
+    policy: TuningPolicy,
+    threads: Option<usize>,
+    machine: MachineSpec,
+    quick: bool,
+}
+
+impl SpmvContextBuilder<'_> {
+    /// Tuning tier (default: [`TuningPolicy::Heuristic`]).
+    pub fn policy(mut self, policy: TuningPolicy) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    /// Engine thread count. Defaults to the host parallelism capped at 4
+    /// (SpMV saturates memory bandwidth long before core count, Fig 8).
+    pub fn threads(mut self, n: usize) -> Self {
+        self.threads = Some(n.max(1));
+        self
+    }
+
+    /// Machine model the heuristic tier's performance model is evaluated
+    /// on (default: Nehalem, the paper's newest test-bed socket).
+    pub fn machine(mut self, machine: MachineSpec) -> Self {
+        self.machine = machine;
+        self
+    }
+
+    /// Cheapen tuning for smoke runs: a shorter cost-curve calibration
+    /// and fewer bake-off repetitions.
+    pub fn quick(mut self, quick: bool) -> Self {
+        self.quick = quick;
+        self
+    }
+
+    /// Run the policy and bundle the winning kernel + plan + engine.
+    /// Errors on non-square matrices: every scheme past CRS permutes
+    /// rows and columns symmetrically, and the engine's plan/workspace
+    /// machinery assumes one dimension throughout.
+    pub fn build(self) -> Result<SpmvContext> {
+        let SpmvContextBuilder { crs, policy, threads, machine, quick } = self;
+        let crs: &Crs = &crs;
+        anyhow::ensure!(
+            crs.nrows == crs.ncols,
+            "SpmvContext requires a square matrix, got {}x{}",
+            crs.nrows,
+            crs.ncols
+        );
+        let n_threads = threads.unwrap_or_else(|| {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(4)
+        });
+        let nrows = crs.nrows;
+        let nnz = crs.nnz();
+        let row_cv = row_imbalance_cv(&crs);
+        let mut rationale = Vec::new();
+        let mut candidates = Vec::new();
+        let mut fingerprint: Option<StrideDistribution> = None;
+        let mut eager_engine: Option<Engine> = None;
+
+        let (kernel, schedule) = match policy {
+            TuningPolicy::Fixed(scheme, schedule) => {
+                rationale.push(format!(
+                    "fixed policy: caller requested {} under {}",
+                    scheme.name(),
+                    schedule.name()
+                ));
+                (SpmvKernel::build_from_crs(&crs, scheme), schedule)
+            }
+            TuningPolicy::Heuristic => {
+                let crs_kernel = SpmvKernel::build_from_crs(&crs, Scheme::Crs);
+                let dist = StrideDistribution::from_kernel(&crs_kernel);
+                let schedule = pick_schedule(nrows, n_threads, row_cv, &mut rationale);
+                let curve = cached_curve(&machine, quick);
+                // The CRS candidate reuses the fingerprint kernel, and the
+                // winner is kept as built — no candidate is realized twice.
+                let mut crs_kernel = Some(crs_kernel);
+                let mut best: Option<(usize, f64, SpmvKernel)> = None;
+                for (ci, scheme) in candidate_schemes(&crs).into_iter().enumerate() {
+                    let k = if scheme == Scheme::Crs {
+                        crs_kernel
+                            .take()
+                            .unwrap_or_else(|| SpmvKernel::build_from_crs(&crs, scheme))
+                    } else {
+                        SpmvKernel::build_from_crs(&crs, scheme)
+                    };
+                    let padding = kernel_padding(&k);
+                    // The CRS candidate's stride distribution IS the
+                    // fingerprint — reuse it instead of re-walking.
+                    let pred = if scheme == Scheme::Crs {
+                        predict_with_dist(&machine, &curve, &k, &dist)
+                    } else {
+                        predict(&machine, &curve, &k)
+                    };
+                    // Padding streams extra val/col bytes and multiplies
+                    // explicit zeros: charge it proportionally.
+                    let effective = pred.cycles_per_nnz * (1.0 + padding);
+                    candidates.push(CandidateReport {
+                        scheme,
+                        schedule,
+                        predicted_cycles_per_nnz: Some(effective),
+                        measured_ns_per_nnz: None,
+                        padding_overhead: padding,
+                        chosen: false,
+                    });
+                    if best.as_ref().map(|(_, c, _)| effective < *c).unwrap_or(true) {
+                        best = Some((ci, effective, k));
+                    }
+                }
+                let (best_i, best_cost, kernel) =
+                    best.expect("candidate set is never empty");
+                candidates[best_i].chosen = true;
+                rationale.push(format!(
+                    "perfmodel on {} picks {} at {:.3} padding-adjusted cycles/nnz over {} candidates",
+                    machine.name,
+                    kernel.scheme().name(),
+                    best_cost,
+                    candidates.len()
+                ));
+                fingerprint = Some(dist);
+                (kernel, schedule)
+            }
+            TuningPolicy::Measured => {
+                let schedule = pick_schedule(nrows, n_threads, row_cv, &mut rationale);
+                let engine = Engine::new(n_threads);
+                let reps = if quick { 2 } else { 5 };
+                let mut x = vec![0.0; nrows];
+                Rng::new(0xC0FFEE).fill_f64(&mut x, -1.0, 1.0);
+                let mut best: Option<(usize, f64, SpmvKernel)> = None;
+                for (ci, scheme) in candidate_schemes(&crs).into_iter().enumerate() {
+                    let k = SpmvKernel::build_from_crs(&crs, scheme);
+                    let padding = kernel_padding(&k);
+                    let plan = SpmvPlan::new(&k, schedule, n_threads);
+                    let mut ws = k.workspace(&x);
+                    plan.execute_permuted(&engine, &k, &ws.xp, &mut ws.yp); // warmup
+                    let mut best_ns = f64::INFINITY;
+                    for _ in 0..reps {
+                        let t0 = Instant::now();
+                        plan.execute_permuted(&engine, &k, &ws.xp, &mut ws.yp);
+                        let ns = t0.elapsed().as_nanos() as f64 / k.nnz().max(1) as f64;
+                        best_ns = best_ns.min(ns);
+                    }
+                    candidates.push(CandidateReport {
+                        scheme,
+                        schedule,
+                        predicted_cycles_per_nnz: None,
+                        measured_ns_per_nnz: Some(best_ns),
+                        padding_overhead: padding,
+                        chosen: false,
+                    });
+                    if best.as_ref().map(|(_, c, _)| best_ns < *c).unwrap_or(true) {
+                        best = Some((ci, best_ns, k));
+                    }
+                }
+                let (best_i, best_ns, kernel) =
+                    best.expect("candidate set is never empty");
+                candidates[best_i].chosen = true;
+                rationale.push(format!(
+                    "host bake-off ({} reps, {} threads) picks {} at {:.2} ns/nnz over {} candidates",
+                    reps,
+                    n_threads,
+                    kernel.scheme().name(),
+                    best_ns,
+                    candidates.len()
+                ));
+                eager_engine = Some(engine);
+                (kernel, schedule)
+            }
+        };
+
+        let plan = SpmvPlan::new(&kernel, schedule, n_threads);
+        let report = TuningReport {
+            policy: policy.name().to_string(),
+            scheme: kernel.scheme(),
+            schedule,
+            n_threads,
+            nrows,
+            nnz,
+            backward_fraction: fingerprint.as_ref().map(|d| d.backward_fraction()),
+            mean_abs_stride: fingerprint.as_ref().map(|d| d.mean_abs_stride()),
+            small_stride_fraction: fingerprint.as_ref().map(|d| d.fraction_within(8)),
+            row_imbalance_cv: row_cv,
+            padding_overhead: kernel_padding(&kernel),
+            candidates,
+            rationale,
+        };
+        let engine = OnceLock::new();
+        if let Some(e) = eager_engine {
+            let _ = engine.set(e);
+        }
+        Ok(SpmvContext { kernel: Arc::new(kernel), plan, n_threads, engine, report })
+    }
+}
+
+/// An owned, tuned kernel + plan + engine bundle — the one public
+/// execution surface of the crate. Obtain via [`SpmvContext::builder`].
+///
+/// The engine thread pool is spawned lazily on the first execution, so
+/// simulation-only consumers (fig 8/9) never pay for host threads.
+pub struct SpmvContext {
+    kernel: Arc<SpmvKernel>,
+    plan: SpmvPlan,
+    n_threads: usize,
+    engine: OnceLock<Engine>,
+    report: TuningReport,
+}
+
+impl SpmvContext {
+    /// Start a builder from an assembled COO matrix.
+    pub fn builder(coo: &Coo) -> SpmvContextBuilder<'static> {
+        Self::builder_cow(Cow::Owned(Crs::from_coo(coo)))
+    }
+
+    /// Start a builder that borrows an already-compressed CRS matrix —
+    /// no conversion and no clone; tuning only reads it.
+    pub fn builder_from_crs(crs: &Crs) -> SpmvContextBuilder<'_> {
+        Self::builder_cow(Cow::Borrowed(crs))
+    }
+
+    fn builder_cow(crs: Cow<'_, Crs>) -> SpmvContextBuilder<'_> {
+        SpmvContextBuilder {
+            crs,
+            policy: TuningPolicy::Heuristic,
+            threads: None,
+            machine: MachineSpec::nehalem(),
+            quick: false,
+        }
+    }
+
+    pub fn kernel(&self) -> &SpmvKernel {
+        &self.kernel
+    }
+
+    /// The scheduling plan (also consumable by
+    /// [`crate::simulator::simulate_spmv_plan`], so a tuned decision can
+    /// be evaluated on the paper's machine models).
+    pub fn plan(&self) -> &SpmvPlan {
+        &self.plan
+    }
+
+    /// The lazily-spawned execution engine.
+    pub fn engine(&self) -> &Engine {
+        self.engine.get_or_init(|| Engine::new(self.n_threads))
+    }
+
+    pub fn report(&self) -> &TuningReport {
+        &self.report
+    }
+
+    pub fn scheme(&self) -> Scheme {
+        self.kernel.scheme()
+    }
+
+    pub fn schedule(&self) -> Schedule {
+        self.plan.schedule
+    }
+
+    pub fn n_threads(&self) -> usize {
+        self.n_threads
+    }
+
+    /// Original-basis parallel SpMV through the tuned plan.
+    pub fn spmv(&self, x: &[f64], y: &mut [f64]) {
+        self.plan.execute(self.engine(), &self.kernel, x, y);
+    }
+
+    /// Permuted-basis hot path (no gather/scatter, no allocation).
+    pub fn spmv_permuted(&self, xp: &[f64], yp: &mut [f64]) {
+        self.plan.execute_permuted(self.engine(), &self.kernel, xp, yp);
+    }
+
+    /// Batched SpMV fused into a **single** engine dispatch: the
+    /// completion latch is paid once per batch, not once per vector.
+    /// Each result is bit-identical to the per-vector [`Self::spmv`].
+    pub fn spmv_batch(&self, xs: &[Vec<f64>]) -> Vec<Vec<f64>> {
+        self.plan.execute_batch(self.engine(), &self.kernel, xs)
+    }
+
+    /// Re-plan the same tuned kernel for a different schedule / thread
+    /// count (cheap: the kernel is shared, only the partition is
+    /// rebuilt). Used by the scaling/scheduling experiments to sweep
+    /// thread counts without re-tuning. The derived report keeps the
+    /// fingerprint but drops the candidate scoreboard — those scores
+    /// belonged to the original schedule and would contradict the new
+    /// decision rows.
+    pub fn replanned(&self, schedule: Schedule, n_threads: usize) -> SpmvContext {
+        let n_threads = n_threads.max(1);
+        let plan = SpmvPlan::new(&self.kernel, schedule, n_threads);
+        let mut report = self.report.clone();
+        report.schedule = schedule;
+        report.n_threads = n_threads;
+        report.policy = format!("{} (replanned)", self.report.policy);
+        report.candidates.clear();
+        report
+            .rationale
+            .push(format!("replanned for {} on {} threads", schedule.name(), n_threads));
+        SpmvContext {
+            kernel: self.kernel.clone(),
+            plan,
+            n_threads,
+            engine: OnceLock::new(),
+            report,
+        }
+    }
+}
+
+/// A tuned context is itself an [`SpMv`] operator (and therefore a
+/// [`crate::eigen::LinearOp`] via the blanket impl), so solvers run
+/// their hot loop through the tuned parallel plan transparently.
+impl SpMv for SpmvContext {
+    fn nrows(&self) -> usize {
+        self.plan.nrows
+    }
+    fn ncols(&self) -> usize {
+        self.plan.nrows
+    }
+    fn nnz(&self) -> usize {
+        self.kernel.nnz()
+    }
+    fn spmv(&self, x: &[f64], y: &mut [f64]) {
+        SpmvContext::spmv(self, x, y);
+    }
+}
+
+/// Candidate scheme set shared by the heuristic and measured tiers: CRS
+/// (the paper's cache-architecture winner), a blocked-JDS representative,
+/// and SELL-C-σ across the σ locality/padding trade-off. The builder has
+/// already rejected non-square matrices; empty ones stay on CRS.
+fn candidate_schemes(crs: &Crs) -> Vec<Scheme> {
+    let n = crs.nrows;
+    if n == 0 {
+        return vec![Scheme::Crs];
+    }
+    let c = if n >= 64 { 32 } else { (n / 2).max(1) };
+    let mut sigmas = vec![c, 8 * c, n];
+    sigmas.sort_unstable();
+    sigmas.dedup();
+    let mut v = vec![Scheme::Crs, Scheme::NbJds { block: 1024 }];
+    for sigma in sigmas {
+        v.push(Scheme::SellCs { c, sigma: sigma.clamp(1, n) });
+    }
+    v.dedup();
+    v
+}
+
+/// Schedule heuristic (paper §5.2): static contiguous partitions preserve
+/// first-touch locality and are best for balanced matrices; only strong
+/// row-length imbalance justifies guided chunks. The min chunk aims at a
+/// page (512 rows of 8 B, so placement is not randomized) but is clamped
+/// to leave at least ~4 chunks per thread — otherwise guided scheduling
+/// on a small matrix degenerates into one serial chunk.
+fn pick_schedule(
+    nrows: usize,
+    n_threads: usize,
+    row_cv: f64,
+    rationale: &mut Vec<String>,
+) -> Schedule {
+    if row_cv > 0.5 {
+        let min_chunk = 512.min((nrows / (4 * n_threads.max(1))).max(1));
+        rationale.push(format!(
+            "row imbalance CV {row_cv:.2} > 0.5: guided schedule, min chunk {min_chunk}"
+        ));
+        Schedule::Guided { min_chunk }
+    } else {
+        rationale.push(format!(
+            "row imbalance CV {row_cv:.2} <= 0.5: static contiguous partitions (NUMA-safe default)"
+        ));
+        Schedule::Static { chunk: None }
+    }
+}
+
+fn kernel_padding(kernel: &SpmvKernel) -> f64 {
+    match kernel {
+        SpmvKernel::Sell(m) => m.padding_overhead(),
+        _ => 0.0,
+    }
+}
+
+/// Coefficient of variation (std / mean) of nnz per row.
+fn row_imbalance_cv(crs: &Crs) -> f64 {
+    let n = crs.nrows;
+    if n == 0 {
+        return 0.0;
+    }
+    let mean = crs.nnz() as f64 / n as f64;
+    if mean == 0.0 {
+        return 0.0;
+    }
+    let var = (0..n)
+        .map(|i| {
+            let d = (crs.row_ptr[i + 1] - crs.row_ptr[i]) as f64 - mean;
+            d * d
+        })
+        .sum::<f64>()
+        / n as f64;
+    var.sqrt() / mean
+}
+
+/// Per-machine cost-curve cache: calibration walks the simulator, so do
+/// it once per (machine, fidelity) pair per process.
+fn cached_curve(machine: &MachineSpec, quick: bool) -> Arc<CostCurve> {
+    static CACHE: OnceLock<Mutex<HashMap<String, Arc<CostCurve>>>> = OnceLock::new();
+    let cache = CACHE.get_or_init(|| Mutex::new(HashMap::new()));
+    let key = format!("{}:{}", machine.name, quick);
+    let mut guard = cache.lock().unwrap();
+    guard
+        .entry(key)
+        .or_insert_with(|| {
+            Arc::new(CostCurve::calibrate(machine, if quick { 5_000 } else { 20_000 }))
+        })
+        .clone()
+}
+
+/// Demote a SELL-C-σ kernel's parameters for reporting (0, 0) otherwise.
+pub fn sell_params(scheme: Scheme) -> (usize, usize) {
+    match scheme {
+        Scheme::SellCs { c, sigma } => (c, sigma),
+        _ => (0, 0),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen;
+    use crate::util::stats::max_abs_diff;
+
+    fn policies() -> Vec<TuningPolicy> {
+        vec![
+            TuningPolicy::Fixed(
+                Scheme::SellCs { c: 8, sigma: 64 },
+                Schedule::Dynamic { chunk: 13 },
+            ),
+            TuningPolicy::Heuristic,
+            TuningPolicy::Measured,
+        ]
+    }
+
+    fn random_coo(rng: &mut Rng, n: usize, nnz: usize) -> Coo {
+        let mut coo = Coo::new(n, n);
+        for _ in 0..nnz {
+            coo.push(rng.index(n), rng.index(n), rng.f64() * 2.0 - 1.0);
+        }
+        coo.normalize();
+        coo
+    }
+
+    /// Every policy tier must agree with the serial CRS reference (1e-12:
+    /// schemes may reorder per-row accumulation) and be **bit-identical**
+    /// to the serial kernel of whatever scheme the tuner picked (the
+    /// engine invariant).
+    #[test]
+    fn every_policy_matches_serial_crs_reference() {
+        let matrices: Vec<(&str, Coo)> = vec![
+            ("holstein-hubbard", gen::holstein_hubbard(&gen::HolsteinHubbardParams::tiny())),
+            ("random-square", random_coo(&mut Rng::new(80), 160, 160 * 6)),
+            ("random-band", gen::random_band(300, 9, 40, &mut Rng::new(81))),
+        ];
+        for (name, coo) in &matrices {
+            let crs = Crs::from_coo(coo);
+            let n = crs.nrows;
+            let mut rng = Rng::new(82);
+            let mut x = vec![0.0; n];
+            rng.fill_f64(&mut x, -1.0, 1.0);
+            let mut y_ref = vec![0.0; n];
+            crs.spmv(&x, &mut y_ref);
+            for policy in policies() {
+                let ctx = SpmvContext::builder(coo)
+                    .policy(policy)
+                    .threads(3)
+                    .quick(true)
+                    .build()
+                    .unwrap();
+                let mut y = vec![0.0; n];
+                ctx.spmv(&x, &mut y);
+                assert!(
+                    max_abs_diff(&y_ref, &y) < 1e-12,
+                    "{name} × {}: context deviates from serial CRS",
+                    policy.name()
+                );
+                // Bit-identity against the chosen scheme's serial kernel.
+                let mut y_serial = vec![0.0; n];
+                ctx.kernel().spmv(&x, &mut y_serial);
+                assert_eq!(
+                    max_abs_diff(&y_serial, &y),
+                    0.0,
+                    "{name} × {}: parallel context not bit-identical to its serial kernel",
+                    policy.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn spmv_batch_bit_identical_to_per_vector() {
+        let coo = gen::holstein_hubbard(&gen::HolsteinHubbardParams::tiny());
+        let n = coo.nrows;
+        let mut rng = Rng::new(83);
+        let xs: Vec<Vec<f64>> = (0..6)
+            .map(|_| {
+                let mut x = vec![0.0; n];
+                rng.fill_f64(&mut x, -1.0, 1.0);
+                x
+            })
+            .collect();
+        for policy in policies() {
+            let ctx = SpmvContext::builder(&coo)
+                .policy(policy)
+                .threads(4)
+                .quick(true)
+                .build()
+                .unwrap();
+            let batched = ctx.spmv_batch(&xs);
+            assert_eq!(batched.len(), xs.len());
+            for (x, yb) in xs.iter().zip(&batched) {
+                let mut y = vec![0.0; n];
+                ctx.spmv(x, &mut y);
+                assert_eq!(
+                    max_abs_diff(&y, yb),
+                    0.0,
+                    "{}: batch deviates from per-vector spmv",
+                    policy.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fixed_policy_respects_request() {
+        let coo = random_coo(&mut Rng::new(84), 120, 700);
+        let scheme = Scheme::SellCs { c: 8, sigma: 64 };
+        let schedule = Schedule::Dynamic { chunk: 17 };
+        let ctx = SpmvContext::builder(&coo)
+            .policy(TuningPolicy::Fixed(scheme, schedule))
+            .threads(2)
+            .build()
+            .unwrap();
+        assert_eq!(ctx.scheme(), scheme);
+        assert_eq!(ctx.schedule(), schedule);
+        assert_eq!(ctx.n_threads(), 2);
+        assert_eq!(ctx.report().policy, "fixed");
+        assert!(ctx.report().padding_overhead >= 0.0);
+    }
+
+    #[test]
+    fn heuristic_report_documents_the_decision() {
+        let coo = gen::holstein_hubbard(&gen::HolsteinHubbardParams::tiny());
+        let ctx = SpmvContext::builder(&coo)
+            .policy(TuningPolicy::Heuristic)
+            .threads(2)
+            .quick(true)
+            .build()
+            .unwrap();
+        let r = ctx.report();
+        assert_eq!(r.policy, "heuristic");
+        assert!(!r.candidates.is_empty(), "heuristic must score candidates");
+        assert_eq!(r.candidates.iter().filter(|c| c.chosen).count(), 1);
+        let chosen = r.candidates.iter().find(|c| c.chosen).unwrap();
+        assert_eq!(chosen.scheme, ctx.scheme());
+        assert!(chosen.predicted_cycles_per_nnz.is_some());
+        assert!(r.backward_fraction.is_some(), "fingerprint must be recorded");
+        assert!(!r.rationale.is_empty(), "decision trail must be recorded");
+        assert!(!r.tables().is_empty());
+    }
+
+    #[test]
+    fn measured_report_has_timings() {
+        let coo = random_coo(&mut Rng::new(85), 200, 1400);
+        let ctx = SpmvContext::builder(&coo)
+            .policy(TuningPolicy::Measured)
+            .threads(2)
+            .quick(true)
+            .build()
+            .unwrap();
+        let r = ctx.report();
+        assert_eq!(r.policy, "measured");
+        assert!(r.candidates.iter().all(|c| c.measured_ns_per_nnz.is_some()));
+        let chosen = r.candidates.iter().find(|c| c.chosen).unwrap();
+        let best = r
+            .candidates
+            .iter()
+            .map(|c| c.measured_ns_per_nnz.unwrap())
+            .fold(f64::INFINITY, f64::min);
+        assert_eq!(chosen.measured_ns_per_nnz.unwrap(), best);
+    }
+
+    #[test]
+    fn replanned_shares_kernel_and_stays_exact() {
+        let coo = random_coo(&mut Rng::new(86), 150, 900);
+        let ctx = SpmvContext::builder(&coo)
+            .policy(TuningPolicy::Fixed(
+                Scheme::SellCs { c: 16, sigma: 64 },
+                Schedule::Static { chunk: None },
+            ))
+            .threads(1)
+            .build()
+            .unwrap();
+        let mut rng = Rng::new(87);
+        let mut x = vec![0.0; 150];
+        rng.fill_f64(&mut x, -1.0, 1.0);
+        let mut y1 = vec![0.0; 150];
+        ctx.spmv(&x, &mut y1);
+        let re = ctx.replanned(Schedule::Guided { min_chunk: 8 }, 3);
+        assert_eq!(re.scheme(), ctx.scheme());
+        assert_eq!(re.n_threads(), 3);
+        let mut y2 = vec![0.0; 150];
+        re.spmv(&x, &mut y2);
+        assert_eq!(max_abs_diff(&y1, &y2), 0.0, "replanned context deviates");
+    }
+
+    #[test]
+    fn context_drives_linear_op_consumers() {
+        use crate::eigen::{lanczos, LanczosConfig};
+        let coo = gen::laplacian_1d(120);
+        let ctx = SpmvContext::builder(&coo)
+            .policy(TuningPolicy::Fixed(Scheme::Crs, Schedule::Static { chunk: None }))
+            .threads(2)
+            .build()
+            .unwrap();
+        let r = lanczos(&ctx, 1, &LanczosConfig::default());
+        assert!(r.converged);
+        let crs = Crs::from_coo(&coo);
+        let want = lanczos(&crs, 1, &LanczosConfig::default());
+        assert!((r.eigenvalues[0] - want.eigenvalues[0]).abs() < 1e-10);
+    }
+
+    #[test]
+    fn non_square_matrix_is_rejected() {
+        let mut coo = Coo::new(4, 7);
+        coo.push(0, 6, 1.0);
+        coo.normalize();
+        for policy in policies() {
+            let err = SpmvContext::builder(&coo).policy(policy).threads(1).build();
+            assert!(err.is_err(), "{}: non-square matrix must be rejected", policy.name());
+        }
+    }
+
+    #[test]
+    fn threads_default_is_capped() {
+        let coo = gen::laplacian_1d(64);
+        let ctx = SpmvContext::builder(&coo)
+            .policy(TuningPolicy::Fixed(Scheme::Crs, Schedule::Static { chunk: None }))
+            .build()
+            .unwrap();
+        assert!(ctx.n_threads() >= 1 && ctx.n_threads() <= 4);
+    }
+}

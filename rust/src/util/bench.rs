@@ -160,6 +160,20 @@ pub fn default_bench() -> Bench {
     }
 }
 
+/// Write a `BENCH_*.json` perf-trajectory file under `results/` and log
+/// the outcome — the one place the bench binaries' emission contract
+/// (location + error handling) lives.
+pub fn write_bench_json(filename: &str, json: &str) {
+    let path = format!("results/{filename}");
+    if let Err(e) =
+        std::fs::create_dir_all("results").and_then(|_| std::fs::write(&path, json.as_bytes()))
+    {
+        eprintln!("could not write {path}: {e}");
+    } else {
+        eprintln!("wrote {path}");
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
