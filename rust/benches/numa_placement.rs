@@ -1,0 +1,200 @@
+//! NUMA placement trajectory bench: SpMV throughput with and without
+//! thread pinning + first-touch workspace placement, plus the
+//! `rebalance()` path that re-homes a plan after the schedule changes
+//! (the paper's §5.2 dynamic-schedule migration hazard).
+//!
+//! Every configuration is self-validating: its output must stay
+//! bit-identical to the serial CRS kernel before it is timed.
+//!
+//! Emits `results/BENCH_numa.json` (consumed by the CI regression gate
+//! via `spmvperf benchdiff`). Scale: `SPMVPERF_BENCH_QUICK=1` for a
+//! smoke pass.
+
+use std::fmt::Write as _;
+
+use spmvperf::engine::affinity;
+use spmvperf::gen::{self, HolsteinHubbardParams};
+use spmvperf::matrix::{Crs, Scheme, SpMv};
+use spmvperf::sched::Schedule;
+use spmvperf::tune::{SpmvContext, TuningPolicy};
+use spmvperf::util::bench::{default_bench, quick_mode, write_bench_json};
+use spmvperf::util::report::{f, Table};
+use spmvperf::util::rng::Rng;
+use spmvperf::util::stats::max_abs_diff;
+
+const THREADS: usize = 4;
+
+struct Config {
+    name: &'static str,
+    pinned: bool,
+    schedule: Schedule,
+    /// Build static first, then `rebalance()` onto `schedule` — the
+    /// re-homing path rather than a fresh plan.
+    via_rebalance: bool,
+    threads: usize,
+}
+
+fn main() {
+    let quick = quick_mode();
+    let b = default_bench();
+    let hh_params =
+        if quick { HolsteinHubbardParams::tiny() } else { HolsteinHubbardParams::small() };
+    let coo = gen::holstein_hubbard(&hh_params);
+    let crs = Crs::from_coo(&coo);
+    let n = crs.nrows;
+    let nnz = crs.nnz() as u64;
+    eprintln!(
+        "matrix holstein-hubbard: N={n} nnz={nnz}, host CPUs {}, pinning {}",
+        affinity::n_cpus(),
+        if affinity::pin_supported() { "supported" } else { "unsupported (no-op fallback)" }
+    );
+
+    let mut rng = Rng::new(23);
+    let mut x = vec![0.0; n];
+    rng.fill_f64(&mut x, -1.0, 1.0);
+    let mut y_ref = vec![0.0; n];
+    crs.spmv(&x, &mut y_ref);
+
+    let static_sched = Schedule::Static { chunk: None };
+    let dynamic_sched = Schedule::Dynamic { chunk: 64 };
+    let mut configs = vec![
+        Config {
+            name: "unpinned-static",
+            pinned: false,
+            schedule: static_sched,
+            via_rebalance: false,
+            threads: THREADS,
+        },
+        Config {
+            name: "pinned-static",
+            pinned: true,
+            schedule: static_sched,
+            via_rebalance: false,
+            threads: THREADS,
+        },
+        Config {
+            name: "unpinned-dynamic",
+            pinned: false,
+            schedule: dynamic_sched,
+            via_rebalance: false,
+            threads: THREADS,
+        },
+        Config {
+            name: "pinned-rebalanced",
+            pinned: true,
+            schedule: dynamic_sched,
+            via_rebalance: true,
+            threads: THREADS,
+        },
+    ];
+    // Pinned scaling curve (fixed thread list so entry labels are stable
+    // across hosts; oversubscribed threads just share cores).
+    for &t in &[1usize, 2, 4] {
+        configs.push(Config {
+            name: match t {
+                1 => "scaling-pinned-t1",
+                2 => "scaling-pinned-t2",
+                _ => "scaling-pinned-t4",
+            },
+            pinned: true,
+            schedule: static_sched,
+            via_rebalance: false,
+            threads: t,
+        });
+    }
+
+    let mut table = Table::new(
+        "NUMA placement: SpMV throughput (CRS, Holstein-Hubbard)",
+        &["config", "schedule", "threads", "placement", "MFlop/s", "ns/nnz"],
+    );
+    let mut entries: Vec<String> = Vec::new();
+    let mut by_name: Vec<(&str, f64)> = Vec::new();
+    for cfg in &configs {
+        // Rebalance configs start from the static plan and re-home it
+        // onto the target schedule; the rest build on it directly.
+        let initial = if cfg.via_rebalance { static_sched } else { cfg.schedule };
+        let mut ctx = SpmvContext::builder_from_crs(&crs)
+            .policy(TuningPolicy::Fixed(Scheme::Crs, initial))
+            .threads(cfg.threads)
+            .pinned(cfg.pinned)
+            .build()
+            .expect("fixed context");
+        if cfg.via_rebalance {
+            ctx.rebalance(cfg.schedule);
+        }
+        // Self-validate before timing: placement must never change math.
+        let mut y = vec![0.0; n];
+        ctx.spmv(&x, &mut y);
+        assert_eq!(
+            max_abs_diff(&y_ref, &y),
+            0.0,
+            "{}: output deviates from serial CRS",
+            cfg.name
+        );
+        // Time the serving path (`ctx.spmv`): the kernel traffic runs on
+        // the plan's own workspace — the buffers first-touch placement
+        // actually homed — with the gather/scatter overhead identical
+        // across configurations. A caller-allocated permuted workspace
+        // would bypass the placement under test.
+        let r = b.run(&format!("numa/{}", cfg.name), nnz, 2 * nnz, || {
+            ctx.spmv(&x, &mut y);
+            y[0]
+        });
+        println!("{}", r.summary());
+        let placement = ctx.report().placement.summary();
+        table.row(vec![
+            cfg.name.into(),
+            ctx.schedule().name(),
+            cfg.threads.to_string(),
+            placement.clone(),
+            f(r.mflops()),
+            f(r.ns_per_item()),
+        ]);
+        by_name.push((cfg.name, r.mflops()));
+        entries.push(format!(
+            concat!(
+                "    {{\"matrix\": \"holstein-hubbard\", \"config\": \"{}\", ",
+                "\"schedule\": \"{}\", \"threads\": {}, \"pinned\": {}, ",
+                "\"first_touch\": {}, \"placement\": \"{}\", ",
+                "\"mflops\": {:.3}, \"ns_per_nnz\": {:.4}}}"
+            ),
+            cfg.name,
+            ctx.schedule().name(),
+            cfg.threads,
+            cfg.pinned,
+            ctx.plan().first_touched(),
+            placement,
+            r.mflops(),
+            r.ns_per_item(),
+        ));
+    }
+    table.print();
+
+    fn lookup(by_name: &[(&str, f64)], name: &str) -> f64 {
+        by_name.iter().find(|(n, _)| *n == name).map(|(_, m)| *m).unwrap_or(0.0)
+    }
+    let pin_gain =
+        lookup(&by_name, "pinned-static") / lookup(&by_name, "unpinned-static").max(1e-9);
+    let rebalance_gain =
+        lookup(&by_name, "pinned-rebalanced") / lookup(&by_name, "unpinned-dynamic").max(1e-9);
+    println!(
+        "pinned/unpinned static: {pin_gain:.3}x; rebalanced-pinned/unpinned dynamic: {rebalance_gain:.3}x"
+    );
+
+    let mut json = String::new();
+    let _ = writeln!(json, "{{");
+    let _ = writeln!(json, "  \"bench\": \"numa_placement\",");
+    let _ = writeln!(json, "  \"pin_supported\": {},", affinity::pin_supported());
+    let _ = writeln!(json, "  \"host_cpus\": {},", affinity::n_cpus());
+    let _ = writeln!(json, "  \"results\": [");
+    let _ = writeln!(json, "{}", entries.join(",\n"));
+    let _ = writeln!(json, "  ],");
+    let _ = writeln!(json, "  \"summary\": [");
+    let _ = writeln!(
+        json,
+        "    {{\"pinned_over_unpinned_static\": {pin_gain:.4}, \"rebalanced_over_unpinned_dynamic\": {rebalance_gain:.4}}}"
+    );
+    let _ = writeln!(json, "  ]");
+    let _ = writeln!(json, "}}");
+    write_bench_json("BENCH_numa.json", &json);
+}

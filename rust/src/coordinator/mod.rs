@@ -49,7 +49,11 @@ pub struct NativeExecutor {
 
 impl NativeExecutor {
     /// Wrap any tuned context as a batch executor — the scheme-generic
-    /// constructor every new consumer should use.
+    /// constructor every new consumer should use. NUMA deployments build
+    /// the context with `.pinned(true)` *inside* the service's
+    /// `make_executor` closure: it runs on the worker thread, so the
+    /// pinned engine and first-touched workspace belong to the thread
+    /// that will serve every batch.
     pub fn from_context(ctx: SpmvContext, max_batch: usize) -> Self {
         NativeExecutor { ctx, max_batch: max_batch.max(1) }
     }
@@ -479,6 +483,44 @@ mod tests {
             let y = svc.submit_wait(x.clone()).unwrap();
             ell.spmv_permuted(&x, &mut want);
             assert!(crate::util::stats::max_abs_diff(&y, &want) < 1e-12);
+        }
+    }
+
+    #[test]
+    fn service_over_pinned_context_executor() {
+        // NUMA-placed serving: the executor is built inside the worker
+        // thread with a pinned engine + first-touched plan, and results
+        // stay exact (on non-Linux the pin is a recorded no-op).
+        let h = gen::holstein_hubbard(&gen::HolsteinHubbardParams::tiny());
+        let crs = Crs::from_coo(&h);
+        let n = crs.nrows;
+        let svc = Service::start(
+            ServiceConfig { batch_window: Duration::from_micros(100) },
+            n,
+            move || {
+                let ctx = crate::tune::SpmvContext::builder_from_crs(&crs)
+                    .policy(TuningPolicy::Fixed(Scheme::Crs, Schedule::Static { chunk: None }))
+                    .threads(2)
+                    .pinned(true)
+                    .build()?;
+                assert!(ctx.plan().first_touched());
+                Ok(Box::new(NativeExecutor::from_context(ctx, 8)) as Box<dyn BatchExecutor>)
+            },
+        )
+        .unwrap();
+        let crs2 = Crs::from_coo(&h);
+        let mut rng = crate::util::rng::Rng::new(13);
+        let mut want = vec![0.0; n];
+        for _ in 0..3 {
+            let mut x = vec![0.0; n];
+            rng.fill_f64(&mut x, -1.0, 1.0);
+            let y = svc.submit_wait(x.clone()).unwrap();
+            crs2.spmv(&x, &mut want);
+            assert_eq!(
+                crate::util::stats::max_abs_diff(&y, &want),
+                0.0,
+                "pinned service deviates from serial CRS"
+            );
         }
     }
 

@@ -331,6 +331,35 @@ mod tests {
     }
 
     #[test]
+    fn pinned_first_touch_lanczos_matches_serial() {
+        // The solver's hot loop over a NUMA-placed context (pinned
+        // engine + first-touched workspace) must reproduce the serial
+        // result exactly — on non-Linux hosts the pin falls back to a
+        // recorded no-op and takes the same code path.
+        use crate::tune::{SpmvContext, TuningPolicy};
+        let h = gen::holstein_hubbard(&gen::HolsteinHubbardParams::tiny());
+        let crs = Crs::from_coo(&h);
+        let serial = lanczos(&crs, 1, &LanczosConfig::default());
+        let ctx = SpmvContext::builder_from_crs(&crs)
+            .policy(TuningPolicy::Heuristic)
+            .threads(4)
+            .quick(true)
+            .pinned(true)
+            .build()
+            .unwrap();
+        assert!(ctx.plan().first_touched());
+        let r = lanczos_with_context(&ctx, 1, &LanczosConfig::default());
+        assert!(r.converged);
+        assert!(
+            (r.eigenvalues[0] - serial.eigenvalues[0]).abs() < 1e-10,
+            "pinned ({}) {} vs serial {}",
+            ctx.report().placement.summary(),
+            r.eigenvalues[0],
+            serial.eigenvalues[0]
+        );
+    }
+
+    #[test]
     fn power_iteration_agrees_with_lanczos() {
         let m = Crs::from_coo(&gen::laplacian_1d(50));
         let lo = lanczos(&m, 1, &LanczosConfig::default()).eigenvalues[0];

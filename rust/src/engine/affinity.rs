@@ -1,0 +1,370 @@
+//! Thread→core affinity for the host engine (the paper's §5.2 NUMA
+//! lesson): first-touch page placement is only worth anything if worker
+//! *i* **stays** on the domain that touched partition *i*. This module
+//! pins engine threads with `sched_setaffinity` on Linux and degrades to
+//! a clean, reported no-op everywhere else — non-Linux builds compile
+//! and run unpinned, and the [`PinStatus`] they record says so.
+//!
+//! No `libc` crate is available offline; on Linux the three calls we
+//! need (`sched_setaffinity`, `sched_getaffinity`, `sched_getcpu`) are
+//! declared directly against the C library that `std` already links.
+
+/// How an [`crate::engine::Engine`] pool maps threads onto cores.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PinMode {
+    /// No pinning: threads roam wherever the OS scheduler puts them
+    /// (the pre-NUMA behavior, and the paper's dynamic-schedule hazard).
+    #[default]
+    Disabled,
+    /// Worker `tid` is pinned to CPU `tid % n_cpus`: a compact fill that
+    /// keeps partition owners on fixed cores, so the pages they
+    /// first-touch stay local for every later `execute`.
+    Compact,
+}
+
+impl PinMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            PinMode::Disabled => "unpinned",
+            PinMode::Compact => "compact",
+        }
+    }
+}
+
+/// Outcome of one thread's pin attempt, recorded per engine thread and
+/// surfaced through `TuningReport` so a tuned context can always say
+/// where its workers actually ran.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PinStatus {
+    /// Pinning was not requested for this pool.
+    Disabled,
+    /// The thread is bound to `cpu`.
+    Pinned { cpu: usize },
+    /// The platform has no thread-affinity syscall (non-Linux builds):
+    /// the request degrades to a no-op and execution stays correct.
+    Unsupported,
+    /// `sched_setaffinity` itself failed (e.g. a cgroup cpuset excludes
+    /// the requested CPU); the thread runs unpinned.
+    Failed { errno: i32 },
+}
+
+impl PinStatus {
+    pub fn label(&self) -> String {
+        match self {
+            PinStatus::Disabled => "unpinned".into(),
+            PinStatus::Pinned { cpu } => format!("cpu{cpu}"),
+            PinStatus::Unsupported => "unsupported".into(),
+            PinStatus::Failed { errno } => format!("failed(errno {errno})"),
+        }
+    }
+}
+
+/// Realized placement of an engine pool: the requested mode plus the
+/// per-thread outcomes (index = engine thread id, 0 = the caller).
+#[derive(Debug, Clone)]
+pub struct PinReport {
+    pub mode: PinMode,
+    pub per_thread: Vec<PinStatus>,
+}
+
+impl PinReport {
+    pub fn unpinned(n_threads: usize) -> Self {
+        PinReport { mode: PinMode::Disabled, per_thread: vec![PinStatus::Disabled; n_threads] }
+    }
+
+    /// Did every thread land on its requested CPU?
+    pub fn all_pinned(&self) -> bool {
+        self.mode != PinMode::Disabled
+            && self
+                .per_thread
+                .iter()
+                .all(|s| matches!(s, PinStatus::Pinned { .. }))
+    }
+
+    /// One-line summary for reports: `compact: cpu0 cpu1 cpu2 cpu3`.
+    pub fn summary(&self) -> String {
+        let threads: Vec<String> = self.per_thread.iter().map(|s| s.label()).collect();
+        format!("{}: {}", self.mode.name(), threads.join(" "))
+    }
+}
+
+/// Does this build have a real thread-affinity syscall?
+pub fn pin_supported() -> bool {
+    cfg!(target_os = "linux")
+}
+
+/// Online CPUs visible to this process (>= 1).
+pub fn n_cpus() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// The compact-mode CPU for engine thread `tid`.
+pub fn cpu_for(tid: usize, n_cpus: usize) -> usize {
+    tid % n_cpus.max(1)
+}
+
+#[cfg(target_os = "linux")]
+mod sys {
+    use super::PinStatus;
+
+    /// Matches glibc's fixed 1024-bit `cpu_set_t`.
+    const CPU_SET_WORDS: usize = 1024 / (usize::BITS as usize);
+    pub type CpuSet = [usize; CPU_SET_WORDS];
+
+    extern "C" {
+        fn sched_setaffinity(pid: i32, cpusetsize: usize, mask: *const usize) -> i32;
+        fn sched_getaffinity(pid: i32, cpusetsize: usize, mask: *mut usize) -> i32;
+        fn sched_getcpu() -> i32;
+        fn __errno_location() -> *mut i32;
+    }
+
+    fn errno() -> i32 {
+        unsafe { *__errno_location() }
+    }
+
+    pub fn pin_current_thread(cpu: usize) -> PinStatus {
+        let mut set: CpuSet = [0; CPU_SET_WORDS];
+        let word = cpu / usize::BITS as usize;
+        if word >= CPU_SET_WORDS {
+            return PinStatus::Failed { errno: 0 };
+        }
+        set[word] |= 1usize << (cpu % usize::BITS as usize);
+        // pid 0 = the calling thread (per sched_setaffinity(2), the call
+        // affects a single thread, not the whole process).
+        let r = unsafe {
+            sched_setaffinity(0, std::mem::size_of::<CpuSet>(), set.as_ptr())
+        };
+        if r == 0 {
+            PinStatus::Pinned { cpu }
+        } else {
+            PinStatus::Failed { errno: errno() }
+        }
+    }
+
+    /// The calling thread's current affinity mask, for restore-on-drop.
+    pub fn get_affinity() -> Option<CpuSet> {
+        let mut set: CpuSet = [0; CPU_SET_WORDS];
+        let r = unsafe {
+            sched_getaffinity(0, std::mem::size_of::<CpuSet>(), set.as_mut_ptr())
+        };
+        if r == 0 {
+            Some(set)
+        } else {
+            None
+        }
+    }
+
+    pub fn set_affinity(set: &CpuSet) -> bool {
+        unsafe { sched_setaffinity(0, std::mem::size_of::<CpuSet>(), set.as_ptr()) == 0 }
+    }
+
+    pub fn current_cpu() -> Option<usize> {
+        let c = unsafe { sched_getcpu() };
+        if c >= 0 {
+            Some(c as usize)
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(not(target_os = "linux"))]
+mod sys {
+    use super::PinStatus;
+
+    /// Placeholder so the restore-on-drop plumbing typechecks off-Linux.
+    pub type CpuSet = [usize; 0];
+
+    pub fn pin_current_thread(_cpu: usize) -> PinStatus {
+        PinStatus::Unsupported
+    }
+
+    pub fn get_affinity() -> Option<CpuSet> {
+        None
+    }
+
+    pub fn set_affinity(_set: &CpuSet) -> bool {
+        false
+    }
+
+    pub fn current_cpu() -> Option<usize> {
+        None
+    }
+}
+
+/// Bind the calling thread to `cpu`. On non-Linux targets this is a
+/// no-op that reports [`PinStatus::Unsupported`].
+pub fn pin_current_thread(cpu: usize) -> PinStatus {
+    sys::pin_current_thread(cpu)
+}
+
+/// CPU the calling thread is currently running on (`None` off-Linux).
+pub fn current_cpu() -> Option<usize> {
+    sys::current_cpu()
+}
+
+std::thread_local! {
+    /// Per-thread (original mask, live guard count). Only the **first**
+    /// guard on a thread snapshots the mask and only the **last** one
+    /// restores it: a nested pinned engine (e.g. `replanned` while the
+    /// parent context is alive) would otherwise snapshot the
+    /// already-pinned mask and "restore" the confinement on drop.
+    static SAVED_MASK: std::cell::RefCell<(Option<sys::CpuSet>, usize)> =
+        const { std::cell::RefCell::new((None, 0)) };
+}
+
+/// Saved affinity of the calling thread, restored when the last live
+/// guard on that thread drops. The engine pins the *caller* (it
+/// executes partition 0), and dropping the engine must not leave the
+/// application's main thread stuck on one core.
+///
+/// Restoration is per-thread state: a guard dropped on a different
+/// thread than it was created on is a no-op there (never a wrong
+/// restore), at the cost of leaving the origin thread pinned.
+pub struct AffinityGuard {
+    active: bool,
+    /// Thread the guard registered on: a guard dropped on any other
+    /// thread must not touch that thread's nesting count (it would
+    /// prematurely restore a mask belonging to someone else's guard).
+    owner: std::thread::ThreadId,
+}
+
+impl AffinityGuard {
+    /// Register a pinning guard, capturing the thread's affinity if it
+    /// is the outermost one.
+    pub fn save() -> Self {
+        SAVED_MASK.with(|s| {
+            let mut s = s.borrow_mut();
+            if s.1 == 0 {
+                s.0 = sys::get_affinity();
+            }
+            s.1 += 1;
+        });
+        AffinityGuard { active: true, owner: std::thread::current().id() }
+    }
+
+    /// A guard that restores nothing (unpinned engines).
+    pub fn noop() -> Self {
+        AffinityGuard { active: false, owner: std::thread::current().id() }
+    }
+}
+
+impl Drop for AffinityGuard {
+    fn drop(&mut self) {
+        if !self.active || std::thread::current().id() != self.owner {
+            // Foreign-thread drop (a pinned Engine moved across
+            // threads): never a wrong restore; the origin thread simply
+            // stays pinned.
+            return;
+        }
+        SAVED_MASK.with(|s| {
+            let mut s = s.borrow_mut();
+            s.1 -= 1;
+            if s.1 == 0 {
+                if let Some(set) = s.0.take() {
+                    let _ = sys::set_affinity(&set);
+                }
+            }
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pin_support_matches_platform() {
+        assert_eq!(pin_supported(), cfg!(target_os = "linux"));
+    }
+
+    #[test]
+    fn cpu_for_wraps_compactly() {
+        assert_eq!(cpu_for(0, 4), 0);
+        assert_eq!(cpu_for(3, 4), 3);
+        assert_eq!(cpu_for(5, 4), 1);
+        assert_eq!(cpu_for(7, 1), 0);
+        assert_eq!(cpu_for(2, 0), 0); // degenerate count clamps
+    }
+
+    #[test]
+    fn pin_current_thread_reports_platform_truthfully() {
+        let saved = AffinityGuard::save();
+        let status = pin_current_thread(0);
+        if pin_supported() {
+            // CPU 0 may legitimately be excluded by a cpuset; accept
+            // either outcome but never the `Unsupported` lie.
+            assert!(
+                matches!(status, PinStatus::Pinned { cpu: 0 } | PinStatus::Failed { .. }),
+                "Linux pin attempt reported {status:?}"
+            );
+            if status == (PinStatus::Pinned { cpu: 0 }) {
+                // After a successful pin, the thread must in fact be on 0.
+                assert_eq!(current_cpu(), Some(0));
+            }
+        } else {
+            assert_eq!(status, PinStatus::Unsupported);
+            assert_eq!(current_cpu(), None);
+        }
+        drop(saved); // restore the test runner's mask
+    }
+
+    #[test]
+    fn affinity_guard_restores_mask() {
+        if !pin_supported() {
+            return; // nothing to save/restore off-Linux
+        }
+        let before = sys::get_affinity().expect("read affinity");
+        {
+            let _guard = AffinityGuard::save();
+            let _ = pin_current_thread(0);
+        }
+        let after = sys::get_affinity().expect("read affinity");
+        assert_eq!(before, after, "guard must restore the original mask");
+    }
+
+    #[test]
+    fn nested_guards_restore_the_outermost_mask() {
+        if !pin_supported() {
+            return;
+        }
+        // A second pinned engine while the first is alive (e.g. a
+        // `replanned` context) must not adopt the already-pinned mask.
+        let before = sys::get_affinity().expect("read affinity");
+        {
+            let _outer = AffinityGuard::save();
+            let _ = pin_current_thread(0);
+            {
+                let _inner = AffinityGuard::save();
+                let _ = pin_current_thread(0);
+            }
+            // inner dropped: still confined (outer is alive) — that is
+            // the correct intermediate state, not a restore point.
+        }
+        let after = sys::get_affinity().expect("read affinity");
+        assert_eq!(before, after, "only the outermost guard restores");
+    }
+
+    #[test]
+    fn pin_report_summary_reads_well() {
+        let r = PinReport {
+            mode: PinMode::Compact,
+            per_thread: vec![
+                PinStatus::Pinned { cpu: 0 },
+                PinStatus::Pinned { cpu: 1 },
+                PinStatus::Failed { errno: 22 },
+            ],
+        };
+        assert!(!r.all_pinned());
+        let s = r.summary();
+        assert!(s.contains("compact"));
+        assert!(s.contains("cpu0"));
+        assert!(s.contains("errno 22"));
+        let ok = PinReport {
+            mode: PinMode::Compact,
+            per_thread: vec![PinStatus::Pinned { cpu: 0 }],
+        };
+        assert!(ok.all_pinned());
+        assert!(!PinReport::unpinned(2).all_pinned());
+    }
+}

@@ -22,6 +22,8 @@
 //! reference for every scheme under every schedule — floating-point
 //! reproducibility is a property of the plan, not of thread timing.
 
+pub mod affinity;
+
 use std::sync::mpsc;
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
@@ -30,6 +32,8 @@ use crate::eigen::LinearOp;
 use crate::kernels::{SpmvKernel, Workspace};
 use crate::matrix::Scheme;
 use crate::sched::{assign, Assignment, Schedule};
+
+use affinity::{AffinityGuard, PinMode, PinReport, PinStatus};
 
 /// Completion latch: `run` waits until every dispatched job finished.
 /// `poisoned` records whether any job panicked.
@@ -93,20 +97,57 @@ struct Job {
 pub struct Engine {
     senders: Vec<mpsc::Sender<Job>>,
     workers: Vec<JoinHandle<()>>,
+    /// Realized thread→core placement (index = engine thread id).
+    pin: PinReport,
+    /// Restores the caller's affinity mask when the pool is dropped —
+    /// pinning the engine must not permanently confine the main thread.
+    _caller_affinity: AffinityGuard,
 }
 
 impl Engine {
     pub fn new(n_threads: usize) -> Self {
+        Self::with_pinning(n_threads, PinMode::Disabled)
+    }
+
+    /// An engine whose threads are pinned per `mode`. The **calling
+    /// thread is pinned too** (it executes partition 0, exactly like an
+    /// OpenMP master under `OMP_PROC_BIND`); its previous affinity mask
+    /// is restored when the engine is dropped. On platforms without
+    /// `sched_setaffinity` the request degrades to a recorded no-op —
+    /// see [`Engine::pin_report`].
+    pub fn with_pinning(n_threads: usize, mode: PinMode) -> Self {
         assert!(n_threads > 0, "engine needs at least one thread");
+        let n_cpus = affinity::n_cpus();
+        let (caller_guard, caller_status) = match mode {
+            PinMode::Disabled => (AffinityGuard::noop(), PinStatus::Disabled),
+            PinMode::Compact => {
+                let guard = AffinityGuard::save();
+                (guard, affinity::pin_current_thread(affinity::cpu_for(0, n_cpus)))
+            }
+        };
         let n_workers = n_threads - 1;
         let mut senders = Vec::with_capacity(n_workers);
         let mut workers = Vec::with_capacity(n_workers);
+        let mut statuses = vec![caller_status];
+        let (pin_tx, pin_rx) = mpsc::channel::<(usize, PinStatus)>();
         for w in 0..n_workers {
             let (tx, rx) = mpsc::channel::<Job>();
             senders.push(tx);
+            let tid = w + 1;
+            let pin_tx = pin_tx.clone();
             let handle = std::thread::Builder::new()
-                .name(format!("spmv-engine-{}", w + 1))
+                .name(format!("spmv-engine-{tid}"))
                 .spawn(move || {
+                    // Pin before the first job so even the first-touch
+                    // pass of a fresh plan runs on the final core.
+                    let status = match mode {
+                        PinMode::Disabled => PinStatus::Disabled,
+                        PinMode::Compact => {
+                            affinity::pin_current_thread(affinity::cpu_for(tid, n_cpus))
+                        }
+                    };
+                    let _ = pin_tx.send((tid, status));
+                    drop(pin_tx);
                     for job in rx {
                         // Contain panics so the worker survives, the
                         // dispatcher never deadlocks, and the failure is
@@ -123,7 +164,23 @@ impl Engine {
                 .expect("spawning engine worker");
             workers.push(handle);
         }
-        Engine { senders, workers }
+        drop(pin_tx);
+        statuses.resize(n_threads, PinStatus::Disabled);
+        for _ in 0..n_workers {
+            let (tid, status) = pin_rx.recv().expect("engine worker died before reporting pin");
+            statuses[tid] = status;
+        }
+        Engine {
+            senders,
+            workers,
+            pin: PinReport { mode, per_thread: statuses },
+            _caller_affinity: caller_guard,
+        }
+    }
+
+    /// Where each engine thread is (or is not) pinned.
+    pub fn pin_report(&self) -> &PinReport {
+        &self.pin
     }
 
     /// An engine sized to the host (capped — SpMV saturates memory
@@ -148,7 +205,9 @@ impl Engine {
         let fr: &(dyn Fn(usize) + Sync) = &f;
         // Safety: `latch.wait()` below blocks until every worker dropped
         // its job guard, so the erased borrow cannot outlive `f`.
-        let fr: &'static (dyn Fn(usize) + Sync) = unsafe { std::mem::transmute(fr) };
+        let fr = unsafe {
+            std::mem::transmute::<&(dyn Fn(usize) + Sync), &'static (dyn Fn(usize) + Sync)>(fr)
+        };
         for (i, tx) in self.senders.iter().enumerate() {
             let job = Job { f: fr, tid: i + 1, done: latch.clone() };
             if let Err(mpsc::SendError(job)) = tx.send(job) {
@@ -302,11 +361,25 @@ pub struct SpmvPlan {
     ranges: Vec<Vec<(usize, usize)>>,
     /// Preallocated workspace for the original-basis `execute` path.
     ws: Mutex<Workspace>,
+    /// Whether the workspace pages were first-touched by their owning
+    /// engine threads (NUMA placement) rather than by the building
+    /// thread.
+    first_touched: bool,
 }
 
 impl SpmvPlan {
     /// Plan `kernel` for `schedule` on `n_threads` threads.
     pub fn new(kernel: &SpmvKernel, schedule: Schedule, n_threads: usize) -> Self {
+        let mut plan = Self::skeleton(kernel, schedule, n_threads);
+        let n = plan.nrows;
+        plan.ws = Mutex::new(Workspace { xp: vec![0.0; n], yp: vec![0.0; n] });
+        plan
+    }
+
+    /// Everything but a usable workspace — `new` fills it on the calling
+    /// thread, `new_first_touch` has the owning workers place it instead
+    /// (no throwaway caller-touched allocation in between).
+    fn skeleton(kernel: &SpmvKernel, schedule: Schedule, n_threads: usize) -> Self {
         assert!(n_threads > 0);
         let nrows = kernel.nrows();
         let weights = kernel.row_weights();
@@ -321,8 +394,115 @@ impl SpmvPlan {
             assignment,
             weights,
             ranges,
-            ws: Mutex::new(Workspace { xp: vec![0.0; nrows], yp: vec![0.0; nrows] }),
+            ws: Mutex::new(Workspace { xp: Vec::new(), yp: Vec::new() }),
+            first_touched: false,
         }
+    }
+
+    /// Plan `kernel` on the engine's thread count with **NUMA
+    /// first-touch placement**: the permuted-basis workspace pages are
+    /// touched by the engine thread that owns them under the exact
+    /// assignment [`SpmvPlan::execute`] replays, so on a first-touch OS
+    /// (Linux) each partition's pages home on the owning thread's
+    /// domain. A second pass streams every thread's own rows of the
+    /// kernel's `val`/`col_idx` arrays in kernel order, pre-faulting and
+    /// warming them from the owning core. Pair with a pinned engine
+    /// ([`Engine::with_pinning`]) — placement is meaningless if workers
+    /// migrate afterwards.
+    pub fn new_first_touch(kernel: &SpmvKernel, schedule: Schedule, engine: &Engine) -> Self {
+        let mut plan = Self::skeleton(kernel, schedule, engine.n_threads());
+        plan.first_touch(engine, kernel);
+        plan
+    }
+
+    /// Re-partition this plan for a (possibly) new schedule on `engine`'s
+    /// thread count and **re-home** the workspace: fresh pages are
+    /// first-touched under the new assignment. This is the host-side
+    /// answer to the paper's §5.2 hazard — after a schedule or thread
+    /// count change, rows would otherwise keep being served from pages
+    /// homed for the *old* owners, turning local traffic remote.
+    pub fn rebalance(&mut self, engine: &Engine, kernel: &SpmvKernel, schedule: Schedule) {
+        assert_eq!(kernel.nrows(), self.nrows, "rebalance got a different kernel");
+        assert_eq!(kernel.scheme(), self.scheme, "rebalance got a different scheme");
+        let n_threads = engine.n_threads();
+        self.schedule = schedule;
+        self.n_threads = n_threads;
+        self.assignment = assign(schedule, self.nrows, &self.weights, n_threads);
+        self.ranges = (0..n_threads).map(|t| self.assignment.ranges_of(t as u16)).collect();
+        self.first_touch(engine, kernel);
+    }
+
+    /// Were the workspace pages first-touched by their owning threads?
+    pub fn first_touched(&self) -> bool {
+        self.first_touched
+    }
+
+    /// First-touch the plan's workspace under the current assignment and
+    /// stream the kernel's own rows from each owner. Two engine passes:
+    ///
+    /// 1. every thread zero-fills its chunks of freshly allocated
+    ///    (never-written) `xp`/`yp` buffers — the defining first touch
+    ///    that homes those pages on the toucher's domain;
+    /// 2. every thread runs its range-restricted kernel over the
+    ///    now-zero input, touching exactly its rows' `val`/`col_idx` in
+    ///    the order `execute` will replay.
+    ///
+    /// Already-resident matrix pages cannot be re-homed this way (that
+    /// would need `migrate_pages(2)`); the workspace, which is allocated
+    /// here, is placed for real, and the matrix pass still prefaults and
+    /// warms the owner's caches/TLB.
+    #[allow(clippy::uninit_vec)] // the tiling check below proves every index is written once
+    fn first_touch(&mut self, engine: &Engine, kernel: &SpmvKernel) {
+        let n = self.nrows;
+        let ranges = std::mem::take(&mut self.ranges);
+        // `set_len` below is only sound if pass 1 writes EVERY element
+        // exactly once, so prove the chunk set tiles [0, n): sorted,
+        // each chunk must start where the previous ended. (A mere
+        // sum-of-lengths check would accept overlapping chunks that
+        // leave holes of uninitialized memory.)
+        let mut spans: Vec<(usize, usize)> =
+            ranges.iter().flatten().copied().filter(|&(a, b)| a < b).collect();
+        spans.sort_unstable();
+        let mut pos = 0;
+        for &(a, b) in &spans {
+            assert!(
+                a == pos && b <= n,
+                "partitions must tile [0, {n}) exactly to first-touch the workspace \
+                 (chunk ({a}, {b}) after position {pos})"
+            );
+            pos = b;
+        }
+        assert_eq!(pos, n, "partitions must cover every row to first-touch the workspace");
+        let mut xp: Vec<f64> = Vec::with_capacity(n);
+        let mut yp: Vec<f64> = Vec::with_capacity(n);
+        {
+            let bases = [SendPtr(xp.as_mut_ptr()), SendPtr(yp.as_mut_ptr())];
+            let bases = &bases;
+            let ranges_ref = &ranges;
+            engine.run(|t| {
+                for &(a, b) in &ranges_ref[t] {
+                    for base in bases {
+                        // Safety: chunks are disjoint across threads and
+                        // within capacity; each index has one writer.
+                        unsafe { std::ptr::write_bytes(base.0.add(a), 0, b - a) };
+                    }
+                }
+            });
+            // Safety: the tiling check above proves the chunks partition
+            // [0, n) with no overlap and no hole, so every element of
+            // both buffers was initialized by exactly one thread.
+            unsafe {
+                xp.set_len(n);
+                yp.set_len(n);
+            }
+        }
+        engine.run_chunks(&ranges, &mut yp, |a, b, out| {
+            kernel.spmv_rows_permuted(a, b, &xp, out);
+        });
+        // x was all-zero, so yp is zero again: same state `new` leaves.
+        self.ranges = ranges;
+        self.ws = Mutex::new(Workspace { xp, yp });
+        self.first_touched = true;
     }
 
     /// Chunks owned by thread `t`, in dispatch order.
@@ -677,6 +857,127 @@ mod tests {
         let engine = Engine::new(2);
         let plan = SpmvPlan::new(&kernel, Schedule::Static { chunk: None }, 2);
         assert!(plan.execute_batch(&engine, &kernel, &[]).is_empty());
+    }
+
+    #[test]
+    fn pinned_engine_reports_placement() {
+        let engine = Engine::with_pinning(3, PinMode::Compact);
+        let r = engine.pin_report();
+        assert_eq!(r.mode, PinMode::Compact);
+        assert_eq!(r.per_thread.len(), 3);
+        for (tid, s) in r.per_thread.iter().enumerate() {
+            if affinity::pin_supported() {
+                assert!(
+                    matches!(s, PinStatus::Pinned { .. } | PinStatus::Failed { .. }),
+                    "thread {tid}: Linux pin attempt reported {s:?}"
+                );
+            } else {
+                assert_eq!(*s, PinStatus::Unsupported, "thread {tid}");
+            }
+        }
+        // An unpinned engine records that nothing was requested.
+        let plain = Engine::new(2);
+        assert_eq!(plain.pin_report().mode, PinMode::Disabled);
+        assert!(plain.pin_report().per_thread.iter().all(|s| *s == PinStatus::Disabled));
+    }
+
+    /// The ISSUE-3 invariant: parallel output stays bit-identical to the
+    /// serial kernels across schemes × schedules × pinning on/off, with
+    /// first-touch placement, on every platform (non-Linux pinning falls
+    /// back to a no-op and must change nothing).
+    #[test]
+    fn first_touch_pinned_identical_to_serial_all_schemes_schedules() {
+        let mut rng = Rng::new(76);
+        let n = 160;
+        let coo = random_coo(&mut rng, n, n * 6);
+        let mut x = vec![0.0; n];
+        rng.fill_f64(&mut x, -1.0, 1.0);
+        for pin in [PinMode::Disabled, PinMode::Compact] {
+            let engine = Engine::with_pinning(4, pin);
+            for scheme in Scheme::all_extended(16, 3, 8, 32) {
+                let kernel = SpmvKernel::build(&coo, scheme);
+                let mut y_serial = vec![0.0; n];
+                kernel.spmv(&x, &mut y_serial);
+                for schedule in schedules() {
+                    let plan = SpmvPlan::new_first_touch(&kernel, schedule, &engine);
+                    assert!(plan.first_touched());
+                    let mut y_par = vec![0.0; n];
+                    plan.execute(&engine, &kernel, &x, &mut y_par);
+                    assert_eq!(
+                        max_abs_diff(&y_serial, &y_par),
+                        0.0,
+                        "{scheme} × {} × pin {}: first-touch plan deviates from serial",
+                        schedule.name(),
+                        pin.name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rebalance_repartitions_and_stays_bit_identical() {
+        let mut rng = Rng::new(77);
+        let n = 211;
+        let coo = random_coo(&mut rng, n, n * 7);
+        let mut x = vec![0.0; n];
+        rng.fill_f64(&mut x, -1.0, 1.0);
+        for pin in [PinMode::Disabled, PinMode::Compact] {
+            let engine = Engine::with_pinning(4, pin);
+            for scheme in [Scheme::Crs, Scheme::SellCs { c: 8, sigma: 32 }] {
+                let kernel = SpmvKernel::build(&coo, scheme);
+                let mut want = vec![0.0; n];
+                kernel.spmv(&x, &mut want);
+                let mut plan =
+                    SpmvPlan::new_first_touch(&kernel, Schedule::Static { chunk: None }, &engine);
+                let before: Vec<Vec<(usize, usize)>> =
+                    (0..4).map(|t| plan.ranges_of(t).to_vec()).collect();
+                let mut got = vec![0.0; n];
+                plan.execute(&engine, &kernel, &x, &mut got);
+                assert_eq!(max_abs_diff(&want, &got), 0.0, "{scheme}: pre-rebalance");
+                for schedule in [
+                    Schedule::Dynamic { chunk: 9 },
+                    Schedule::Guided { min_chunk: 3 },
+                    Schedule::Static { chunk: Some(5) },
+                ] {
+                    plan.rebalance(&engine, &kernel, schedule);
+                    assert_eq!(plan.schedule, schedule);
+                    assert!(plan.first_touched());
+                    let after: Vec<Vec<(usize, usize)>> =
+                        (0..4).map(|t| plan.ranges_of(t).to_vec()).collect();
+                    assert_ne!(before, after, "{scheme}: {} must re-partition", schedule.name());
+                    let mut got = vec![0.0; n];
+                    plan.execute(&engine, &kernel, &x, &mut got);
+                    assert_eq!(
+                        max_abs_diff(&want, &got),
+                        0.0,
+                        "{scheme} × {} × pin {}: rebalanced plan deviates",
+                        schedule.name(),
+                        pin.name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rebalance_adapts_to_a_different_engine_size() {
+        let mut rng = Rng::new(78);
+        let coo = random_coo(&mut rng, 150, 900);
+        let kernel = SpmvKernel::build(&coo, Scheme::Crs);
+        let e4 = Engine::new(4);
+        let mut plan = SpmvPlan::new_first_touch(&kernel, Schedule::Static { chunk: None }, &e4);
+        assert_eq!(plan.n_threads, 4);
+        let e2 = Engine::new(2);
+        plan.rebalance(&e2, &kernel, Schedule::Dynamic { chunk: 16 });
+        assert_eq!(plan.n_threads, 2);
+        let mut x = vec![0.0; 150];
+        rng.fill_f64(&mut x, -1.0, 1.0);
+        let mut want = vec![0.0; 150];
+        kernel.spmv(&x, &mut want);
+        let mut got = vec![0.0; 150];
+        plan.execute(&e2, &kernel, &x, &mut got);
+        assert_eq!(max_abs_diff(&want, &got), 0.0);
     }
 
     #[test]

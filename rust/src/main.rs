@@ -6,10 +6,12 @@
 //! spmvperf simulate   [--machine nehalem] [--scheme crs|nbjds:1000|...]
 //!                     [--threads-per-socket T] [--sockets S] [--schedule static|dynamic,C]
 //! spmvperf predict    [--machine nehalem] — perf-model prediction per scheme
-//! spmvperf tune       [--policy heuristic|measured|fixed] [--threads T]
+//! spmvperf tune       [--policy heuristic|measured|fixed] [--threads T] [--pin|--no-pin]
 //!                     [--machine nehalem] [--quick] — auto-tuned SpmvContext + report
 //! spmvperf lanczos    [--sites 6 --electrons 3 --max-phonons 4] [--eigenvalues 1]
-//!                     [--threads T] [--scheme auto|crs|sellcs:32:256|...]
+//!                     [--threads T] [--pin|--no-pin] [--scheme auto|crs|sellcs:32:256|...]
+//! spmvperf benchdiff  <baseline.json> <current.json> [--tolerance 0.2]
+//!                     — BENCH_*.json regression gate (CI)
 //! spmvperf serve      [--requests 64 --batch-window-us 500] — PJRT service demo
 //! spmvperf matrix     [--out FILE.mtx] — generate + analyze the test matrix
 //! spmvperf info       — platform, machines, artifacts
@@ -46,6 +48,7 @@ fn run() -> Result<()> {
         "predict" => cmd_predict(&args),
         "tune" => cmd_tune(&args),
         "lanczos" => cmd_lanczos(&args),
+        "benchdiff" => cmd_benchdiff(&mut args),
         "serve" => cmd_serve(&args),
         "matrix" => cmd_matrix(&args),
         "info" => cmd_info(&args),
@@ -67,9 +70,11 @@ USAGE:
   spmvperf predict    [--machine nehalem] [--block 1000]
   spmvperf tune       [--policy heuristic|measured|fixed] [--scheme sellcs:32:256]
                       [--schedule static] [--threads 4] [--machine nehalem]
-                      [--quick|--full]
+                      [--pin|--no-pin] [--quick|--full]
   spmvperf lanczos    [--sites 6 --electrons 3 --max-phonons 4 --eigenvalues 1]
-                      [--threads T] [--scheme auto|crs|sellcs:32:256] [--quick]
+                      [--threads T] [--pin|--no-pin] [--scheme auto|crs|sellcs:32:256]
+                      [--quick]
+  spmvperf benchdiff  <baseline.json> <current.json> [--tolerance 0.2]
   spmvperf serve      [--requests 64 --batch-window-us 500]
   spmvperf matrix     [--out FILE.mtx] [--full|--quick]
   spmvperf info
@@ -82,6 +87,16 @@ fn machines_from(args: &Args) -> Result<Vec<MachineSpec>> {
     } else {
         names.iter().map(|n| MachineSpec::by_name(n)).collect()
     }
+}
+
+/// `--pin` / `--no-pin` (default: unpinned). Both spellings exist so
+/// scripts can be explicit about either choice; combining them is an
+/// error rather than a silent priority rule.
+fn pin_flag(args: &Args) -> Result<bool> {
+    let pin = args.flag("pin");
+    let no_pin = args.flag("no-pin");
+    anyhow::ensure!(!(pin && no_pin), "--pin and --no-pin are mutually exclusive");
+    Ok(pin)
 }
 
 fn exp_options(args: &Args) -> Result<ExpOptions> {
@@ -184,6 +199,7 @@ fn cmd_predict(args: &Args) -> Result<()> {
 fn cmd_tune(args: &Args) -> Result<()> {
     let quick = args.flag("quick");
     let full = args.flag("full");
+    let pin = pin_flag(args)?;
     let policy_name = args.get_str("policy", "heuristic");
     let threads = args.get_usize("threads", 4)?.max(1);
     let machine_arg = args.get("machine").map(str::to_string);
@@ -240,6 +256,7 @@ fn cmd_tune(args: &Args) -> Result<()> {
         .threads(threads)
         .machine(machine)
         .quick(quick)
+        .pinned(pin)
         .build()?;
     let tune_time = t0.elapsed();
     for t in ctx.report().tables() {
@@ -257,13 +274,14 @@ fn cmd_tune(args: &Args) -> Result<()> {
     ctx.spmv(&x, &mut y);
     let err = spmvperf::util::stats::max_abs_diff(&y_ref, &y);
     anyhow::ensure!(err < 1e-12, "tuned context deviates from serial CRS by {err:.2e}");
-    // Quick throughput sample of the tuned pick.
-    let mut ws = ctx.kernel().workspace(&x);
+    // Quick throughput sample of the tuned pick, through the serving
+    // path so a pinned context's first-touched workspace is what is
+    // actually exercised.
     let reps = if quick { 5 } else { 20 };
     let t0 = std::time::Instant::now();
     for _ in 0..reps {
-        ctx.spmv_permuted(&ws.xp, &mut ws.yp);
-        std::hint::black_box(ws.yp[0]);
+        ctx.spmv(&x, &mut y);
+        std::hint::black_box(y[0]);
     }
     let dt = t0.elapsed().as_secs_f64() / reps as f64;
     let mut t = Table::new("tuned context", &["metric", "value"]);
@@ -292,6 +310,7 @@ fn cmd_lanczos(args: &Args) -> Result<()> {
     let n_eigs = args.get_usize("eigenvalues", 1)?;
     let iters = args.get_usize("iters", 300)?;
     let threads = args.get_usize("threads", 1)?.max(1);
+    let pin = pin_flag(args)?;
     let scheme_arg = args.get_str("scheme", "crs");
     let quick = args.flag("quick");
     args.finish()?;
@@ -311,7 +330,11 @@ fn cmd_lanczos(args: &Args) -> Result<()> {
         .policy(policy)
         .threads(threads)
         .quick(quick)
+        .pinned(pin)
         .build()?;
+    if pin {
+        eprintln!("placement: {}", ctx.report().placement.summary());
+    }
     if scheme_arg == "auto" {
         eprintln!("auto-tuned scheme: {} ({})", ctx.scheme().name(), ctx.schedule().name());
         for t in ctx.report().tables() {
@@ -337,6 +360,29 @@ fn cmd_lanczos(args: &Args) -> Result<()> {
         f(2.0 * crs.nnz() as f64 * r.spmv_count as f64 / dt.as_secs_f64() / 1e6),
     ]);
     t.print();
+    Ok(())
+}
+
+/// `spmvperf benchdiff` — compare a freshly generated `BENCH_*.json`
+/// against the committed baseline and fail (exit 1) when any entry's
+/// GFlop/s regressed past the tolerance. CI runs this as a blocking
+/// step after the quick bench trajectory.
+fn cmd_benchdiff(args: &mut Args) -> Result<()> {
+    let baseline = args.take_subcommand().context("baseline BENCH_*.json path required")?;
+    let current = args.take_subcommand().context("current BENCH_*.json path required")?;
+    let tolerance = args.get_f64("tolerance", 0.20)?;
+    args.finish()?;
+    anyhow::ensure!(
+        (0.0..1.0).contains(&tolerance),
+        "--tolerance must be a fraction in [0, 1), got {tolerance}"
+    );
+    let ok = spmvperf::util::bench::compare_bench_files(
+        std::path::Path::new(&baseline),
+        std::path::Path::new(&current),
+        tolerance,
+    )?;
+    anyhow::ensure!(ok, "bench regression gate failed ({baseline} vs {current})");
+    println!("bench trajectory OK within {:.0}% of baseline", tolerance * 100.0);
     Ok(())
 }
 

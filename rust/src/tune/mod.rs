@@ -44,6 +44,7 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::analysis::StrideDistribution;
+use crate::engine::affinity::{PinMode, PinReport};
 use crate::engine::{Engine, SpmvPlan};
 use crate::kernels::SpmvKernel;
 use crate::matrix::{Coo, Crs, Scheme, SpMv};
@@ -89,6 +90,41 @@ pub struct CandidateReport {
     pub chosen: bool,
 }
 
+/// The NUMA placement a context was built with: whether pinning was
+/// requested, where the engine threads actually landed, and whether the
+/// plan's workspace pages were first-touched by their owners. Folded
+/// into [`TuningReport`] so every tuned context documents its placement
+/// the same way it documents its scheme choice (paper §5.2: the two are
+/// one decision).
+#[derive(Debug, Clone)]
+pub struct PlacementDecision {
+    /// Caller asked for NUMA placement (pinning + first touch).
+    pub pin_requested: bool,
+    /// Realized per-thread pinning, once the engine exists. `None` for
+    /// unpinned contexts whose engine is still lazy.
+    pub pin: Option<PinReport>,
+    /// Workspace pages first-touched by their owning engine threads.
+    pub first_touch: bool,
+}
+
+impl PlacementDecision {
+    /// Pinning and first touch are reported independently: an unpinned
+    /// context that went through `rebalance()` has owner-touched (but
+    /// unpinned, hence migratable) workspace pages, and the summary
+    /// must say so rather than claim calling-thread placement.
+    pub fn summary(&self) -> String {
+        let pin = if !self.pin_requested {
+            "unpinned".to_string()
+        } else {
+            match &self.pin {
+                Some(r) => r.summary(),
+                None => "pin pending (engine not spawned)".into(),
+            }
+        };
+        format!("{pin}, first-touch {}", if self.first_touch { "on" } else { "off" })
+    }
+}
+
 /// Why a context looks the way it does: the decision, the candidates it
 /// beat, and the matrix features that drove the choice.
 #[derive(Debug, Clone)]
@@ -112,6 +148,8 @@ pub struct TuningReport {
     /// Realized padding overhead of the chosen kernel (0 for unpadded
     /// schemes).
     pub padding_overhead: f64,
+    /// NUMA placement of the engine + workspace (pinning, first touch).
+    pub placement: PlacementDecision,
     pub candidates: Vec<CandidateReport>,
     /// Human-readable decision trail.
     pub rationale: Vec<String>,
@@ -140,6 +178,7 @@ impl TuningReport {
         }
         decision.row(vec!["row imbalance (CV)".into(), f(self.row_imbalance_cv)]);
         decision.row(vec!["padding overhead".into(), f(self.padding_overhead)]);
+        decision.row(vec!["placement".into(), self.placement.summary()]);
         for (i, r) in self.rationale.iter().enumerate() {
             decision.row(vec![format!("rationale {}", i + 1), r.clone()]);
         }
@@ -174,6 +213,7 @@ pub struct SpmvContextBuilder<'a> {
     threads: Option<usize>,
     machine: MachineSpec,
     quick: bool,
+    pinned: bool,
 }
 
 impl SpmvContextBuilder<'_> {
@@ -204,12 +244,25 @@ impl SpmvContextBuilder<'_> {
         self
     }
 
+    /// Request NUMA placement: a thread-pinned engine (compact map,
+    /// worker *i* → core *i*, caller included) plus first-touch
+    /// initialization of the plan's workspace by the owning workers —
+    /// the host counterpart of the simulator's
+    /// `Placement::FirstTouchStatic`. Forces the engine to spawn eagerly
+    /// (placement cannot be deferred past the first touch); on platforms
+    /// without `sched_setaffinity` it degrades to a recorded no-op and
+    /// the schedule heuristic's placement penalty still applies.
+    pub fn pinned(mut self, pinned: bool) -> Self {
+        self.pinned = pinned;
+        self
+    }
+
     /// Run the policy and bundle the winning kernel + plan + engine.
     /// Errors on non-square matrices: every scheme past CRS permutes
     /// rows and columns symmetrically, and the engine's plan/workspace
     /// machinery assumes one dimension throughout.
     pub fn build(self) -> Result<SpmvContext> {
-        let SpmvContextBuilder { crs, policy, threads, machine, quick } = self;
+        let SpmvContextBuilder { crs, policy, threads, machine, quick, pinned } = self;
         let crs: &Crs = &crs;
         anyhow::ensure!(
             crs.nrows == crs.ncols,
@@ -223,6 +276,7 @@ impl SpmvContextBuilder<'_> {
         let nrows = crs.nrows;
         let nnz = crs.nnz();
         let row_cv = row_imbalance_cv(&crs);
+        let pin_mode = if pinned { PinMode::Compact } else { PinMode::Disabled };
         let mut rationale = Vec::new();
         let mut candidates = Vec::new();
         let mut fingerprint: Option<StrideDistribution> = None;
@@ -240,7 +294,7 @@ impl SpmvContextBuilder<'_> {
             TuningPolicy::Heuristic => {
                 let crs_kernel = SpmvKernel::build_from_crs(&crs, Scheme::Crs);
                 let dist = StrideDistribution::from_kernel(&crs_kernel);
-                let schedule = pick_schedule(nrows, n_threads, row_cv, &mut rationale);
+                let schedule = pick_schedule(nrows, n_threads, row_cv, pinned, &mut rationale);
                 let curve = cached_curve(&machine, quick);
                 // The CRS candidate reuses the fingerprint kernel, and the
                 // winner is kept as built — no candidate is realized twice.
@@ -291,22 +345,32 @@ impl SpmvContextBuilder<'_> {
                 (kernel, schedule)
             }
             TuningPolicy::Measured => {
-                let schedule = pick_schedule(nrows, n_threads, row_cv, &mut rationale);
-                let engine = Engine::new(n_threads);
+                let schedule = pick_schedule(nrows, n_threads, row_cv, pinned, &mut rationale);
+                // Bake off on the placement the context will actually
+                // run with: a pinned request times pinned candidates.
+                let engine = Engine::with_pinning(n_threads, pin_mode);
                 let reps = if quick { 2 } else { 5 };
                 let mut x = vec![0.0; nrows];
                 Rng::new(0xC0FFEE).fill_f64(&mut x, -1.0, 1.0);
+                let mut y = vec![0.0; nrows];
                 let mut best: Option<(usize, f64, SpmvKernel)> = None;
                 for (ci, scheme) in candidate_schemes(&crs).into_iter().enumerate() {
                     let k = SpmvKernel::build_from_crs(&crs, scheme);
                     let padding = kernel_padding(&k);
-                    let plan = SpmvPlan::new(&k, schedule, n_threads);
-                    let mut ws = k.workspace(&x);
-                    plan.execute_permuted(&engine, &k, &ws.xp, &mut ws.yp); // warmup
+                    // Each candidate is timed through its plan's own
+                    // workspace under the placement the final context
+                    // will deploy with (first-touched when pinned), so
+                    // the ranking and the serving path agree.
+                    let plan = if pinned {
+                        SpmvPlan::new_first_touch(&k, schedule, &engine)
+                    } else {
+                        SpmvPlan::new(&k, schedule, n_threads)
+                    };
+                    plan.execute(&engine, &k, &x, &mut y); // warmup
                     let mut best_ns = f64::INFINITY;
                     for _ in 0..reps {
                         let t0 = Instant::now();
-                        plan.execute_permuted(&engine, &k, &ws.xp, &mut ws.yp);
+                        plan.execute(&engine, &k, &x, &mut y);
                         let ns = t0.elapsed().as_nanos() as f64 / k.nnz().max(1) as f64;
                         best_ns = best_ns.min(ns);
                     }
@@ -338,7 +402,27 @@ impl SpmvContextBuilder<'_> {
             }
         };
 
-        let plan = SpmvPlan::new(&kernel, schedule, n_threads);
+        // NUMA placement: with pinning the engine must exist *now* so
+        // the plan's workspace pages are first-touched by the pinned
+        // owners; without it the engine stays lazy and the workspace is
+        // placed by the building thread (the pre-NUMA behavior).
+        let (plan, placement) = if pinned {
+            let engine =
+                eager_engine.get_or_insert_with(|| Engine::with_pinning(n_threads, pin_mode));
+            let plan = SpmvPlan::new_first_touch(&kernel, schedule, engine);
+            let placement = PlacementDecision {
+                pin_requested: true,
+                pin: Some(engine.pin_report().clone()),
+                first_touch: true,
+            };
+            rationale.push(format!("placement: {}", placement.summary()));
+            (plan, placement)
+        } else {
+            (
+                SpmvPlan::new(&kernel, schedule, n_threads),
+                PlacementDecision { pin_requested: false, pin: None, first_touch: false },
+            )
+        };
         let report = TuningReport {
             policy: policy.name().to_string(),
             scheme: kernel.scheme(),
@@ -351,6 +435,7 @@ impl SpmvContextBuilder<'_> {
             small_stride_fraction: fingerprint.as_ref().map(|d| d.fraction_within(8)),
             row_imbalance_cv: row_cv,
             padding_overhead: kernel_padding(&kernel),
+            placement,
             candidates,
             rationale,
         };
@@ -358,7 +443,7 @@ impl SpmvContextBuilder<'_> {
         if let Some(e) = eager_engine {
             let _ = engine.set(e);
         }
-        Ok(SpmvContext { kernel: Arc::new(kernel), plan, n_threads, engine, report })
+        Ok(SpmvContext { kernel: Arc::new(kernel), plan, n_threads, pin_mode, engine, report })
     }
 }
 
@@ -371,6 +456,7 @@ pub struct SpmvContext {
     kernel: Arc<SpmvKernel>,
     plan: SpmvPlan,
     n_threads: usize,
+    pin_mode: PinMode,
     engine: OnceLock<Engine>,
     report: TuningReport,
 }
@@ -394,6 +480,7 @@ impl SpmvContext {
             threads: None,
             machine: MachineSpec::nehalem(),
             quick: false,
+            pinned: false,
         }
     }
 
@@ -408,9 +495,15 @@ impl SpmvContext {
         &self.plan
     }
 
-    /// The lazily-spawned execution engine.
+    /// The lazily-spawned execution engine (eager — and pinned — when
+    /// the context was built with [`SpmvContextBuilder::pinned`]).
     pub fn engine(&self) -> &Engine {
-        self.engine.get_or_init(|| Engine::new(self.n_threads))
+        self.engine.get_or_init(|| Engine::with_pinning(self.n_threads, self.pin_mode))
+    }
+
+    /// Was NUMA placement (pinning + first touch) requested?
+    pub fn pinned(&self) -> bool {
+        self.pin_mode != PinMode::Disabled
     }
 
     pub fn report(&self) -> &TuningReport {
@@ -455,8 +548,28 @@ impl SpmvContext {
     /// decision rows.
     pub fn replanned(&self, schedule: Schedule, n_threads: usize) -> SpmvContext {
         let n_threads = n_threads.max(1);
-        let plan = SpmvPlan::new(&self.kernel, schedule, n_threads);
+        let engine = OnceLock::new();
         let mut report = self.report.clone();
+        // A pinned parent re-places eagerly: the new partition's pages
+        // must be first-touched by the new owners (§5.2 — a thread-count
+        // change is exactly the migration hazard `rebalance` covers).
+        let plan = if self.pinned() {
+            let e = Engine::with_pinning(n_threads, self.pin_mode);
+            let plan = SpmvPlan::new_first_touch(&self.kernel, schedule, &e);
+            report.placement = PlacementDecision {
+                pin_requested: true,
+                pin: Some(e.pin_report().clone()),
+                first_touch: true,
+            };
+            let _ = engine.set(e);
+            plan
+        } else {
+            // The sibling's plan is freshly caller-placed even if the
+            // parent had been rebalanced; its record must say so.
+            report.placement =
+                PlacementDecision { pin_requested: false, pin: None, first_touch: false };
+            SpmvPlan::new(&self.kernel, schedule, n_threads)
+        };
         report.schedule = schedule;
         report.n_threads = n_threads;
         report.policy = format!("{} (replanned)", self.report.policy);
@@ -468,9 +581,30 @@ impl SpmvContext {
             kernel: self.kernel.clone(),
             plan,
             n_threads,
-            engine: OnceLock::new(),
+            pin_mode: self.pin_mode,
+            engine,
             report,
         }
+    }
+
+    /// Re-partition the tuned plan for a new schedule **in place** on
+    /// the existing engine (spawned now if still lazy) and re-home the
+    /// workspace pages under the new assignment — the context-level face
+    /// of [`SpmvPlan::rebalance`]. Use this when the serving schedule
+    /// changes at run time; use [`SpmvContext::replanned`] to fork a
+    /// sibling context instead.
+    pub fn rebalance(&mut self, schedule: Schedule) {
+        let n_threads = self.n_threads;
+        let pin_mode = self.pin_mode;
+        let engine = self.engine.get_or_init(|| Engine::with_pinning(n_threads, pin_mode));
+        self.plan.rebalance(engine, &self.kernel, schedule);
+        self.report.schedule = schedule;
+        self.report.placement.first_touch = true;
+        self.report.placement.pin = Some(engine.pin_report().clone());
+        self.report.rationale.push(format!(
+            "rebalanced onto {} ({n_threads} threads, workspace re-homed)",
+            schedule.name()
+        ));
     }
 }
 
@@ -492,24 +626,33 @@ impl SpMv for SpmvContext {
     }
 }
 
+/// SELL-C-σ slice heights the tuner scores (ROADMAP follow-up from
+/// PR 2: the grid was a single C = 32 point; it now spans the SIMD /
+/// slice-granularity range of Kreutzer et al. 2013). Heights above the
+/// matrix dimension are clamped, so tiny matrices see a shorter grid.
+pub const SELL_C_GRID: [usize; 5] = [4, 8, 16, 32, 64];
+
 /// Candidate scheme set shared by the heuristic and measured tiers: CRS
 /// (the paper's cache-architecture winner), a blocked-JDS representative,
-/// and SELL-C-σ across the σ locality/padding trade-off. The builder has
-/// already rejected non-square matrices; empty ones stay on CRS.
+/// and SELL-C-σ over [`SELL_C_GRID`] × the σ locality/padding trade-off
+/// (σ ∈ {C, 8C, N} per height). The builder has already rejected
+/// non-square matrices; empty ones stay on CRS.
 fn candidate_schemes(crs: &Crs) -> Vec<Scheme> {
     let n = crs.nrows;
     if n == 0 {
         return vec![Scheme::Crs];
     }
-    let c = if n >= 64 { 32 } else { (n / 2).max(1) };
-    let mut sigmas = vec![c, 8 * c, n];
-    sigmas.sort_unstable();
-    sigmas.dedup();
     let mut v = vec![Scheme::Crs, Scheme::NbJds { block: 1024 }];
-    for sigma in sigmas {
-        v.push(Scheme::SellCs { c, sigma: sigma.clamp(1, n) });
+    for c in SELL_C_GRID {
+        let c = c.clamp(1, n);
+        for sigma in [c, 8 * c, n] {
+            let s = Scheme::SellCs { c, sigma: sigma.clamp(1, n) };
+            // Clamping can alias grid points on small matrices; keep one.
+            if !v.contains(&s) {
+                v.push(s);
+            }
+        }
     }
-    v.dedup();
     v
 }
 
@@ -519,22 +662,39 @@ fn candidate_schemes(crs: &Crs) -> Vec<Scheme> {
 /// page (512 rows of 8 B, so placement is not randomized) but is clamped
 /// to leave at least ~4 chunks per thread — otherwise guided scheduling
 /// on a small matrix degenerates into one serial chunk.
+///
+/// Under NUMA placement (`first_touch`), migrating schedules are
+/// **penalized**: guided chunks land on whichever thread finishes first,
+/// so rows leave the domain that first-touched their pages and local
+/// traffic turns remote — the paper's §5.2 collapse. The imbalance has
+/// to be much worse (CV > 1.25 instead of 0.5) before abandoning the
+/// placement-preserving static partition is worth it.
 fn pick_schedule(
     nrows: usize,
     n_threads: usize,
     row_cv: f64,
+    first_touch: bool,
     rationale: &mut Vec<String>,
 ) -> Schedule {
-    if row_cv > 0.5 {
+    let threshold = if first_touch { 1.25 } else { 0.5 };
+    if row_cv > threshold {
         let min_chunk = 512.min((nrows / (4 * n_threads.max(1))).max(1));
         rationale.push(format!(
-            "row imbalance CV {row_cv:.2} > 0.5: guided schedule, min chunk {min_chunk}"
+            "row imbalance CV {row_cv:.2} > {threshold}: guided schedule, min chunk {min_chunk}"
         ));
         Schedule::Guided { min_chunk }
     } else {
-        rationale.push(format!(
-            "row imbalance CV {row_cv:.2} <= 0.5: static contiguous partitions (NUMA-safe default)"
-        ));
+        if first_touch && row_cv > 0.5 {
+            rationale.push(format!(
+                "row imbalance CV {row_cv:.2} would suggest guided, but first-touch placement \
+                 penalizes migrating schedules (remote-traffic hazard): keeping static"
+            ));
+        } else {
+            rationale.push(format!(
+                "row imbalance CV {row_cv:.2} <= {threshold}: static contiguous partitions \
+                 (NUMA-safe default)"
+            ));
+        }
         Schedule::Static { chunk: None }
     }
 }
@@ -813,5 +973,158 @@ mod tests {
             .build()
             .unwrap();
         assert!(ctx.n_threads() >= 1 && ctx.n_threads() <= 4);
+    }
+
+    /// ISSUE-3 satellite: the widened candidate grid spans C ∈ SELL_C_GRID
+    /// (clamped to N) and any SELL pick is on the grid.
+    #[test]
+    fn heuristic_candidate_grid_spans_all_c_and_pick_is_on_grid() {
+        let coo = gen::holstein_hubbard(&gen::HolsteinHubbardParams::tiny());
+        let n = coo.nrows;
+        let ctx = SpmvContext::builder(&coo)
+            .policy(TuningPolicy::Heuristic)
+            .threads(2)
+            .quick(true)
+            .build()
+            .unwrap();
+        let r = ctx.report();
+        for c in SELL_C_GRID {
+            let c = c.clamp(1, n);
+            assert!(
+                r.candidates
+                    .iter()
+                    .any(|cand| matches!(cand.scheme, Scheme::SellCs { c: cc, .. } if cc == c)),
+                "grid height C={c} missing from the heuristic candidate set"
+            );
+        }
+        for cand in &r.candidates {
+            if let Scheme::SellCs { c, .. } = cand.scheme {
+                assert!(
+                    SELL_C_GRID.iter().any(|&g| g.clamp(1, n) == c),
+                    "candidate C={c} is off the grid"
+                );
+            }
+        }
+        if let Scheme::SellCs { c, .. } = ctx.scheme() {
+            assert!(SELL_C_GRID.iter().any(|&g| g.clamp(1, n) == c), "picked C={c} off grid");
+        }
+    }
+
+    /// ISSUE-3 satellite: every policy × pinning on/off stays
+    /// bit-identical to the chosen scheme's serial kernel (the non-Linux
+    /// fallback takes the same path with a no-op pin, so this covers it
+    /// by construction).
+    #[test]
+    fn pinned_contexts_bit_identical_to_serial() {
+        let coo = gen::holstein_hubbard(&gen::HolsteinHubbardParams::tiny());
+        let n = coo.nrows;
+        let mut rng = Rng::new(88);
+        let mut x = vec![0.0; n];
+        rng.fill_f64(&mut x, -1.0, 1.0);
+        for policy in policies() {
+            for pin in [false, true] {
+                let ctx = SpmvContext::builder(&coo)
+                    .policy(policy)
+                    .threads(3)
+                    .quick(true)
+                    .pinned(pin)
+                    .build()
+                    .unwrap();
+                assert_eq!(ctx.pinned(), pin);
+                assert_eq!(ctx.report().placement.pin_requested, pin);
+                assert_eq!(ctx.report().placement.first_touch, pin);
+                assert_eq!(ctx.plan().first_touched(), pin);
+                if pin {
+                    let pr = ctx.report().placement.pin.as_ref().expect("pinned report");
+                    assert_eq!(pr.per_thread.len(), 3);
+                }
+                let mut y_serial = vec![0.0; n];
+                ctx.kernel().spmv(&x, &mut y_serial);
+                let mut y = vec![0.0; n];
+                ctx.spmv(&x, &mut y);
+                assert_eq!(
+                    max_abs_diff(&y_serial, &y),
+                    0.0,
+                    "{} × pin={pin}: deviates from its serial kernel",
+                    policy.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn context_rebalance_rehomes_and_stays_exact() {
+        let coo = random_coo(&mut Rng::new(89), 180, 1200);
+        let n = 180;
+        let mut rng = Rng::new(90);
+        let mut x = vec![0.0; n];
+        rng.fill_f64(&mut x, -1.0, 1.0);
+        for pin in [false, true] {
+            let mut ctx = SpmvContext::builder(&coo)
+                .policy(TuningPolicy::Fixed(
+                    Scheme::SellCs { c: 16, sigma: 64 },
+                    Schedule::Static { chunk: None },
+                ))
+                .threads(3)
+                .pinned(pin)
+                .build()
+                .unwrap();
+            let mut want = vec![0.0; n];
+            ctx.spmv(&x, &mut want);
+            ctx.rebalance(Schedule::Dynamic { chunk: 11 });
+            assert_eq!(ctx.schedule(), Schedule::Dynamic { chunk: 11 });
+            assert!(ctx.plan().first_touched(), "rebalance must re-touch");
+            assert!(ctx.report().rationale.iter().any(|r| r.contains("rebalanced")));
+            let mut got = vec![0.0; n];
+            ctx.spmv(&x, &mut got);
+            assert_eq!(max_abs_diff(&want, &got), 0.0, "pin={pin}: rebalance changed results");
+        }
+    }
+
+    #[test]
+    fn replanned_pinned_context_keeps_placement() {
+        let coo = gen::laplacian_1d(256);
+        let ctx = SpmvContext::builder(&coo)
+            .policy(TuningPolicy::Fixed(Scheme::Crs, Schedule::Static { chunk: None }))
+            .threads(2)
+            .pinned(true)
+            .build()
+            .unwrap();
+        let re = ctx.replanned(Schedule::Static { chunk: Some(32) }, 3);
+        assert!(re.pinned());
+        assert!(re.plan().first_touched());
+        let pr = re.report().placement.pin.as_ref().expect("replanned pin report");
+        assert_eq!(pr.per_thread.len(), 3);
+        let mut x = vec![0.0; 256];
+        Rng::new(91).fill_f64(&mut x, -1.0, 1.0);
+        let mut a = vec![0.0; 256];
+        let mut b = vec![0.0; 256];
+        ctx.spmv(&x, &mut a);
+        re.spmv(&x, &mut b);
+        assert_eq!(max_abs_diff(&a, &b), 0.0);
+    }
+
+    /// Placement is folded into the schedule choice: an imbalance that
+    /// sends the unpinned heuristic to guided stays on static under
+    /// first-touch placement (§5.2 migration penalty).
+    #[test]
+    fn placement_penalizes_migrating_schedules() {
+        let mut r1 = Vec::new();
+        let s1 = pick_schedule(10_000, 4, 0.8, false, &mut r1);
+        assert!(matches!(s1, Schedule::Guided { .. }), "CV 0.8 unpinned should go guided");
+        let mut r2 = Vec::new();
+        let s2 = pick_schedule(10_000, 4, 0.8, true, &mut r2);
+        assert_eq!(
+            s2,
+            Schedule::Static { chunk: None },
+            "CV 0.8 under first-touch must keep the placement-preserving static schedule"
+        );
+        assert!(r2.iter().any(|s| s.contains("first-touch")));
+        let mut r3 = Vec::new();
+        let s3 = pick_schedule(10_000, 4, 1.5, true, &mut r3);
+        assert!(
+            matches!(s3, Schedule::Guided { .. }),
+            "extreme imbalance still overrides placement"
+        );
     }
 }

@@ -174,6 +174,143 @@ pub fn write_bench_json(filename: &str, json: &str) {
     }
 }
 
+// ---------------------------------------------------------------------
+// BENCH_*.json trajectory comparison (the CI regression gate).
+//
+// The bench binaries emit flat one-object-per-line entries inside a
+// `"results"` array; no JSON library exists offline, so the comparator
+// parses exactly that shape: a line is an entry iff it contains an
+// `"mflops"` field, its identity is the values of the known identity
+// keys below, and everything else on the line is ignored. Auto-picked
+// fields (scheme, σ, schedule) deliberately do NOT identify an entry —
+// they may legitimately differ between baseline and current runs.
+// ---------------------------------------------------------------------
+
+/// Keys whose values identify a bench entry across runs.
+const BENCH_IDENT_KEYS: &[&str] = &["bench", "matrix", "name", "case", "config", "policy"];
+
+/// One comparable data point extracted from a `BENCH_*.json` file.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BenchEntry {
+    /// `/`-joined values of the identity keys, e.g.
+    /// `holstein-hubbard/heuristic`.
+    pub label: String,
+    pub mflops: f64,
+}
+
+/// Pull `"key": "value"` string pairs and the `"mflops"` number out of a
+/// single flat JSON object line. Returns `None` for lines that are not
+/// bench entries.
+fn parse_entry_line(line: &str) -> Option<BenchEntry> {
+    let mflops = extract_number(line, "mflops")?;
+    let mut parts = Vec::new();
+    for key in BENCH_IDENT_KEYS {
+        if let Some(v) = extract_string(line, key) {
+            parts.push(v);
+        }
+    }
+    if parts.is_empty() {
+        return None;
+    }
+    Some(BenchEntry { label: parts.join("/"), mflops })
+}
+
+/// Value of `"key": <number>` in `line`, if present.
+fn extract_number(line: &str, key: &str) -> Option<f64> {
+    let pat = format!("\"{key}\":");
+    let at = line.find(&pat)? + pat.len();
+    let rest = line[at..].trim_start();
+    let end = rest
+        .find(|c: char| !(c.is_ascii_digit() || c == '.' || c == '-' || c == '+' || c == 'e'))
+        .unwrap_or(rest.len());
+    rest[..end].parse().ok()
+}
+
+/// Value of `"key": "value"` in `line`, if present.
+fn extract_string(line: &str, key: &str) -> Option<String> {
+    let pat = format!("\"{key}\":");
+    let at = line.find(&pat)? + pat.len();
+    let rest = line[at..].trim_start().strip_prefix('"')?;
+    Some(rest[..rest.find('"')?].to_string())
+}
+
+/// All comparable entries of a `BENCH_*.json` document.
+pub fn parse_bench_entries(json: &str) -> Vec<BenchEntry> {
+    json.lines().filter_map(parse_entry_line).collect()
+}
+
+/// One row of a baseline-vs-current comparison.
+#[derive(Debug, Clone)]
+pub struct BenchComparison {
+    pub label: String,
+    pub baseline_mflops: f64,
+    /// `None` when the current run lost this entry entirely.
+    pub current_mflops: Option<f64>,
+    pub ok: bool,
+}
+
+/// Compare two trajectory documents: every baseline entry with a
+/// positive throughput must exist in `current` and reach at least
+/// `(1 - tolerance) ×` its baseline GFlop/s. Entries only present in
+/// `current` are new coverage and pass silently; baseline entries with
+/// `mflops <= 0` are placeholders and are skipped.
+pub fn compare_bench_json(baseline: &str, current: &str, tolerance: f64) -> Vec<BenchComparison> {
+    let cur = parse_bench_entries(current);
+    parse_bench_entries(baseline)
+        .into_iter()
+        .filter(|b| b.mflops > 0.0)
+        .map(|b| {
+            let found = cur.iter().find(|c| c.label == b.label).map(|c| c.mflops);
+            let ok = found.is_some_and(|m| m >= b.mflops * (1.0 - tolerance));
+            BenchComparison {
+                label: b.label,
+                baseline_mflops: b.mflops,
+                current_mflops: found,
+                ok,
+            }
+        })
+        .collect()
+}
+
+/// File-level comparator behind `spmvperf benchdiff`: prints one line
+/// per entry and returns whether every entry passed.
+pub fn compare_bench_files(
+    baseline: &std::path::Path,
+    current: &std::path::Path,
+    tolerance: f64,
+) -> anyhow::Result<bool> {
+    use anyhow::Context;
+    let b = std::fs::read_to_string(baseline)
+        .with_context(|| format!("reading baseline {}", baseline.display()))?;
+    let c = std::fs::read_to_string(current)
+        .with_context(|| format!("reading current {}", current.display()))?;
+    let rows = compare_bench_json(&b, &c, tolerance);
+    anyhow::ensure!(
+        !rows.is_empty(),
+        "baseline {} holds no comparable entries",
+        baseline.display()
+    );
+    let mut all_ok = true;
+    for r in &rows {
+        let verdict = if r.ok { "ok" } else { "REGRESSION" };
+        match r.current_mflops {
+            Some(m) => println!(
+                "{verdict:>10}  {:<50} baseline {:>10.1} MFlop/s  current {:>10.1} MFlop/s ({:+.1}%)",
+                r.label,
+                r.baseline_mflops,
+                m,
+                (m / r.baseline_mflops - 1.0) * 100.0
+            ),
+            None => println!(
+                "{verdict:>10}  {:<50} baseline {:>10.1} MFlop/s  current MISSING",
+                r.label, r.baseline_mflops
+            ),
+        }
+        all_ok &= r.ok;
+    }
+    Ok(all_ok)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -190,6 +327,61 @@ mod tests {
         assert_eq!(r.samples.len(), 3);
         assert!(r.median_secs() > 0.0);
         assert!(r.mflops() > 0.0);
+    }
+
+    const BASELINE: &str = r#"{
+  "bench": "tune_policies",
+  "results": [
+    {"matrix": "hh", "policy": "heuristic", "scheme": "sellcs", "mflops": 100.0},
+    {"matrix": "hh", "policy": "fixed", "scheme": "sellcs", "mflops": 80.0},
+    {"matrix": "band", "policy": "heuristic", "mflops": 0.0}
+  ]
+}"#;
+
+    #[test]
+    fn parses_flat_entry_lines() {
+        let entries = parse_bench_entries(BASELINE);
+        assert_eq!(entries.len(), 3);
+        assert_eq!(entries[0].label, "hh/heuristic");
+        assert_eq!(entries[0].mflops, 100.0);
+        // Auto-picked fields (scheme) must not enter the identity.
+        assert!(!entries[0].label.contains("sellcs"));
+        // Lines without mflops are not entries.
+        assert!(parse_bench_entries("{\n  \"bench\": \"x\"\n}").is_empty());
+    }
+
+    #[test]
+    fn comparator_passes_within_tolerance_and_skips_placeholders() {
+        let current = r#"{"results": [
+    {"matrix": "hh", "policy": "heuristic", "scheme": "crs", "mflops": 85.0},
+    {"matrix": "hh", "policy": "fixed", "mflops": 95.0},
+    {"matrix": "new", "policy": "extra", "mflops": 1.0}
+]}"#;
+        let rows = compare_bench_json(BASELINE, current, 0.20);
+        // The mflops=0 placeholder is skipped, new entries pass silently.
+        assert_eq!(rows.len(), 2);
+        assert!(rows.iter().all(|r| r.ok), "{rows:?}");
+    }
+
+    #[test]
+    fn comparator_flags_regressions_and_missing_entries() {
+        let current = r#"{"results": [
+    {"matrix": "hh", "policy": "heuristic", "mflops": 70.0}
+]}"#;
+        let rows = compare_bench_json(BASELINE, current, 0.20);
+        let heur = rows.iter().find(|r| r.label == "hh/heuristic").unwrap();
+        assert!(!heur.ok, "70 < 100 * 0.8 must fail");
+        let fixed = rows.iter().find(|r| r.label == "hh/fixed").unwrap();
+        assert!(!fixed.ok, "missing entry must fail");
+        assert_eq!(fixed.current_mflops, None);
+    }
+
+    #[test]
+    fn number_extraction_handles_spacing_and_prefixed_keys() {
+        let line = r#"  {"matrix": "m", "batch8_fused_mflops": 500.0, "mflops": 42.5},"#;
+        assert_eq!(extract_number(line, "mflops"), Some(42.5));
+        assert_eq!(extract_string(line, "matrix").as_deref(), Some("m"));
+        assert_eq!(extract_number("no fields here", "mflops"), None);
     }
 
     #[test]
