@@ -1,0 +1,155 @@
+//! Sharded SpMV trajectory bench: shard counts × overlap modes — the
+//! vector-mode vs task-mode comparison of arXiv:1106.5908 with shards
+//! as in-process domains. Every configuration is self-validating (its
+//! output must stay bit-identical to the serial CRS kernel before it is
+//! timed) and records its halo-volume fraction, so the JSON documents
+//! how much exchange each partition actually hides.
+//!
+//! Emits `results/BENCH_shard.json` (consumed by the CI regression gate
+//! via `spmvperf benchdiff`). Scale: `SPMVPERF_BENCH_QUICK=1` for a
+//! smoke pass.
+
+use std::fmt::Write as _;
+use std::sync::Arc;
+
+use spmvperf::gen::{self, HolsteinHubbardParams};
+use spmvperf::matrix::{Crs, Scheme, SpMv};
+use spmvperf::sched::Schedule;
+use spmvperf::shard::{OverlapMode, ShardedSpmv};
+use spmvperf::util::bench::{default_bench, quick_mode, write_bench_json};
+use spmvperf::util::report::{f, Table};
+use spmvperf::util::rng::Rng;
+use spmvperf::util::stats::max_abs_diff;
+
+const THREADS_PER_SHARD: usize = 1;
+const SHARD_COUNTS: [usize; 4] = [1, 2, 4, 8];
+const SELL: Scheme = Scheme::SellCs { c: 8, sigma: 64 };
+
+fn main() {
+    let quick = quick_mode();
+    let b = default_bench();
+    let hh_params =
+        if quick { HolsteinHubbardParams::tiny() } else { HolsteinHubbardParams::small() };
+    let coo = gen::holstein_hubbard(&hh_params);
+    let crs = Arc::new(Crs::from_coo(&coo));
+    let n = crs.nrows;
+    let nnz = crs.nnz() as u64;
+    eprintln!("matrix holstein-hubbard: N={n} nnz={nnz}, {THREADS_PER_SHARD} thread(s)/shard");
+
+    let mut rng = Rng::new(24);
+    let mut x = vec![0.0; n];
+    rng.fill_f64(&mut x, -1.0, 1.0);
+    let mut y_ref = vec![0.0; n];
+    crs.spmv(&x, &mut y_ref);
+
+    // (config name, shard count, scheme): the CRS sweep over the full
+    // shard grid plus one SELL-C-σ point, each in both overlap modes.
+    let mut configs: Vec<(String, usize, Scheme)> = SHARD_COUNTS
+        .iter()
+        .map(|&s| (format!("s{s}"), s, Scheme::Crs))
+        .collect();
+    configs.push(("s4-sell".to_string(), 4, SELL));
+
+    let mut table = Table::new(
+        "sharded SpMV: bulk-sync vs overlapped (Holstein-Hubbard)",
+        &["config", "mode", "halo frac", "boundary nnz frac", "MFlop/s", "ns/nnz"],
+    );
+    let mut entries: Vec<String> = Vec::new();
+    let mut by_name: Vec<(String, f64)> = Vec::new();
+    let mut y = vec![0.0; n];
+    for (name, shards, scheme) in &configs {
+        let mut sh = ShardedSpmv::new(
+            crs.clone(),
+            *scheme,
+            Schedule::Static { chunk: None },
+            *shards,
+            THREADS_PER_SHARD,
+            OverlapMode::BulkSync,
+            false,
+        )
+        .expect("sharded executor over a square matrix");
+        for mode in [OverlapMode::BulkSync, OverlapMode::Overlapped] {
+            sh.set_mode(mode);
+            let label = format!("{name}-{}", short(mode));
+            // Self-validate before timing: sharding and overlap must
+            // never change the math.
+            sh.spmv(&x, &mut y);
+            assert_eq!(
+                max_abs_diff(&y_ref, &y),
+                0.0,
+                "{label}: output deviates from serial CRS"
+            );
+            let r = b.run(&format!("shard/{label}"), nnz, 2 * nnz, || {
+                sh.spmv(&x, &mut y);
+                y[0]
+            });
+            println!("{}", r.summary());
+            table.row(vec![
+                name.clone(),
+                mode.name().into(),
+                f(sh.halo_fraction()),
+                f(sh.boundary_nnz_fraction()),
+                f(r.mflops()),
+                f(r.ns_per_item()),
+            ]);
+            entries.push(format!(
+                concat!(
+                    "    {{\"matrix\": \"holstein-hubbard\", \"config\": \"{}\", ",
+                    "\"shards\": {}, \"mode\": \"{}\", \"scheme\": \"{}\", ",
+                    "\"threads_per_shard\": {}, \"halo_fraction\": {:.4}, ",
+                    "\"boundary_nnz_fraction\": {:.4}, ",
+                    "\"mflops\": {:.3}, \"ns_per_nnz\": {:.4}}}"
+                ),
+                label,
+                shards,
+                mode.name(),
+                scheme.spec(),
+                THREADS_PER_SHARD,
+                sh.halo_fraction(),
+                sh.boundary_nnz_fraction(),
+                r.mflops(),
+                r.ns_per_item(),
+            ));
+            by_name.push((label, r.mflops()));
+        }
+    }
+    table.print();
+
+    let lookup = |name: &str| {
+        by_name.iter().find(|(n, _)| n == name).map(|(_, m)| *m).unwrap_or(0.0)
+    };
+    // The 1106.5908 comparison: overlapped/bulk-sync ratio per shard
+    // count — the gain (or spawn-overhead loss) of hiding the exchange
+    // behind the interior compute as the halo volume grows with cuts.
+    let mut ratios = Vec::new();
+    for &s in &SHARD_COUNTS {
+        let bulk = lookup(&format!("s{s}-bulk"));
+        let over = lookup(&format!("s{s}-overlap"));
+        let ratio = over / bulk.max(1e-9);
+        println!("s{s}: overlapped/bulk-sync = {ratio:.3}x");
+        ratios.push((s, ratio));
+    }
+
+    let mut json = String::new();
+    let _ = writeln!(json, "{{");
+    let _ = writeln!(json, "  \"bench\": \"shard_overlap\",");
+    let _ = writeln!(json, "  \"results\": [");
+    let _ = writeln!(json, "{}", entries.join(",\n"));
+    let _ = writeln!(json, "  ],");
+    let _ = writeln!(json, "  \"summary\": [");
+    let summary: Vec<String> = ratios
+        .iter()
+        .map(|(s, r)| format!("    {{\"shards\": {s}, \"overlap_over_bulk\": {r:.4}}}"))
+        .collect();
+    let _ = writeln!(json, "{}", summary.join(",\n"));
+    let _ = writeln!(json, "  ]");
+    let _ = writeln!(json, "}}");
+    write_bench_json("BENCH_shard.json", &json);
+}
+
+fn short(mode: OverlapMode) -> &'static str {
+    match mode {
+        OverlapMode::BulkSync => "bulk",
+        OverlapMode::Overlapped => "overlap",
+    }
+}

@@ -16,20 +16,18 @@ use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
-use crate::matrix::{Coo, EllMatrix, Scheme};
-use crate::sched::Schedule;
-use crate::tune::{SpmvContext, TuningPolicy};
+use crate::tune::{ShardedContext, SpmvContext};
 
 /// Batch executor abstraction: the service is agnostic of what actually
 /// multiplies. Executors are constructed *inside* the worker thread (a
 /// PJRT client is not `Send`).
 ///
 /// The working basis is executor-defined and part of each executor's
-/// contract: [`NativeExecutor::from_context`] serves the **original**
-/// basis (the context gathers/scatters internally), while
-/// [`PjrtExecutor`] and the deprecated ELL shims serve the ELL
-/// **permuted** basis of their artifact/matrix. A deployment must pick
-/// one executor per service and submit vectors in that executor's basis.
+/// contract: [`NativeExecutor::from_context`] and [`ShardedExecutor`]
+/// serve the **original** basis (the context gathers/scatters
+/// internally), while [`PjrtExecutor`] serves the ELL **permuted**
+/// basis of its artifact. A deployment must pick one executor per
+/// service and submit vectors in that executor's basis.
 pub trait BatchExecutor {
     fn dim(&self) -> usize;
     fn max_batch(&self) -> usize;
@@ -62,51 +60,48 @@ impl NativeExecutor {
     pub fn context(&self) -> &SpmvContext {
         &self.ctx
     }
-
-    /// Rebuild the ELL planes (permuted basis, padding dropped) as a CRS
-    /// context so the legacy constructors keep their contract: requests
-    /// are vectors in the ELL's permuted basis, and per-row accumulation
-    /// order matches [`EllMatrix::spmv_permuted`] entry for entry (the
-    /// ELL diagonal order is ascending permuted column — `Jds::from_crs`
-    /// sorts each relabeled row — and `Coo::normalize` restores the same
-    /// order here). Two finite-input-invisible caveats: padding slots'
-    /// trailing `+0.0` terms disappear, and explicitly stored `0.0`
-    /// entries are dropped, so `-0.0` signs and NaN/∞ propagation at
-    /// exactly those slots can differ from the old executor.
-    fn ell_context(ell: &EllMatrix, n_threads: usize) -> SpmvContext {
-        let mut coo = Coo::new(ell.n, ell.n);
-        for dd in 0..ell.d {
-            for i in 0..ell.n {
-                let v = ell.val[dd * ell.n + i];
-                if v != 0.0 {
-                    coo.push(i, ell.col[dd * ell.n + i] as usize, v);
-                }
-            }
-        }
-        coo.normalize();
-        SpmvContext::builder(&coo)
-            .policy(TuningPolicy::Fixed(Scheme::Crs, Schedule::Static { chunk: None }))
-            .threads(n_threads)
-            .build()
-            .expect("fixed-policy context construction cannot fail")
-    }
-
-    /// Single-threaded reference executor over an ELL matrix.
-    #[deprecated(note = "use NativeExecutor::from_context with a tuned SpmvContext")]
-    pub fn serial(ell: EllMatrix, max_batch: usize) -> Self {
-        Self::from_context(Self::ell_context(&ell, 1), max_batch)
-    }
-
-    /// Engine-backed ELL executor on `n_threads` threads. Output is
-    /// identical to the serial executor (same per-row accumulation
-    /// order).
-    #[deprecated(note = "use NativeExecutor::from_context with a tuned SpmvContext")]
-    pub fn parallel(ell: EllMatrix, max_batch: usize, n_threads: usize) -> Self {
-        Self::from_context(Self::ell_context(&ell, n_threads.max(1)), max_batch)
-    }
 }
 
 impl BatchExecutor for NativeExecutor {
+    fn dim(&self) -> usize {
+        crate::matrix::SpMv::nrows(&self.ctx)
+    }
+    fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+    fn run_batch(&self, xs: &[Vec<f64>]) -> Result<Vec<Vec<f64>>> {
+        Ok(self.ctx.spmv_batch(xs))
+    }
+}
+
+/// Sharded executor: the [`NativeExecutor`] sibling over a tuned
+/// [`ShardedContext`]. Each coalesced batch is served **across every
+/// shard in one dispatch** ([`ShardedContext::spmv_batch`]): the shard
+/// coordinators spawn once per batch and stream all vectors through
+/// their engines, overlapping halo exchange with interior compute when
+/// the context's mode says so. Original-basis contract, bit-identical
+/// to the serial CRS kernel.
+pub struct ShardedExecutor {
+    ctx: ShardedContext,
+    pub max_batch: usize,
+}
+
+impl ShardedExecutor {
+    /// Wrap a tuned sharded context as a batch executor. Like
+    /// [`NativeExecutor::from_context`], build the context *inside* the
+    /// service's `make_executor` closure so per-shard pinned engines
+    /// and first-touched buffers belong to the serving side.
+    pub fn from_context(ctx: ShardedContext, max_batch: usize) -> Self {
+        ShardedExecutor { ctx, max_batch: max_batch.max(1) }
+    }
+
+    /// The tuned sharded context serving this executor.
+    pub fn context(&self) -> &ShardedContext {
+        &self.ctx
+    }
+}
+
+impl BatchExecutor for ShardedExecutor {
     fn dim(&self) -> usize {
         crate::matrix::SpMv::nrows(&self.ctx)
     }
@@ -344,51 +339,107 @@ impl Coordinator {
 mod tests {
     use super::*;
     use crate::gen;
-    use crate::matrix::{Crs, SpMv};
+    use crate::matrix::{Crs, Scheme, SpMv};
+    use crate::sched::Schedule;
+    use crate::shard::OverlapMode;
+    use crate::tune::{ShardPolicy, TuningPolicy};
 
-    fn tiny_ell() -> EllMatrix {
+    fn tiny_crs() -> Crs {
         let h = gen::holstein_hubbard(&gen::HolsteinHubbardParams::tiny());
-        EllMatrix::from_crs(&Crs::from_coo(&h), None).unwrap()
+        Crs::from_coo(&h)
     }
 
-    #[allow(deprecated)]
-    fn start_native(max_batch: usize, window: Duration) -> (Service, EllMatrix) {
-        let ell = tiny_ell();
-        let dim = ell.n;
-        let ell2 = ell.clone();
-        let svc = Service::start(
-            ServiceConfig { batch_window: window },
-            dim,
-            move || Ok(Box::new(NativeExecutor::serial(ell2, max_batch)) as Box<dyn BatchExecutor>),
-        )
+    /// A CRS fixed-policy context service — the scheme-generic
+    /// replacement for the removed ELL shims. Original-basis contract.
+    fn start_native(max_batch: usize, window: Duration) -> (Service, Crs) {
+        let crs = tiny_crs();
+        let dim = crs.nrows;
+        let crs2 = crs.clone();
+        let svc = Service::start(ServiceConfig { batch_window: window }, dim, move || {
+            let ctx = SpmvContext::builder_from_crs(&crs2)
+                .policy(TuningPolicy::Fixed(Scheme::Crs, Schedule::Static { chunk: None }))
+                .threads(1)
+                .build()?;
+            Ok(Box::new(NativeExecutor::from_context(ctx, max_batch)) as Box<dyn BatchExecutor>)
+        })
         .unwrap();
-        (svc, ell)
+        (svc, crs)
     }
 
+    /// ISSUE-4: the sharded executor serves whole batches across every
+    /// shard in one dispatch, bit-identical to the serial CRS kernel.
     #[test]
-    #[allow(deprecated)]
-    fn parallel_executor_matches_serial() {
-        let ell = tiny_ell();
-        let serial = NativeExecutor::serial(ell.clone(), 8);
-        let mut rng = crate::util::rng::Rng::new(9);
+    fn sharded_executor_serves_batches_across_shards() {
+        let crs = tiny_crs();
+        let n = crs.nrows;
+        let mut rng = crate::util::rng::Rng::new(14);
         let xs: Vec<Vec<f64>> = (0..6)
             .map(|_| {
-                let mut x = vec![0.0; ell.n];
+                let mut x = vec![0.0; n];
                 rng.fill_f64(&mut x, -1.0, 1.0);
                 x
             })
             .collect();
-        let want = serial.run_batch(&xs).unwrap();
-        for n_threads in [1usize, 2, 4] {
-            let par = NativeExecutor::parallel(ell.clone(), 8, n_threads);
-            let got = par.run_batch(&xs).unwrap();
-            for (w, g) in want.iter().zip(&got) {
+        for mode in [OverlapMode::BulkSync, OverlapMode::Overlapped] {
+            let ctx = SpmvContext::builder_from_crs(&crs)
+                .policy(TuningPolicy::Fixed(Scheme::Crs, Schedule::Static { chunk: None }))
+                .threads(2)
+                .sharded(ShardPolicy::Fixed { shards: 3, mode })
+                .build_sharded()
+                .unwrap();
+            let exec = ShardedExecutor::from_context(ctx, 8);
+            assert_eq!(exec.dim(), n);
+            assert_eq!(exec.context().n_shards(), 3);
+            let got = exec.run_batch(&xs).unwrap();
+            let mut want = vec![0.0; n];
+            for (x, y) in xs.iter().zip(&got) {
+                crs.spmv(x, &mut want);
                 assert_eq!(
-                    crate::util::stats::max_abs_diff(w, g),
+                    crate::util::stats::max_abs_diff(y, &want),
                     0.0,
-                    "{n_threads}-thread executor deviates"
+                    "{}: sharded executor deviates from serial CRS",
+                    mode.name()
                 );
             }
+        }
+    }
+
+    #[test]
+    fn service_over_sharded_executor() {
+        let crs = tiny_crs();
+        let n = crs.nrows;
+        let crs2 = crs.clone();
+        let svc = Service::start(
+            ServiceConfig { batch_window: Duration::from_micros(100) },
+            n,
+            move || {
+                // Built on the worker thread, like every NUMA-placed
+                // executor: shard engines and first-touched buffers
+                // belong to the serving side.
+                let ctx = SpmvContext::builder_from_crs(&crs2)
+                    .policy(TuningPolicy::Fixed(Scheme::Crs, Schedule::Static { chunk: None }))
+                    .threads(2)
+                    .sharded(ShardPolicy::Fixed {
+                        shards: 2,
+                        mode: OverlapMode::Overlapped,
+                    })
+                    .build_sharded()?;
+                Ok(Box::new(ShardedExecutor::from_context(ctx, 8)) as Box<dyn BatchExecutor>)
+            },
+        )
+        .unwrap();
+        let mut rng = crate::util::rng::Rng::new(15);
+        let mut want = vec![0.0; n];
+        for _ in 0..4 {
+            let mut x = vec![0.0; n];
+            rng.fill_f64(&mut x, -1.0, 1.0);
+            let y = svc.submit_wait(x.clone()).unwrap();
+            crs.spmv(&x, &mut want);
+            assert_eq!(
+                crate::util::stats::max_abs_diff(&y, &want),
+                0.0,
+                "sharded service deviates from serial CRS"
+            );
         }
     }
 
@@ -462,31 +513,6 @@ mod tests {
     }
 
     #[test]
-    #[allow(deprecated)]
-    fn service_over_parallel_native_executor() {
-        let ell = tiny_ell();
-        let dim = ell.n;
-        let ell2 = ell.clone();
-        let svc = Service::start(
-            ServiceConfig { batch_window: Duration::from_micros(100) },
-            dim,
-            move || {
-                Ok(Box::new(NativeExecutor::parallel(ell2, 8, 4)) as Box<dyn BatchExecutor>)
-            },
-        )
-        .unwrap();
-        let mut rng = crate::util::rng::Rng::new(10);
-        let mut want = vec![0.0; dim];
-        for _ in 0..5 {
-            let mut x = vec![0.0; dim];
-            rng.fill_f64(&mut x, -1.0, 1.0);
-            let y = svc.submit_wait(x.clone()).unwrap();
-            ell.spmv_permuted(&x, &mut want);
-            assert!(crate::util::stats::max_abs_diff(&y, &want) < 1e-12);
-        }
-    }
-
-    #[test]
     fn service_over_pinned_context_executor() {
         // NUMA-placed serving: the executor is built inside the worker
         // thread with a pinned engine + first-touched plan, and results
@@ -526,36 +552,37 @@ mod tests {
 
     #[test]
     fn single_request_roundtrip() {
-        let (svc, ell) = start_native(8, Duration::from_micros(100));
+        let (svc, crs) = start_native(8, Duration::from_micros(100));
         let mut rng = crate::util::rng::Rng::new(1);
-        let mut x = vec![0.0; ell.n];
+        let mut x = vec![0.0; crs.nrows];
         rng.fill_f64(&mut x, -1.0, 1.0);
         let y = svc.submit_wait(x.clone()).unwrap();
-        let mut want = vec![0.0; ell.n];
-        ell.spmv_permuted(&x, &mut want);
-        assert!(crate::util::stats::max_abs_diff(&y, &want) < 1e-12);
+        let mut want = vec![0.0; crs.nrows];
+        crs.spmv(&x, &mut want);
+        assert_eq!(crate::util::stats::max_abs_diff(&y, &want), 0.0);
         assert_eq!(svc.metrics.requests.load(Ordering::Relaxed), 1);
     }
 
     #[test]
     fn concurrent_requests_get_batched() {
-        let (svc, ell) = start_native(16, Duration::from_millis(20));
+        let (svc, crs) = start_native(16, Duration::from_millis(20));
+        let n = crs.nrows;
         let svc = Arc::new(svc);
         let mut rng = crate::util::rng::Rng::new(2);
         let xs: Vec<Vec<f64>> = (0..32)
             .map(|_| {
-                let mut x = vec![0.0; ell.n];
+                let mut x = vec![0.0; n];
                 rng.fill_f64(&mut x, -1.0, 1.0);
                 x
             })
             .collect();
         // Fire all requests from threads, then collect.
         let rxs: Vec<_> = xs.iter().map(|x| svc.submit(x.clone()).unwrap()).collect();
-        let mut want = vec![0.0; ell.n];
+        let mut want = vec![0.0; n];
         for (x, rx) in xs.iter().zip(rxs) {
             let y = rx.recv().unwrap().unwrap();
-            ell.spmv_permuted(x, &mut want);
-            assert!(crate::util::stats::max_abs_diff(&y, &want) < 1e-12);
+            crs.spmv(x, &mut want);
+            assert_eq!(crate::util::stats::max_abs_diff(&y, &want), 0.0);
         }
         assert_eq!(svc.metrics.requests.load(Ordering::Relaxed), 32);
         // 32 requests in << 20ms window with capacity 16: far fewer than
@@ -594,8 +621,8 @@ mod tests {
 
     #[test]
     fn shutdown_joins_worker() {
-        let (svc, ell) = start_native(4, Duration::from_micros(10));
-        let x = vec![1.0; ell.n];
+        let (svc, crs) = start_native(4, Duration::from_micros(10));
+        let x = vec![1.0; crs.nrows];
         let _ = svc.submit_wait(x).unwrap();
         drop(svc); // must not hang
     }

@@ -160,21 +160,6 @@ pub fn lanczos_with_context(
     lanczos(ctx, n_eigs, cfg)
 }
 
-/// Lanczos over a hand-assembled kernel/plan/engine triple.
-#[deprecated(
-    note = "build a tune::SpmvContext and call lanczos_with_context — hand-assembled plans bypass the tuning layer"
-)]
-pub fn lanczos_with_engine(
-    kernel: &crate::kernels::SpmvKernel,
-    engine: &crate::engine::Engine,
-    plan: &crate::engine::SpmvPlan,
-    n_eigs: usize,
-    cfg: &LanczosConfig,
-) -> LanczosResult {
-    let op = crate::engine::EngineOp { kernel, engine, plan };
-    lanczos(&op, n_eigs, cfg)
-}
-
 /// Power iteration on (shift·I − A) to find the lowest eigenvalue — a
 /// slower, simpler cross-check for the Lanczos result.
 pub fn inverse_shifted_power(

@@ -5,8 +5,6 @@ pub mod dense;
 pub mod lanczos;
 
 pub use dense::{jacobi_eigen, tridiag_eigenvalues};
-#[allow(deprecated)]
-pub use lanczos::lanczos_with_engine;
 pub use lanczos::{
     inverse_shifted_power, lanczos, lanczos_with_context, LanczosConfig, LanczosResult, LinearOp,
 };

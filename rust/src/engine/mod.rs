@@ -116,13 +116,22 @@ impl Engine {
     /// `sched_setaffinity` the request degrades to a recorded no-op —
     /// see [`Engine::pin_report`].
     pub fn with_pinning(n_threads: usize, mode: PinMode) -> Self {
+        Self::with_pinning_offset(n_threads, mode, 0)
+    }
+
+    /// Like [`Engine::with_pinning`], but thread `tid` lands on core
+    /// `(core_offset + tid) % n_cpus`: several engines can coexist on
+    /// disjoint core ranges. The sharding layer pins shard `s`'s engine
+    /// at offset `s × threads_per_shard`, so in-process domains get the
+    /// separate-socket placement of a real distributed run.
+    pub fn with_pinning_offset(n_threads: usize, mode: PinMode, core_offset: usize) -> Self {
         assert!(n_threads > 0, "engine needs at least one thread");
         let n_cpus = affinity::n_cpus();
         let (caller_guard, caller_status) = match mode {
             PinMode::Disabled => (AffinityGuard::noop(), PinStatus::Disabled),
             PinMode::Compact => {
                 let guard = AffinityGuard::save();
-                (guard, affinity::pin_current_thread(affinity::cpu_for(0, n_cpus)))
+                (guard, affinity::pin_current_thread(affinity::cpu_for(core_offset, n_cpus)))
             }
         };
         let n_workers = n_threads - 1;
@@ -142,9 +151,10 @@ impl Engine {
                     // pass of a fresh plan runs on the final core.
                     let status = match mode {
                         PinMode::Disabled => PinStatus::Disabled,
-                        PinMode::Compact => {
-                            affinity::pin_current_thread(affinity::cpu_for(tid, n_cpus))
-                        }
+                        PinMode::Compact => affinity::pin_current_thread(affinity::cpu_for(
+                            core_offset + tid,
+                            n_cpus,
+                        )),
                     };
                     let _ = pin_tx.send((tid, status));
                     drop(pin_tx);
@@ -441,8 +451,9 @@ impl SpmvPlan {
     /// stream the kernel's own rows from each owner. Two engine passes:
     ///
     /// 1. every thread zero-fills its chunks of freshly allocated
-    ///    (never-written) `xp`/`yp` buffers — the defining first touch
-    ///    that homes those pages on the toucher's domain;
+    ///    (never-written) `xp`/`yp` buffers ([`first_touch_buffers`]) —
+    ///    the defining first touch that homes those pages on the
+    ///    toucher's domain;
     /// 2. every thread runs its range-restricted kernel over the
     ///    now-zero input, touching exactly its rows' `val`/`col_idx` in
     ///    the order `execute` will replay.
@@ -451,56 +462,14 @@ impl SpmvPlan {
     /// would need `migrate_pages(2)`); the workspace, which is allocated
     /// here, is placed for real, and the matrix pass still prefaults and
     /// warms the owner's caches/TLB.
-    #[allow(clippy::uninit_vec)] // the tiling check below proves every index is written once
     fn first_touch(&mut self, engine: &Engine, kernel: &SpmvKernel) {
-        let n = self.nrows;
-        let ranges = std::mem::take(&mut self.ranges);
-        // `set_len` below is only sound if pass 1 writes EVERY element
-        // exactly once, so prove the chunk set tiles [0, n): sorted,
-        // each chunk must start where the previous ended. (A mere
-        // sum-of-lengths check would accept overlapping chunks that
-        // leave holes of uninitialized memory.)
-        let mut spans: Vec<(usize, usize)> =
-            ranges.iter().flatten().copied().filter(|&(a, b)| a < b).collect();
-        spans.sort_unstable();
-        let mut pos = 0;
-        for &(a, b) in &spans {
-            assert!(
-                a == pos && b <= n,
-                "partitions must tile [0, {n}) exactly to first-touch the workspace \
-                 (chunk ({a}, {b}) after position {pos})"
-            );
-            pos = b;
-        }
-        assert_eq!(pos, n, "partitions must cover every row to first-touch the workspace");
-        let mut xp: Vec<f64> = Vec::with_capacity(n);
-        let mut yp: Vec<f64> = Vec::with_capacity(n);
-        {
-            let bases = [SendPtr(xp.as_mut_ptr()), SendPtr(yp.as_mut_ptr())];
-            let bases = &bases;
-            let ranges_ref = &ranges;
-            engine.run(|t| {
-                for &(a, b) in &ranges_ref[t] {
-                    for base in bases {
-                        // Safety: chunks are disjoint across threads and
-                        // within capacity; each index has one writer.
-                        unsafe { std::ptr::write_bytes(base.0.add(a), 0, b - a) };
-                    }
-                }
-            });
-            // Safety: the tiling check above proves the chunks partition
-            // [0, n) with no overlap and no hole, so every element of
-            // both buffers was initialized by exactly one thread.
-            unsafe {
-                xp.set_len(n);
-                yp.set_len(n);
-            }
-        }
-        engine.run_chunks(&ranges, &mut yp, |a, b, out| {
+        let mut bufs = first_touch_buffers(engine, &self.ranges, self.nrows, 2);
+        let mut yp = bufs.pop().expect("two buffers requested");
+        let xp = bufs.pop().expect("two buffers requested");
+        engine.run_chunks(&self.ranges, &mut yp, |a, b, out| {
             kernel.spmv_rows_permuted(a, b, &xp, out);
         });
         // x was all-zero, so yp is zero again: same state `new` leaves.
-        self.ranges = ranges;
         self.ws = Mutex::new(Workspace { xp, yp });
         self.first_touched = true;
     }
@@ -508,6 +477,61 @@ impl SpmvPlan {
     /// Chunks owned by thread `t`, in dispatch order.
     pub fn ranges_of(&self, t: usize) -> &[(usize, usize)] {
         &self.ranges[t]
+    }
+
+    /// Per-thread chunk lists in dispatch order, all threads — the
+    /// partition set [`first_touch_buffers`] homes buffers under.
+    pub fn partitions(&self) -> &[Vec<(usize, usize)>] {
+        &self.ranges
+    }
+
+    /// Plan an arbitrary weighted row set: same schedules, same
+    /// partitioning, no kernel and no workspace. The sharding layer
+    /// plans each shard half this way — halves are not [`SpmvKernel`]s,
+    /// but they are scheduled and carved identically. Execute through
+    /// [`SpmvPlan::execute_partitioned`].
+    pub fn for_weights(
+        scheme: Scheme,
+        schedule: Schedule,
+        n_threads: usize,
+        weights: Vec<f64>,
+    ) -> Self {
+        assert!(n_threads > 0);
+        let nrows = weights.len();
+        let assignment = assign(schedule, nrows, &weights, n_threads);
+        let ranges: Vec<Vec<(usize, usize)>> =
+            (0..n_threads).map(|t| assignment.ranges_of(t as u16)).collect();
+        SpmvPlan {
+            scheme,
+            schedule,
+            n_threads,
+            nrows,
+            assignment,
+            weights,
+            ranges,
+            ws: Mutex::new(Workspace { xp: Vec::new(), yp: Vec::new() }),
+            first_touched: false,
+        }
+    }
+
+    /// Partitioned dispatch of an arbitrary row-range closure over this
+    /// plan's chunks: `f(a, b, out)` runs on the owning thread with
+    /// `out = &mut out_vec[a..b]`. This is the execution surface for
+    /// [`SpmvPlan::for_weights`] plans (shard halves); kernel-bound
+    /// plans keep using [`SpmvPlan::execute`]/`execute_permuted`.
+    pub fn execute_partitioned<F>(&self, engine: &Engine, out: &mut [f64], f: F)
+    where
+        F: Fn(usize, usize, &mut [f64]) + Sync,
+    {
+        assert_eq!(
+            engine.n_threads(),
+            self.n_threads,
+            "plan was built for {} threads, engine has {}",
+            self.n_threads,
+            engine.n_threads()
+        );
+        assert_eq!(out.len(), self.nrows);
+        engine.run_chunks(&self.ranges, out, f);
     }
 
     fn check(&self, engine: &Engine, kernel: &SpmvKernel) {
@@ -624,6 +648,132 @@ impl SpmvPlan {
             kernel.unpermute_into(yp, xp);
         }
         xps
+    }
+}
+
+/// First-touch-allocate `count` zero-filled `f64` buffers of length
+/// `n`: every element is written exactly once by the engine thread that
+/// owns it under `partitions`, so on a first-touch OS each chunk's
+/// pages home on the owning thread's NUMA domain. Used by
+/// [`SpmvPlan::new_first_touch`] for the permuted-basis workspace and
+/// by the sharding layer ([`crate::shard`]) to home each shard's
+/// local/remote outputs and halo gather buffer.
+#[allow(clippy::uninit_vec)] // the tiling check below proves every index is written once
+pub fn first_touch_buffers(
+    engine: &Engine,
+    partitions: &[Vec<(usize, usize)>],
+    n: usize,
+    count: usize,
+) -> Vec<Vec<f64>> {
+    assert_eq!(partitions.len(), engine.n_threads());
+    // `set_len` below is only sound if the pass writes EVERY element
+    // exactly once, so prove the chunk set tiles [0, n): sorted, each
+    // chunk must start where the previous ended. (A mere
+    // sum-of-lengths check would accept overlapping chunks that leave
+    // holes of uninitialized memory.)
+    let mut spans: Vec<(usize, usize)> =
+        partitions.iter().flatten().copied().filter(|&(a, b)| a < b).collect();
+    spans.sort_unstable();
+    let mut pos = 0;
+    for &(a, b) in &spans {
+        assert!(
+            a == pos && b <= n,
+            "partitions must tile [0, {n}) exactly to first-touch buffers \
+             (chunk ({a}, {b}) after position {pos})"
+        );
+        pos = b;
+    }
+    assert_eq!(pos, n, "partitions must cover every element to first-touch buffers");
+    let mut bufs: Vec<Vec<f64>> = (0..count).map(|_| Vec::with_capacity(n)).collect();
+    {
+        let bases: Vec<SendPtr> = bufs.iter_mut().map(|b| SendPtr(b.as_mut_ptr())).collect();
+        let bases = &bases;
+        engine.run(|t| {
+            for &(a, b) in &partitions[t] {
+                for base in bases.iter() {
+                    // Safety: chunks are disjoint across threads and
+                    // within capacity; each index has one writer.
+                    unsafe { std::ptr::write_bytes(base.0.add(a), 0, b - a) };
+                }
+            }
+        });
+    }
+    // Safety: the tiling check above proves the chunks partition [0, n)
+    // with no overlap and no hole, so every element of every buffer was
+    // initialized by exactly one thread.
+    for b in &mut bufs {
+        unsafe { b.set_len(n) };
+    }
+    bufs
+}
+
+/// A one-shot readiness latch ordering the halo exchange before the
+/// remote phase of a sharded SpMV. The exchange side fills the halo
+/// buffer and calls [`HaloGate::signal`]; the compute side calls
+/// [`HaloGate::wait`] between its local and remote phases. The mutex
+/// hand-off makes the exchange's writes happen-before every
+/// post-`wait` read, which is what lets the remote kernel read the
+/// gather buffer through a shared pointer without holding a Rust
+/// borrow across the concurrent write (see `crate::shard`).
+#[derive(Default)]
+pub struct HaloGate {
+    ready: Mutex<bool>,
+    cv: Condvar,
+}
+
+impl HaloGate {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Open the gate: the halo buffer is fully written.
+    pub fn signal(&self) {
+        *self.ready.lock().unwrap() = true;
+        self.cv.notify_all();
+    }
+
+    /// Block until the gate opens (returns immediately if already open).
+    pub fn wait(&self) {
+        let mut r = self.ready.lock().unwrap();
+        while !*r {
+            r = self.cv.wait(r).unwrap();
+        }
+    }
+
+    pub fn is_open(&self) -> bool {
+        *self.ready.lock().unwrap()
+    }
+}
+
+/// Two-phase execution with a halo-ready dependency — the engine-level
+/// shape of the compute/exchange overlap in arXiv:1106.5908: the
+/// `local` plan (interior rows, no halo inputs) dispatches immediately
+/// and is the work that hides the exchange; the `remote` plan
+/// (boundary rows) dispatches only once `halo_ready` opens. In
+/// bulk-synchronous mode the caller performs the exchange first,
+/// signals the gate, and the phases simply run back to back — same
+/// kernels, same order, bit-identical output either way.
+pub struct TwoPhasePlan<'a> {
+    pub local: &'a SpmvPlan,
+    pub remote: &'a SpmvPlan,
+}
+
+impl TwoPhasePlan<'_> {
+    pub fn execute<FL, FR>(
+        &self,
+        engine: &Engine,
+        halo_ready: &HaloGate,
+        local_out: &mut [f64],
+        remote_out: &mut [f64],
+        fl: FL,
+        fr: FR,
+    ) where
+        FL: Fn(usize, usize, &mut [f64]) + Sync,
+        FR: Fn(usize, usize, &mut [f64]) + Sync,
+    {
+        self.local.execute_partitioned(engine, local_out, fl);
+        halo_ready.wait();
+        self.remote.execute_partitioned(engine, remote_out, fr);
     }
 }
 
@@ -978,6 +1128,139 @@ mod tests {
         let mut got = vec![0.0; 150];
         plan.execute(&e2, &kernel, &x, &mut got);
         assert_eq!(max_abs_diff(&want, &got), 0.0);
+    }
+
+    #[test]
+    fn for_weights_plan_partitions_and_executes() {
+        let weights: Vec<f64> = (0..97).map(|i| 1.0 + (i % 5) as f64).collect();
+        for n_threads in [1usize, 3] {
+            let engine = Engine::new(n_threads);
+            for schedule in schedules() {
+                let plan =
+                    SpmvPlan::for_weights(Scheme::Crs, schedule, n_threads, weights.clone());
+                assert_eq!(plan.nrows, 97);
+                assert_eq!(plan.partitions().len(), n_threads);
+                let mut out = vec![0.0; 97];
+                plan.execute_partitioned(&engine, &mut out, |a, b, out| {
+                    for (off, o) in out.iter_mut().enumerate() {
+                        *o = (a + off) as f64;
+                    }
+                    assert_eq!(a + out.len(), b);
+                });
+                for (i, &v) in out.iter().enumerate() {
+                    assert_eq!(v, i as f64, "{} × {n_threads}T", schedule.name());
+                }
+            }
+        }
+        // The empty row set is planable and executable.
+        let engine = Engine::new(2);
+        let plan = SpmvPlan::for_weights(Scheme::Crs, Schedule::Dynamic { chunk: 4 }, 2, vec![]);
+        plan.execute_partitioned(&engine, &mut [], |_, _, _| unreachable!());
+    }
+
+    #[test]
+    fn first_touch_buffers_are_zeroed_and_sized() {
+        let engine = Engine::new(3);
+        let plan = SpmvPlan::for_weights(
+            Scheme::Crs,
+            Schedule::Static { chunk: Some(7) },
+            3,
+            vec![1.0; 101],
+        );
+        let bufs = first_touch_buffers(&engine, plan.partitions(), 101, 3);
+        assert_eq!(bufs.len(), 3);
+        for b in &bufs {
+            assert_eq!(b.len(), 101);
+            assert!(b.iter().all(|&v| v == 0.0));
+        }
+        let none = first_touch_buffers(&engine, plan.partitions(), 101, 0);
+        assert!(none.is_empty());
+    }
+
+    #[test]
+    fn first_touch_buffers_reject_non_tiling_partitions() {
+        let engine = Engine::new(2);
+        // A hole at [5, 10): must be refused, not left uninitialized.
+        let partitions = vec![vec![(0usize, 5usize)], vec![(10usize, 20usize)]];
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            first_touch_buffers(&engine, &partitions, 20, 1)
+        }));
+        assert!(r.is_err(), "non-tiling partitions must be rejected");
+    }
+
+    #[test]
+    fn halo_gate_orders_exchange_before_wait() {
+        let gate = HaloGate::new();
+        assert!(!gate.is_open());
+        let payload = std::sync::atomic::AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                payload.store(42, Ordering::Relaxed);
+                gate.signal();
+            });
+            gate.wait();
+            // signal()'s mutex release happens-before wait()'s return.
+            assert_eq!(payload.load(Ordering::Relaxed), 42);
+        });
+        assert!(gate.is_open());
+        gate.wait(); // reopening is a no-op: already-open gates return
+    }
+
+    #[test]
+    fn two_phase_plan_runs_remote_only_after_gate() {
+        let engine = Engine::new(2);
+        let local = SpmvPlan::for_weights(
+            Scheme::Crs,
+            Schedule::Static { chunk: None },
+            2,
+            vec![1.0; 40],
+        );
+        let remote = SpmvPlan::for_weights(
+            Scheme::Crs,
+            Schedule::Static { chunk: None },
+            2,
+            vec![1.0; 10],
+        );
+        let two = TwoPhasePlan { local: &local, remote: &remote };
+        let gate = HaloGate::new();
+        let halo = std::sync::atomic::AtomicUsize::new(0);
+        let mut lo = vec![0.0; 40];
+        let mut ro = vec![0.0; 10];
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                // "Exchange": publish the halo value, then open the gate.
+                halo.store(7, Ordering::Relaxed);
+                gate.signal();
+            });
+            two.execute(
+                &engine,
+                &gate,
+                &mut lo,
+                &mut ro,
+                |_a, _b, out| out.fill(1.0),
+                |_a, _b, out| {
+                    // The remote phase must observe the exchanged halo.
+                    out.fill(halo.load(Ordering::Relaxed) as f64);
+                },
+            );
+        });
+        assert!(lo.iter().all(|&v| v == 1.0));
+        assert!(ro.iter().all(|&v| v == 7.0), "remote phase ran before the halo arrived");
+    }
+
+    #[test]
+    fn pinning_offset_is_recorded() {
+        let engine = Engine::with_pinning_offset(2, PinMode::Compact, 1);
+        let r = engine.pin_report();
+        assert_eq!(r.per_thread.len(), 2);
+        if affinity::pin_supported() {
+            let n_cpus = affinity::n_cpus();
+            for (tid, s) in r.per_thread.iter().enumerate() {
+                if let PinStatus::Pinned { cpu } = s {
+                    assert_eq!(*cpu, affinity::cpu_for(1 + tid, n_cpus));
+                }
+            }
+        }
     }
 
     #[test]

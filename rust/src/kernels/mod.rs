@@ -5,4 +5,4 @@ pub mod microbench;
 pub mod spmv;
 
 pub use microbench::{build_index, table1_ops, IndexPattern, MicroBuffers, MicroOp, OpKind};
-pub use spmv::{SpmvKernel, Workspace};
+pub use spmv::{HalfKernel, ShardKernel, SpmvKernel, Workspace};

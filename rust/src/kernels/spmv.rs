@@ -219,6 +219,113 @@ pub struct Workspace {
     pub yp: Vec<f64>,
 }
 
+// ---------------------------------------------------------------------
+// Sharded split kernels (local / remote halves of a ShardCrs).
+// ---------------------------------------------------------------------
+
+use crate::matrix::shard::ShardCrs;
+use crate::matrix::SellRect;
+
+/// One half of a shard (interior-rows/local or boundary-rows/remote)
+/// realized in a storage scheme. Rectangular by nature, so only the
+/// schemes with a rectangular realization are supported: CRS and
+/// SELL-C-σ (via [`SellRect`], row-sorted-only). Row output slots are
+/// in *storage order*; [`HalfKernel::storage_row`] maps a slot back to
+/// the half's own row id.
+pub enum HalfKernel {
+    Crs(Crs),
+    Sell(SellRect),
+}
+
+impl HalfKernel {
+    /// Realize `half` in `scheme`. Errors on schemes without a
+    /// rectangular split kernel (the JDS family permutes rows and
+    /// columns symmetrically and has no half-matrix form).
+    pub fn build(half: &Crs, scheme: Scheme) -> anyhow::Result<Self> {
+        match scheme {
+            Scheme::Crs => Ok(HalfKernel::Crs(half.clone())),
+            Scheme::SellCs { c, sigma } => Ok(HalfKernel::Sell(SellRect::from_crs(half, c, sigma))),
+            other => anyhow::bail!(
+                "sharded SpMV supports crs and sellcs halves, not {}",
+                other.name()
+            ),
+        }
+    }
+
+    /// Rows in this half (== output slots).
+    pub fn nrows(&self) -> usize {
+        match self {
+            HalfKernel::Crs(m) => m.nrows,
+            HalfKernel::Sell(m) => m.nrows,
+        }
+    }
+
+    pub fn nnz(&self) -> usize {
+        match self {
+            HalfKernel::Crs(m) => m.val.len(),
+            HalfKernel::Sell(m) => m.nnz(),
+        }
+    }
+
+    /// Half row id computed into output slot `i` (identity for CRS,
+    /// the σ-window sort permutation for SELL).
+    #[inline]
+    pub fn storage_row(&self, i: usize) -> usize {
+        match self {
+            HalfKernel::Crs(_) => i,
+            HalfKernel::Sell(m) => m.perm[i] as usize,
+        }
+    }
+
+    /// Scheduling weights per output slot (nnz of the row in that
+    /// slot) — feeds [`crate::engine::SpmvPlan::for_weights`].
+    pub fn row_weights(&self) -> Vec<f64> {
+        match self {
+            HalfKernel::Crs(m) => {
+                (0..m.nrows).map(|i| (m.row_ptr[i + 1] - m.row_ptr[i]) as f64).collect()
+            }
+            HalfKernel::Sell(m) => m.row_nnz.iter().map(|&w| w as f64).collect(),
+        }
+    }
+
+    /// Range-restricted kernel over output slots `[row_begin,
+    /// row_end)`, reading `x` in the half's own column space. Per-row
+    /// accumulation order is the half's storage order — the original
+    /// CRS entry order for both realizations, so every slot is
+    /// bit-identical to the serial CRS kernel on its row.
+    #[inline]
+    pub fn spmv_rows(&self, row_begin: usize, row_end: usize, x: &[f64], out: &mut [f64]) {
+        match self {
+            HalfKernel::Crs(m) => m.spmv_rows_into(row_begin, row_end, x, out),
+            HalfKernel::Sell(m) => m.spmv_rows(row_begin, row_end, x, out),
+        }
+    }
+}
+
+/// A shard's two halves realized in one scheme — the unit the sharding
+/// executor plans and dispatches. The local half multiplies the owned
+/// slice of `x`; the remote half multiplies the concatenated
+/// `[owned | halo]` gather buffer.
+pub struct ShardKernel {
+    pub scheme: Scheme,
+    pub local: HalfKernel,
+    pub remote: HalfKernel,
+}
+
+impl ShardKernel {
+    pub fn build(shard: &ShardCrs, scheme: Scheme) -> anyhow::Result<Self> {
+        Ok(ShardKernel {
+            scheme,
+            local: HalfKernel::build(&shard.local, scheme)?,
+            remote: HalfKernel::build(&shard.remote, scheme)?,
+        })
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.local.nnz() + self.remote.nnz()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -371,6 +478,63 @@ mod tests {
             let mut c = Count(0);
             k.walk(&mut c);
             assert_eq!(c.0, k.nnz(), "scheme {scheme}");
+        }
+    }
+
+    /// Split shard kernels: every output slot of both halves, in both
+    /// supported schemes, is bit-identical to the serial CRS kernel on
+    /// the row the slot maps to.
+    #[test]
+    fn shard_half_kernels_bit_identical_to_serial_rows() {
+        use crate::matrix::shard::ShardedCrs;
+        let mut rng = Rng::new(37);
+        let n = 180;
+        let coo = random_coo(&mut rng, n, n * 6);
+        let crs = crate::matrix::Crs::from_coo(&coo);
+        let mut x = vec![0.0; n];
+        rng.fill_f64(&mut x, -1.0, 1.0);
+        let mut want = vec![0.0; n];
+        crs.spmv(&x, &mut want);
+        let sharded = ShardedCrs::from_crs(&crs, 4);
+        for scheme in [Scheme::Crs, Scheme::SellCs { c: 8, sigma: 32 }] {
+            for shard in &sharded.shards {
+                let k = ShardKernel::build(shard, scheme).unwrap();
+                assert_eq!(k.scheme, scheme);
+                assert_eq!(k.nnz(), shard.local.val.len() + shard.remote.val.len());
+                let mut concat = vec![0.0; shard.concat_len()];
+                shard.gather(&x, &mut concat);
+                let mut out = vec![0.0; k.local.nrows()];
+                k.local.spmv_rows(0, out.len(), &concat[..shard.width()], &mut out);
+                for (slot, &v) in out.iter().enumerate() {
+                    let row = shard.interior_rows[k.local.storage_row(slot)] as usize;
+                    assert_eq!(v, want[row], "{scheme}: interior slot {slot}");
+                }
+                let mut out = vec![0.0; k.remote.nrows()];
+                k.remote.spmv_rows(0, out.len(), &concat, &mut out);
+                for (slot, &v) in out.iter().enumerate() {
+                    let row = shard.boundary_rows[k.remote.storage_row(slot)] as usize;
+                    assert_eq!(v, want[row], "{scheme}: boundary slot {slot}");
+                }
+                // Weights line up with the slots.
+                let w = k.local.row_weights();
+                assert_eq!(w.len(), k.local.nrows());
+                assert_eq!(w.iter().sum::<f64>() as usize, k.local.nnz());
+            }
+        }
+    }
+
+    #[test]
+    fn shard_kernels_reject_jds_family_schemes() {
+        use crate::matrix::shard::ShardedCrs;
+        let mut rng = Rng::new(38);
+        let coo = random_coo(&mut rng, 60, 300);
+        let crs = crate::matrix::Crs::from_coo(&coo);
+        let sharded = ShardedCrs::from_crs(&crs, 2);
+        for scheme in [Scheme::Jds, Scheme::NbJds { block: 16 }, Scheme::RbJds { block: 16 }] {
+            assert!(
+                ShardKernel::build(&sharded.shards[0], scheme).is_err(),
+                "{scheme} has no rectangular split kernel and must be rejected"
+            );
         }
     }
 }

@@ -31,9 +31,15 @@
 //! - sparsity/stride analysis and a predictive performance model
 //!   ([`analysis`], [`perfmodel`]);
 //! - a Lanczos eigensolver as the motivating application ([`eigen`]);
+//! - a **sharding layer** ([`matrix::shard`], [`shard`]): the matrix
+//!   row-partitioned into in-process domains with per-shard local/halo
+//!   splits, halo exchange behind a transport trait, and bulk-synchronous
+//!   vs compute/exchange-overlapped execution (arXiv:1106.5908) — each
+//!   shard backed by its own pinned engine and first-touched buffers;
 //! - a PJRT runtime that loads the AOT-compiled JAX/Pallas SpMV artifacts
 //!   and a coordinator serving batched SpMV requests ([`runtime`],
-//!   [`coordinator`]);
+//!   [`coordinator`]), including a sharded executor
+//!   ([`coordinator::ShardedExecutor`]);
 //! - experiment drivers regenerating every figure of the paper's
 //!   evaluation ([`experiments`]).
 //!
@@ -57,6 +63,7 @@ pub mod matrix;
 pub mod perfmodel;
 pub mod runtime;
 pub mod sched;
+pub mod shard;
 pub mod simulator;
 pub mod tune;
 pub mod util;

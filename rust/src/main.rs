@@ -10,6 +10,10 @@
 //!                     [--machine nehalem] [--quick] — auto-tuned SpmvContext + report
 //! spmvperf lanczos    [--sites 6 --electrons 3 --max-phonons 4] [--eigenvalues 1]
 //!                     [--threads T] [--pin|--no-pin] [--scheme auto|crs|sellcs:32:256|...]
+//! spmvperf shard      [--shards 1,2,4,8] [--mode bulk|overlap] [--threads T]
+//!                     [--scheme crs|sellcs:32:256] [--pin|--no-pin]
+//!                     [--policy heuristic|measured] [--quick|--full]
+//!                     — sharded SpMV scaling table: shards × overlap mode
 //! spmvperf benchdiff  <baseline.json> <current.json> [--tolerance 0.2]
 //!                     — BENCH_*.json regression gate (CI)
 //! spmvperf serve      [--requests 64 --batch-window-us 500] — PJRT service demo
@@ -27,8 +31,9 @@ use spmvperf::matrix::{Crs, EllMatrix, Scheme, SpMv};
 use spmvperf::perfmodel::{predict, CostCurve};
 use spmvperf::runtime::{default_artifacts_dir, Runtime};
 use spmvperf::sched::Schedule;
+use spmvperf::shard::{OverlapMode, ShardedSpmv};
 use spmvperf::simulator::{simulate_spmv, MachineSpec, Placement, SimOptions};
-use spmvperf::tune::{SpmvContext, TuningPolicy};
+use spmvperf::tune::{ShardPolicy, SpmvContext, TuningPolicy};
 use spmvperf::util::cli::Args;
 use spmvperf::util::report::{f, Table};
 
@@ -48,6 +53,7 @@ fn run() -> Result<()> {
         "predict" => cmd_predict(&args),
         "tune" => cmd_tune(&args),
         "lanczos" => cmd_lanczos(&args),
+        "shard" => cmd_shard(&args),
         "benchdiff" => cmd_benchdiff(&mut args),
         "serve" => cmd_serve(&args),
         "matrix" => cmd_matrix(&args),
@@ -74,6 +80,9 @@ USAGE:
   spmvperf lanczos    [--sites 6 --electrons 3 --max-phonons 4 --eigenvalues 1]
                       [--threads T] [--pin|--no-pin] [--scheme auto|crs|sellcs:32:256]
                       [--quick]
+  spmvperf shard      [--shards 1,2,4,8] [--mode bulk|overlap] [--threads 1]
+                      [--scheme crs|sellcs:32:256] [--pin|--no-pin]
+                      [--policy heuristic|measured] [--quick|--full]
   spmvperf benchdiff  <baseline.json> <current.json> [--tolerance 0.2]
   spmvperf serve      [--requests 64 --batch-window-us 500]
   spmvperf matrix     [--out FILE.mtx] [--full|--quick]
@@ -360,6 +369,127 @@ fn cmd_lanczos(args: &Args) -> Result<()> {
         f(2.0 * crs.nnz() as f64 * r.spmv_count as f64 / dt.as_secs_f64() / 1e6),
     ]);
     t.print();
+    Ok(())
+}
+
+/// `spmvperf shard` — the fig-style sharded-SpMV scaling table: shard
+/// counts × overlap modes on the Holstein-Hubbard test matrix, each
+/// configuration self-validated against the serial CRS kernel before it
+/// is timed (the shards-as-domains replay of arXiv:1106.5908's vector-
+/// vs task-mode comparison). `--policy heuristic|measured` additionally
+/// runs the shard tuning tier and prints its decision.
+fn cmd_shard(args: &Args) -> Result<()> {
+    let quick = args.flag("quick");
+    let full = args.flag("full");
+    let pin = pin_flag(args)?;
+    let threads = args.get_usize("threads", 1)?.max(1);
+    let scheme = Scheme::parse(&args.get_str("scheme", "crs"))?;
+    let shards_list = args.get_usize_list("shards", &[1, 2, 4, 8])?;
+    // `--mode bulk|overlap` restricts the sweep to one overlap mode
+    // (default: both, side by side).
+    let modes: Vec<OverlapMode> = match args.get("mode") {
+        None => vec![OverlapMode::BulkSync, OverlapMode::Overlapped],
+        Some(m) => vec![OverlapMode::parse(m)?],
+    };
+    let policy_arg = args.get("policy").map(str::to_string);
+    args.finish()?;
+    anyhow::ensure!(!shards_list.is_empty(), "--shards needs at least one count");
+    anyhow::ensure!(
+        shards_list.iter().all(|&s| s > 0),
+        "--shards counts must be positive"
+    );
+    let opts = ExpOptions { full, quick, ..Default::default() };
+    let coo = opts.test_matrix();
+    let crs = std::sync::Arc::new(Crs::from_coo(&coo));
+    let n = crs.nrows;
+    let nnz = crs.nnz();
+    eprintln!("sharding the Holstein-Hubbard test matrix: N={n} nnz={nnz}");
+    let mut rng = spmvperf::util::rng::Rng::new(6);
+    let mut x = vec![0.0; n];
+    rng.fill_f64(&mut x, -1.0, 1.0);
+    let mut y_ref = vec![0.0; n];
+    crs.spmv(&x, &mut y_ref);
+    let reps = if quick { 5 } else { 20 };
+    let mut t = Table::new(
+        &format!(
+            "sharded SpMV scaling — {} ({threads} thread(s)/shard, {}): shards × overlap mode",
+            scheme.name(),
+            if pin { "pinned" } else { "unpinned" }
+        ),
+        &["shards", "mode", "halo frac", "boundary nnz frac", "MFlop/s", "vs first config"],
+    );
+    // Speedups are relative to the first measured configuration (the
+    // first --shards entry in its first mode).
+    let mut base = 0.0f64;
+    let mut y = vec![0.0; n];
+    for &s in &shards_list {
+        let mut sh = ShardedSpmv::new(
+            crs.clone(),
+            scheme,
+            Schedule::Static { chunk: None },
+            s,
+            threads,
+            OverlapMode::BulkSync,
+            pin,
+        )?;
+        for &mode in &modes {
+            sh.set_mode(mode);
+            // Self-validate before timing: sharding must never change
+            // the math.
+            sh.spmv(&x, &mut y);
+            let err = spmvperf::util::stats::max_abs_diff(&y_ref, &y);
+            anyhow::ensure!(
+                err == 0.0,
+                "{s} shards × {} deviates from serial CRS by {err:.2e}",
+                mode.name()
+            );
+            let t0 = std::time::Instant::now();
+            for _ in 0..reps {
+                sh.spmv(&x, &mut y);
+                std::hint::black_box(y[0]);
+            }
+            let dt = t0.elapsed().as_secs_f64() / reps as f64;
+            let mflops = 2.0 * nnz as f64 / dt / 1e6;
+            if base == 0.0 {
+                base = mflops;
+            }
+            t.row(vec![
+                s.to_string(),
+                mode.name().into(),
+                f(sh.halo_fraction()),
+                f(sh.boundary_nnz_fraction()),
+                f(mflops),
+                f(mflops / base),
+            ]);
+        }
+    }
+    t.print();
+    if let Some(p) = policy_arg {
+        let shard_policy = match p.as_str() {
+            "heuristic" => ShardPolicy::Heuristic,
+            "measured" => ShardPolicy::Measured,
+            other => bail!("unknown shard policy '{other}' (expected heuristic|measured)"),
+        };
+        let ctx = SpmvContext::builder_from_crs(&crs)
+            .policy(TuningPolicy::Fixed(scheme, Schedule::Static { chunk: None }))
+            .threads(threads)
+            .quick(quick)
+            .pinned(pin)
+            .sharded(shard_policy)
+            .build_sharded()?;
+        for table in ctx.report().tables() {
+            table.print();
+        }
+        let mut yp = vec![0.0; n];
+        ctx.spmv(&x, &mut yp);
+        let err = spmvperf::util::stats::max_abs_diff(&y_ref, &yp);
+        anyhow::ensure!(err == 0.0, "tuned sharded context deviates by {err:.2e}");
+        eprintln!(
+            "tuned: {} shard(s), {} mode — bit-identical to serial CRS",
+            ctx.n_shards(),
+            ctx.mode().name()
+        );
+    }
     Ok(())
 }
 

@@ -13,7 +13,11 @@
 //!   (18 bytes/flop), shared by the JDS / NBJDS / NUJDS access schemes.
 //! - [`sell`]: SELL-C-σ — sliced, σ-window-sorted ELL (Kreutzer et al.
 //!   2013), the modern successor of the JDS refinements and the layout
-//!   the parallel execution engine targets.
+//!   the parallel execution engine targets; plus [`SellRect`], the
+//!   rectangular row-sorted-only variant used for shard halves.
+//! - [`shard`]: row-sharded CRS with per-shard local/remote halves and
+//!   halo index maps (arXiv:1106.5908) — the storage side of the
+//!   distributed-style SpMV in [`crate::shard`].
 //!
 //! All formats store values as `f64` and column indices as `u32`, matching
 //! the 8-byte value + 4-byte index assumption behind the paper's balance
@@ -26,13 +30,15 @@ pub mod ell;
 pub mod io;
 pub mod jds;
 pub mod sell;
+pub mod shard;
 
 pub use blocked::{RbJds, SoJds};
 pub use coo::Coo;
 pub use crs::Crs;
 pub use ell::EllMatrix;
 pub use jds::Jds;
-pub use sell::SellCs;
+pub use sell::{SellCs, SellRect};
+pub use shard::{ShardCrs, ShardedCrs};
 
 /// The storage/access scheme taxonomy of the paper (§2, Fig 1), extended
 /// with SELL-C-σ.

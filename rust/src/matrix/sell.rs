@@ -248,6 +248,151 @@ impl SpMv for SellCs {
     }
 }
 
+/// Rectangular, **row-sorted-only** SELL-C-σ for the shard halves of
+/// [`crate::matrix::shard::ShardedCrs`].
+///
+/// A shard's local/remote half is a rectangular matrix (its rows
+/// against the owned / concatenated column space), so the square
+/// symmetric permutation of [`SellCs`] does not apply. This variant
+/// keeps the SELL storage idea — σ-window row sorting, slices of C rows
+/// padded to their own widest row, column-major within the slice — but:
+///
+/// - columns are **not relabeled** (the kernel reads `x` in the half's
+///   own index space), and
+/// - each row's entries keep their **original CRS order** instead of
+///   being re-sorted by column: the remote half interleaves owned and
+///   halo columns in ascending *global* order, and re-sorting by the
+///   concatenated index would change the accumulation order and break
+///   the bit-identity invariant.
+///
+/// Only rows are permuted; `perm[slot] = original half row` maps kernel
+/// output slots back.
+#[derive(Debug, Clone)]
+pub struct SellRect {
+    pub nrows: usize,
+    pub ncols: usize,
+    pub c: usize,
+    pub sigma: usize,
+    /// `perm[slot] = original half row`.
+    pub perm: Vec<u32>,
+    /// Offset of each slice into `val`/`col_idx`; length `n_slices + 1`.
+    pub slice_ptr: Vec<usize>,
+    /// Width (padded row length) of each slice.
+    pub slice_width: Vec<usize>,
+    /// Non-zeros per permuted row slot.
+    pub row_nnz: Vec<u32>,
+    /// Column indices in the half's own space; padding slots hold 0.
+    pub col_idx: Vec<u32>,
+    /// Values; padding slots hold 0.0.
+    pub val: Vec<f64>,
+    nnz: usize,
+}
+
+impl SellRect {
+    /// Build from a (possibly rectangular) CRS half. Row order within σ
+    /// windows is sorted by descending nnz; entry order within each row
+    /// is preserved verbatim.
+    pub fn from_crs(crs: &Crs, c: usize, sigma: usize) -> Self {
+        assert!(c > 0, "SELL slice height must be positive");
+        assert!(sigma > 0, "SELL sort window must be positive");
+        let n = crs.nrows;
+        let mut perm: Vec<u32> = (0..n as u32).collect();
+        for win in perm.chunks_mut(sigma) {
+            win.sort_by_key(|&i| {
+                let i = i as usize;
+                std::cmp::Reverse(crs.row_ptr[i + 1] - crs.row_ptr[i])
+            });
+        }
+        let row_nnz: Vec<u32> = perm
+            .iter()
+            .map(|&old| (crs.row_ptr[old as usize + 1] - crs.row_ptr[old as usize]) as u32)
+            .collect();
+
+        let n_slices = n.div_ceil(c);
+        let mut slice_ptr = Vec::with_capacity(n_slices + 1);
+        let mut slice_width = Vec::with_capacity(n_slices);
+        slice_ptr.push(0);
+        let mut col_idx = Vec::new();
+        let mut val = Vec::new();
+        for s in 0..n_slices {
+            let lo = s * c;
+            let hi = ((s + 1) * c).min(n);
+            let h = hi - lo;
+            let w = row_nnz[lo..hi].iter().max().copied().unwrap_or(0) as usize;
+            for k in 0..w {
+                for slot in lo..hi {
+                    let old = perm[slot] as usize;
+                    if (k as u32) < row_nnz[slot] {
+                        let j = crs.row_ptr[old] + k;
+                        col_idx.push(crs.col_idx[j]);
+                        val.push(crs.val[j]);
+                    } else {
+                        col_idx.push(0);
+                        val.push(0.0);
+                    }
+                }
+            }
+            slice_ptr.push(col_idx.len());
+            slice_width.push(w);
+        }
+
+        SellRect {
+            nrows: n,
+            ncols: crs.ncols,
+            c,
+            sigma,
+            perm,
+            slice_ptr,
+            slice_width,
+            row_nnz,
+            col_idx,
+            val,
+            nnz: crs.nnz(),
+        }
+    }
+
+    pub fn n_slices(&self) -> usize {
+        self.slice_ptr.len() - 1
+    }
+
+    /// Stored non-zeros (excluding padding).
+    pub fn nnz(&self) -> usize {
+        self.nnz
+    }
+
+    /// Padding overhead `padded/nnz - 1`.
+    pub fn padding_overhead(&self) -> f64 {
+        if self.nnz == 0 {
+            return 0.0;
+        }
+        self.val.len() as f64 / self.nnz as f64 - 1.0
+    }
+
+    /// Range-restricted kernel over permuted row **slots**: computes
+    /// slots `[row_begin, row_end)` into `out[i - row_begin]`, reading
+    /// `x` in the half's own column space. Per-row accumulation order
+    /// is ascending `k` = the original CRS entry order, so output slot
+    /// `i` is bit-identical to the serial CRS kernel on half row
+    /// `perm[i]`.
+    pub fn spmv_rows(&self, row_begin: usize, row_end: usize, x: &[f64], out: &mut [f64]) {
+        debug_assert!(row_end <= self.nrows);
+        debug_assert_eq!(out.len(), row_end - row_begin);
+        for i in row_begin..row_end {
+            let s = i / self.c;
+            let lo = s * self.c;
+            let h = ((s + 1) * self.c).min(self.nrows) - lo;
+            let lane = i - lo;
+            let base = self.slice_ptr[s];
+            let mut acc = 0.0;
+            for k in 0..self.row_nnz[i] as usize {
+                let idx = base + k * h + lane;
+                acc += self.val[idx] * x[self.col_idx[idx] as usize];
+            }
+            out[i - row_begin] = acc;
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -404,5 +549,96 @@ mod tests {
         let mut y = vec![9.0; 5];
         sell.spmv(&x, &mut y);
         assert_eq!(y, vec![0.0; 5]);
+    }
+
+    /// Rectangular CRS half with more columns than rows: every SellRect
+    /// output slot must be bit-identical to the serial CRS kernel on
+    /// the row its `perm` names.
+    #[test]
+    fn sell_rect_slots_bit_identical_to_crs_rows() {
+        let mut rng = Rng::new(46);
+        let (nrows, ncols) = (90, 140);
+        let mut coo = Coo::new(nrows, ncols);
+        for _ in 0..nrows * 6 {
+            coo.push(rng.index(nrows), rng.index(ncols), rng.f64() * 2.0 - 1.0);
+        }
+        coo.normalize();
+        let crs = Crs::from_coo(&coo);
+        let mut x = vec![0.0; ncols];
+        rng.fill_f64(&mut x, -1.0, 1.0);
+        let mut want = vec![0.0; nrows];
+        crs.spmv_rows_into(0, nrows, &x, &mut want);
+        for (c, sigma) in [(1, 1), (4, 16), (8, 8), (32, 90), (16, 1000)] {
+            let rect = SellRect::from_crs(&crs, c, sigma);
+            assert_eq!(rect.nnz(), crs.nnz());
+            let mut slots = vec![0.0; nrows];
+            rect.spmv_rows(0, nrows, &x, &mut slots);
+            for (i, &old) in rect.perm.iter().enumerate() {
+                assert_eq!(
+                    slots[i], want[old as usize],
+                    "SELL-rect {c}/{sigma}: slot {i} (row {old}) not bit-identical"
+                );
+            }
+            // Piecewise dispatch matches the full pass exactly.
+            let mut pieced = vec![0.0; nrows];
+            for (a, b) in [(0usize, 7usize), (7, 41), (41, nrows)] {
+                let (head, _) = pieced.split_at_mut(b);
+                rect.spmv_rows(a, b, &x, &mut head[a..]);
+            }
+            assert_eq!(max_abs_diff(&slots, &pieced), 0.0);
+        }
+    }
+
+    /// SellRect must pack each row's entries in storage order, NOT
+    /// re-sorted by column — the remote shard half depends on it.
+    #[test]
+    fn sell_rect_preserves_unsorted_entry_order() {
+        // Hand-built CRS with deliberately descending column order.
+        let crs = Crs {
+            nrows: 2,
+            ncols: 4,
+            row_ptr: vec![0, 3, 4],
+            col_idx: vec![3, 1, 0, 2],
+            val: vec![1.0, 1e16, -1e16, 2.0],
+        };
+        let rect = SellRect::from_crs(&crs, 2, 2);
+        let x = [1.0, 1.0, 1.0, 1.0];
+        let mut want = vec![0.0; 2];
+        crs.spmv_rows_into(0, 2, &x, &mut want);
+        let mut slots = vec![0.0; 2];
+        rect.spmv_rows(0, 2, &x, &mut slots);
+        for (i, &old) in rect.perm.iter().enumerate() {
+            // Storage order (1.0 + 1e16) - 1e16 == 0.0 in f64, while
+            // the column-sorted order (-1e16 + 1e16) + 1.0 == 1.0:
+            // bit-equality here proves the storage order survived.
+            assert_eq!(slots[i], want[old as usize]);
+        }
+    }
+
+    #[test]
+    fn sell_rect_sigma_windows_and_padding() {
+        let mut rng = Rng::new(47);
+        let crs = random_square(&mut rng, 128, 900);
+        let rect = SellRect::from_crs(&crs, 8, 32);
+        // perm is a permutation that keeps rows inside their σ window.
+        let mut seen = vec![false; 128];
+        for (slot, &old) in rect.perm.iter().enumerate() {
+            assert!(!seen[old as usize]);
+            seen[old as usize] = true;
+            assert_eq!(slot / 32, old as usize / 32, "row escaped its σ window");
+        }
+        // Wider σ ⇒ no more padding (same argument as SellCs).
+        let tight = SellRect::from_crs(&crs, 8, 8);
+        let full = SellRect::from_crs(&crs, 8, 128);
+        assert!(full.padding_overhead() <= tight.padding_overhead() + 1e-12);
+        // Empty half degenerates cleanly.
+        let empty = SellRect::from_crs(
+            &Crs { nrows: 0, ncols: 7, row_ptr: vec![0], col_idx: vec![], val: vec![] },
+            8,
+            8,
+        );
+        assert_eq!(empty.nnz(), 0);
+        assert_eq!(empty.n_slices(), 0);
+        empty.spmv_rows(0, 0, &[0.0; 7], &mut []);
     }
 }

@@ -1,0 +1,528 @@
+//! Row-sharded CRS storage with halo maps — the distributed-memory
+//! decomposition of Schubert/Hager/Fehske/Wellein (arXiv:1106.5908,
+//! arXiv:1101.0091) realized in one process. The matrix is
+//! row-partitioned into shards; shard *s* owns the row range
+//! `[row_begin, row_end)` **and** the matching slice of the input/output
+//! vectors (the symmetric partition every row-distributed SpMV uses).
+//! Columns outside the owned range are **halo** columns: their vector
+//! entries live on another shard and must be exchanged before they can
+//! be multiplied.
+//!
+//! # The local/remote split and bit-reproducibility
+//!
+//! The classic column split (`y = A_local x_local; y += A_remote
+//! x_halo`) cannot reproduce the serial CRS kernel bit for bit: a row's
+//! halo columns interleave with its owned columns in ascending global
+//! order, and floating-point accumulation is not associative across
+//! that interleaving. This layer therefore splits **by row class**, the
+//! task-mode decomposition of arXiv:1106.5908 §3:
+//!
+//! - **interior rows** touch only owned columns; they form the
+//!   [`ShardCrs::local`] half (columns renumbered by `-row_begin`, a
+//!   monotone shift that preserves the entry order) and need no halo —
+//!   they are the work the engine overlaps with the exchange;
+//! - **boundary rows** touch at least one halo column; they form the
+//!   [`ShardCrs::remote`] half over the concatenated `[owned | halo]`
+//!   index space, with every row's entries kept in their **original CRS
+//!   order** (owned and halo columns interleaved exactly as the serial
+//!   kernel walks them — the half is packed directly, never re-sorted).
+//!
+//! Each row is thus computed exactly once, with exactly the serial
+//! kernel's per-row accumulation order, so sharded output is
+//! bit-identical to serial CRS for every shard count, scheme, schedule
+//! and overlap mode ([`crate::shard`] tests assert this exhaustively).
+//!
+//! The halo side is described by [`ShardCrs::halo_cols`] (ascending
+//! global columns to gather) and [`ShardCrs::halo_segments`]
+//! (per-source-shard contiguous runs of that list — one message per
+//! neighbour under a real transport, one `memcpy` per neighbour under
+//! the in-process one).
+
+use super::{Crs, SpMv};
+
+/// A CRS matrix row-partitioned into shards with per-shard local/remote
+/// halves and halo index maps. Pure storage: execution lives in
+/// [`crate::shard::ShardedSpmv`].
+#[derive(Debug, Clone)]
+pub struct ShardedCrs {
+    pub nrows: usize,
+    pub ncols: usize,
+    nnz: usize,
+    /// Shard row boundaries; length `n_shards + 1`, `boundaries[s]..
+    /// boundaries[s+1]` is shard `s`'s row (and vector) range.
+    pub boundaries: Vec<usize>,
+    pub shards: Vec<ShardCrs>,
+}
+
+/// One shard: an owned row/vector range plus the split halves and halo
+/// maps described in the module docs.
+#[derive(Debug, Clone)]
+pub struct ShardCrs {
+    pub row_begin: usize,
+    pub row_end: usize,
+    /// Global row ids of rows touching only owned columns (ascending).
+    pub interior_rows: Vec<u32>,
+    /// Global row ids of rows touching at least one halo column
+    /// (ascending).
+    pub boundary_rows: Vec<u32>,
+    /// Interior rows over owned columns, renumbered by `-row_begin`.
+    /// `nrows = interior_rows.len()`, `ncols = width()`.
+    pub local: Crs,
+    /// Boundary rows over the concatenated `[owned | halo]` space: an
+    /// owned column `c` maps to `c - row_begin`, a halo column to
+    /// `width() + its position in halo_cols`. Entry order within each
+    /// row is the original CRS (ascending global column) order.
+    /// `nrows = boundary_rows.len()`, `ncols = width() + halo_len()`.
+    pub remote: Crs,
+    /// Ascending global columns this shard gathers from other shards.
+    pub halo_cols: Vec<u32>,
+    /// `(source_shard, begin, end)` runs of `halo_cols` owned by one
+    /// source shard each — the per-neighbour exchange messages.
+    pub halo_segments: Vec<(usize, usize, usize)>,
+}
+
+impl ShardCrs {
+    /// Owned rows (== owned vector elements).
+    pub fn width(&self) -> usize {
+        self.row_end - self.row_begin
+    }
+
+    /// Halo vector elements gathered per SpMV.
+    pub fn halo_len(&self) -> usize {
+        self.halo_cols.len()
+    }
+
+    /// Length of the concatenated `[owned | halo]` input the remote
+    /// half multiplies.
+    pub fn concat_len(&self) -> usize {
+        self.width() + self.halo_len()
+    }
+
+    /// Fill `concat` (length [`ShardCrs::concat_len`]) with the owned
+    /// slice of `x` followed by the gathered halo values, walking the
+    /// per-source segments exactly as a real transport would.
+    pub fn gather(&self, x: &[f64], concat: &mut [f64]) {
+        let w = self.width();
+        debug_assert_eq!(concat.len(), self.concat_len());
+        concat[..w].copy_from_slice(&x[self.row_begin..self.row_end]);
+        for &(_src, a, b) in &self.halo_segments {
+            for j in a..b {
+                concat[w + j] = x[self.halo_cols[j] as usize];
+            }
+        }
+    }
+}
+
+impl ShardedCrs {
+    /// Row-partition `crs` into `n_shards` contiguous, nnz-balanced
+    /// shards and split each into its local/remote halves. Requires a
+    /// square matrix: rows and vector are partitioned symmetrically.
+    pub fn from_crs(crs: &Crs, n_shards: usize) -> Self {
+        assert_eq!(crs.nrows, crs.ncols, "sharded SpMV requires a square matrix");
+        let boundaries = Self::partition_boundaries(crs, n_shards);
+        let shards = (0..n_shards)
+            .map(|s| Self::build_shard(crs, &boundaries, boundaries[s], boundaries[s + 1]))
+            .collect();
+        ShardedCrs { nrows: crs.nrows, ncols: crs.ncols, nnz: crs.nnz(), boundaries, shards }
+    }
+
+    /// The nnz-balanced contiguous row boundaries `from_crs` partitions
+    /// on: `row_ptr` is the cumulative-nnz prefix, so boundary `s` is
+    /// the first row at or past `s/n_shards` of the total and shards
+    /// carry near-equal nnz (empty shards are fine on tiny matrices).
+    fn partition_boundaries(crs: &Crs, n_shards: usize) -> Vec<usize> {
+        assert!(n_shards > 0, "need at least one shard");
+        let n = crs.nrows;
+        let mut boundaries = Vec::with_capacity(n_shards + 1);
+        boundaries.push(0usize);
+        for s in 1..n_shards {
+            let target = crs.nnz() * s / n_shards;
+            let at = crs.row_ptr.partition_point(|&p| p < target).min(n);
+            boundaries.push(at.max(boundaries[s - 1]));
+        }
+        boundaries.push(n);
+        boundaries
+    }
+
+    /// The (halo-volume fraction, boundary-nnz fraction) a `n_shards`
+    /// partition of `crs` would have — what the shard tuner scores
+    /// candidates with — computed by a scan only: no local/remote
+    /// halves are packed and no nonzeros are copied.
+    pub fn partition_stats(crs: &Crs, n_shards: usize) -> (f64, f64) {
+        assert_eq!(crs.nrows, crs.ncols, "sharded SpMV requires a square matrix");
+        let boundaries = Self::partition_boundaries(crs, n_shards);
+        let mut halo_total = 0usize;
+        let mut boundary_nnz = 0usize;
+        for s in 0..n_shards {
+            let (rb, re) = (boundaries[s], boundaries[s + 1]);
+            let mut halo: Vec<u32> = Vec::new();
+            for i in rb..re {
+                let (cols, _) = crs.row(i);
+                let before = halo.len();
+                halo.extend(
+                    cols.iter().copied().filter(|&c| !(rb..re).contains(&(c as usize))),
+                );
+                if halo.len() > before {
+                    boundary_nnz += cols.len();
+                }
+            }
+            halo.sort_unstable();
+            halo.dedup();
+            halo_total += halo.len();
+        }
+        let hf = if crs.nrows == 0 { 0.0 } else { halo_total as f64 / crs.nrows as f64 };
+        let bf = if crs.nnz() == 0 { 0.0 } else { boundary_nnz as f64 / crs.nnz() as f64 };
+        (hf, bf)
+    }
+
+    fn build_shard(crs: &Crs, boundaries: &[usize], rb: usize, re: usize) -> ShardCrs {
+        let w = re - rb;
+        let in_range = |c: usize| c >= rb && c < re;
+        // Classify rows and collect the halo column set.
+        let mut interior_rows = Vec::new();
+        let mut boundary_rows = Vec::new();
+        let mut halo_cols: Vec<u32> = Vec::new();
+        for i in rb..re {
+            let (cols, _) = crs.row(i);
+            if cols.iter().all(|&c| in_range(c as usize)) {
+                interior_rows.push(i as u32);
+            } else {
+                boundary_rows.push(i as u32);
+                halo_cols.extend(cols.iter().copied().filter(|&c| !in_range(c as usize)));
+            }
+        }
+        halo_cols.sort_unstable();
+        halo_cols.dedup();
+
+        // Local half: interior rows, columns shifted into [0, w).
+        let mut local = Crs {
+            nrows: interior_rows.len(),
+            ncols: w,
+            row_ptr: vec![0],
+            col_idx: Vec::new(),
+            val: Vec::new(),
+        };
+        for &r in &interior_rows {
+            let (cols, vals) = crs.row(r as usize);
+            for (&c, &v) in cols.iter().zip(vals) {
+                local.col_idx.push(c - rb as u32);
+                local.val.push(v);
+            }
+            local.row_ptr.push(local.val.len());
+        }
+
+        // Remote half: boundary rows over [owned | halo], packed
+        // directly from the CRS walk so each row keeps its original
+        // (ascending global column) entry order — the
+        // bit-reproducibility invariant. NOT built via Coo::normalize,
+        // which would re-sort by concatenated index and put halo terms
+        // after owned ones.
+        let mut remote = Crs {
+            nrows: boundary_rows.len(),
+            ncols: w + halo_cols.len(),
+            row_ptr: vec![0],
+            col_idx: Vec::new(),
+            val: Vec::new(),
+        };
+        for &r in &boundary_rows {
+            let (cols, vals) = crs.row(r as usize);
+            for (&c, &v) in cols.iter().zip(vals) {
+                let cc = if in_range(c as usize) {
+                    c - rb as u32
+                } else {
+                    let h = halo_cols.binary_search(&c).expect("halo column was collected");
+                    (w + h) as u32
+                };
+                remote.col_idx.push(cc);
+                remote.val.push(v);
+            }
+            remote.row_ptr.push(remote.val.len());
+        }
+
+        // Per-source-shard contiguous runs of the (sorted) halo list.
+        let owner = |c: u32| boundaries.partition_point(|&b| b <= c as usize) - 1;
+        let mut halo_segments = Vec::new();
+        let mut seg_start = 0usize;
+        while seg_start < halo_cols.len() {
+            let src = owner(halo_cols[seg_start]);
+            let mut seg_end = seg_start + 1;
+            while seg_end < halo_cols.len() && owner(halo_cols[seg_end]) == src {
+                seg_end += 1;
+            }
+            halo_segments.push((src, seg_start, seg_end));
+            seg_start = seg_end;
+        }
+
+        ShardCrs {
+            row_begin: rb,
+            row_end: re,
+            interior_rows,
+            boundary_rows,
+            local,
+            remote,
+            halo_cols,
+            halo_segments,
+        }
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Vector elements exchanged per SpMV, all shards.
+    pub fn halo_cols_total(&self) -> usize {
+        self.shards.iter().map(|s| s.halo_len()).sum()
+    }
+
+    /// Exchanged vector elements as a fraction of the vector length —
+    /// the halo-volume fraction the tuner and benches record.
+    pub fn halo_fraction(&self) -> f64 {
+        if self.nrows == 0 {
+            return 0.0;
+        }
+        self.halo_cols_total() as f64 / self.nrows as f64
+    }
+
+    /// Non-zeros in boundary (halo-dependent) rows.
+    pub fn boundary_nnz(&self) -> usize {
+        self.shards.iter().map(|s| s.remote.val.len()).sum()
+    }
+
+    /// Fraction of nnz that must wait for the halo — the complement is
+    /// the interior work available to hide the exchange behind.
+    pub fn boundary_nnz_fraction(&self) -> f64 {
+        if self.nnz == 0 {
+            return 0.0;
+        }
+        self.boundary_nnz() as f64 / self.nnz as f64
+    }
+}
+
+impl SpMv for ShardedCrs {
+    fn nrows(&self) -> usize {
+        self.nrows
+    }
+    fn ncols(&self) -> usize {
+        self.ncols
+    }
+    fn nnz(&self) -> usize {
+        self.nnz
+    }
+    /// Serial reference execution: gather + local + remote per shard,
+    /// through the same halves and maps the parallel executor uses.
+    fn spmv(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.ncols);
+        assert_eq!(y.len(), self.nrows);
+        for shard in &self.shards {
+            let mut concat = vec![0.0; shard.concat_len()];
+            shard.gather(x, &mut concat);
+            let mut out = vec![0.0; shard.local.nrows];
+            shard.local.spmv_rows_into(0, shard.local.nrows, &concat[..shard.width()], &mut out);
+            for (i, &r) in shard.interior_rows.iter().enumerate() {
+                y[r as usize] = out[i];
+            }
+            let mut out = vec![0.0; shard.remote.nrows];
+            shard.remote.spmv_rows_into(0, shard.remote.nrows, &concat, &mut out);
+            for (i, &r) in shard.boundary_rows.iter().enumerate() {
+                y[r as usize] = out[i];
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen;
+    use crate::matrix::Coo;
+    use crate::util::rng::Rng;
+    use crate::util::stats::max_abs_diff;
+
+    fn random_crs(rng: &mut Rng, n: usize, nnz: usize) -> Crs {
+        let mut coo = Coo::new(n, n);
+        for _ in 0..nnz {
+            coo.push(rng.index(n), rng.index(n), rng.f64() * 2.0 - 1.0);
+        }
+        coo.normalize();
+        Crs::from_coo(&coo)
+    }
+
+    #[test]
+    fn partition_tiles_rows_and_balances_nnz() {
+        let mut rng = Rng::new(100);
+        let crs = random_crs(&mut rng, 500, 4000);
+        for n_shards in [1usize, 2, 4, 8] {
+            let sh = ShardedCrs::from_crs(&crs, n_shards);
+            assert_eq!(sh.n_shards(), n_shards);
+            assert_eq!(sh.boundaries.len(), n_shards + 1);
+            assert_eq!(sh.boundaries[0], 0);
+            assert_eq!(*sh.boundaries.last().unwrap(), 500);
+            assert!(sh.boundaries.windows(2).all(|w| w[0] <= w[1]));
+            // Every row lands in exactly one shard, as interior XOR
+            // boundary, and total nnz is conserved.
+            let mut seen = vec![0u8; 500];
+            let mut nnz = 0usize;
+            for s in &sh.shards {
+                for &r in s.interior_rows.iter().chain(&s.boundary_rows) {
+                    seen[r as usize] += 1;
+                    assert!((s.row_begin..s.row_end).contains(&(r as usize)));
+                }
+                nnz += s.local.val.len() + s.remote.val.len();
+            }
+            assert!(seen.iter().all(|&c| c == 1), "{n_shards} shards: row multiplicity");
+            assert_eq!(nnz, crs.nnz());
+            // nnz balance: no shard holds more than ~2x its fair share
+            // (+ the largest single row, which cannot be split).
+            if n_shards > 1 {
+                let max_row =
+                    (0..500).map(|i| crs.row_ptr[i + 1] - crs.row_ptr[i]).max().unwrap();
+                let fair = crs.nnz() / n_shards;
+                for (i, s) in sh.shards.iter().enumerate() {
+                    let got = s.local.val.len() + s.remote.val.len();
+                    assert!(
+                        got <= 2 * fair + max_row,
+                        "{n_shards} shards: shard {i} holds {got} nnz (fair {fair})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn halo_maps_are_consistent() {
+        let mut rng = Rng::new(101);
+        let crs = random_crs(&mut rng, 300, 2400);
+        let sh = ShardedCrs::from_crs(&crs, 4);
+        for (si, s) in sh.shards.iter().enumerate() {
+            // halo columns: sorted, unique, never owned.
+            assert!(s.halo_cols.windows(2).all(|w| w[0] < w[1]));
+            for &c in &s.halo_cols {
+                assert!(!(s.row_begin..s.row_end).contains(&(c as usize)));
+            }
+            // segments tile the halo list and name the true owner.
+            let mut pos = 0;
+            for &(src, a, b) in &s.halo_segments {
+                assert_eq!(a, pos);
+                assert!(b > a);
+                assert_ne!(src, si, "a shard cannot be its own halo source");
+                for &c in &s.halo_cols[a..b] {
+                    let o = &sh.shards[src];
+                    assert!((o.row_begin..o.row_end).contains(&(c as usize)));
+                }
+                pos = b;
+            }
+            assert_eq!(pos, s.halo_cols.len());
+            // remote half: concatenated index space, interleaved order
+            // preserved (strictly ascending global column per row).
+            assert_eq!(s.remote.ncols, s.width() + s.halo_len());
+            for r in 0..s.remote.nrows {
+                let (cols, _) = s.remote.row(r);
+                let global: Vec<u32> = cols
+                    .iter()
+                    .map(|&cc| {
+                        if (cc as usize) < s.width() {
+                            cc + s.row_begin as u32
+                        } else {
+                            s.halo_cols[cc as usize - s.width()]
+                        }
+                    })
+                    .collect();
+                assert!(
+                    global.windows(2).all(|w| w[0] < w[1]),
+                    "remote row {r} lost the serial (ascending global) entry order"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_serial_reference_is_bit_identical_to_crs() {
+        let hh = Crs::from_coo(&gen::holstein_hubbard(&gen::HolsteinHubbardParams::tiny()));
+        let matrices = [
+            ("hh-tiny", hh),
+            ("random", random_crs(&mut Rng::new(102), 257, 1800)),
+            ("band", Crs::from_coo(&gen::random_band(400, 7, 90, &mut Rng::new(103)))),
+        ];
+        for (name, crs) in &matrices {
+            let n = crs.nrows;
+            let mut rng = Rng::new(104);
+            let mut x = vec![0.0; n];
+            rng.fill_f64(&mut x, -1.0, 1.0);
+            let mut want = vec![0.0; n];
+            crs.spmv(&x, &mut want);
+            for n_shards in [1usize, 2, 3, 4, 8, 16] {
+                let sh = ShardedCrs::from_crs(crs, n_shards);
+                let mut got = vec![0.0; n];
+                sh.spmv(&x, &mut got);
+                assert_eq!(
+                    max_abs_diff(&want, &got),
+                    0.0,
+                    "{name} × {n_shards} shards deviates from serial CRS"
+                );
+            }
+        }
+    }
+
+    /// The scan-only tuner features must agree exactly with the fully
+    /// built partition's fractions.
+    #[test]
+    fn partition_stats_match_built_partition() {
+        let mut rng = Rng::new(109);
+        let crs = random_crs(&mut rng, 350, 2600);
+        for n_shards in [1usize, 2, 4, 8] {
+            let (hf, bf) = ShardedCrs::partition_stats(&crs, n_shards);
+            let built = ShardedCrs::from_crs(&crs, n_shards);
+            assert_eq!(hf, built.halo_fraction(), "{n_shards} shards: halo fraction");
+            assert_eq!(bf, built.boundary_nnz_fraction(), "{n_shards} shards: boundary nnz");
+        }
+    }
+
+    #[test]
+    fn single_shard_has_no_halo() {
+        let crs = random_crs(&mut Rng::new(105), 120, 700);
+        let sh = ShardedCrs::from_crs(&crs, 1);
+        let s = &sh.shards[0];
+        assert_eq!(s.halo_len(), 0);
+        assert!(s.boundary_rows.is_empty());
+        assert_eq!(s.local.val.len(), crs.nnz());
+        assert_eq!(sh.halo_fraction(), 0.0);
+        assert_eq!(sh.boundary_nnz_fraction(), 0.0);
+    }
+
+    #[test]
+    fn halo_grows_with_shard_count_on_a_band() {
+        // A fixed-bandwidth band matrix: more shards -> more cuts ->
+        // more exchanged elements, while each cut's halo stays ~band.
+        let crs = Crs::from_coo(&gen::random_band(600, 6, 24, &mut Rng::new(106)));
+        let h2 = ShardedCrs::from_crs(&crs, 2).halo_cols_total();
+        let h4 = ShardedCrs::from_crs(&crs, 4).halo_cols_total();
+        let h8 = ShardedCrs::from_crs(&crs, 8).halo_cols_total();
+        assert!(h2 > 0);
+        assert!(h2 <= h4 && h4 <= h8, "halo volume must grow with cuts: {h2} {h4} {h8}");
+    }
+
+    #[test]
+    fn more_shards_than_rows_degenerates_cleanly() {
+        let crs = random_crs(&mut Rng::new(107), 5, 20);
+        let sh = ShardedCrs::from_crs(&crs, 8);
+        assert_eq!(sh.n_shards(), 8);
+        let mut x = vec![0.0; 5];
+        Rng::new(108).fill_f64(&mut x, -1.0, 1.0);
+        let mut want = vec![0.0; 5];
+        crs.spmv(&x, &mut want);
+        let mut got = vec![0.0; 5];
+        sh.spmv(&x, &mut got);
+        assert_eq!(max_abs_diff(&want, &got), 0.0);
+    }
+
+    #[test]
+    fn empty_matrix_shards() {
+        let crs = Crs::from_coo(&Coo::new(10, 10));
+        let sh = ShardedCrs::from_crs(&crs, 4);
+        assert_eq!(sh.halo_cols_total(), 0);
+        let x = vec![1.0; 10];
+        let mut y = vec![9.0; 10];
+        sh.spmv(&x, &mut y);
+        assert_eq!(y, vec![0.0; 10]);
+    }
+}

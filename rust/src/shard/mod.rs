@@ -1,0 +1,822 @@
+//! Sharded SpMV execution: in-process distributed domains with halo
+//! exchange and compute/exchange overlap (arXiv:1106.5908,
+//! arXiv:1101.0091).
+//!
+//! [`ShardedSpmv`] turns one process into a small cluster: the matrix
+//! is row-partitioned into shards ([`crate::matrix::shard::ShardedCrs`])
+//! and every shard gets its own engine thread pool, plans for its two
+//! halves, and buffers — optionally pinned to a disjoint core range and
+//! first-touched by its own workers, so each shard behaves like a NUMA
+//! domain of a real distributed run. Execution offers the two modes the
+//! papers compare:
+//!
+//! - [`OverlapMode::BulkSync`] (*vector mode*): gather the full halo,
+//!   then run both halves back to back;
+//! - [`OverlapMode::Overlapped`] (*task mode*): a dedicated exchange
+//!   thread per shard copies the halo segments while the shard's engine
+//!   computes the interior rows, and the boundary rows run once the
+//!   [`HaloGate`] opens ([`crate::engine::TwoPhasePlan`]).
+//!
+//! Both modes drive identical kernels in identical per-row order, so
+//! sharded output is **bit-identical to the serial CRS kernel** for
+//! every shard count × scheme × schedule × overlap mode × pinning
+//! choice — asserted exhaustively in the tests below.
+//!
+//! The transport is abstracted behind [`HaloExchange`]; the in-process
+//! [`SharedVecExchange`] simply copies out of the shared input vector,
+//! one segment per source shard (exactly the per-neighbour messages a
+//! real transport would post). Swapping in an inter-process transport
+//! is the recorded ROADMAP follow-up.
+
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+use crate::engine::affinity::{self, PinMode};
+use crate::engine::{first_touch_buffers, Engine, HaloGate, SpmvPlan, TwoPhasePlan};
+use crate::kernels::ShardKernel;
+use crate::matrix::shard::{ShardCrs, ShardedCrs};
+use crate::matrix::{Crs, Scheme, SpMv};
+use crate::sched::Schedule;
+
+/// How a sharded SpMV schedules the halo exchange against compute.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OverlapMode {
+    /// Vector mode: exchange the full halo, then compute both halves.
+    BulkSync,
+    /// Task mode: exchange concurrently with the interior compute;
+    /// boundary rows wait on the halo-ready gate.
+    Overlapped,
+}
+
+impl OverlapMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            OverlapMode::BulkSync => "bulk-sync",
+            OverlapMode::Overlapped => "overlapped",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "bulk" | "bulk-sync" | "bulksync" | "vector" => Ok(OverlapMode::BulkSync),
+            "overlap" | "overlapped" | "task" => Ok(OverlapMode::Overlapped),
+            other => anyhow::bail!("unknown overlap mode '{other}' (bulk-sync|overlapped)"),
+        }
+    }
+}
+
+/// The halo transport seam: fill a shard's halo buffer (one slot per
+/// [`ShardCrs::halo_cols`] entry) from wherever the neighbours' vector
+/// slices live. Implementations must walk the per-source
+/// [`ShardCrs::halo_segments`] — that is the message structure a real
+/// transport preserves.
+pub trait HaloExchange: Sync {
+    fn exchange(&self, shard: &ShardCrs, halo: &mut [f64]);
+}
+
+/// In-process transport: every shard reads the shared input vector
+/// directly, one contiguous-run copy per source shard.
+pub struct SharedVecExchange<'a>(pub &'a [f64]);
+
+impl HaloExchange for SharedVecExchange<'_> {
+    fn exchange(&self, shard: &ShardCrs, halo: &mut [f64]) {
+        debug_assert_eq!(halo.len(), shard.halo_len());
+        for &(_src, a, b) in &shard.halo_segments {
+            for j in a..b {
+                halo[j] = self.0[shard.halo_cols[j] as usize];
+            }
+        }
+    }
+}
+
+/// Per-shard execution state: the split kernels, one plan per half, the
+/// shard's own engine, and its (optionally first-touched) buffers.
+struct ShardUnit {
+    kernel: ShardKernel,
+    local_plan: SpmvPlan,
+    remote_plan: SpmvPlan,
+    engine: Engine,
+    bufs: Mutex<ShardBufs>,
+}
+
+struct ShardBufs {
+    /// `[owned | halo]` gather buffer the remote half multiplies.
+    concat: Vec<f64>,
+    /// Output slots of the local (interior-rows) half.
+    local_out: Vec<f64>,
+    /// Output slots of the remote (boundary-rows) half.
+    remote_out: Vec<f64>,
+    /// Were these buffers first-touched by their owning shard threads?
+    first_touched: bool,
+}
+
+/// Shard-parallel SpMV executor; see the module docs. Build via
+/// [`ShardedSpmv::new`] or, tuned, via
+/// [`crate::tune::SpmvContextBuilder::build_sharded`].
+pub struct ShardedSpmv {
+    crs: Arc<Crs>,
+    scheme: Scheme,
+    schedule: Schedule,
+    mode: OverlapMode,
+    threads_per_shard: usize,
+    pinned: bool,
+    storage: ShardedCrs,
+    units: Vec<ShardUnit>,
+}
+
+/// Raw output pointer shared across shard coordinators: every global
+/// row has exactly one writing shard (row partition) and one writing
+/// phase (interior XOR boundary), so the scatters never alias.
+#[derive(Clone, Copy)]
+struct SharedOut(*mut f64);
+unsafe impl Send for SharedOut {}
+unsafe impl Sync for SharedOut {}
+
+/// Raw gather-buffer pointer handed to the exchange thread: the gate
+/// orders its writes before every remote-phase read, and no Rust
+/// reference to the buffer is alive while it is being written.
+#[derive(Clone, Copy)]
+struct SharedBuf(*mut f64);
+unsafe impl Send for SharedBuf {}
+unsafe impl Sync for SharedBuf {}
+
+impl ShardedSpmv {
+    /// Shard `crs` and bundle per-shard kernels/plans/engines. With
+    /// `pinned`, shard `s`'s engine is pinned to the core range
+    /// starting at `s × threads_per_shard` and its buffers are
+    /// first-touched by their owning workers.
+    pub fn new(
+        crs: Arc<Crs>,
+        scheme: Scheme,
+        schedule: Schedule,
+        n_shards: usize,
+        threads_per_shard: usize,
+        mode: OverlapMode,
+        pinned: bool,
+    ) -> Result<Self> {
+        anyhow::ensure!(
+            crs.nrows == crs.ncols,
+            "sharded SpMV requires a square matrix, got {}x{}",
+            crs.nrows,
+            crs.ncols
+        );
+        let threads_per_shard = threads_per_shard.max(1);
+        let storage = ShardedCrs::from_crs(&crs, n_shards);
+        let units = Self::build_units(&storage, scheme, schedule, threads_per_shard, pinned)?;
+        Ok(ShardedSpmv {
+            crs,
+            scheme,
+            schedule,
+            mode,
+            threads_per_shard,
+            pinned,
+            storage,
+            units,
+        })
+    }
+
+    /// Build every shard's unit on its own setup thread: first-touch
+    /// passes run in parallel, and each pinned engine's caller-pin
+    /// applies to the short-lived setup thread instead of confining the
+    /// builder (coordinators re-pin themselves per call).
+    fn build_units(
+        storage: &ShardedCrs,
+        scheme: Scheme,
+        schedule: Schedule,
+        threads: usize,
+        pinned: bool,
+    ) -> Result<Vec<ShardUnit>> {
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = storage
+                .shards
+                .iter()
+                .enumerate()
+                .map(|(s, shard)| {
+                    scope.spawn(move || -> Result<ShardUnit> {
+                        let engine = if pinned {
+                            Engine::with_pinning_offset(threads, PinMode::Compact, s * threads)
+                        } else {
+                            Engine::new(threads)
+                        };
+                        let kernel = ShardKernel::build(shard, scheme)?;
+                        let local_plan = SpmvPlan::for_weights(
+                            scheme,
+                            schedule,
+                            threads,
+                            kernel.local.row_weights(),
+                        );
+                        let remote_plan = SpmvPlan::for_weights(
+                            scheme,
+                            schedule,
+                            threads,
+                            kernel.remote.row_weights(),
+                        );
+                        let bufs =
+                            Self::make_bufs(shard, &engine, &local_plan, &remote_plan, pinned);
+                        Ok(ShardUnit {
+                            kernel,
+                            local_plan,
+                            remote_plan,
+                            engine,
+                            bufs: Mutex::new(bufs),
+                        })
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("shard setup thread panicked"))
+                .collect()
+        })
+    }
+
+    /// Allocate (and, when pinned, first-touch under the exact phase
+    /// assignments) a shard's buffers. The halo gather buffer has no
+    /// per-row owner, so it is homed by an even split across the
+    /// shard's threads — all on the shard's domain either way.
+    fn make_bufs(
+        shard: &ShardCrs,
+        engine: &Engine,
+        local_plan: &SpmvPlan,
+        remote_plan: &SpmvPlan,
+        pinned: bool,
+    ) -> ShardBufs {
+        if !pinned {
+            return ShardBufs {
+                concat: vec![0.0; shard.concat_len()],
+                local_out: vec![0.0; local_plan.nrows],
+                remote_out: vec![0.0; remote_plan.nrows],
+                first_touched: false,
+            };
+        }
+        let local_out = first_touch_buffers(engine, local_plan.partitions(), local_plan.nrows, 1)
+            .pop()
+            .expect("one buffer requested");
+        let remote_out =
+            first_touch_buffers(engine, remote_plan.partitions(), remote_plan.nrows, 1)
+                .pop()
+                .expect("one buffer requested");
+        let even = even_ranges(engine.n_threads(), shard.concat_len());
+        let concat = first_touch_buffers(engine, &even, shard.concat_len(), 1)
+            .pop()
+            .expect("one buffer requested");
+        ShardBufs { concat, local_out, remote_out, first_touched: true }
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.units.len()
+    }
+
+    pub fn mode(&self) -> OverlapMode {
+        self.mode
+    }
+
+    /// Switch overlap mode in place — the modes share every kernel,
+    /// plan and buffer, so this is free (benches toggle it per config).
+    pub fn set_mode(&mut self, mode: OverlapMode) {
+        self.mode = mode;
+    }
+
+    pub fn scheme(&self) -> Scheme {
+        self.scheme
+    }
+
+    pub fn schedule(&self) -> Schedule {
+        self.schedule
+    }
+
+    pub fn threads_per_shard(&self) -> usize {
+        self.threads_per_shard
+    }
+
+    pub fn pinned(&self) -> bool {
+        self.pinned
+    }
+
+    /// The sharded storage (halo maps, fractions) backing this executor.
+    pub fn storage(&self) -> &ShardedCrs {
+        &self.storage
+    }
+
+    pub fn halo_fraction(&self) -> f64 {
+        self.storage.halo_fraction()
+    }
+
+    pub fn boundary_nnz_fraction(&self) -> f64 {
+        self.storage.boundary_nnz_fraction()
+    }
+
+    /// Were every shard's buffers first-touched by their owners?
+    pub fn first_touched(&self) -> bool {
+        self.units.iter().all(|u| u.bufs.lock().unwrap().first_touched)
+    }
+
+    /// Realized placement across all shards: the per-thread pin
+    /// statuses of every shard engine concatenated in shard-major order
+    /// (shard 0 threads first). Feeds `TuningReport.placement`.
+    pub fn aggregate_pin_report(&self) -> affinity::PinReport {
+        let mode = if self.pinned { PinMode::Compact } else { PinMode::Disabled };
+        let per_thread = self
+            .units
+            .iter()
+            .flat_map(|u| u.engine.pin_report().per_thread.iter().copied())
+            .collect();
+        affinity::PinReport { mode, per_thread }
+    }
+
+    /// Re-partition every shard's plans for a new schedule **and
+    /// re-home its buffers** under the new assignments — the §5.2
+    /// hazard ([`SpmvPlan::rebalance`]) extended to the sharded
+    /// executor: after a schedule change, boundary and interior slots
+    /// would otherwise keep being served from pages homed for the old
+    /// owners.
+    pub fn rebalance(&mut self, schedule: Schedule) {
+        self.schedule = schedule;
+        for (unit, shard) in self.units.iter_mut().zip(&self.storage.shards) {
+            unit.local_plan = SpmvPlan::for_weights(
+                self.scheme,
+                schedule,
+                self.threads_per_shard,
+                unit.kernel.local.row_weights(),
+            );
+            unit.remote_plan = SpmvPlan::for_weights(
+                self.scheme,
+                schedule,
+                self.threads_per_shard,
+                unit.kernel.remote.row_weights(),
+            );
+            let bufs = Self::make_bufs(
+                shard,
+                &unit.engine,
+                &unit.local_plan,
+                &unit.remote_plan,
+                self.pinned,
+            );
+            unit.bufs = Mutex::new(bufs);
+        }
+    }
+
+    /// Re-shard onto a new shard count (and overlap mode): partition,
+    /// halo maps, kernels, plans, engines and buffers are all rebuilt,
+    /// so halo buffers are re-homed on the new owners' domains and
+    /// pinned engines move to the new core ranges. Bit-identity is
+    /// preserved across any re-shard (tested below).
+    pub fn reshard(&mut self, n_shards: usize, mode: OverlapMode) -> Result<()> {
+        let storage = ShardedCrs::from_crs(&self.crs, n_shards);
+        let units = Self::build_units(
+            &storage,
+            self.scheme,
+            self.schedule,
+            self.threads_per_shard,
+            self.pinned,
+        )?;
+        self.storage = storage;
+        self.units = units;
+        self.mode = mode;
+        Ok(())
+    }
+
+    /// Distributed-style SpMV: every shard runs concurrently on its own
+    /// coordinator + engine; see the module docs for the two modes.
+    pub fn spmv(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.storage.nrows);
+        assert_eq!(y.len(), self.storage.nrows);
+        let transport = SharedVecExchange(x);
+        let ybase = SharedOut(y.as_mut_ptr());
+        std::thread::scope(|scope| {
+            for (s, (unit, shard)) in self.units.iter().zip(&self.storage.shards).enumerate() {
+                let transport = &transport;
+                scope.spawn(move || {
+                    self.pin_coordinator(s);
+                    let mut bufs = unit.bufs.lock().unwrap();
+                    self.run_shard(unit, shard, x, transport, &mut bufs, ybase);
+                });
+            }
+        });
+    }
+
+    /// Batched sharded SpMV in **one** dispatch: the shard coordinators
+    /// are spawned once per batch and stream every vector through their
+    /// engines, so the per-call spawn/join cost is paid per batch — the
+    /// sharded counterpart of [`crate::engine::Engine::run_chunks_batch`].
+    pub fn spmv_batch(&self, xs: &[Vec<f64>]) -> Vec<Vec<f64>> {
+        let n = self.storage.nrows;
+        for x in xs {
+            assert_eq!(x.len(), n);
+        }
+        let mut ys: Vec<Vec<f64>> = xs.iter().map(|_| vec![0.0; n]).collect();
+        if xs.is_empty() {
+            return ys;
+        }
+        let ybases: Vec<SharedOut> = ys.iter_mut().map(|y| SharedOut(y.as_mut_ptr())).collect();
+        std::thread::scope(|scope| {
+            for (s, (unit, shard)) in self.units.iter().zip(&self.storage.shards).enumerate() {
+                let ybases = &ybases;
+                scope.spawn(move || {
+                    self.pin_coordinator(s);
+                    let mut bufs = unit.bufs.lock().unwrap();
+                    for (bi, x) in xs.iter().enumerate() {
+                        let transport = SharedVecExchange(x);
+                        self.run_shard(unit, shard, x, &transport, &mut bufs, ybases[bi]);
+                    }
+                });
+            }
+        });
+        ys
+    }
+
+    /// Shard coordinators are ephemeral scoped threads; under pinning
+    /// they re-pin themselves to their shard's base core each call (the
+    /// engine's workers were pinned at spawn and partition 0 runs right
+    /// here). The thread dies at scope exit, so no restore is needed.
+    fn pin_coordinator(&self, s: usize) {
+        if self.pinned {
+            let base = s * self.threads_per_shard;
+            let _ = affinity::pin_current_thread(affinity::cpu_for(base, affinity::n_cpus()));
+        }
+    }
+
+    /// One shard, one vector: gather/exchange + two-phase compute +
+    /// scatter into the global output.
+    fn run_shard(
+        &self,
+        unit: &ShardUnit,
+        shard: &ShardCrs,
+        x: &[f64],
+        transport: &dyn HaloExchange,
+        bufs: &mut ShardBufs,
+        ybase: SharedOut,
+    ) {
+        let ShardBufs { concat, local_out, remote_out, .. } = bufs;
+        let w = shard.width();
+        let x_local = &x[shard.row_begin..shard.row_end];
+        let kernel = &unit.kernel;
+        let two = TwoPhasePlan { local: &unit.local_plan, remote: &unit.remote_plan };
+        let gate = HaloGate::new();
+        match self.mode {
+            OverlapMode::BulkSync => {
+                // Vector mode: full gather, then both phases.
+                concat[..w].copy_from_slice(x_local);
+                transport.exchange(shard, &mut concat[w..]);
+                gate.signal();
+                let concat_ref: &[f64] = concat;
+                two.execute(
+                    &unit.engine,
+                    &gate,
+                    local_out,
+                    remote_out,
+                    |a, b, out| kernel.local.spmv_rows(a, b, x_local, out),
+                    |a, b, out| kernel.remote.spmv_rows(a, b, concat_ref, out),
+                );
+            }
+            OverlapMode::Overlapped => {
+                // Task mode: the exchange thread fills the gather
+                // buffer (owned slice + halo segments) while the
+                // engine computes interior rows; boundary rows wait on
+                // the gate.
+                let cptr = SharedBuf(concat.as_mut_ptr());
+                let clen = concat.len();
+                let gate_ref = &gate;
+                std::thread::scope(|es| {
+                    es.spawn(move || {
+                        // Safety: no Rust reference to the gather
+                        // buffer is alive during these writes (the
+                        // remote closure materializes its slice only
+                        // after the gate opens), and the gate's mutex
+                        // hand-off orders the writes before every
+                        // post-wait read.
+                        let cbuf = unsafe { std::slice::from_raw_parts_mut(cptr.0, clen) };
+                        cbuf[..w].copy_from_slice(x_local);
+                        transport.exchange(shard, &mut cbuf[w..]);
+                        gate_ref.signal();
+                    });
+                    two.execute(
+                        &unit.engine,
+                        gate_ref,
+                        local_out,
+                        remote_out,
+                        |a, b, out| kernel.local.spmv_rows(a, b, x_local, out),
+                        move |a, b, out| {
+                            // Safety: runs strictly after `gate` opened
+                            // (TwoPhasePlan waits before dispatching),
+                            // so the exchange writes are complete and
+                            // ordered before this read.
+                            let cbuf = unsafe { std::slice::from_raw_parts(cptr.0, clen) };
+                            kernel.remote.spmv_rows(a, b, cbuf, out)
+                        },
+                    );
+                });
+            }
+        }
+        // Scatter both halves' slots to their global rows. Safety: each
+        // global row has exactly one writer (row partition across
+        // shards, interior XOR boundary within the shard).
+        for (slot, &v) in local_out.iter().enumerate() {
+            let row = shard.interior_rows[kernel.local.storage_row(slot)] as usize;
+            unsafe { *ybase.0.add(row) = v };
+        }
+        for (slot, &v) in remote_out.iter().enumerate() {
+            let row = shard.boundary_rows[kernel.remote.storage_row(slot)] as usize;
+            unsafe { *ybase.0.add(row) = v };
+        }
+    }
+}
+
+/// Even contiguous per-thread split of `[0, n)` — the ownerless-buffer
+/// first-touch partition.
+fn even_ranges(threads: usize, n: usize) -> Vec<Vec<(usize, usize)>> {
+    let per = n.div_ceil(threads.max(1));
+    (0..threads)
+        .map(|t| {
+            let a = (t * per).min(n);
+            let b = ((t + 1) * per).min(n);
+            if a < b {
+                vec![(a, b)]
+            } else {
+                Vec::new()
+            }
+        })
+        .collect()
+}
+
+impl SpMv for ShardedSpmv {
+    fn nrows(&self) -> usize {
+        self.storage.nrows
+    }
+    fn ncols(&self) -> usize {
+        self.storage.ncols
+    }
+    fn nnz(&self) -> usize {
+        SpMv::nnz(&self.storage)
+    }
+    fn spmv(&self, x: &[f64], y: &mut [f64]) {
+        ShardedSpmv::spmv(self, x, y);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen;
+    use crate::util::rng::Rng;
+    use crate::util::stats::max_abs_diff;
+
+    fn hh_crs() -> Crs {
+        Crs::from_coo(&gen::holstein_hubbard(&gen::HolsteinHubbardParams::tiny()))
+    }
+
+    fn modes() -> [OverlapMode; 2] {
+        [OverlapMode::BulkSync, OverlapMode::Overlapped]
+    }
+
+    /// The ISSUE-4 acceptance grid: every shard count ∈ {1, 2, 4, 8} ×
+    /// {CRS, SELL-C-σ} × {bulk-sync, overlapped} × pinning on/off is
+    /// bit-identical to the serial CRS kernel (non-Linux pinning is a
+    /// recorded no-op on the same code path).
+    #[test]
+    fn sharded_spmv_bit_identical_to_serial_crs_exhaustive() {
+        let crs = Arc::new(hh_crs());
+        let n = crs.nrows;
+        let mut rng = Rng::new(110);
+        let mut x = vec![0.0; n];
+        rng.fill_f64(&mut x, -1.0, 1.0);
+        let mut want = vec![0.0; n];
+        crs.spmv(&x, &mut want);
+        for n_shards in [1usize, 2, 4, 8] {
+            for scheme in [Scheme::Crs, Scheme::SellCs { c: 8, sigma: 32 }] {
+                for pinned in [false, true] {
+                    let mut sh = ShardedSpmv::new(
+                        crs.clone(),
+                        scheme,
+                        Schedule::Static { chunk: None },
+                        n_shards,
+                        2,
+                        OverlapMode::BulkSync,
+                        pinned,
+                    )
+                    .unwrap();
+                    assert_eq!(sh.first_touched(), pinned);
+                    for mode in modes() {
+                        sh.set_mode(mode);
+                        let mut got = vec![0.0; n];
+                        sh.spmv(&x, &mut got);
+                        assert_eq!(
+                            max_abs_diff(&want, &got),
+                            0.0,
+                            "{n_shards} shards × {scheme} × {} × pin={pinned} deviates",
+                            mode.name()
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    /// Schedules partition rows only — every schedule × mode stays
+    /// bit-identical too.
+    #[test]
+    fn sharded_spmv_bit_identical_across_schedules() {
+        let mut rng = Rng::new(111);
+        let mut coo = crate::matrix::Coo::new(260, 260);
+        for _ in 0..260 * 7 {
+            coo.push(rng.index(260), rng.index(260), rng.f64() * 2.0 - 1.0);
+        }
+        coo.normalize();
+        let crs = Arc::new(Crs::from_coo(&coo));
+        let mut x = vec![0.0; 260];
+        rng.fill_f64(&mut x, -1.0, 1.0);
+        let mut want = vec![0.0; 260];
+        crs.spmv(&x, &mut want);
+        for schedule in [
+            Schedule::Static { chunk: None },
+            Schedule::Static { chunk: Some(7) },
+            Schedule::Dynamic { chunk: 13 },
+            Schedule::Guided { min_chunk: 4 },
+        ] {
+            for mode in modes() {
+                let sh = ShardedSpmv::new(
+                    crs.clone(),
+                    Scheme::SellCs { c: 4, sigma: 16 },
+                    schedule,
+                    4,
+                    3,
+                    mode,
+                    false,
+                )
+                .unwrap();
+                let mut got = vec![0.0; 260];
+                sh.spmv(&x, &mut got);
+                assert_eq!(
+                    max_abs_diff(&want, &got),
+                    0.0,
+                    "{} × {} deviates",
+                    schedule.name(),
+                    mode.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn batch_identical_to_per_vector() {
+        let crs = Arc::new(hh_crs());
+        let n = crs.nrows;
+        let mut rng = Rng::new(112);
+        let xs: Vec<Vec<f64>> = (0..5)
+            .map(|_| {
+                let mut x = vec![0.0; n];
+                rng.fill_f64(&mut x, -1.0, 1.0);
+                x
+            })
+            .collect();
+        for mode in modes() {
+            let sh = ShardedSpmv::new(
+                crs.clone(),
+                Scheme::Crs,
+                Schedule::Static { chunk: None },
+                4,
+                2,
+                mode,
+                false,
+            )
+            .unwrap();
+            let ys = sh.spmv_batch(&xs);
+            assert_eq!(ys.len(), xs.len());
+            for (x, yb) in xs.iter().zip(&ys) {
+                let mut y = vec![0.0; n];
+                sh.spmv(x, &mut y);
+                assert_eq!(
+                    max_abs_diff(&y, yb),
+                    0.0,
+                    "{}: batch deviates from per-vector",
+                    mode.name()
+                );
+            }
+            assert!(sh.spmv_batch(&[]).is_empty());
+        }
+    }
+
+    /// ISSUE-4 satellite — the §5.2 hazard composed with sharding:
+    /// re-planning onto a new schedule and re-sharding onto a new shard
+    /// count both keep bit-identity and re-home the halo/output buffers
+    /// on the new owners (extends the PR 3 rebalance tests).
+    #[test]
+    fn reshard_and_rebalance_keep_bit_identity_and_rehome_buffers() {
+        let crs = Arc::new(hh_crs());
+        let n = crs.nrows;
+        let mut rng = Rng::new(113);
+        let mut x = vec![0.0; n];
+        rng.fill_f64(&mut x, -1.0, 1.0);
+        let mut want = vec![0.0; n];
+        crs.spmv(&x, &mut want);
+        for pinned in [false, true] {
+            let mut sh = ShardedSpmv::new(
+                crs.clone(),
+                Scheme::Crs,
+                Schedule::Static { chunk: None },
+                4,
+                2,
+                OverlapMode::Overlapped,
+                pinned,
+            )
+            .unwrap();
+            let mut got = vec![0.0; n];
+            sh.spmv(&x, &mut got);
+            assert_eq!(max_abs_diff(&want, &got), 0.0, "pin={pinned}: pre-rebalance");
+            let before: Vec<Vec<(usize, usize)>> =
+                sh.units.iter().map(|u| u.local_plan.partitions().concat()).collect();
+            // Schedule change: plans re-partition, buffers re-home.
+            sh.rebalance(Schedule::Dynamic { chunk: 9 });
+            assert_eq!(sh.schedule(), Schedule::Dynamic { chunk: 9 });
+            assert_eq!(sh.first_touched(), pinned, "rebalance must re-home when pinned");
+            let after: Vec<Vec<(usize, usize)>> =
+                sh.units.iter().map(|u| u.local_plan.partitions().concat()).collect();
+            assert_ne!(before, after, "pin={pinned}: rebalance must re-partition");
+            sh.spmv(&x, &mut got);
+            assert_eq!(max_abs_diff(&want, &got), 0.0, "pin={pinned}: post-rebalance");
+            // Shard-count change: everything rebuilt, halo buffers
+            // re-sized and re-homed for the new partition.
+            let halo4 = sh.storage().halo_cols_total();
+            sh.reshard(2, OverlapMode::BulkSync).unwrap();
+            assert_eq!(sh.n_shards(), 2);
+            assert_eq!(sh.mode(), OverlapMode::BulkSync);
+            assert_eq!(sh.first_touched(), pinned, "reshard must re-home when pinned");
+            let halo2 = sh.storage().halo_cols_total();
+            for (unit, shard) in sh.units.iter().zip(&sh.storage().shards) {
+                assert_eq!(unit.bufs.lock().unwrap().concat.len(), shard.concat_len());
+            }
+            assert!(halo2 <= halo4, "fewer cuts cannot need more halo ({halo2} vs {halo4})");
+            sh.spmv(&x, &mut got);
+            assert_eq!(max_abs_diff(&want, &got), 0.0, "pin={pinned}: post-reshard");
+        }
+    }
+
+    #[test]
+    fn overlap_mode_parse_roundtrip() {
+        assert_eq!(OverlapMode::parse("bulk-sync").unwrap(), OverlapMode::BulkSync);
+        assert_eq!(OverlapMode::parse("bulk").unwrap(), OverlapMode::BulkSync);
+        assert_eq!(OverlapMode::parse("overlapped").unwrap(), OverlapMode::Overlapped);
+        assert_eq!(OverlapMode::parse("task").unwrap(), OverlapMode::Overlapped);
+        assert!(OverlapMode::parse("bogus").is_err());
+        assert_eq!(OverlapMode::BulkSync.name(), "bulk-sync");
+        assert_eq!(OverlapMode::Overlapped.name(), "overlapped");
+    }
+
+    #[test]
+    fn sharded_spmv_is_an_spmv_operator() {
+        // A sharded executor drives operator consumers (Lanczos) and
+        // reproduces the serial solver exactly.
+        use crate::eigen::{lanczos, LanczosConfig};
+        let crs = Arc::new(Crs::from_coo(&gen::laplacian_1d(150)));
+        let serial = lanczos(&*crs, 1, &LanczosConfig::default());
+        let sh = ShardedSpmv::new(
+            crs.clone(),
+            Scheme::Crs,
+            Schedule::Static { chunk: None },
+            3,
+            2,
+            OverlapMode::Overlapped,
+            false,
+        )
+        .unwrap();
+        assert_eq!(SpMv::nnz(&sh), crs.nnz());
+        let r = lanczos(&sh, 1, &LanczosConfig::default());
+        assert!(r.converged);
+        assert!(
+            (r.eigenvalues[0] - serial.eigenvalues[0]).abs() < 1e-12,
+            "sharded-backed Lanczos deviates: {} vs {}",
+            r.eigenvalues[0],
+            serial.eigenvalues[0]
+        );
+    }
+
+    #[test]
+    fn rejects_non_square_and_unshardable_schemes() {
+        let mut coo = crate::matrix::Coo::new(4, 7);
+        coo.push(0, 6, 1.0);
+        coo.normalize();
+        let rect = Arc::new(Crs::from_coo(&coo));
+        assert!(ShardedSpmv::new(
+            rect,
+            Scheme::Crs,
+            Schedule::Static { chunk: None },
+            2,
+            1,
+            OverlapMode::BulkSync,
+            false,
+        )
+        .is_err());
+        let crs = Arc::new(hh_crs());
+        assert!(ShardedSpmv::new(
+            crs,
+            Scheme::NbJds { block: 64 },
+            Schedule::Static { chunk: None },
+            2,
+            1,
+            OverlapMode::BulkSync,
+            false,
+        )
+        .is_err());
+    }
+}

@@ -47,9 +47,11 @@ use crate::analysis::StrideDistribution;
 use crate::engine::affinity::{PinMode, PinReport};
 use crate::engine::{Engine, SpmvPlan};
 use crate::kernels::SpmvKernel;
+use crate::matrix::shard::ShardedCrs;
 use crate::matrix::{Coo, Crs, Scheme, SpMv};
 use crate::perfmodel::{predict, predict_with_dist, CostCurve};
 use crate::sched::Schedule;
+use crate::shard::{OverlapMode, ShardedSpmv};
 use crate::simulator::MachineSpec;
 use crate::util::report::{f, Table};
 use crate::util::rng::Rng;
@@ -75,6 +77,65 @@ impl TuningPolicy {
             TuningPolicy::Measured => "measured",
         }
     }
+}
+
+/// The sharding dimension of the tuning space: how many in-process
+/// domains to row-partition the matrix into, and whether to overlap
+/// the halo exchange with the interior compute
+/// ([`crate::shard::OverlapMode`]). Orthogonal to [`TuningPolicy`]
+/// (which keeps picking scheme and schedule); consumed by
+/// [`SpmvContextBuilder::build_sharded`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShardPolicy {
+    /// The caller names the shard count and overlap mode.
+    Fixed { shards: usize, mode: OverlapMode },
+    /// Pick both from the halo-volume vs interior-work ratio of the
+    /// candidate partitions (see [`SHARD_GRID`] and the rationale the
+    /// decision records).
+    Heuristic,
+    /// Short host bake-off over shard counts × overlap modes, timed
+    /// with the same machinery as [`TuningPolicy::Measured`].
+    Measured,
+}
+
+impl ShardPolicy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ShardPolicy::Fixed { .. } => "fixed",
+            ShardPolicy::Heuristic => "heuristic",
+            ShardPolicy::Measured => "measured",
+        }
+    }
+}
+
+/// Shard counts the heuristic and measured shard tiers consider.
+pub const SHARD_GRID: [usize; 4] = [1, 2, 4, 8];
+
+/// One (shard count, overlap mode) candidate with the partition
+/// features that drove (or would drive) its selection.
+#[derive(Debug, Clone)]
+pub struct ShardCandidate {
+    pub shards: usize,
+    pub mode: OverlapMode,
+    /// Exchanged vector elements / vector length for this partition.
+    pub halo_fraction: f64,
+    /// nnz in halo-dependent rows / total nnz (the complement is the
+    /// interior work available to hide the exchange behind).
+    pub boundary_nnz_fraction: f64,
+    /// Host bake-off score (measured tier only).
+    pub measured_ns_per_nnz: Option<f64>,
+    pub chosen: bool,
+}
+
+/// The sharding decision recorded in a [`TuningReport`].
+#[derive(Debug, Clone)]
+pub struct ShardDecision {
+    pub policy: String,
+    pub n_shards: usize,
+    pub mode: OverlapMode,
+    pub halo_fraction: f64,
+    pub boundary_nnz_fraction: f64,
+    pub candidates: Vec<ShardCandidate>,
 }
 
 /// One candidate considered during tuning, with its score(s).
@@ -150,6 +211,8 @@ pub struct TuningReport {
     pub padding_overhead: f64,
     /// NUMA placement of the engine + workspace (pinning, first touch).
     pub placement: PlacementDecision,
+    /// Sharding decision (`None` for unsharded contexts).
+    pub shard: Option<ShardDecision>,
     pub candidates: Vec<CandidateReport>,
     /// Human-readable decision trail.
     pub rationale: Vec<String>,
@@ -179,10 +242,35 @@ impl TuningReport {
         decision.row(vec!["row imbalance (CV)".into(), f(self.row_imbalance_cv)]);
         decision.row(vec!["padding overhead".into(), f(self.padding_overhead)]);
         decision.row(vec!["placement".into(), self.placement.summary()]);
+        if let Some(sd) = &self.shard {
+            decision.row(vec!["shards".into(), format!("{} ({} policy)", sd.n_shards, sd.policy)]);
+            decision.row(vec!["overlap mode".into(), sd.mode.name().into()]);
+            decision.row(vec!["halo fraction".into(), f(sd.halo_fraction)]);
+            decision.row(vec!["boundary nnz fraction".into(), f(sd.boundary_nnz_fraction)]);
+        }
         for (i, r) in self.rationale.iter().enumerate() {
             decision.row(vec![format!("rationale {}", i + 1), r.clone()]);
         }
         let mut tables = vec![decision];
+        if let Some(sd) = &self.shard {
+            if !sd.candidates.is_empty() {
+                let mut t = Table::new(
+                    "shard candidates",
+                    &["shards", "mode", "halo frac", "boundary nnz frac", "ns/nnz", "chosen"],
+                );
+                for c in &sd.candidates {
+                    t.row(vec![
+                        c.shards.to_string(),
+                        c.mode.name().into(),
+                        f(c.halo_fraction),
+                        f(c.boundary_nnz_fraction),
+                        c.measured_ns_per_nnz.map(f).unwrap_or_else(|| "-".into()),
+                        if c.chosen { "<-".into() } else { String::new() },
+                    ]);
+                }
+                tables.push(t);
+            }
+        }
         if !self.candidates.is_empty() {
             let mut t = Table::new(
                 "tuning candidates",
@@ -214,6 +302,7 @@ pub struct SpmvContextBuilder<'a> {
     machine: MachineSpec,
     quick: bool,
     pinned: bool,
+    shard_policy: Option<ShardPolicy>,
 }
 
 impl SpmvContextBuilder<'_> {
@@ -257,12 +346,28 @@ impl SpmvContextBuilder<'_> {
         self
     }
 
+    /// Add the sharding dimension: the context becomes a
+    /// [`ShardedContext`] whose shard count and overlap mode come from
+    /// `policy` (scheme and schedule still come from the
+    /// [`TuningPolicy`]). Finish with
+    /// [`SpmvContextBuilder::build_sharded`] — `build()` rejects a
+    /// builder with a shard policy rather than silently ignoring it.
+    pub fn sharded(mut self, policy: ShardPolicy) -> Self {
+        self.shard_policy = Some(policy);
+        self
+    }
+
     /// Run the policy and bundle the winning kernel + plan + engine.
     /// Errors on non-square matrices: every scheme past CRS permutes
     /// rows and columns symmetrically, and the engine's plan/workspace
     /// machinery assumes one dimension throughout.
     pub fn build(self) -> Result<SpmvContext> {
-        let SpmvContextBuilder { crs, policy, threads, machine, quick, pinned } = self;
+        let SpmvContextBuilder { crs, policy, threads, machine, quick, pinned, shard_policy } =
+            self;
+        anyhow::ensure!(
+            shard_policy.is_none(),
+            "builder has a shard policy: finish with build_sharded(), not build()"
+        );
         let crs: &Crs = &crs;
         anyhow::ensure!(
             crs.nrows == crs.ncols,
@@ -436,6 +541,7 @@ impl SpmvContextBuilder<'_> {
             row_imbalance_cv: row_cv,
             padding_overhead: kernel_padding(&kernel),
             placement,
+            shard: None,
             candidates,
             rationale,
         };
@@ -444,6 +550,337 @@ impl SpmvContextBuilder<'_> {
             let _ = engine.set(e);
         }
         Ok(SpmvContext { kernel: Arc::new(kernel), plan, n_threads, pin_mode, engine, report })
+    }
+
+    /// Run the tuning policy, then the shard policy, and bundle a
+    /// [`ShardedContext`]. Scheme and schedule come from the same tiers
+    /// as [`SpmvContextBuilder::build`] — the existing machinery is
+    /// reused verbatim on an unpinned probe (the sharded executor owns
+    /// per-shard placement); the shard count and overlap mode then come
+    /// from the [`ShardPolicy`] (partition features or a host
+    /// bake-off). `.threads(n)` means threads **per shard** here. A
+    /// tier pick without a rectangular split kernel (the JDS family)
+    /// falls back to CRS halves, recorded in the rationale.
+    pub fn build_sharded(self) -> Result<ShardedContext> {
+        let SpmvContextBuilder { crs, policy, threads, machine, quick, pinned, shard_policy } =
+            self;
+        let shard_policy = shard_policy.unwrap_or(ShardPolicy::Heuristic);
+        let crs = Arc::new(crs.into_owned());
+        let mut base_builder = SpmvContext::builder_from_crs(&crs)
+            .policy(policy)
+            .machine(machine)
+            .quick(quick);
+        if let Some(t) = threads {
+            base_builder = base_builder.threads(t);
+        }
+        let base = base_builder.build()?;
+        let mut report = base.report().clone();
+        let mut scheme = base.scheme();
+        let schedule = base.schedule();
+        let n_threads = base.n_threads();
+        drop(base);
+        if !matches!(scheme, Scheme::Crs | Scheme::SellCs { .. }) {
+            report.rationale.push(format!(
+                "{} has no rectangular split kernel: sharded context falls back to CRS halves",
+                scheme.name()
+            ));
+            scheme = Scheme::Crs;
+            report.scheme = scheme;
+            report.padding_overhead = 0.0;
+        }
+        let (decision, shard_rationale) =
+            decide_shards(&crs, shard_policy, scheme, schedule, n_threads, pinned, quick)?;
+        report.rationale.extend(shard_rationale);
+        let sharded = ShardedSpmv::new(
+            crs,
+            scheme,
+            schedule,
+            decision.n_shards,
+            n_threads,
+            decision.mode,
+            pinned,
+        )?;
+        report.placement = PlacementDecision {
+            pin_requested: pinned,
+            pin: if pinned { Some(sharded.aggregate_pin_report()) } else { None },
+            first_touch: pinned,
+        };
+        report.rationale.push(format!(
+            "sharded: {} shard(s) × {} thread(s), {} mode ({} shard policy)",
+            decision.n_shards,
+            n_threads,
+            decision.mode.name(),
+            decision.policy
+        ));
+        report.shard = Some(decision);
+        Ok(ShardedContext { sharded, report })
+    }
+}
+
+/// Resolve a [`ShardPolicy`] into a concrete (shard count, overlap
+/// mode) decision with its candidate scoreboard and rationale.
+fn decide_shards(
+    crs: &Crs,
+    policy: ShardPolicy,
+    scheme: Scheme,
+    schedule: Schedule,
+    n_threads: usize,
+    pinned: bool,
+    quick: bool,
+) -> Result<(ShardDecision, Vec<String>)> {
+    let mut rationale = Vec::new();
+    let n = crs.nrows;
+    // Scan-only candidate features: no halves are packed, no nonzeros
+    // copied — the chosen partition is built once, by the caller.
+    let features = |shards: usize| ShardedCrs::partition_stats(crs, shards);
+    let grid = SHARD_GRID;
+    match policy {
+        ShardPolicy::Fixed { shards, mode } => {
+            anyhow::ensure!(shards > 0, "shard count must be positive");
+            let (hf, bf) = features(shards);
+            rationale.push(format!(
+                "fixed shard policy: caller requested {shards} shard(s), {} mode",
+                mode.name()
+            ));
+            let candidates = vec![ShardCandidate {
+                shards,
+                mode,
+                halo_fraction: hf,
+                boundary_nnz_fraction: bf,
+                measured_ns_per_nnz: None,
+                chosen: true,
+            }];
+            let d = ShardDecision {
+                policy: "fixed".into(),
+                n_shards: shards,
+                mode,
+                halo_fraction: hf,
+                boundary_nnz_fraction: bf,
+                candidates,
+            };
+            Ok((d, rationale))
+        }
+        ShardPolicy::Heuristic => {
+            // Halo-volume vs interior-work rule (arXiv:1106.5908 §5,
+            // qualitatively): more shards pay only while the exchanged
+            // halo stays a small fraction of the vector and every
+            // shard keeps a useful row count; overlap pays only while
+            // enough interior (halo-free) work exists to hide the
+            // exchange behind.
+            let mut candidates: Vec<ShardCandidate> = Vec::new();
+            let mut best = (1usize, OverlapMode::BulkSync, 0.0f64, 0.0f64);
+            for &s in &grid {
+                let (hf, bf) = features(s);
+                let mode = if s > 1 && (1.0 - bf) >= 0.25 {
+                    OverlapMode::Overlapped
+                } else {
+                    OverlapMode::BulkSync
+                };
+                candidates.push(ShardCandidate {
+                    shards: s,
+                    mode,
+                    halo_fraction: hf,
+                    boundary_nnz_fraction: bf,
+                    measured_ns_per_nnz: None,
+                    chosen: false,
+                });
+                let viable = s == 1 || (hf <= 0.5 && n >= 64 * s);
+                if viable {
+                    best = (s, mode, hf, bf);
+                }
+            }
+            let (n_shards, mode, hf, bf) = best;
+            for c in &mut candidates {
+                c.chosen = c.shards == n_shards;
+            }
+            rationale.push(format!(
+                "shard heuristic: {n_shards} shard(s) (largest with halo fraction <= 0.5 \
+                 and >= 64 rows/shard; halo {hf:.3}), {} mode (interior nnz fraction {:.3})",
+                mode.name(),
+                1.0 - bf
+            ));
+            let d = ShardDecision {
+                policy: "heuristic".into(),
+                n_shards,
+                mode,
+                halo_fraction: hf,
+                boundary_nnz_fraction: bf,
+                candidates,
+            };
+            Ok((d, rationale))
+        }
+        ShardPolicy::Measured => {
+            let acrs = Arc::new(crs.clone());
+            let reps = if quick { 2 } else { 5 };
+            let mut x = vec![0.0; n];
+            Rng::new(0xBEEF).fill_f64(&mut x, -1.0, 1.0);
+            let mut y = vec![0.0; n];
+            let mut candidates: Vec<ShardCandidate> = Vec::new();
+            let mut best: Option<(usize, f64)> = None;
+            for &s in &grid {
+                // A single shard has no exchange: the modes coincide,
+                // so only bulk-sync is timed for it.
+                let modes: &[OverlapMode] = if s == 1 {
+                    &[OverlapMode::BulkSync]
+                } else {
+                    &[OverlapMode::BulkSync, OverlapMode::Overlapped]
+                };
+                for &mode in modes {
+                    let sh = ShardedSpmv::new(
+                        acrs.clone(),
+                        scheme,
+                        schedule,
+                        s,
+                        n_threads,
+                        mode,
+                        pinned,
+                    )?;
+                    sh.spmv(&x, &mut y); // warmup
+                    let mut best_ns = f64::INFINITY;
+                    for _ in 0..reps {
+                        let t0 = Instant::now();
+                        sh.spmv(&x, &mut y);
+                        let ns = t0.elapsed().as_nanos() as f64 / crs.nnz().max(1) as f64;
+                        best_ns = best_ns.min(ns);
+                    }
+                    if best.map(|(_, c)| best_ns < c).unwrap_or(true) {
+                        best = Some((candidates.len(), best_ns));
+                    }
+                    candidates.push(ShardCandidate {
+                        shards: s,
+                        mode,
+                        halo_fraction: sh.halo_fraction(),
+                        boundary_nnz_fraction: sh.boundary_nnz_fraction(),
+                        measured_ns_per_nnz: Some(best_ns),
+                        chosen: false,
+                    });
+                }
+            }
+            let (best_i, best_ns) = best.expect("candidate set is never empty");
+            candidates[best_i].chosen = true;
+            let chosen = candidates[best_i].clone();
+            rationale.push(format!(
+                "shard bake-off ({reps} reps) picks {} shard(s), {} mode at {:.2} ns/nnz \
+                 over {} candidates",
+                chosen.shards,
+                chosen.mode.name(),
+                best_ns,
+                candidates.len()
+            ));
+            let d = ShardDecision {
+                policy: "measured".into(),
+                n_shards: chosen.shards,
+                mode: chosen.mode,
+                halo_fraction: chosen.halo_fraction,
+                boundary_nnz_fraction: chosen.boundary_nnz_fraction,
+                candidates,
+            };
+            Ok((d, rationale))
+        }
+    }
+}
+
+/// A tuned **sharded** context: a [`ShardedSpmv`] executor bundled with
+/// the [`TuningReport`] that documents scheme, schedule, shard count
+/// and overlap mode — the sharded sibling of [`SpmvContext`]. Serve it
+/// through [`crate::coordinator::ShardedExecutor`].
+pub struct ShardedContext {
+    sharded: ShardedSpmv,
+    report: TuningReport,
+}
+
+impl ShardedContext {
+    /// The executor (shards, halo maps, modes).
+    pub fn sharded(&self) -> &ShardedSpmv {
+        &self.sharded
+    }
+
+    pub fn report(&self) -> &TuningReport {
+        &self.report
+    }
+
+    pub fn scheme(&self) -> Scheme {
+        self.sharded.scheme()
+    }
+
+    pub fn schedule(&self) -> Schedule {
+        self.sharded.schedule()
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.sharded.n_shards()
+    }
+
+    pub fn mode(&self) -> OverlapMode {
+        self.sharded.mode()
+    }
+
+    pub fn halo_fraction(&self) -> f64 {
+        self.sharded.halo_fraction()
+    }
+
+    /// Distributed-style SpMV across every shard (original basis).
+    pub fn spmv(&self, x: &[f64], y: &mut [f64]) {
+        self.sharded.spmv(x, y);
+    }
+
+    /// Batched sharded SpMV — all shards serve the whole batch in one
+    /// coordinator dispatch.
+    pub fn spmv_batch(&self, xs: &[Vec<f64>]) -> Vec<Vec<f64>> {
+        self.sharded.spmv_batch(xs)
+    }
+
+    /// Re-partition every shard's plans for a new schedule and re-home
+    /// their buffers — [`SpmvContext::rebalance`] extended to shards.
+    pub fn rebalance(&mut self, schedule: Schedule) {
+        self.sharded.rebalance(schedule);
+        self.report.schedule = schedule;
+        if self.sharded.pinned() {
+            self.report.placement.first_touch = true;
+            self.report.placement.pin = Some(self.sharded.aggregate_pin_report());
+        }
+        self.report
+            .rationale
+            .push(format!("rebalanced shards onto {} (buffers re-homed)", schedule.name()));
+    }
+
+    /// Re-shard onto a new shard count / overlap mode; halo buffers are
+    /// re-homed on the new owners (the §5.2 hazard at shard scale).
+    pub fn reshard(&mut self, n_shards: usize, mode: OverlapMode) -> Result<()> {
+        self.sharded.reshard(n_shards, mode)?;
+        let st = self.sharded.storage();
+        let (hf, bf) = (st.halo_fraction(), st.boundary_nnz_fraction());
+        if let Some(sd) = &mut self.report.shard {
+            sd.n_shards = n_shards;
+            sd.mode = mode;
+            sd.halo_fraction = hf;
+            sd.boundary_nnz_fraction = bf;
+        }
+        if self.sharded.pinned() {
+            self.report.placement.pin = Some(self.sharded.aggregate_pin_report());
+        }
+        self.report.rationale.push(format!(
+            "resharded onto {n_shards} shard(s), {} mode (halo buffers re-homed)",
+            mode.name()
+        ));
+        Ok(())
+    }
+}
+
+/// A sharded context is itself an [`SpMv`] operator, so solvers and the
+/// service layer consume it exactly like an unsharded [`SpmvContext`].
+impl SpMv for ShardedContext {
+    fn nrows(&self) -> usize {
+        SpMv::nrows(&self.sharded)
+    }
+    fn ncols(&self) -> usize {
+        SpMv::ncols(&self.sharded)
+    }
+    fn nnz(&self) -> usize {
+        SpMv::nnz(&self.sharded)
+    }
+    fn spmv(&self, x: &[f64], y: &mut [f64]) {
+        ShardedContext::spmv(self, x, y);
     }
 }
 
@@ -481,6 +918,7 @@ impl SpmvContext {
             machine: MachineSpec::nehalem(),
             quick: false,
             pinned: false,
+            shard_policy: None,
         }
     }
 
@@ -1126,5 +1564,172 @@ mod tests {
             matches!(s3, Schedule::Guided { .. }),
             "extreme imbalance still overrides placement"
         );
+    }
+
+    /// ISSUE-4: the sharding dimension of the tuning space. Every shard
+    /// policy yields a context that is bit-identical to the serial CRS
+    /// reference and documents its decision.
+    #[test]
+    fn sharded_context_bit_identical_and_reported() {
+        let coo = gen::holstein_hubbard(&gen::HolsteinHubbardParams::tiny());
+        let n = coo.nrows;
+        let mut rng = Rng::new(92);
+        let mut x = vec![0.0; n];
+        rng.fill_f64(&mut x, -1.0, 1.0);
+        let crs = Crs::from_coo(&coo);
+        let mut want = vec![0.0; n];
+        crs.spmv(&x, &mut want);
+        let shard_policies = [
+            ShardPolicy::Fixed { shards: 3, mode: OverlapMode::Overlapped },
+            ShardPolicy::Heuristic,
+            ShardPolicy::Measured,
+        ];
+        for sp in shard_policies {
+            for pin in [false, true] {
+                let ctx = SpmvContext::builder(&coo)
+                    .policy(TuningPolicy::Fixed(
+                        Scheme::SellCs { c: 8, sigma: 64 },
+                        Schedule::Static { chunk: None },
+                    ))
+                    .threads(2)
+                    .quick(true)
+                    .pinned(pin)
+                    .sharded(sp)
+                    .build_sharded()
+                    .unwrap();
+                assert_eq!(ctx.scheme(), Scheme::SellCs { c: 8, sigma: 64 });
+                let sd = ctx.report().shard.as_ref().expect("shard decision recorded");
+                assert_eq!(sd.policy, sp.name());
+                assert_eq!(sd.n_shards, ctx.n_shards());
+                assert_eq!(sd.mode, ctx.mode());
+                assert!(!sd.candidates.is_empty());
+                assert_eq!(sd.candidates.iter().filter(|c| c.chosen).count(), 1);
+                assert_eq!(ctx.report().placement.pin_requested, pin);
+                assert_eq!(ctx.sharded().first_touched(), pin);
+                assert!(!ctx.report().tables().is_empty());
+                let mut y = vec![0.0; n];
+                ctx.spmv(&x, &mut y);
+                assert_eq!(
+                    max_abs_diff(&want, &y),
+                    0.0,
+                    "{} shard policy × pin={pin} deviates from serial CRS",
+                    sp.name()
+                );
+                // Batched path matches too.
+                let ys = ctx.spmv_batch(std::slice::from_ref(&x));
+                assert_eq!(max_abs_diff(&ys[0], &y), 0.0);
+            }
+        }
+    }
+
+    /// The heuristic tier reads the partition features: a narrow band
+    /// matrix (tiny halo per cut, interior-dominated) goes wide and
+    /// overlapped; measured candidates carry timings.
+    #[test]
+    fn shard_heuristic_and_measured_tiers_document_candidates() {
+        let coo = gen::random_band(1024, 5, 9, &mut Rng::new(93));
+        let ctx = SpmvContext::builder(&coo)
+            .policy(TuningPolicy::Fixed(Scheme::Crs, Schedule::Static { chunk: None }))
+            .threads(1)
+            .sharded(ShardPolicy::Heuristic)
+            .build_sharded()
+            .unwrap();
+        let sd = ctx.report().shard.as_ref().unwrap();
+        assert_eq!(sd.candidates.len(), SHARD_GRID.len());
+        assert!(
+            sd.n_shards > 1,
+            "narrow band with 1024 rows should shard (picked {})",
+            sd.n_shards
+        );
+        assert_eq!(sd.mode, OverlapMode::Overlapped, "interior-dominated band should overlap");
+        assert!(sd.halo_fraction <= 0.5);
+        let measured = SpmvContext::builder(&coo)
+            .policy(TuningPolicy::Fixed(Scheme::Crs, Schedule::Static { chunk: None }))
+            .threads(1)
+            .quick(true)
+            .sharded(ShardPolicy::Measured)
+            .build_sharded()
+            .unwrap();
+        let sd = measured.report().shard.as_ref().unwrap();
+        assert!(sd.candidates.iter().all(|c| c.measured_ns_per_nnz.is_some()));
+        let chosen = sd.candidates.iter().find(|c| c.chosen).unwrap();
+        let best = sd
+            .candidates
+            .iter()
+            .map(|c| c.measured_ns_per_nnz.unwrap())
+            .fold(f64::INFINITY, f64::min);
+        assert_eq!(chosen.measured_ns_per_nnz.unwrap(), best);
+    }
+
+    /// A tier pick without a rectangular split kernel falls back to CRS
+    /// halves, with the fallback recorded.
+    #[test]
+    fn sharded_context_falls_back_from_jds_schemes() {
+        let coo = gen::holstein_hubbard(&gen::HolsteinHubbardParams::tiny());
+        let ctx = SpmvContext::builder(&coo)
+            .policy(TuningPolicy::Fixed(
+                Scheme::NbJds { block: 64 },
+                Schedule::Static { chunk: None },
+            ))
+            .threads(1)
+            .sharded(ShardPolicy::Fixed { shards: 2, mode: OverlapMode::BulkSync })
+            .build_sharded()
+            .unwrap();
+        assert_eq!(ctx.scheme(), Scheme::Crs);
+        assert!(ctx
+            .report()
+            .rationale
+            .iter()
+            .any(|r| r.contains("falls back to CRS halves")));
+    }
+
+    /// ISSUE-4 satellite: rebalance + reshard on a tuned sharded
+    /// context keep bit-identity and re-home buffers (the §5.2 hazard
+    /// tests of PR 3, extended to shards).
+    #[test]
+    fn sharded_context_reshard_and_rebalance_stay_exact() {
+        let coo = gen::holstein_hubbard(&gen::HolsteinHubbardParams::tiny());
+        let n = coo.nrows;
+        let mut rng = Rng::new(94);
+        let mut x = vec![0.0; n];
+        rng.fill_f64(&mut x, -1.0, 1.0);
+        let crs = Crs::from_coo(&coo);
+        let mut want = vec![0.0; n];
+        crs.spmv(&x, &mut want);
+        for pin in [false, true] {
+            let mut ctx = SpmvContext::builder(&coo)
+                .policy(TuningPolicy::Fixed(Scheme::Crs, Schedule::Static { chunk: None }))
+                .threads(2)
+                .pinned(pin)
+                .sharded(ShardPolicy::Fixed { shards: 4, mode: OverlapMode::Overlapped })
+                .build_sharded()
+                .unwrap();
+            let mut got = vec![0.0; n];
+            ctx.spmv(&x, &mut got);
+            assert_eq!(max_abs_diff(&want, &got), 0.0, "pin={pin}: pre-change");
+            ctx.rebalance(Schedule::Guided { min_chunk: 4 });
+            assert_eq!(ctx.schedule(), Schedule::Guided { min_chunk: 4 });
+            ctx.spmv(&x, &mut got);
+            assert_eq!(max_abs_diff(&want, &got), 0.0, "pin={pin}: post-rebalance");
+            ctx.reshard(2, OverlapMode::BulkSync).unwrap();
+            assert_eq!(ctx.n_shards(), 2);
+            assert_eq!(ctx.mode(), OverlapMode::BulkSync);
+            let sd = ctx.report().shard.as_ref().unwrap();
+            assert_eq!(sd.n_shards, 2);
+            assert_eq!(ctx.sharded().first_touched(), pin, "reshard must re-home when pinned");
+            ctx.spmv(&x, &mut got);
+            assert_eq!(max_abs_diff(&want, &got), 0.0, "pin={pin}: post-reshard");
+            assert!(ctx.report().rationale.iter().any(|r| r.contains("resharded")));
+        }
+    }
+
+    #[test]
+    fn build_rejects_a_dangling_shard_policy() {
+        let coo = gen::laplacian_1d(64);
+        let err = SpmvContext::builder(&coo)
+            .policy(TuningPolicy::Fixed(Scheme::Crs, Schedule::Static { chunk: None }))
+            .sharded(ShardPolicy::Heuristic)
+            .build();
+        assert!(err.is_err(), "build() must reject a builder with a shard policy");
     }
 }

@@ -243,37 +243,60 @@ pub fn parse_bench_entries(json: &str) -> Vec<BenchEntry> {
 #[derive(Debug, Clone)]
 pub struct BenchComparison {
     pub label: String,
-    pub baseline_mflops: f64,
+    /// `None` when the entry exists only in `current` (new coverage —
+    /// reported so renames/additions are visible, never failing).
+    pub baseline_mflops: Option<f64>,
     /// `None` when the current run lost this entry entirely.
     pub current_mflops: Option<f64>,
     pub ok: bool,
 }
 
-/// Compare two trajectory documents: every baseline entry with a
-/// positive throughput must exist in `current` and reach at least
-/// `(1 - tolerance) ×` its baseline GFlop/s. Entries only present in
-/// `current` are new coverage and pass silently; baseline entries with
-/// `mflops <= 0` are placeholders and are skipped.
+/// Compare two trajectory documents. Every baseline entry must exist in
+/// `current`: positive-throughput entries must also reach at least
+/// `(1 - tolerance) ×` their baseline GFlop/s, while `mflops <= 0`
+/// placeholders are presence-only floors — a silently dropped config
+/// used to pass the gate through the old skip-placeholders rule, and
+/// now fails as MISSING. Entries only present in `current` are reported
+/// as new coverage (passing), so renamed configs show up as a
+/// MISSING/new pair instead of vanishing.
 pub fn compare_bench_json(baseline: &str, current: &str, tolerance: f64) -> Vec<BenchComparison> {
+    let base = parse_bench_entries(baseline);
     let cur = parse_bench_entries(current);
-    parse_bench_entries(baseline)
-        .into_iter()
-        .filter(|b| b.mflops > 0.0)
+    let mut rows: Vec<BenchComparison> = base
+        .iter()
         .map(|b| {
             let found = cur.iter().find(|c| c.label == b.label).map(|c| c.mflops);
-            let ok = found.is_some_and(|m| m >= b.mflops * (1.0 - tolerance));
+            let ok = if b.mflops > 0.0 {
+                found.is_some_and(|m| m >= b.mflops * (1.0 - tolerance))
+            } else {
+                found.is_some()
+            };
             BenchComparison {
-                label: b.label,
-                baseline_mflops: b.mflops,
+                label: b.label.clone(),
+                baseline_mflops: Some(b.mflops),
                 current_mflops: found,
                 ok,
             }
         })
-        .collect()
+        .collect();
+    for c in &cur {
+        let known = base.iter().any(|b| b.label == c.label)
+            || rows.iter().any(|r| r.label == c.label && r.baseline_mflops.is_none());
+        if !known {
+            rows.push(BenchComparison {
+                label: c.label.clone(),
+                baseline_mflops: None,
+                current_mflops: Some(c.mflops),
+                ok: true,
+            });
+        }
+    }
+    rows
 }
 
 /// File-level comparator behind `spmvperf benchdiff`: prints one line
-/// per entry and returns whether every entry passed.
+/// per entry (including current-only "new" entries) and returns whether
+/// every baseline entry passed.
 pub fn compare_bench_files(
     baseline: &std::path::Path,
     current: &std::path::Path,
@@ -286,25 +309,32 @@ pub fn compare_bench_files(
         .with_context(|| format!("reading current {}", current.display()))?;
     let rows = compare_bench_json(&b, &c, tolerance);
     anyhow::ensure!(
-        !rows.is_empty(),
+        rows.iter().any(|r| r.baseline_mflops.is_some()),
         "baseline {} holds no comparable entries",
         baseline.display()
     );
     let mut all_ok = true;
     for r in &rows {
-        let verdict = if r.ok { "ok" } else { "REGRESSION" };
-        match r.current_mflops {
-            Some(m) => println!(
-                "{verdict:>10}  {:<50} baseline {:>10.1} MFlop/s  current {:>10.1} MFlop/s ({:+.1}%)",
+        match (r.baseline_mflops, r.current_mflops) {
+            (Some(b), Some(m)) if b > 0.0 => println!(
+                "{:>10}  {:<50} baseline {b:>10.1} MFlop/s  current {m:>10.1} MFlop/s ({:+.1}%)",
+                if r.ok { "ok" } else { "REGRESSION" },
                 r.label,
-                r.baseline_mflops,
-                m,
-                (m / r.baseline_mflops - 1.0) * 100.0
+                (m / b - 1.0) * 100.0
             ),
-            None => println!(
-                "{verdict:>10}  {:<50} baseline {:>10.1} MFlop/s  current MISSING",
-                r.label, r.baseline_mflops
+            (Some(_), Some(m)) => println!(
+                "{:>10}  {:<50} placeholder baseline       current {m:>10.1} MFlop/s",
+                "present", r.label
             ),
+            (Some(b), None) => println!(
+                "{:>10}  {:<50} baseline {b:>10.1} MFlop/s  current MISSING",
+                "MISSING", r.label
+            ),
+            (None, Some(m)) => println!(
+                "{:>10}  {:<50} not in baseline            current {m:>10.1} MFlop/s",
+                "new", r.label
+            ),
+            (None, None) => unreachable!("a comparison row names at least one side"),
         }
         all_ok &= r.ok;
     }
@@ -351,20 +381,30 @@ mod tests {
     }
 
     #[test]
-    fn comparator_passes_within_tolerance_and_skips_placeholders() {
+    fn comparator_passes_within_tolerance_and_reports_added_keys() {
         let current = r#"{"results": [
     {"matrix": "hh", "policy": "heuristic", "scheme": "crs", "mflops": 85.0},
     {"matrix": "hh", "policy": "fixed", "mflops": 95.0},
+    {"matrix": "band", "policy": "heuristic", "mflops": 1.0},
     {"matrix": "new", "policy": "extra", "mflops": 1.0}
 ]}"#;
         let rows = compare_bench_json(BASELINE, current, 0.20);
-        // The mflops=0 placeholder is skipped, new entries pass silently.
-        assert_eq!(rows.len(), 2);
+        // 3 baseline rows (the placeholder is a presence-only floor and
+        // is satisfied) + 1 reported added-key row.
+        assert_eq!(rows.len(), 4);
         assert!(rows.iter().all(|r| r.ok), "{rows:?}");
+        let band = rows.iter().find(|r| r.label == "band/heuristic").unwrap();
+        assert_eq!(band.baseline_mflops, Some(0.0));
+        assert_eq!(band.current_mflops, Some(1.0));
+        // The added-key case: current-only entries are reported (so a
+        // rename is visible as a MISSING/new pair), never failing.
+        let new = rows.iter().find(|r| r.label == "new/extra").unwrap();
+        assert_eq!(new.baseline_mflops, None);
+        assert!(new.ok);
     }
 
     #[test]
-    fn comparator_flags_regressions_and_missing_entries() {
+    fn comparator_flags_regressions_and_missing_keys() {
         let current = r#"{"results": [
     {"matrix": "hh", "policy": "heuristic", "mflops": 70.0}
 ]}"#;
@@ -374,6 +414,13 @@ mod tests {
         let fixed = rows.iter().find(|r| r.label == "hh/fixed").unwrap();
         assert!(!fixed.ok, "missing entry must fail");
         assert_eq!(fixed.current_mflops, None);
+        // The missing-key case the old comparator let through: a config
+        // whose baseline is a placeholder floor, silently dropped from
+        // the current run, must fail rather than pass via the
+        // skip-placeholders rule.
+        let band = rows.iter().find(|r| r.label == "band/heuristic").unwrap();
+        assert!(!band.ok, "dropped placeholder config must fail the gate");
+        assert_eq!(band.current_mflops, None);
     }
 
     #[test]

@@ -30,7 +30,7 @@ const VALUE_OPTS: &[&str] = &[
     "t", "u", "g", "omega", "iters", "tol", "port", "batch", "batch-window-us",
     "requests", "workers", "op", "ops", "dim", "bandwidth", "density",
     "block-size", "chunk-sizes", "threads-per-socket", "output", "scale",
-    "eigenvalues", "csv", "policy", "tolerance",
+    "eigenvalues", "csv", "policy", "tolerance", "shards", "mode",
 ];
 
 impl Args {
