@@ -11,12 +11,13 @@ use std::sync::atomic::Ordering::Relaxed;
 use std::time::{Duration, Instant};
 
 use spmvperf::coordinator::{
-    BatchExecutor, Coordinator, NativeExecutor, PjrtExecutor, Service, ServiceConfig,
+    BatchExecutor, Coordinator, Executor, PjrtExecutor, Service, ServiceConfig,
 };
 use spmvperf::gen::{holstein_hubbard, HolsteinHubbardParams};
 use spmvperf::matrix::{Crs, EllMatrix};
 use spmvperf::runtime::{default_artifacts_dir, Runtime};
-use spmvperf::tune::{SpmvContext, TuningPolicy};
+use spmvperf::spmv::SpmvHandle;
+use spmvperf::tune::TuningPolicy;
 use spmvperf::util::report::{f, Table};
 use spmvperf::util::rng::Rng;
 
@@ -44,25 +45,28 @@ fn main() -> anyhow::Result<()> {
                 let bound = rt.bind(&ell_worker, rt.load("spmv_b8_d24_n540.hlo.txt")?)?;
                 Ok(Box::new(PjrtExecutor { bound }) as Box<dyn BatchExecutor>)
             } else {
-                // Auto-tuned native fallback: the tuning layer picks the
-                // (scheme, C, σ, schedule) co-design for this matrix and
-                // each coalesced batch runs as one fused engine dispatch.
-                // Basis caveat: this executor interprets requests in the
-                // ORIGINAL basis, while the PJRT artifact uses its ELL
-                // permuted basis — so the printed checksum is NOT
-                // comparable across the two backends for the same seed;
-                // it only guards against regressions within one backend.
-                let ctx = SpmvContext::builder(&h_worker)
+                // Auto-tuned fallback: the tuning layer picks the
+                // (scheme, C, σ, schedule) co-design AND arbitration
+                // picks the executor backend for this matrix — the
+                // example never names one. Each coalesced batch runs as
+                // one fused dispatch. Basis caveat: this executor
+                // interprets requests in the ORIGINAL basis, while the
+                // PJRT artifact uses its ELL permuted basis — so the
+                // printed checksum is NOT comparable across the two for
+                // the same seed; it only guards against regressions
+                // within one backend.
+                let handle = SpmvHandle::builder(&h_worker)
                     .policy(TuningPolicy::Heuristic)
                     .threads(4)
                     .quick(true)
                     .build()?;
                 eprintln!(
-                    "worker: tuned native fallback -> {} under {}",
-                    ctx.scheme().name(),
-                    ctx.schedule().name()
+                    "worker: tuned fallback -> {} under {} on the {} backend",
+                    handle.scheme().name(),
+                    handle.schedule().name(),
+                    handle.backend_name()
                 );
-                Ok(Box::new(NativeExecutor::from_context(ctx, 8)) as Box<dyn BatchExecutor>)
+                Ok(Box::new(Executor::from_handle(handle, 8)) as Box<dyn BatchExecutor>)
             }
         },
     )?;

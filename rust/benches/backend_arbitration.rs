@@ -1,0 +1,142 @@
+//! Backend-arbitration trajectory bench: the auto-picked executor
+//! (serial / native / sharded, chosen per matrix by the `SpmvBuilder`
+//! arbitration tier) versus each forced backend — evidence that the
+//! executor decision, like the scheme decision, is a property of the
+//! matrix and pays off (or at least never collapses) matrix by matrix.
+//!
+//! Every configuration is self-validating (1e-12 against the serial CRS
+//! reference — the auto pick may choose any scheme) and records which
+//! backend actually served it.
+//!
+//! Emits `results/BENCH_arbitration.json` (consumed by the CI
+//! regression gate via `spmvperf benchdiff`). Scale:
+//! `SPMVPERF_BENCH_QUICK=1` for a smoke pass.
+
+use std::fmt::Write as _;
+
+use spmvperf::gen::{self, HolsteinHubbardParams};
+use spmvperf::matrix::{Coo, Crs, SpMv};
+use spmvperf::spmv::{BackendChoice, SpmvHandle};
+use spmvperf::tune::TuningPolicy;
+use spmvperf::util::bench::{default_bench, quick_mode, write_bench_json};
+use spmvperf::util::report::{f, Table};
+use spmvperf::util::rng::Rng;
+
+const THREADS: usize = 4;
+
+fn main() {
+    let quick = quick_mode();
+    let b = default_bench();
+    let hh_params =
+        if quick { HolsteinHubbardParams::tiny() } else { HolsteinHubbardParams::small() };
+    let band_n = if quick { 2_000 } else { 60_000 };
+    let mut band_rng = Rng::new(31);
+    let matrices: Vec<(&str, Coo)> = vec![
+        ("holstein-hubbard", gen::holstein_hubbard(&hh_params)),
+        ("random-band", gen::random_band(band_n, 12, band_n / 8, &mut band_rng)),
+    ];
+
+    let configs: [(&str, BackendChoice); 3] = [
+        ("auto", BackendChoice::Auto),
+        ("forced-native", BackendChoice::Native),
+        ("forced-sharded", BackendChoice::Sharded),
+    ];
+
+    let mut entries: Vec<String> = Vec::new();
+    let mut summaries: Vec<String> = Vec::new();
+    for (mname, coo) in &matrices {
+        let crs = Crs::from_coo(coo);
+        let n = crs.nrows;
+        let nnz = crs.nnz() as u64;
+        eprintln!("matrix {mname}: N={n} nnz={nnz}");
+        let mut rng = Rng::new(32);
+        let mut x = vec![0.0; n];
+        rng.fill_f64(&mut x, -1.0, 1.0);
+        let mut y_ref = vec![0.0; n];
+        crs.spmv(&x, &mut y_ref);
+
+        let mut t = Table::new(
+            &format!("backend arbitration on {mname} ({THREADS} threads)"),
+            &["config", "served by", "scheme", "shards", "MFlop/s", "ns/nnz"],
+        );
+        let mut by_config: Vec<(&str, f64)> = Vec::new();
+        let mut y = vec![0.0; n];
+        for (cname, choice) in configs {
+            let handle = SpmvHandle::builder_from_crs(&crs)
+                .policy(TuningPolicy::Heuristic)
+                .backend(choice)
+                .threads(THREADS)
+                .quick(quick)
+                .build()
+                .expect("tuned handle");
+            let decision = handle.backend_decision().expect("decision recorded");
+            assert_eq!(decision.candidates.iter().filter(|c| c.chosen).count(), 1);
+            // Self-validate before timing: arbitration must never change
+            // the math (1e-12: the auto pick may choose any scheme).
+            handle.spmv(&x, &mut y);
+            let err = spmvperf::util::stats::max_abs_diff(&y_ref, &y);
+            assert!(err < 1e-12, "{mname}/{cname}: deviates from serial CRS by {err:.2e}");
+            let r = b.run(&format!("{mname}/{cname}"), nnz, 2 * nnz, || {
+                handle.spmv(&x, &mut y);
+                y[0]
+            });
+            println!("{}", r.summary());
+            t.row(vec![
+                cname.to_string(),
+                handle.backend_name().into(),
+                handle.scheme().name(),
+                handle.n_shards().to_string(),
+                f(r.mflops()),
+                f(r.ns_per_item()),
+            ]);
+            by_config.push((cname, r.mflops()));
+            entries.push(format!(
+                concat!(
+                    "    {{\"matrix\": \"{}\", \"config\": \"{}\", \"backend\": \"{}\", ",
+                    "\"arbitration\": \"{}\", \"scheme\": \"{}\", \"shards\": {}, ",
+                    "\"threads\": {}, \"mflops\": {:.3}, \"ns_per_nnz\": {:.4}}}"
+                ),
+                mname,
+                cname,
+                handle.backend_name(),
+                decision.policy,
+                handle.scheme().spec(),
+                handle.n_shards(),
+                THREADS,
+                r.mflops(),
+                r.ns_per_item(),
+            ));
+        }
+        t.print();
+        let lookup = |name: &str| {
+            by_config.iter().find(|(c, _)| *c == name).map(|(_, m)| *m).unwrap_or(0.0)
+        };
+        let auto = lookup("auto");
+        let best_forced = lookup("forced-native").max(lookup("forced-sharded"));
+        let ratio = auto / best_forced.max(1e-9);
+        println!(
+            "{mname}: auto {auto:.1} vs best forced {best_forced:.1} MFlop/s \
+             ({ratio:.3}x of best forced)"
+        );
+        summaries.push(format!(
+            concat!(
+                "    {{\"matrix\": \"{}\", \"auto_mflops\": {:.3}, ",
+                "\"best_forced_mflops\": {:.3}, \"auto_over_best_forced\": {:.4}}}"
+            ),
+            mname, auto, best_forced, ratio
+        ));
+    }
+
+    let mut json = String::new();
+    let _ = writeln!(json, "{{");
+    let _ = writeln!(json, "  \"bench\": \"backend_arbitration\",");
+    let _ = writeln!(json, "  \"threads\": {THREADS},");
+    let _ = writeln!(json, "  \"results\": [");
+    let _ = writeln!(json, "{}", entries.join(",\n"));
+    let _ = writeln!(json, "  ],");
+    let _ = writeln!(json, "  \"summary\": [");
+    let _ = writeln!(json, "{}", summaries.join(",\n"));
+    let _ = writeln!(json, "  ]");
+    let _ = writeln!(json, "}}");
+    write_bench_json("BENCH_arbitration.json", &json);
+}

@@ -11,7 +11,8 @@ use std::fmt::Write as _;
 use spmvperf::gen::{self, HolsteinHubbardParams};
 use spmvperf::matrix::{Crs, Scheme};
 use spmvperf::sched::Schedule;
-use spmvperf::tune::{SpmvContext, TuningPolicy};
+use spmvperf::spmv::{BackendChoice, SpmvHandle};
+use spmvperf::tune::TuningPolicy;
 use spmvperf::util::bench::{default_bench, quick_mode, write_bench_json};
 use spmvperf::util::report::{f, Table};
 use spmvperf::util::rng::Rng;
@@ -29,29 +30,32 @@ fn main() {
     let thread_counts: [usize; 3] = [1, 2, 4];
 
     let mut t = Table::new(
-        "Fig 6 (host) — SpMV through tuned SpmvContexts",
+        "Fig 6 (host) — SpMV through tuned SpmvHandles (native backend)",
         &["scheme", "threads", "MFlop/s", "ns/nnz", "speedup vs serial CRS"],
     );
     let mut entries: Vec<String> = Vec::new();
     let mut serial_crs = 0.0f64;
     let mut crs4 = 0.0f64;
     for scheme in Scheme::all_extended(1000, 2, 32, 256) {
-        let base = SpmvContext::builder_from_crs(&crs)
+        let base = SpmvHandle::builder_from_crs(&crs)
             .policy(TuningPolicy::Fixed(scheme, Schedule::Static { chunk: None }))
+            .backend(BackendChoice::Native)
             .threads(1)
             .build()
-            .expect("fixed-policy context");
+            .expect("fixed-policy native handle");
         let padding = base.report().padding_overhead;
-        let mut ws = base.kernel().workspace(&x);
+        let mut ws = base.kernel().expect("native kernel").workspace(&x);
         for &nt in &thread_counts {
-            let ctx = base.replanned(Schedule::Static { chunk: None }, nt);
-            let nnz = ctx.kernel().nnz();
+            let ctx = base
+                .replanned(Schedule::Static { chunk: None }, nt)
+                .expect("native handles replan");
+            let nnz = ctx.kernel().expect("native kernel").nnz();
             let r = b.run(
                 &format!("{} x{nt}", scheme.name()),
                 nnz as u64,
                 2 * nnz as u64,
                 || {
-                    ctx.spmv_permuted(&ws.xp, &mut ws.yp);
+                    ctx.spmv_permuted(&ws.xp, &mut ws.yp).expect("native permuted path");
                     ws.yp[0]
                 },
             );

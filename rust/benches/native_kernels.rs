@@ -8,7 +8,8 @@ use spmvperf::gen::{self, HolsteinHubbardParams};
 use spmvperf::kernels::{table1_ops, MicroBuffers};
 use spmvperf::matrix::{Crs, Scheme};
 use spmvperf::sched::Schedule;
-use spmvperf::tune::{SpmvContext, TuningPolicy};
+use spmvperf::spmv::{BackendChoice, SpmvHandle};
+use spmvperf::tune::TuningPolicy;
 use spmvperf::util::bench::{default_bench, quick_mode};
 use spmvperf::util::report::{f, Table};
 use spmvperf::util::rng::Rng;
@@ -29,21 +30,25 @@ fn main() {
         &["scheme", "serial MFlop/s", "4T MFlop/s", "speedup", "ns/nnz (4T)"],
     );
     for scheme in Scheme::all_extended(1000, 2, 32, 256) {
-        let ctx1 = SpmvContext::builder_from_crs(&crs)
+        let ctx1 = SpmvHandle::builder_from_crs(&crs)
             .policy(TuningPolicy::Fixed(scheme, Schedule::Static { chunk: None }))
+            .backend(BackendChoice::Native)
             .threads(1)
             .build()
-            .expect("fixed-policy context");
-        let ctx4 = ctx1.replanned(Schedule::Static { chunk: None }, 4);
-        let mut ws = ctx1.kernel().workspace(&x);
-        let nnz = ctx1.kernel().nnz() as u64;
+            .expect("fixed-policy native handle");
+        let ctx4 = ctx1
+            .replanned(Schedule::Static { chunk: None }, 4)
+            .expect("native handles replan");
+        let kernel = ctx1.kernel().expect("native backend has a kernel");
+        let mut ws = kernel.workspace(&x);
+        let nnz = kernel.nnz() as u64;
         let r1 = b.run(&format!("{} serial", scheme.name()), nnz, 2 * nnz, || {
-            ctx1.spmv_permuted(&ws.xp, &mut ws.yp);
+            ctx1.spmv_permuted(&ws.xp, &mut ws.yp).expect("native permuted path");
             ws.yp[0]
         });
         println!("{}", r1.summary());
         let r4 = b.run(&format!("{} x4", scheme.name()), nnz, 2 * nnz, || {
-            ctx4.spmv_permuted(&ws.xp, &mut ws.yp);
+            ctx4.spmv_permuted(&ws.xp, &mut ws.yp).expect("native permuted path");
             ws.yp[0]
         });
         println!("{}", r4.summary());

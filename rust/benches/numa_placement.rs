@@ -16,7 +16,8 @@ use spmvperf::engine::affinity;
 use spmvperf::gen::{self, HolsteinHubbardParams};
 use spmvperf::matrix::{Crs, Scheme, SpMv};
 use spmvperf::sched::Schedule;
-use spmvperf::tune::{SpmvContext, TuningPolicy};
+use spmvperf::spmv::{BackendChoice, SpmvHandle};
+use spmvperf::tune::TuningPolicy;
 use spmvperf::util::bench::{default_bench, quick_mode, write_bench_json};
 use spmvperf::util::report::{f, Table};
 use spmvperf::util::rng::Rng;
@@ -113,12 +114,15 @@ fn main() {
         // Rebalance configs start from the static plan and re-home it
         // onto the target schedule; the rest build on it directly.
         let initial = if cfg.via_rebalance { static_sched } else { cfg.schedule };
-        let mut ctx = SpmvContext::builder_from_crs(&crs)
+        // Forced native: placement is an engine-layer property; the
+        // auto-vs-forced executor dimension lives in backend_arbitration.
+        let mut ctx = SpmvHandle::builder_from_crs(&crs)
             .policy(TuningPolicy::Fixed(Scheme::Crs, initial))
+            .backend(BackendChoice::Native)
             .threads(cfg.threads)
             .pinned(cfg.pinned)
             .build()
-            .expect("fixed context");
+            .expect("fixed native handle");
         if cfg.via_rebalance {
             ctx.rebalance(cfg.schedule);
         }
@@ -162,7 +166,7 @@ fn main() {
             ctx.schedule().name(),
             cfg.threads,
             cfg.pinned,
-            ctx.plan().first_touched(),
+            ctx.plan().expect("native backend has a plan").first_touched(),
             placement,
             r.mflops(),
             r.ns_per_item(),

@@ -10,12 +10,13 @@
 //! smoke pass.
 
 use std::fmt::Write as _;
-use std::sync::Arc;
 
 use spmvperf::gen::{self, HolsteinHubbardParams};
 use spmvperf::matrix::{Crs, Scheme, SpMv};
 use spmvperf::sched::Schedule;
-use spmvperf::shard::{OverlapMode, ShardedSpmv};
+use spmvperf::shard::OverlapMode;
+use spmvperf::spmv::{BackendChoice, SpmvHandle};
+use spmvperf::tune::{ShardPolicy, TuningPolicy};
 use spmvperf::util::bench::{default_bench, quick_mode, write_bench_json};
 use spmvperf::util::report::{f, Table};
 use spmvperf::util::rng::Rng;
@@ -31,7 +32,7 @@ fn main() {
     let hh_params =
         if quick { HolsteinHubbardParams::tiny() } else { HolsteinHubbardParams::small() };
     let coo = gen::holstein_hubbard(&hh_params);
-    let crs = Arc::new(Crs::from_coo(&coo));
+    let crs = Crs::from_coo(&coo);
     let n = crs.nrows;
     let nnz = crs.nnz() as u64;
     eprintln!("matrix holstein-hubbard: N={n} nnz={nnz}, {THREADS_PER_SHARD} thread(s)/shard");
@@ -58,18 +59,16 @@ fn main() {
     let mut by_name: Vec<(String, f64)> = Vec::new();
     let mut y = vec![0.0; n];
     for (name, shards, scheme) in &configs {
-        let mut sh = ShardedSpmv::new(
-            crs.clone(),
-            *scheme,
-            Schedule::Static { chunk: None },
-            *shards,
-            THREADS_PER_SHARD,
-            OverlapMode::BulkSync,
-            false,
-        )
-        .expect("sharded executor over a square matrix");
         for mode in [OverlapMode::BulkSync, OverlapMode::Overlapped] {
-            sh.set_mode(mode);
+            // Every configuration is a forced-sharded SpmvHandle — the
+            // bench never names the executor type.
+            let sh = SpmvHandle::builder_from_crs(&crs)
+                .policy(TuningPolicy::Fixed(*scheme, Schedule::Static { chunk: None }))
+                .backend(BackendChoice::Sharded)
+                .shard_policy(ShardPolicy::Fixed { shards: *shards, mode })
+                .threads(THREADS_PER_SHARD)
+                .build()
+                .expect("sharded handle over a square matrix");
             let label = format!("{name}-{}", short(mode));
             // Self-validate before timing: sharding and overlap must
             // never change the math.
@@ -84,11 +83,14 @@ fn main() {
                 y[0]
             });
             println!("{}", r.summary());
+            let sd = sh.report().shard.as_ref().expect("shard decision recorded");
+            let (halo_fraction, boundary_nnz_fraction) =
+                (sd.halo_fraction, sd.boundary_nnz_fraction);
             table.row(vec![
                 name.clone(),
                 mode.name().into(),
-                f(sh.halo_fraction()),
-                f(sh.boundary_nnz_fraction()),
+                f(halo_fraction),
+                f(boundary_nnz_fraction),
                 f(r.mflops()),
                 f(r.ns_per_item()),
             ]);
@@ -105,8 +107,8 @@ fn main() {
                 mode.name(),
                 scheme.spec(),
                 THREADS_PER_SHARD,
-                sh.halo_fraction(),
-                sh.boundary_nnz_fraction(),
+                halo_fraction,
+                boundary_nnz_fraction,
                 r.mflops(),
                 r.ns_per_item(),
             ));

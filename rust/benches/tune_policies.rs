@@ -11,7 +11,8 @@ use std::fmt::Write as _;
 use spmvperf::gen::{self, HolsteinHubbardParams};
 use spmvperf::matrix::{Coo, Crs, Scheme};
 use spmvperf::sched::Schedule;
-use spmvperf::tune::{sell_params, SpmvContext, TuningPolicy};
+use spmvperf::spmv::{BackendChoice, SpmvHandle};
+use spmvperf::tune::{sell_params, TuningPolicy};
 use spmvperf::util::bench::{default_bench, quick_mode, write_bench_json};
 use spmvperf::util::report::{f, Table};
 use spmvperf::util::rng::Rng;
@@ -68,23 +69,30 @@ fn main() {
         let mut fixed_mflops = 0.0f64;
         let mut heuristic_mflops = 0.0f64;
         for (pname, policy) in &policies {
-            let ctx = SpmvContext::builder_from_crs(&crs)
+            // The native backend is forced: this bench isolates the
+            // scheme/schedule tuning dimension (and the permuted hot
+            // path exists only there); benches/backend_arbitration
+            // covers the auto-vs-forced executor dimension.
+            let ctx = SpmvHandle::builder_from_crs(&crs)
                 .policy(*policy)
+                .backend(BackendChoice::Native)
                 .threads(threads)
                 .quick(quick)
                 .build()
-                .expect("tuning context");
-            let nnz = ctx.kernel().nnz() as u64;
-            let mut ws = ctx.kernel().workspace(&x);
+                .expect("tuned native handle");
+            let kernel = ctx.kernel().expect("native backend has a kernel");
+            let nnz = kernel.nnz() as u64;
+            let mut ws = kernel.workspace(&x);
             let r = b.run(&format!("{mname}/{pname}"), nnz, 2 * nnz, || {
-                ctx.spmv_permuted(&ws.xp, &mut ws.yp);
+                ctx.spmv_permuted(&ws.xp, &mut ws.yp).expect("native permuted path");
                 ws.yp[0]
             });
             println!("{}", r.summary());
             // Fused single-dispatch batch vs the pre-fusion coordinator
-            // loop (one spmv + one output clone per vector, as the old
-            // NativeExecutor::run_batch did) — both return owned batch
-            // results, so the metric compares the two service paths.
+            // loop (one spmv + one output clone per vector, as the
+            // pre-PR-2 executor's run_batch did) — both return owned
+            // batch results, so the metric compares the two service
+            // paths.
             let r_fused = b.run(
                 &format!("{mname}/{pname} batch{BATCH} fused"),
                 BATCH as u64 * nnz,
@@ -136,7 +144,7 @@ fn main() {
                 ),
                 mname,
                 n,
-                ctx.kernel().nnz(),
+                kernel.nnz(),
                 pname,
                 ctx.scheme().name(),
                 ctx.scheme().spec(),

@@ -3,10 +3,10 @@
 //! vectors) arrive on a queue; a worker thread coalesces them into
 //! batches (up to the artifact's batch size, within a latency window)
 //! and dispatches them to an executor — either the PJRT-compiled
-//! JAX/Pallas artifact or the native [`NativeExecutor`], which is
-//! scheme-generic over a tuned [`crate::tune::SpmvContext`] and runs
-//! each coalesced batch as a single fused engine dispatch. Python is
-//! never on this path.
+//! JAX/Pallas artifact or the backend-agnostic [`Executor`] over a
+//! tuned [`crate::spmv::SpmvHandle`], which serves each coalesced batch
+//! in one fused dispatch on whatever backend (serial, native engine,
+//! sharded) arbitration bound. Python is never on this path.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -16,18 +16,17 @@ use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
-use crate::tune::{ShardedContext, SpmvContext};
+use crate::spmv::SpmvHandle;
 
 /// Batch executor abstraction: the service is agnostic of what actually
 /// multiplies. Executors are constructed *inside* the worker thread (a
 /// PJRT client is not `Send`).
 ///
 /// The working basis is executor-defined and part of each executor's
-/// contract: [`NativeExecutor::from_context`] and [`ShardedExecutor`]
-/// serve the **original** basis (the context gathers/scatters
-/// internally), while [`PjrtExecutor`] serves the ELL **permuted**
-/// basis of its artifact. A deployment must pick one executor per
-/// service and submit vectors in that executor's basis.
+/// contract: [`Executor`] serves the **original** basis (the handle
+/// gathers/scatters internally), while [`PjrtExecutor`] serves the ELL
+/// **permuted** basis of its artifact. A deployment must pick one
+/// executor per service and submit vectors in that executor's basis.
 pub trait BatchExecutor {
     fn dim(&self) -> usize;
     fn max_batch(&self) -> usize;
@@ -35,81 +34,43 @@ pub trait BatchExecutor {
     fn run_batch(&self, xs: &[Vec<f64>]) -> Result<Vec<Vec<f64>>>;
 }
 
-/// Native executor (fallback / testing): **scheme-generic** over a tuned
-/// [`SpmvContext`] — any storage scheme, schedule and thread count the
-/// tuning layer can produce is servable. Whole batches run as a single
-/// fused engine dispatch ([`SpmvContext::spmv_batch`]), so the engine's
-/// completion latch is paid once per batch, not once per vector.
-pub struct NativeExecutor {
-    ctx: SpmvContext,
+/// The one native-side executor: **backend-generic** over a tuned
+/// [`SpmvHandle`] — any storage scheme, schedule, thread count and
+/// executor backend the tuning/arbitration layers can produce is
+/// servable, and no call site names a concrete backend. Whole batches
+/// run as a single fused dispatch ([`SpmvHandle::spmv_batch`]): one
+/// engine completion latch (native) or one coordinator spawn across all
+/// shards (sharded) per batch, not per vector.
+pub struct Executor {
+    handle: SpmvHandle,
     pub max_batch: usize,
 }
 
-impl NativeExecutor {
-    /// Wrap any tuned context as a batch executor — the scheme-generic
-    /// constructor every new consumer should use. NUMA deployments build
-    /// the context with `.pinned(true)` *inside* the service's
-    /// `make_executor` closure: it runs on the worker thread, so the
-    /// pinned engine and first-touched workspace belong to the thread
-    /// that will serve every batch.
-    pub fn from_context(ctx: SpmvContext, max_batch: usize) -> Self {
-        NativeExecutor { ctx, max_batch: max_batch.max(1) }
+impl Executor {
+    /// Wrap any tuned handle as a batch executor. NUMA deployments build
+    /// the handle with `.pinned(true)` *inside* the service's
+    /// `make_executor` closure: it runs on the worker thread, so pinned
+    /// engines and first-touched buffers belong to the thread that will
+    /// serve every batch.
+    pub fn from_handle(handle: SpmvHandle, max_batch: usize) -> Self {
+        Executor { handle, max_batch: max_batch.max(1) }
     }
 
-    /// The tuned context serving this executor.
-    pub fn context(&self) -> &SpmvContext {
-        &self.ctx
+    /// The tuned handle serving this executor.
+    pub fn handle(&self) -> &SpmvHandle {
+        &self.handle
     }
 }
 
-impl BatchExecutor for NativeExecutor {
+impl BatchExecutor for Executor {
     fn dim(&self) -> usize {
-        crate::matrix::SpMv::nrows(&self.ctx)
+        crate::matrix::SpMv::nrows(&self.handle)
     }
     fn max_batch(&self) -> usize {
         self.max_batch
     }
     fn run_batch(&self, xs: &[Vec<f64>]) -> Result<Vec<Vec<f64>>> {
-        Ok(self.ctx.spmv_batch(xs))
-    }
-}
-
-/// Sharded executor: the [`NativeExecutor`] sibling over a tuned
-/// [`ShardedContext`]. Each coalesced batch is served **across every
-/// shard in one dispatch** ([`ShardedContext::spmv_batch`]): the shard
-/// coordinators spawn once per batch and stream all vectors through
-/// their engines, overlapping halo exchange with interior compute when
-/// the context's mode says so. Original-basis contract, bit-identical
-/// to the serial CRS kernel.
-pub struct ShardedExecutor {
-    ctx: ShardedContext,
-    pub max_batch: usize,
-}
-
-impl ShardedExecutor {
-    /// Wrap a tuned sharded context as a batch executor. Like
-    /// [`NativeExecutor::from_context`], build the context *inside* the
-    /// service's `make_executor` closure so per-shard pinned engines
-    /// and first-touched buffers belong to the serving side.
-    pub fn from_context(ctx: ShardedContext, max_batch: usize) -> Self {
-        ShardedExecutor { ctx, max_batch: max_batch.max(1) }
-    }
-
-    /// The tuned sharded context serving this executor.
-    pub fn context(&self) -> &ShardedContext {
-        &self.ctx
-    }
-}
-
-impl BatchExecutor for ShardedExecutor {
-    fn dim(&self) -> usize {
-        crate::matrix::SpMv::nrows(&self.ctx)
-    }
-    fn max_batch(&self) -> usize {
-        self.max_batch
-    }
-    fn run_batch(&self, xs: &[Vec<f64>]) -> Result<Vec<Vec<f64>>> {
-        Ok(self.ctx.spmv_batch(xs))
+        Ok(self.handle.spmv_batch(xs))
     }
 }
 
@@ -342,6 +303,7 @@ mod tests {
     use crate::matrix::{Crs, Scheme, SpMv};
     use crate::sched::Schedule;
     use crate::shard::OverlapMode;
+    use crate::spmv::BackendChoice;
     use crate::tune::{ShardPolicy, TuningPolicy};
 
     fn tiny_crs() -> Crs {
@@ -349,27 +311,28 @@ mod tests {
         Crs::from_coo(&h)
     }
 
-    /// A CRS fixed-policy context service — the scheme-generic
-    /// replacement for the removed ELL shims. Original-basis contract.
+    /// A CRS fixed-policy handle service. Original-basis contract.
     fn start_native(max_batch: usize, window: Duration) -> (Service, Crs) {
         let crs = tiny_crs();
         let dim = crs.nrows;
         let crs2 = crs.clone();
         let svc = Service::start(ServiceConfig { batch_window: window }, dim, move || {
-            let ctx = SpmvContext::builder_from_crs(&crs2)
+            let handle = SpmvHandle::builder_from_crs(&crs2)
                 .policy(TuningPolicy::Fixed(Scheme::Crs, Schedule::Static { chunk: None }))
+                .backend(BackendChoice::Native)
                 .threads(1)
                 .build()?;
-            Ok(Box::new(NativeExecutor::from_context(ctx, max_batch)) as Box<dyn BatchExecutor>)
+            Ok(Box::new(Executor::from_handle(handle, max_batch)) as Box<dyn BatchExecutor>)
         })
         .unwrap();
         (svc, crs)
     }
 
-    /// ISSUE-4: the sharded executor serves whole batches across every
-    /// shard in one dispatch, bit-identical to the serial CRS kernel.
+    /// ISSUE-5: one executor serves every backend — whole batches run in
+    /// one dispatch, bit-identical to the serial CRS kernel, whether the
+    /// handle is serial, native or sharded (× overlap modes).
     #[test]
-    fn sharded_executor_serves_batches_across_shards() {
+    fn executor_serves_batches_on_every_backend() {
         let crs = tiny_crs();
         let n = crs.nrows;
         let mut rng = crate::util::rng::Rng::new(14);
@@ -380,16 +343,28 @@ mod tests {
                 x
             })
             .collect();
+        let mut cases: Vec<(BackendChoice, Option<ShardPolicy>)> = vec![
+            (BackendChoice::Serial, None),
+            (BackendChoice::Native, None),
+        ];
         for mode in [OverlapMode::BulkSync, OverlapMode::Overlapped] {
-            let ctx = SpmvContext::builder_from_crs(&crs)
+            cases.push((
+                BackendChoice::Sharded,
+                Some(ShardPolicy::Fixed { shards: 3, mode }),
+            ));
+        }
+        for (backend, shard_policy) in cases {
+            let mut b = SpmvHandle::builder_from_crs(&crs)
                 .policy(TuningPolicy::Fixed(Scheme::Crs, Schedule::Static { chunk: None }))
-                .threads(2)
-                .sharded(ShardPolicy::Fixed { shards: 3, mode })
-                .build_sharded()
-                .unwrap();
-            let exec = ShardedExecutor::from_context(ctx, 8);
+                .backend(backend)
+                .threads(2);
+            if let Some(sp) = shard_policy {
+                b = b.shard_policy(sp);
+            }
+            let handle = b.build().unwrap();
+            let exec = Executor::from_handle(handle, 8);
             assert_eq!(exec.dim(), n);
-            assert_eq!(exec.context().n_shards(), 3);
+            assert_eq!(exec.handle().backend_name(), backend.name());
             let got = exec.run_batch(&xs).unwrap();
             let mut want = vec![0.0; n];
             for (x, y) in xs.iter().zip(&got) {
@@ -397,15 +372,15 @@ mod tests {
                 assert_eq!(
                     crate::util::stats::max_abs_diff(y, &want),
                     0.0,
-                    "{}: sharded executor deviates from serial CRS",
-                    mode.name()
+                    "{}: executor deviates from serial CRS",
+                    backend.name()
                 );
             }
         }
     }
 
     #[test]
-    fn service_over_sharded_executor() {
+    fn service_over_sharded_handle() {
         let crs = tiny_crs();
         let n = crs.nrows;
         let crs2 = crs.clone();
@@ -416,15 +391,16 @@ mod tests {
                 // Built on the worker thread, like every NUMA-placed
                 // executor: shard engines and first-touched buffers
                 // belong to the serving side.
-                let ctx = SpmvContext::builder_from_crs(&crs2)
+                let handle = SpmvHandle::builder_from_crs(&crs2)
                     .policy(TuningPolicy::Fixed(Scheme::Crs, Schedule::Static { chunk: None }))
-                    .threads(2)
-                    .sharded(ShardPolicy::Fixed {
+                    .backend(BackendChoice::Sharded)
+                    .shard_policy(ShardPolicy::Fixed {
                         shards: 2,
                         mode: OverlapMode::Overlapped,
                     })
-                    .build_sharded()?;
-                Ok(Box::new(ShardedExecutor::from_context(ctx, 8)) as Box<dyn BatchExecutor>)
+                    .threads(2)
+                    .build()?;
+                Ok(Box::new(Executor::from_handle(handle, 8)) as Box<dyn BatchExecutor>)
             },
         )
         .unwrap();
@@ -444,22 +420,23 @@ mod tests {
     }
 
     #[test]
-    fn from_context_serves_any_scheme() {
-        // The service layer is no longer ELL-bound: a SELL-C-σ tuned
-        // context (original basis) is just as servable, and its batched
-        // path is bit-identical to per-vector execution.
+    fn executor_serves_any_scheme() {
+        // The service layer is scheme-generic: a SELL-C-σ tuned handle
+        // (original basis) is just as servable, and its batched path is
+        // bit-identical to per-vector execution.
         let h = gen::holstein_hubbard(&gen::HolsteinHubbardParams::tiny());
         let crs = Crs::from_coo(&h);
         let n = crs.nrows;
-        let ctx = crate::tune::SpmvContext::builder(&h)
+        let handle = SpmvHandle::builder(&h)
             .policy(TuningPolicy::Fixed(
                 Scheme::SellCs { c: 32, sigma: 256 },
                 Schedule::Static { chunk: None },
             ))
+            .backend(BackendChoice::Native)
             .threads(4)
             .build()
             .unwrap();
-        let exec = NativeExecutor::from_context(ctx, 8);
+        let exec = Executor::from_handle(handle, 8);
         assert_eq!(exec.dim(), n);
         let mut rng = crate::util::rng::Rng::new(11);
         let xs: Vec<Vec<f64>> = (0..5)
@@ -481,7 +458,9 @@ mod tests {
     }
 
     #[test]
-    fn service_over_context_executor() {
+    fn service_over_auto_arbitrated_handle() {
+        // The service no longer names a backend at all: arbitration
+        // binds one on the worker thread, and the decision is recorded.
         let h = gen::holstein_hubbard(&gen::HolsteinHubbardParams::tiny());
         let crs = Crs::from_coo(&h);
         let n = crs.nrows;
@@ -489,14 +468,13 @@ mod tests {
             ServiceConfig { batch_window: Duration::from_micros(100) },
             n,
             move || {
-                let ctx = crate::tune::SpmvContext::builder_from_crs(&crs)
-                    .policy(TuningPolicy::Fixed(
-                        Scheme::SellCs { c: 16, sigma: 128 },
-                        Schedule::Static { chunk: None },
-                    ))
+                let handle = SpmvHandle::builder_from_crs(&crs)
+                    .policy(TuningPolicy::Heuristic)
                     .threads(2)
+                    .quick(true)
                     .build()?;
-                Ok(Box::new(NativeExecutor::from_context(ctx, 8)) as Box<dyn BatchExecutor>)
+                assert!(handle.backend_decision().is_some());
+                Ok(Box::new(Executor::from_handle(handle, 8)) as Box<dyn BatchExecutor>)
             },
         )
         .unwrap();
@@ -513,7 +491,7 @@ mod tests {
     }
 
     #[test]
-    fn service_over_pinned_context_executor() {
+    fn service_over_pinned_handle() {
         // NUMA-placed serving: the executor is built inside the worker
         // thread with a pinned engine + first-touched plan, and results
         // stay exact (on non-Linux the pin is a recorded no-op).
@@ -524,13 +502,14 @@ mod tests {
             ServiceConfig { batch_window: Duration::from_micros(100) },
             n,
             move || {
-                let ctx = crate::tune::SpmvContext::builder_from_crs(&crs)
+                let handle = SpmvHandle::builder_from_crs(&crs)
                     .policy(TuningPolicy::Fixed(Scheme::Crs, Schedule::Static { chunk: None }))
+                    .backend(BackendChoice::Native)
                     .threads(2)
                     .pinned(true)
                     .build()?;
-                assert!(ctx.plan().first_touched());
-                Ok(Box::new(NativeExecutor::from_context(ctx, 8)) as Box<dyn BatchExecutor>)
+                assert!(handle.plan().expect("native backend has a plan").first_touched());
+                Ok(Box::new(Executor::from_handle(handle, 8)) as Box<dyn BatchExecutor>)
             },
         )
         .unwrap();

@@ -148,16 +148,17 @@ pub fn lanczos(op: &dyn LinearOp, n_eigs: usize, cfg: &LanczosConfig) -> Lanczos
 }
 
 /// Lanczos with the hot-loop SpMV routed through a tuned
-/// [`crate::tune::SpmvContext`]: every operator application runs the
-/// context's partitioned range-restricted kernels on its engine thread
-/// pool. Results are identical to the serial solver of the tuned scheme
-/// (the engine is bit-compatible with the serial kernels).
-pub fn lanczos_with_context(
-    ctx: &crate::tune::SpmvContext,
+/// [`crate::spmv::SpmvHandle`]: every operator application runs on
+/// whatever backend arbitration bound (serial kernel, native engine,
+/// sharded executor) — the solver never names one. Results are
+/// identical to the serial solver of the tuned scheme (every backend is
+/// bit-compatible with the serial kernels).
+pub fn lanczos_with_handle(
+    handle: &crate::spmv::SpmvHandle,
     n_eigs: usize,
     cfg: &LanczosConfig,
 ) -> LanczosResult {
-    lanczos(ctx, n_eigs, cfg)
+    lanczos(handle, n_eigs, cfg)
 }
 
 /// Power iteration on (shift·I − A) to find the lowest eigenvalue — a
@@ -268,48 +269,62 @@ mod tests {
     }
 
     #[test]
-    fn context_backed_lanczos_matches_serial() {
+    fn handle_backed_lanczos_matches_serial_on_every_backend() {
         use crate::matrix::Scheme;
         use crate::sched::Schedule;
-        use crate::tune::{SpmvContext, TuningPolicy};
+        use crate::shard::OverlapMode;
+        use crate::spmv::{BackendChoice, SpmvHandle};
+        use crate::tune::{ShardPolicy, TuningPolicy};
         let h = gen::holstein_hubbard(&gen::HolsteinHubbardParams::tiny());
         let crs = Crs::from_coo(&h);
         let serial = lanczos(&crs, 1, &LanczosConfig::default());
-        for scheme in [Scheme::Crs, Scheme::SellCs { c: 32, sigma: 256 }] {
-            let ctx = SpmvContext::builder_from_crs(&crs)
-                .policy(TuningPolicy::Fixed(scheme, Schedule::Static { chunk: None }))
-                .threads(4)
-                .build()
-                .unwrap();
-            let r = lanczos_with_context(&ctx, 1, &LanczosConfig::default());
-            assert!(r.converged);
-            assert!(
-                (r.eigenvalues[0] - serial.eigenvalues[0]).abs() < 1e-10,
-                "{scheme}: context {} vs serial {}",
-                r.eigenvalues[0],
-                serial.eigenvalues[0]
-            );
+        for backend in [BackendChoice::Serial, BackendChoice::Native, BackendChoice::Sharded] {
+            for scheme in [Scheme::Crs, Scheme::SellCs { c: 32, sigma: 256 }] {
+                let mut b = SpmvHandle::builder_from_crs(&crs)
+                    .policy(TuningPolicy::Fixed(scheme, Schedule::Static { chunk: None }))
+                    .backend(backend)
+                    .threads(4);
+                if backend == BackendChoice::Sharded {
+                    b = b.shard_policy(ShardPolicy::Fixed {
+                        shards: 2,
+                        mode: OverlapMode::Overlapped,
+                    });
+                }
+                let handle = b.build().unwrap();
+                let r = lanczos_with_handle(&handle, 1, &LanczosConfig::default());
+                assert!(r.converged);
+                assert!(
+                    (r.eigenvalues[0] - serial.eigenvalues[0]).abs() < 1e-10,
+                    "{} × {scheme}: handle {} vs serial {}",
+                    backend.name(),
+                    r.eigenvalues[0],
+                    serial.eigenvalues[0]
+                );
+            }
         }
     }
 
     #[test]
-    fn heuristic_tuned_lanczos_matches_serial() {
-        use crate::tune::{SpmvContext, TuningPolicy};
+    fn auto_arbitrated_lanczos_matches_serial() {
+        use crate::spmv::SpmvHandle;
+        use crate::tune::TuningPolicy;
         let h = gen::holstein_hubbard(&gen::HolsteinHubbardParams::tiny());
         let crs = Crs::from_coo(&h);
         let serial = lanczos(&crs, 1, &LanczosConfig::default());
-        let ctx = SpmvContext::builder(&h)
+        let handle = SpmvHandle::builder(&h)
             .policy(TuningPolicy::Heuristic)
             .threads(2)
             .quick(true)
             .build()
             .unwrap();
-        let r = lanczos_with_context(&ctx, 1, &LanczosConfig::default());
+        assert!(handle.backend_decision().is_some(), "arbitration must be recorded");
+        let r = lanczos_with_handle(&handle, 1, &LanczosConfig::default());
         assert!(r.converged);
         assert!(
             (r.eigenvalues[0] - serial.eigenvalues[0]).abs() < 1e-10,
-            "tuned ({}) {} vs serial {}",
-            ctx.scheme(),
+            "tuned ({} on {}) {} vs serial {}",
+            handle.scheme(),
+            handle.backend_name(),
             r.eigenvalues[0],
             serial.eigenvalues[0]
         );
@@ -317,28 +332,30 @@ mod tests {
 
     #[test]
     fn pinned_first_touch_lanczos_matches_serial() {
-        // The solver's hot loop over a NUMA-placed context (pinned
+        // The solver's hot loop over a NUMA-placed handle (pinned
         // engine + first-touched workspace) must reproduce the serial
         // result exactly — on non-Linux hosts the pin falls back to a
         // recorded no-op and takes the same code path.
-        use crate::tune::{SpmvContext, TuningPolicy};
+        use crate::spmv::{BackendChoice, SpmvHandle};
+        use crate::tune::TuningPolicy;
         let h = gen::holstein_hubbard(&gen::HolsteinHubbardParams::tiny());
         let crs = Crs::from_coo(&h);
         let serial = lanczos(&crs, 1, &LanczosConfig::default());
-        let ctx = SpmvContext::builder_from_crs(&crs)
+        let handle = SpmvHandle::builder_from_crs(&crs)
             .policy(TuningPolicy::Heuristic)
+            .backend(BackendChoice::Native)
             .threads(4)
             .quick(true)
             .pinned(true)
             .build()
             .unwrap();
-        assert!(ctx.plan().first_touched());
-        let r = lanczos_with_context(&ctx, 1, &LanczosConfig::default());
+        assert!(handle.plan().expect("native backend has a plan").first_touched());
+        let r = lanczos_with_handle(&handle, 1, &LanczosConfig::default());
         assert!(r.converged);
         assert!(
             (r.eigenvalues[0] - serial.eigenvalues[0]).abs() < 1e-10,
             "pinned ({}) {} vs serial {}",
-            ctx.report().placement.summary(),
+            handle.report().placement.summary(),
             r.eigenvalues[0],
             serial.eigenvalues[0]
         );

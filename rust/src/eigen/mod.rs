@@ -6,5 +6,5 @@ pub mod lanczos;
 
 pub use dense::{jacobi_eigen, tridiag_eigenvalues};
 pub use lanczos::{
-    inverse_shifted_power, lanczos, lanczos_with_context, LanczosConfig, LanczosResult, LinearOp,
+    inverse_shifted_power, lanczos, lanczos_with_handle, LanczosConfig, LanczosResult, LinearOp,
 };

@@ -13,20 +13,23 @@ use crate::engine::affinity;
 use crate::matrix::{Crs, Scheme};
 use crate::sched::Schedule;
 use crate::simulator::{simulate_spmv_plan, MachineSpec, Placement, SimOptions};
-use crate::tune::{SpmvContext, TuningPolicy};
+use crate::spmv::{BackendChoice, SpmvHandle};
+use crate::tune::TuningPolicy;
 use crate::util::report::{f, Table};
 use crate::util::rng::Rng;
 
-use super::{fixed_ctx, ExpOptions};
+use super::{fixed_handle, ExpOptions};
 
 /// Simulate through the shared plan/execute API: the same plan the
-/// context's host engine would run is handed to the machine model.
-fn mflops(m: &MachineSpec, ctx: &SpmvContext, tps: usize, sockets: usize) -> f64 {
-    let c = ctx.replanned(Schedule::Static { chunk: None }, tps * sockets);
+/// handle's host engine would run is handed to the machine model.
+fn mflops(m: &MachineSpec, handle: &SpmvHandle, tps: usize, sockets: usize) -> f64 {
+    let c = handle
+        .replanned(Schedule::Static { chunk: None }, tps * sockets)
+        .expect("native handles replan");
     simulate_spmv_plan(
         m,
-        c.kernel(),
-        c.plan(),
+        c.kernel().expect("native backend has a kernel"),
+        c.plan().expect("native backend has a plan"),
         tps,
         sockets,
         Placement::FirstTouchStatic,
@@ -39,8 +42,8 @@ pub fn run(opts: &ExpOptions) -> Vec<Table> {
     let coo = opts.test_matrix();
     let crs = Crs::from_coo(&coo);
     let block = if opts.quick { 64 } else { 1000 };
-    let k_crs = fixed_ctx(&crs, Scheme::Crs);
-    let k_nb = fixed_ctx(&crs, Scheme::NbJds { block });
+    let k_crs = fixed_handle(&crs, Scheme::Crs);
+    let k_nb = fixed_handle(&crs, Scheme::NbJds { block });
     let mut tables = Vec::new();
 
     // --- x86 machines: threads/socket × sockets ---
@@ -104,31 +107,32 @@ pub fn run(opts: &ExpOptions) -> Vec<Table> {
     tables
 }
 
-/// Wall-clock MFlop/s of a CRS static-schedule context on the host.
+/// Wall-clock MFlop/s of a CRS static-schedule handle on the host.
 fn host_mflops(crs: &Crs, threads: usize, pinned: bool, reps: usize) -> f64 {
-    let ctx = SpmvContext::builder_from_crs(crs)
+    let handle = SpmvHandle::builder_from_crs(crs)
         .policy(TuningPolicy::Fixed(Scheme::Crs, Schedule::Static { chunk: None }))
+        .backend(BackendChoice::Native)
         .threads(threads)
         .pinned(pinned)
         .build()
-        .expect("fixed-policy context on a square matrix cannot fail");
+        .expect("fixed-policy native handle on a square matrix cannot fail");
     let n = crs.nrows;
     let mut x = vec![0.0; n];
     Rng::new(8).fill_f64(&mut x, -1.0, 1.0);
     let mut y = vec![0.0; n];
-    // Measure through `ctx.spmv`, whose kernel traffic runs on the
+    // Measure through `handle.spmv`, whose kernel traffic runs on the
     // plan's own (first-touch placed) workspace; a caller-allocated
     // permuted workspace would bypass the placement being compared.
-    ctx.spmv(&x, &mut y); // warm caches + engine
+    handle.spmv(&x, &mut y); // warm caches + engine
     let t0 = std::time::Instant::now();
     for _ in 0..reps {
-        ctx.spmv(&x, &mut y);
+        handle.spmv(&x, &mut y);
         std::hint::black_box(y[0]);
     }
     let dt = t0.elapsed().as_secs_f64() / reps as f64;
     2.0 * crs.nnz() as f64 / dt / 1e6
-    // ctx drops here: a pinned engine restores the caller's affinity,
-    // so the next (unpinned) measurement is not confined to one core.
+    // the handle drops here: a pinned engine restores the caller's
+    // affinity, so the next (unpinned) measurement is not confined.
 }
 
 /// Fig 8, measured: OpenMP-style scaling on the actual host, pinned
@@ -177,7 +181,7 @@ mod tests {
 
     #[test]
     fn nehalem_roughly_twice_shanghai_full_node() {
-        let k = fixed_ctx(medium_crs(), Scheme::Crs);
+        let k = fixed_handle(medium_crs(), Scheme::Crs);
         let neh = mflops(&MachineSpec::nehalem(), &k, 4, 2);
         let sha = mflops(&MachineSpec::shanghai(), &k, 4, 2);
         let ratio = neh / sha;
@@ -189,7 +193,7 @@ mod tests {
 
     #[test]
     fn woodcrest_second_thread_gains_nothing() {
-        let k = fixed_ctx(medium_crs(), Scheme::Crs);
+        let k = fixed_handle(medium_crs(), Scheme::Crs);
         let m = MachineSpec::woodcrest();
         let one = mflops(&m, &k, 1, 1);
         let two = mflops(&m, &k, 2, 1);
@@ -201,7 +205,7 @@ mod tests {
 
     #[test]
     fn woodcrest_second_socket_gains_about_half() {
-        let k = fixed_ctx(medium_crs(), Scheme::Crs);
+        let k = fixed_handle(medium_crs(), Scheme::Crs);
         let m = MachineSpec::woodcrest();
         let one = mflops(&m, &k, 2, 1);
         let two = mflops(&m, &k, 2, 2);
@@ -217,8 +221,8 @@ mod tests {
         // With enough threads the matrix partitions fit the Itanium L3s:
         // superlinear CRS speedup; and NBJDS (long loops) must overtake
         // CRS (short loops, heavy in-order loop startup) at high counts.
-        let k_crs = fixed_ctx(medium_crs(), Scheme::Crs);
-        let k_nb = fixed_ctx(medium_crs(), Scheme::NbJds { block: 1000 });
+        let k_crs = fixed_handle(medium_crs(), Scheme::Crs);
+        let k_nb = fixed_handle(medium_crs(), Scheme::NbJds { block: 1000 });
         let m = MachineSpec::hlrb2(32);
         let base = mflops(&m, &k_crs, 2, 1);
         let crs64 = mflops(&m, &k_crs, 2, 32);

@@ -9,10 +9,10 @@
 use crate::matrix::{Crs, Scheme};
 use crate::sched::Schedule;
 use crate::simulator::{simulate_spmv_plan, MachineSpec, Placement, SimOptions};
-use crate::tune::SpmvContext;
+use crate::spmv::SpmvHandle;
 use crate::util::report::{f, Table};
 
-use super::{fixed_ctx, ExpOptions};
+use super::{fixed_handle, ExpOptions};
 
 pub fn chunks(quick: bool) -> Vec<usize> {
     if quick {
@@ -23,14 +23,14 @@ pub fn chunks(quick: bool) -> Vec<usize> {
 }
 
 /// Simulate through the shared plan/execute API (2 sockets fully
-/// populated): schedule × chunk decisions live in the context's plan.
-fn mflops(m: &MachineSpec, ctx: &SpmvContext, schedule: Schedule) -> f64 {
+/// populated): schedule × chunk decisions live in the handle's plan.
+fn mflops(m: &MachineSpec, handle: &SpmvHandle, schedule: Schedule) -> f64 {
     let tps = m.cores_per_socket;
-    let c = ctx.replanned(schedule, tps * 2);
+    let c = handle.replanned(schedule, tps * 2).expect("native handles replan");
     simulate_spmv_plan(
         m,
-        c.kernel(),
-        c.plan(),
+        c.kernel().expect("native backend has a kernel"),
+        c.plan().expect("native backend has a plan"),
         tps,
         2,
         Placement::FirstTouchStatic,
@@ -59,7 +59,7 @@ pub fn run(opts: &ExpOptions) -> Vec<Table> {
         "Fig 9 — CRS on Nehalem 2x4 threads: MFlop/s by schedule and chunk",
         &href,
     );
-    let k_crs = fixed_ctx(&crs, Scheme::Crs);
+    let k_crs = fixed_handle(&crs, Scheme::Crs);
     let default = mflops(&m, &k_crs, Schedule::Static { chunk: None });
     t.row({
         let mut r = vec!["static(default)".to_string()];
@@ -96,7 +96,7 @@ pub fn run(opts: &ExpOptions) -> Vec<Table> {
                 "RBJDS" => Scheme::RbJds { block: b },
                 _ => Scheme::SoJds { block: b },
             };
-            let k = fixed_ctx(&crs, scheme);
+            let k = fixed_handle(&crs, scheme);
             let mut row = vec![b.to_string()];
             for &c in &ch {
                 row.push(f(mflops(&m, &k, Schedule::Static { chunk: Some(c) })));
@@ -129,7 +129,7 @@ mod tests {
     fn static_default_beats_dynamic_small_chunks() {
         // Dynamic scheduling with small chunks disrupts NUMA locality.
         let m = MachineSpec::nehalem();
-        let k = fixed_ctx(medium_crs(), Scheme::Crs);
+        let k = fixed_handle(medium_crs(), Scheme::Crs);
         let stat = mflops(&m, &k, Schedule::Static { chunk: None });
         let dyn_small = mflops(&m, &k, Schedule::Dynamic { chunk: 16 });
         assert!(
@@ -143,7 +143,7 @@ mod tests {
         // Chunks far below a page (512 rows x 8 B = 4 KiB) randomize
         // placement: static,16 must trail static,{>=512}.
         let m = MachineSpec::nehalem();
-        let k = fixed_ctx(medium_crs(), Scheme::Crs);
+        let k = fixed_handle(medium_crs(), Scheme::Crs);
         let tiny = mflops(&m, &k, Schedule::Static { chunk: Some(16) });
         let page = mflops(&m, &k, Schedule::Static { chunk: Some(4096) });
         assert!(

@@ -19,19 +19,22 @@ use crate::gen::{self, HolsteinHubbardParams};
 use crate::matrix::{Coo, Crs, Scheme};
 use crate::sched::Schedule;
 use crate::simulator::MachineSpec;
-use crate::tune::{SpmvContext, TuningPolicy};
+use crate::spmv::{BackendChoice, SpmvHandle};
+use crate::tune::TuningPolicy;
 use crate::util::report::Table;
 
-/// A fixed-policy, single-thread context for one scheme — the shared
-/// starting point of the fig 8/9 sweeps, which re-plan it per data point
-/// via [`SpmvContext::replanned`] (the kernel is shared, nothing is
-/// re-tuned).
-pub(crate) fn fixed_ctx(crs: &Crs, scheme: Scheme) -> SpmvContext {
-    SpmvContext::builder_from_crs(crs)
+/// A fixed-policy, single-thread native handle for one scheme — the
+/// shared starting point of the fig 8/9 sweeps, which re-plan it per
+/// data point via [`SpmvHandle::replanned`] (the kernel is shared,
+/// nothing is re-tuned). The native backend is forced because these
+/// drivers feed the handle's plan to the simulator.
+pub(crate) fn fixed_handle(crs: &Crs, scheme: Scheme) -> SpmvHandle {
+    SpmvHandle::builder_from_crs(crs)
         .policy(TuningPolicy::Fixed(scheme, Schedule::Static { chunk: None }))
+        .backend(BackendChoice::Native)
         .threads(1)
         .build()
-        .expect("fixed-policy context on a square matrix cannot fail")
+        .expect("fixed-policy native handle on a square matrix cannot fail")
 }
 
 /// Options shared by all experiment drivers.

@@ -17,11 +17,16 @@
 //!   workers pinned to cores, workspace pages first-touched by their
 //!   owners, and [`engine::SpmvPlan::rebalance`] re-homing them when the
 //!   schedule changes;
-//! - an **auto-tuning layer** ([`tune`]): [`tune::SpmvContext`] bundles
-//!   kernel + plan + engine behind one builder API, with a
-//!   [`tune::TuningPolicy`] that picks scheme, SELL (C, σ) and schedule
-//!   per matrix (fixed / fingerprint-heuristic / measured bake-off) and a
+//! - an **auto-tuning layer** ([`tune`]): a [`tune::TuningPolicy`] that
+//!   picks scheme, SELL (C, σ) and schedule per matrix (fixed /
+//!   fingerprint-heuristic / measured bake-off) and a
 //!   [`tune::TuningReport`] explaining the decision;
+//! - the **execution facade** ([`spmv`]): one [`spmv::SpmvHandle`] built
+//!   by [`spmv::SpmvBuilder`], fronting the object-safe
+//!   [`spmv::Backend`] trait whose impls are the serial kernel, the
+//!   native parallel engine and the sharded executor — with a
+//!   backend-arbitration tier ([`tune::BackendDecision`]) that picks the
+//!   executor per matrix the same way the tuner picks the scheme;
 //! - the paper's test matrix — a real Holstein-Hubbard Hamiltonian
 //!   generator — plus auxiliary generators ([`gen`]);
 //! - the microbenchmark kernels of Table 1 ([`kernels`]);
@@ -38,8 +43,8 @@
 //!   shard backed by its own pinned engine and first-touched buffers;
 //! - a PJRT runtime that loads the AOT-compiled JAX/Pallas SpMV artifacts
 //!   and a coordinator serving batched SpMV requests ([`runtime`],
-//!   [`coordinator`]), including a sharded executor
-//!   ([`coordinator::ShardedExecutor`]);
+//!   [`coordinator`]) through one backend-agnostic
+//!   [`coordinator::Executor`] over [`spmv::SpmvHandle`];
 //! - experiment drivers regenerating every figure of the paper's
 //!   evaluation ([`experiments`]).
 //!
@@ -65,5 +70,6 @@ pub mod runtime;
 pub mod sched;
 pub mod shard;
 pub mod simulator;
+pub mod spmv;
 pub mod tune;
 pub mod util;

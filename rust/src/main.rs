@@ -7,9 +7,12 @@
 //!                     [--threads-per-socket T] [--sockets S] [--schedule static|dynamic,C]
 //! spmvperf predict    [--machine nehalem] — perf-model prediction per scheme
 //! spmvperf tune       [--policy heuristic|measured|fixed] [--threads T] [--pin|--no-pin]
-//!                     [--machine nehalem] [--quick] — auto-tuned SpmvContext + report
+//!                     [--backend auto|serial|native|sharded] [--matrix FILE.mtx]
+//!                     [--cv-threshold X] [--machine nehalem] [--quick]
+//!                     — tuned SpmvHandle: scheme/schedule/placement/backend report
 //! spmvperf lanczos    [--sites 6 --electrons 3 --max-phonons 4] [--eigenvalues 1]
 //!                     [--threads T] [--pin|--no-pin] [--scheme auto|crs|sellcs:32:256|...]
+//!                     [--backend auto|serial|native|sharded]
 //! spmvperf shard      [--shards 1,2,4,8] [--mode bulk|overlap] [--threads T]
 //!                     [--scheme crs|sellcs:32:256] [--pin|--no-pin]
 //!                     [--policy heuristic|measured] [--quick|--full]
@@ -31,9 +34,10 @@ use spmvperf::matrix::{Crs, EllMatrix, Scheme, SpMv};
 use spmvperf::perfmodel::{predict, CostCurve};
 use spmvperf::runtime::{default_artifacts_dir, Runtime};
 use spmvperf::sched::Schedule;
-use spmvperf::shard::{OverlapMode, ShardedSpmv};
+use spmvperf::shard::OverlapMode;
 use spmvperf::simulator::{simulate_spmv, MachineSpec, Placement, SimOptions};
-use spmvperf::tune::{ShardPolicy, SpmvContext, TuningPolicy};
+use spmvperf::spmv::{BackendChoice, SpmvHandle};
+use spmvperf::tune::{ShardPolicy, TuningPolicy};
 use spmvperf::util::cli::Args;
 use spmvperf::util::report::{f, Table};
 
@@ -76,10 +80,11 @@ USAGE:
   spmvperf predict    [--machine nehalem] [--block 1000]
   spmvperf tune       [--policy heuristic|measured|fixed] [--scheme sellcs:32:256]
                       [--schedule static] [--threads 4] [--machine nehalem]
-                      [--pin|--no-pin] [--quick|--full]
+                      [--backend auto|serial|native|sharded] [--matrix FILE.mtx]
+                      [--cv-threshold X] [--pin|--no-pin] [--quick|--full]
   spmvperf lanczos    [--sites 6 --electrons 3 --max-phonons 4 --eigenvalues 1]
                       [--threads T] [--pin|--no-pin] [--scheme auto|crs|sellcs:32:256]
-                      [--quick]
+                      [--backend auto|serial|native|sharded] [--quick]
   spmvperf shard      [--shards 1,2,4,8] [--mode bulk|overlap] [--threads 1]
                       [--scheme crs|sellcs:32:256] [--pin|--no-pin]
                       [--policy heuristic|measured] [--quick|--full]
@@ -202,18 +207,25 @@ fn cmd_predict(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// `spmvperf tune` — run a tuning policy on the test matrix, print the
-/// decision + candidate scoreboard, and spot-check the tuned context
-/// against the serial CRS reference.
+/// `spmvperf tune` — run a tuning policy on the test matrix (or an
+/// external MatrixMarket file via `--matrix`), print the decision +
+/// candidate scoreboards — scheme, placement, shard AND backend — and
+/// spot-check the tuned handle against the serial CRS reference.
 fn cmd_tune(args: &Args) -> Result<()> {
     let quick = args.flag("quick");
     let full = args.flag("full");
     let pin = pin_flag(args)?;
     let policy_name = args.get_str("policy", "heuristic");
+    let backend = BackendChoice::parse(&args.get_str("backend", "auto"))?;
     let threads = args.get_usize("threads", 4)?.max(1);
     let machine_arg = args.get("machine").map(str::to_string);
     let scheme_arg = args.get("scheme").map(str::to_string);
     let schedule_arg = args.get("schedule").map(str::to_string);
+    let matrix_arg = args.get("matrix").map(str::to_string);
+    let cv_threshold = match args.get("cv-threshold") {
+        Some(_) => Some(args.get_f64("cv-threshold", 0.0)?),
+        None => None,
+    };
     args.finish()?;
     // Each flag belongs to one tier; reject combinations that would be
     // silently ignored: --scheme/--schedule feed only the fixed policy,
@@ -243,6 +255,11 @@ fn cmd_tune(args: &Args) -> Result<()> {
                 machine_arg.is_none(),
                 "--machine only applies to --policy heuristic (fixed does no tuning)"
             );
+            anyhow::ensure!(
+                cv_threshold.is_none(),
+                "--cv-threshold only applies to --policy heuristic|measured (fixed names \
+                 the schedule itself)"
+            );
             TuningPolicy::Fixed(
                 Scheme::parse(scheme_arg.as_deref().unwrap_or("sellcs:32:256"))?,
                 Schedule::parse(schedule_arg.as_deref().unwrap_or("static"))?,
@@ -252,26 +269,46 @@ fn cmd_tune(args: &Args) -> Result<()> {
     };
     let machine = MachineSpec::by_name(machine_arg.as_deref().unwrap_or("nehalem"))?;
     let opts = ExpOptions { full, quick, ..Default::default() };
-    let coo = opts.test_matrix();
+    // `--matrix FILE.mtx` tunes (and arbitrates) an external matrix
+    // instead of the built-in Hamiltonian.
+    let (coo, matrix_name) = match &matrix_arg {
+        Some(path) => (
+            spmvperf::matrix::io::read_matrix_market(std::path::Path::new(path))?,
+            path.clone(),
+        ),
+        None => (opts.test_matrix(), "Holstein-Hubbard test matrix".to_string()),
+    };
     eprintln!(
-        "tuning on the Holstein-Hubbard test matrix: N={} nnz={} ({} policy, {threads} threads)",
+        "tuning on {matrix_name}: N={} nnz={} ({} policy, {} backend, {threads} threads)",
         coo.nrows,
         coo.nnz(),
-        policy_name
+        policy_name,
+        backend.name()
     );
     let t0 = std::time::Instant::now();
-    let ctx = SpmvContext::builder(&coo)
+    let mut builder = SpmvHandle::builder(&coo)
         .policy(policy)
+        .backend(backend)
         .threads(threads)
         .machine(machine)
         .quick(quick)
-        .pinned(pin)
-        .build()?;
+        .pinned(pin);
+    if let Some(cv) = cv_threshold {
+        builder = builder.schedule_cv_threshold(cv);
+    }
+    let handle = builder.build()?;
     let tune_time = t0.elapsed();
-    for t in ctx.report().tables() {
+    for t in handle.report().tables() {
         t.print();
     }
-    // Spot-check the tuned context against the serial CRS reference.
+    let decision = handle.backend_decision().expect("the builder records a decision");
+    eprintln!(
+        "backend: {} ({} arbitration, {} candidate(s))",
+        decision.backend,
+        decision.policy,
+        decision.candidates.len()
+    );
+    // Spot-check the tuned handle against the serial CRS reference.
     let crs = Crs::from_coo(&coo);
     let n = crs.nrows;
     let mut rng = spmvperf::util::rng::Rng::new(5);
@@ -280,25 +317,27 @@ fn cmd_tune(args: &Args) -> Result<()> {
     let mut y_ref = vec![0.0; n];
     crs.spmv(&x, &mut y_ref);
     let mut y = vec![0.0; n];
-    ctx.spmv(&x, &mut y);
+    handle.spmv(&x, &mut y);
     let err = spmvperf::util::stats::max_abs_diff(&y_ref, &y);
-    anyhow::ensure!(err < 1e-12, "tuned context deviates from serial CRS by {err:.2e}");
+    anyhow::ensure!(err < 1e-12, "tuned handle deviates from serial CRS by {err:.2e}");
     // Quick throughput sample of the tuned pick, through the serving
-    // path so a pinned context's first-touched workspace is what is
+    // path so a pinned handle's first-touched workspace is what is
     // actually exercised.
     let reps = if quick { 5 } else { 20 };
     let t0 = std::time::Instant::now();
     for _ in 0..reps {
-        ctx.spmv(&x, &mut y);
+        handle.spmv(&x, &mut y);
         std::hint::black_box(y[0]);
     }
     let dt = t0.elapsed().as_secs_f64() / reps as f64;
-    let mut t = Table::new("tuned context", &["metric", "value"]);
+    let mut t = Table::new("tuned handle", &["metric", "value"]);
+    t.row(vec!["matrix".into(), matrix_name]);
+    t.row(vec!["backend".into(), handle.backend_name().into()]);
     t.row(vec!["tuning wall time (ms)".into(), f(tune_time.as_secs_f64() * 1e3)]);
     t.row(vec!["max |err| vs serial CRS".into(), format!("{err:.2e}")]);
     t.row(vec![
         "tuned SpMV throughput (MFlop/s)".into(),
-        f(2.0 * ctx.kernel().nnz() as f64 / dt / 1e6),
+        f(2.0 * SpMv::nnz(&handle) as f64 / dt / 1e6),
     ]);
     t.print();
     Ok(())
@@ -321,40 +360,53 @@ fn cmd_lanczos(args: &Args) -> Result<()> {
     let threads = args.get_usize("threads", 1)?.max(1);
     let pin = pin_flag(args)?;
     let scheme_arg = args.get_str("scheme", "crs");
+    let backend = BackendChoice::parse(&args.get_str("backend", "auto"))?;
     let quick = args.flag("quick");
     args.finish()?;
     eprintln!("building Holstein-Hubbard Hamiltonian: dim = {}", p.dimension());
     let h = gen::holstein_hubbard(&p);
     let crs = Crs::from_coo(&h);
     let cfg = LanczosConfig { max_iters: iters, ..Default::default() };
-    // Hot loop through a tuned SpmvContext for any thread count — a
-    // 1-thread engine runs inline, so the chosen scheme is always
-    // honored. `--scheme auto` hands the choice to the tuning layer.
+    // Hot loop through a tuned SpmvHandle: the solver never names a
+    // backend — arbitration (or `--backend`) binds one. `--scheme auto`
+    // additionally hands the scheme choice to the tuning layer. A fixed
+    // scheme keeps the backend tier on its zero-probing default unless
+    // `--backend` says otherwise.
     let policy = if scheme_arg == "auto" {
         TuningPolicy::Heuristic
     } else {
         TuningPolicy::Fixed(Scheme::parse(&scheme_arg)?, Schedule::Static { chunk: None })
     };
-    let ctx = SpmvContext::builder_from_crs(&crs)
+    let handle = SpmvHandle::builder_from_crs(&crs)
         .policy(policy)
+        .backend(backend)
         .threads(threads)
         .quick(quick)
         .pinned(pin)
         .build()?;
     if pin {
-        eprintln!("placement: {}", ctx.report().placement.summary());
+        eprintln!("placement: {}", handle.report().placement.summary());
     }
     if scheme_arg == "auto" {
-        eprintln!("auto-tuned scheme: {} ({})", ctx.scheme().name(), ctx.schedule().name());
-        for t in ctx.report().tables() {
+        eprintln!(
+            "auto-tuned: {} ({}) on the {} backend",
+            handle.scheme().name(),
+            handle.schedule().name(),
+            handle.backend_name()
+        );
+        for t in handle.report().tables() {
             t.print();
         }
     }
     let t0 = std::time::Instant::now();
-    let r = spmvperf::eigen::lanczos_with_context(&ctx, n_eigs, &cfg);
+    let r = spmvperf::eigen::lanczos_with_handle(&handle, n_eigs, &cfg);
     let dt = t0.elapsed();
     let mut t = Table::new(
-        &format!("Lanczos ground state ({} SpMV, {threads} thread(s))", ctx.scheme().name()),
+        &format!(
+            "Lanczos ground state ({} SpMV on {} backend, {threads} thread(s))",
+            handle.scheme().name(),
+            handle.backend_name()
+        ),
         &["metric", "value"],
     );
     for (i, e) in r.eigenvalues.iter().enumerate() {
@@ -376,8 +428,10 @@ fn cmd_lanczos(args: &Args) -> Result<()> {
 /// counts × overlap modes on the Holstein-Hubbard test matrix, each
 /// configuration self-validated against the serial CRS kernel before it
 /// is timed (the shards-as-domains replay of arXiv:1106.5908's vector-
-/// vs task-mode comparison). `--policy heuristic|measured` additionally
-/// runs the shard tuning tier and prints its decision.
+/// vs task-mode comparison). Every configuration is a forced-sharded
+/// [`SpmvHandle`] — the CLI never names the executor type. `--policy
+/// heuristic|measured` additionally runs the shard tuning tier and
+/// prints its decision.
 fn cmd_shard(args: &Args) -> Result<()> {
     let quick = args.flag("quick");
     let full = args.flag("full");
@@ -423,20 +477,17 @@ fn cmd_shard(args: &Args) -> Result<()> {
     let mut base = 0.0f64;
     let mut y = vec![0.0; n];
     for &s in &shards_list {
-        let mut sh = ShardedSpmv::new(
-            crs.clone(),
-            scheme,
-            Schedule::Static { chunk: None },
-            s,
-            threads,
-            OverlapMode::BulkSync,
-            pin,
-        )?;
         for &mode in &modes {
-            sh.set_mode(mode);
+            let handle = SpmvHandle::builder_from_crs(&crs)
+                .policy(TuningPolicy::Fixed(scheme, Schedule::Static { chunk: None }))
+                .backend(BackendChoice::Sharded)
+                .shard_policy(ShardPolicy::Fixed { shards: s, mode })
+                .threads(threads)
+                .pinned(pin)
+                .build()?;
             // Self-validate before timing: sharding must never change
             // the math.
-            sh.spmv(&x, &mut y);
+            handle.spmv(&x, &mut y);
             let err = spmvperf::util::stats::max_abs_diff(&y_ref, &y);
             anyhow::ensure!(
                 err == 0.0,
@@ -445,7 +496,7 @@ fn cmd_shard(args: &Args) -> Result<()> {
             );
             let t0 = std::time::Instant::now();
             for _ in 0..reps {
-                sh.spmv(&x, &mut y);
+                handle.spmv(&x, &mut y);
                 std::hint::black_box(y[0]);
             }
             let dt = t0.elapsed().as_secs_f64() / reps as f64;
@@ -453,11 +504,16 @@ fn cmd_shard(args: &Args) -> Result<()> {
             if base == 0.0 {
                 base = mflops;
             }
+            let sd = handle
+                .report()
+                .shard
+                .as_ref()
+                .context("sharded handle records a shard decision")?;
             t.row(vec![
                 s.to_string(),
                 mode.name().into(),
-                f(sh.halo_fraction()),
-                f(sh.boundary_nnz_fraction()),
+                f(sd.halo_fraction),
+                f(sd.boundary_nnz_fraction),
                 f(mflops),
                 f(mflops / base),
             ]);
@@ -470,24 +526,25 @@ fn cmd_shard(args: &Args) -> Result<()> {
             "measured" => ShardPolicy::Measured,
             other => bail!("unknown shard policy '{other}' (expected heuristic|measured)"),
         };
-        let ctx = SpmvContext::builder_from_crs(&crs)
+        let handle = SpmvHandle::builder_from_crs(&crs)
             .policy(TuningPolicy::Fixed(scheme, Schedule::Static { chunk: None }))
+            .backend(BackendChoice::Sharded)
+            .shard_policy(shard_policy)
             .threads(threads)
             .quick(quick)
             .pinned(pin)
-            .sharded(shard_policy)
-            .build_sharded()?;
-        for table in ctx.report().tables() {
+            .build()?;
+        for table in handle.report().tables() {
             table.print();
         }
         let mut yp = vec![0.0; n];
-        ctx.spmv(&x, &mut yp);
+        handle.spmv(&x, &mut yp);
         let err = spmvperf::util::stats::max_abs_diff(&y_ref, &yp);
-        anyhow::ensure!(err == 0.0, "tuned sharded context deviates by {err:.2e}");
+        anyhow::ensure!(err == 0.0, "tuned sharded handle deviates by {err:.2e}");
         eprintln!(
             "tuned: {} shard(s), {} mode — bit-identical to serial CRS",
-            ctx.n_shards(),
-            ctx.mode().name()
+            handle.n_shards(),
+            handle.mode().map(|m| m.name()).unwrap_or("?")
         );
     }
     Ok(())

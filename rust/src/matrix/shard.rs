@@ -41,8 +41,9 @@
 use super::{Crs, SpMv};
 
 /// A CRS matrix row-partitioned into shards with per-shard local/remote
-/// halves and halo index maps. Pure storage: execution lives in
-/// [`crate::shard::ShardedSpmv`].
+/// halves and halo index maps. Pure storage: execution lives in the
+/// [`crate::shard`] module, behind the sharded backend of a
+/// [`crate::spmv::SpmvHandle`].
 #[derive(Debug, Clone)]
 pub struct ShardedCrs {
     pub nrows: usize,

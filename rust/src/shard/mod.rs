@@ -112,9 +112,11 @@ struct ShardBufs {
 }
 
 /// Shard-parallel SpMV executor; see the module docs. Build via
-/// [`ShardedSpmv::new`] or, tuned, via
-/// [`crate::tune::SpmvContextBuilder::build_sharded`].
-pub struct ShardedSpmv {
+/// [`ShardedSpmv::new`] or, tuned, via the facade
+/// ([`crate::spmv::SpmvBuilder`] with a sharded backend).
+/// Crate-internal since the facade PR: consumers hold an
+/// [`crate::spmv::SpmvHandle`], never this type.
+pub(crate) struct ShardedSpmv {
     crs: Arc<Crs>,
     scheme: Scheme,
     schedule: Schedule,
@@ -270,12 +272,6 @@ impl ShardedSpmv {
 
     pub fn mode(&self) -> OverlapMode {
         self.mode
-    }
-
-    /// Switch overlap mode in place — the modes share every kernel,
-    /// plan and buffer, so this is free (benches toggle it per config).
-    pub fn set_mode(&mut self, mode: OverlapMode) {
-        self.mode = mode;
     }
 
     pub fn scheme(&self) -> Scheme {
@@ -586,19 +582,18 @@ mod tests {
         for n_shards in [1usize, 2, 4, 8] {
             for scheme in [Scheme::Crs, Scheme::SellCs { c: 8, sigma: 32 }] {
                 for pinned in [false, true] {
-                    let mut sh = ShardedSpmv::new(
-                        crs.clone(),
-                        scheme,
-                        Schedule::Static { chunk: None },
-                        n_shards,
-                        2,
-                        OverlapMode::BulkSync,
-                        pinned,
-                    )
-                    .unwrap();
-                    assert_eq!(sh.first_touched(), pinned);
                     for mode in modes() {
-                        sh.set_mode(mode);
+                        let sh = ShardedSpmv::new(
+                            crs.clone(),
+                            scheme,
+                            Schedule::Static { chunk: None },
+                            n_shards,
+                            2,
+                            mode,
+                            pinned,
+                        )
+                        .unwrap();
+                        assert_eq!(sh.first_touched(), pinned);
                         let mut got = vec![0.0; n];
                         sh.spmv(&x, &mut got);
                         assert_eq!(

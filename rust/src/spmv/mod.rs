@@ -1,0 +1,1372 @@
+//! The one public execution surface of the crate: [`SpmvHandle`], an
+//! executor-agnostic SpMV facade built by [`SpmvBuilder`].
+//!
+//! The paper's central lesson is that the best SpMV strategy is a
+//! property of the matrix × machine pair, not a user choice. The tuning
+//! layer made scheme × (C, σ) × schedule automatic; this module extends
+//! the same principle one level up, to the **executor**: the serial
+//! kernel, the native parallel engine and the sharded halo-exchange
+//! executor are three implementations of one object-safe [`Backend`]
+//! trait, and the builder arbitrates between them per matrix — the way
+//! Kreutzer et al. (arXiv:1307.6209) unify storage behind one
+//! format-agnostic interface and Elafrou et al. (arXiv:1711.05487)
+//! select optimizations from a matrix feature fingerprint.
+//!
+//! ```text
+//! SpmvHandle::builder(&coo)
+//!     .policy(TuningPolicy::Heuristic)   // scheme × schedule tier
+//!     .backend(BackendChoice::Auto)      // executor arbitration tier (default)
+//!     .threads(4)
+//!     .build()?                          // -> SpmvHandle over Box<dyn Backend>
+//! ```
+//!
+//! Arbitration follows the [`TuningPolicy`] tier:
+//!
+//! - [`TuningPolicy::Fixed`]: no probing — the native engine serves
+//!   (force another backend with [`SpmvBuilder::backend`]);
+//! - [`TuningPolicy::Heuristic`]: serial vs native vs sharded scored
+//!   from the matrix fingerprints (halo volume / interior work of the
+//!   candidate partitions, row-imbalance CV) and
+//!   [`crate::perfmodel::predict`], plus rough per-call dispatch costs;
+//! - [`TuningPolicy::Measured`]: a cross-backend bake-off on the
+//!   existing timing machinery.
+//!
+//! The [`BackendDecision`] (candidates, scores, rationale) is recorded
+//! in the [`TuningReport`], so a handle can always explain which
+//! executor serves it and why. A future PJRT executor plugs in as just
+//! one more [`Backend`] impl behind [`SpmvHandle::from_backend`].
+
+use std::borrow::Cow;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::engine::SpmvPlan;
+use crate::kernels::SpmvKernel;
+use crate::matrix::shard::ShardedCrs;
+use crate::matrix::{Coo, Crs, Scheme, SpMv};
+use crate::perfmodel::predict;
+use crate::sched::Schedule;
+use crate::shard::OverlapMode;
+use crate::simulator::MachineSpec;
+use crate::tune::{
+    self, BackendCandidate, BackendDecision, PlacementDecision, ShardPolicy, ShardedContext,
+    SpmvContext, TuningPolicy, TuningReport, SHARD_GRID, SHARD_HALO_VIABLE_MAX,
+    SHARD_MIN_ROWS, SHARD_OVERLAP_MIN_INTERIOR,
+};
+use crate::util::rng::Rng;
+
+/// Rough cost of one fused engine dispatch (worker wakeup + completion
+/// latch), charged to the native candidate per SpMV call by the
+/// arbitration heuristic.
+const NATIVE_DISPATCH_NS: f64 = 20_000.0;
+
+/// Rough per-shard, per-call coordinator cost (scoped spawn + join +
+/// halo gate), charged to the sharded candidate per SpMV call. Sharding
+/// only pays once the per-nnz work amortizes this — the reason tiny
+/// matrices stay native or serial.
+const SHARD_DISPATCH_NS: f64 = 60_000.0;
+
+/// The object-safe executor seam: everything a consumer may do with a
+/// bound SpMV operator, independent of *how* it multiplies. Implemented
+/// by [`Serial`], [`Native`] and [`Sharded`]; a PJRT executor becomes
+/// one more impl once real bindings land (ROADMAP).
+pub trait Backend {
+    /// `"serial"`, `"native"` or `"sharded"`.
+    fn name(&self) -> &'static str;
+    fn nrows(&self) -> usize;
+    fn nnz(&self) -> usize;
+    fn scheme(&self) -> Scheme;
+    fn schedule(&self) -> Schedule;
+    fn n_threads(&self) -> usize;
+    /// Original-basis SpMV.
+    fn spmv(&self, x: &[f64], y: &mut [f64]);
+    /// Batched SpMV — one fused dispatch where the backend supports it.
+    fn spmv_batch(&self, xs: &[Vec<f64>]) -> Vec<Vec<f64>>;
+    /// Re-partition for a new schedule and re-home workspace buffers
+    /// (the §5.2 hazard); the serial backend records the no-op.
+    fn rebalance(&mut self, schedule: Schedule);
+    /// The tuning + arbitration decision trail.
+    fn report(&self) -> &TuningReport;
+    fn report_mut(&mut self) -> &mut TuningReport;
+    /// Was NUMA placement (pinning + first touch) deployed?
+    fn pinned(&self) -> bool {
+        false
+    }
+    /// Shard count (1 for unsharded backends).
+    fn n_shards(&self) -> usize {
+        1
+    }
+    /// Overlap mode, for backends that shard.
+    fn mode(&self) -> Option<OverlapMode> {
+        None
+    }
+    /// The realized storage kernel, for backends that own exactly one.
+    fn kernel(&self) -> Option<&SpmvKernel> {
+        None
+    }
+    /// The scheduling plan, for backends that own exactly one (feeds
+    /// [`crate::simulator::simulate_spmv_plan`]).
+    fn plan(&self) -> Option<&SpmvPlan> {
+        None
+    }
+    /// Permuted-basis hot path (no gather/scatter, no allocation).
+    fn spmv_permuted(&self, _xp: &[f64], _yp: &mut [f64]) -> Result<()> {
+        anyhow::bail!("the {} backend has no permuted-basis path", self.name())
+    }
+    /// Fork a sibling on a new schedule / thread count sharing storage.
+    fn replanned(&self, _schedule: Schedule, _n_threads: usize) -> Result<Box<dyn Backend>> {
+        anyhow::bail!("the {} backend cannot be replanned", self.name())
+    }
+    /// Re-shard onto a new shard count / overlap mode, re-homing halo
+    /// buffers on the new owners.
+    fn reshard(&mut self, _n_shards: usize, _mode: OverlapMode) -> Result<()> {
+        anyhow::bail!("the {} backend has no shards", self.name())
+    }
+}
+
+/// Serial backend: the chosen scheme's kernel executed inline on the
+/// calling thread — no plan, no engine, no dispatch cost. Wins on
+/// matrices small enough that one parallel dispatch costs more than the
+/// whole multiply.
+pub struct Serial {
+    kernel: Arc<SpmvKernel>,
+    report: TuningReport,
+}
+
+impl Backend for Serial {
+    fn name(&self) -> &'static str {
+        "serial"
+    }
+    fn nrows(&self) -> usize {
+        self.kernel.nrows()
+    }
+    fn nnz(&self) -> usize {
+        self.kernel.nnz()
+    }
+    fn scheme(&self) -> Scheme {
+        self.kernel.scheme()
+    }
+    fn schedule(&self) -> Schedule {
+        self.report.schedule
+    }
+    fn n_threads(&self) -> usize {
+        1
+    }
+    fn spmv(&self, x: &[f64], y: &mut [f64]) {
+        self.kernel.spmv(x, y);
+    }
+    fn spmv_batch(&self, xs: &[Vec<f64>]) -> Vec<Vec<f64>> {
+        xs.iter()
+            .map(|x| {
+                let mut y = vec![0.0; self.kernel.nrows()];
+                self.kernel.spmv(x, &mut y);
+                y
+            })
+            .collect()
+    }
+    fn rebalance(&mut self, schedule: Schedule) {
+        self.report.rationale.push(format!(
+            "serial backend: rebalance({}) is a no-op (no partitions to re-home)",
+            schedule.name()
+        ));
+    }
+    fn report(&self) -> &TuningReport {
+        &self.report
+    }
+    fn report_mut(&mut self) -> &mut TuningReport {
+        &mut self.report
+    }
+    fn kernel(&self) -> Option<&SpmvKernel> {
+        Some(&self.kernel)
+    }
+}
+
+/// Native backend: the tuned kernel + plan + engine bundle
+/// (`tune::SpmvContext` internals) behind the facade seam.
+pub struct Native {
+    ctx: SpmvContext,
+}
+
+impl Backend for Native {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+    fn nrows(&self) -> usize {
+        SpMv::nrows(&self.ctx)
+    }
+    fn nnz(&self) -> usize {
+        SpMv::nnz(&self.ctx)
+    }
+    fn scheme(&self) -> Scheme {
+        self.ctx.scheme()
+    }
+    fn schedule(&self) -> Schedule {
+        self.ctx.schedule()
+    }
+    fn n_threads(&self) -> usize {
+        self.ctx.n_threads()
+    }
+    fn spmv(&self, x: &[f64], y: &mut [f64]) {
+        self.ctx.spmv(x, y);
+    }
+    fn spmv_batch(&self, xs: &[Vec<f64>]) -> Vec<Vec<f64>> {
+        self.ctx.spmv_batch(xs)
+    }
+    fn rebalance(&mut self, schedule: Schedule) {
+        self.ctx.rebalance(schedule);
+    }
+    fn report(&self) -> &TuningReport {
+        self.ctx.report()
+    }
+    fn report_mut(&mut self) -> &mut TuningReport {
+        self.ctx.report_mut()
+    }
+    fn pinned(&self) -> bool {
+        self.ctx.pinned()
+    }
+    fn kernel(&self) -> Option<&SpmvKernel> {
+        Some(self.ctx.kernel())
+    }
+    fn plan(&self) -> Option<&SpmvPlan> {
+        Some(self.ctx.plan())
+    }
+    fn spmv_permuted(&self, xp: &[f64], yp: &mut [f64]) -> Result<()> {
+        self.ctx.spmv_permuted(xp, yp);
+        Ok(())
+    }
+    fn replanned(&self, schedule: Schedule, n_threads: usize) -> Result<Box<dyn Backend>> {
+        Ok(Box::new(Native { ctx: self.ctx.replanned(schedule, n_threads) }))
+    }
+}
+
+/// Sharded backend: the in-process distributed executor
+/// (`shard::ShardedSpmv` behind a tuned `ShardedContext`) — halo
+/// exchange, compute/exchange overlap, per-shard pinned engines.
+pub struct Sharded {
+    ctx: ShardedContext,
+}
+
+impl Backend for Sharded {
+    fn name(&self) -> &'static str {
+        "sharded"
+    }
+    fn nrows(&self) -> usize {
+        SpMv::nrows(&self.ctx)
+    }
+    fn nnz(&self) -> usize {
+        SpMv::nnz(&self.ctx)
+    }
+    fn scheme(&self) -> Scheme {
+        self.ctx.scheme()
+    }
+    fn schedule(&self) -> Schedule {
+        self.ctx.schedule()
+    }
+    fn n_threads(&self) -> usize {
+        self.ctx.sharded().threads_per_shard()
+    }
+    fn spmv(&self, x: &[f64], y: &mut [f64]) {
+        self.ctx.spmv(x, y);
+    }
+    fn spmv_batch(&self, xs: &[Vec<f64>]) -> Vec<Vec<f64>> {
+        self.ctx.spmv_batch(xs)
+    }
+    fn rebalance(&mut self, schedule: Schedule) {
+        self.ctx.rebalance(schedule);
+    }
+    fn report(&self) -> &TuningReport {
+        self.ctx.report()
+    }
+    fn report_mut(&mut self) -> &mut TuningReport {
+        self.ctx.report_mut()
+    }
+    fn pinned(&self) -> bool {
+        self.ctx.sharded().pinned()
+    }
+    fn n_shards(&self) -> usize {
+        self.ctx.n_shards()
+    }
+    fn mode(&self) -> Option<OverlapMode> {
+        Some(self.ctx.mode())
+    }
+    fn reshard(&mut self, n_shards: usize, mode: OverlapMode) -> Result<()> {
+        self.ctx.reshard(n_shards, mode)
+    }
+}
+
+/// Which executor the builder binds. `Auto` (the default) arbitrates
+/// per matrix; the other variants force one backend — the escape hatch
+/// benches use to compare the auto pick against each executor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendChoice {
+    Auto,
+    Serial,
+    Native,
+    Sharded,
+}
+
+impl BackendChoice {
+    pub fn name(&self) -> &'static str {
+        match self {
+            BackendChoice::Auto => "auto",
+            BackendChoice::Serial => "serial",
+            BackendChoice::Native => "native",
+            BackendChoice::Sharded => "sharded",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "auto" => Ok(BackendChoice::Auto),
+            "serial" => Ok(BackendChoice::Serial),
+            "native" => Ok(BackendChoice::Native),
+            "sharded" => Ok(BackendChoice::Sharded),
+            other => anyhow::bail!("unknown backend '{other}' (auto|serial|native|sharded)"),
+        }
+    }
+}
+
+/// An executor-agnostic, tuned SpMV operator — the crate's one public
+/// execution surface. Obtain via [`SpmvHandle::builder`]; solvers, the
+/// coordinator service, experiments, benches and the CLI all consume
+/// this type, never a concrete backend.
+pub struct SpmvHandle {
+    backend: Box<dyn Backend>,
+}
+
+impl SpmvHandle {
+    /// Start a builder from an assembled COO matrix.
+    pub fn builder(coo: &Coo) -> SpmvBuilder<'static> {
+        SpmvBuilder::from_cow(Cow::Owned(Crs::from_coo(coo)))
+    }
+
+    /// Start a builder that borrows an already-compressed CRS matrix —
+    /// no conversion and no clone; tuning only reads it.
+    pub fn builder_from_crs(crs: &Crs) -> SpmvBuilder<'_> {
+        SpmvBuilder::from_cow(Cow::Borrowed(crs))
+    }
+
+    /// Wrap an externally built backend — the seam a PJRT executor (or
+    /// any other [`Backend`] impl) plugs into.
+    pub fn from_backend(backend: Box<dyn Backend>) -> Self {
+        SpmvHandle { backend }
+    }
+
+    /// The serving backend's name (`"serial"`, `"native"`, `"sharded"`).
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    /// The arbitration decision, when the builder recorded one.
+    pub fn backend_decision(&self) -> Option<&BackendDecision> {
+        self.report().backend.as_ref()
+    }
+
+    pub fn report(&self) -> &TuningReport {
+        self.backend.report()
+    }
+
+    pub fn scheme(&self) -> Scheme {
+        self.backend.scheme()
+    }
+
+    pub fn schedule(&self) -> Schedule {
+        self.backend.schedule()
+    }
+
+    pub fn n_threads(&self) -> usize {
+        self.backend.n_threads()
+    }
+
+    /// Was NUMA placement (pinning + first touch) deployed?
+    pub fn pinned(&self) -> bool {
+        self.backend.pinned()
+    }
+
+    /// Shard count (1 for unsharded backends).
+    pub fn n_shards(&self) -> usize {
+        self.backend.n_shards()
+    }
+
+    /// Overlap mode, for the sharded backend.
+    pub fn mode(&self) -> Option<OverlapMode> {
+        self.backend.mode()
+    }
+
+    /// Original-basis SpMV through the bound executor.
+    pub fn spmv(&self, x: &[f64], y: &mut [f64]) {
+        self.backend.spmv(x, y);
+    }
+
+    /// Batched SpMV — one fused dispatch where the backend supports it;
+    /// each result is bit-identical to the per-vector [`Self::spmv`].
+    pub fn spmv_batch(&self, xs: &[Vec<f64>]) -> Vec<Vec<f64>> {
+        self.backend.spmv_batch(xs)
+    }
+
+    /// Permuted-basis hot path, where the backend has one (serial and
+    /// sharded backends do not — they error).
+    pub fn spmv_permuted(&self, xp: &[f64], yp: &mut [f64]) -> Result<()> {
+        self.backend.spmv_permuted(xp, yp)
+    }
+
+    /// Re-partition for a new schedule in place, re-homing workspace
+    /// buffers (§5.2) — a no-op recorded in the report for serial.
+    pub fn rebalance(&mut self, schedule: Schedule) {
+        self.backend.rebalance(schedule);
+    }
+
+    /// Fork a sibling handle on a new schedule / thread count sharing
+    /// the tuned storage (native backend only).
+    pub fn replanned(&self, schedule: Schedule, n_threads: usize) -> Result<SpmvHandle> {
+        Ok(SpmvHandle { backend: self.backend.replanned(schedule, n_threads)? })
+    }
+
+    /// Re-shard onto a new shard count / overlap mode (sharded backend
+    /// only).
+    pub fn reshard(&mut self, n_shards: usize, mode: OverlapMode) -> Result<()> {
+        self.backend.reshard(n_shards, mode)
+    }
+
+    /// The realized storage kernel, for backends that own exactly one
+    /// (serial, native).
+    pub fn kernel(&self) -> Option<&SpmvKernel> {
+        self.backend.kernel()
+    }
+
+    /// The scheduling plan (native backend) — hand it to
+    /// [`crate::simulator::simulate_spmv_plan`] to evaluate the tuned
+    /// decision on the paper's machine models.
+    pub fn plan(&self) -> Option<&SpmvPlan> {
+        self.backend.plan()
+    }
+}
+
+/// A handle is itself an [`SpMv`] operator (and therefore a
+/// [`crate::eigen::LinearOp`] via the blanket impl), so solvers run
+/// their hot loop through whatever backend arbitration bound.
+impl SpMv for SpmvHandle {
+    fn nrows(&self) -> usize {
+        self.backend.nrows()
+    }
+    fn ncols(&self) -> usize {
+        self.backend.nrows() // builders reject non-square matrices
+    }
+    fn nnz(&self) -> usize {
+        self.backend.nnz()
+    }
+    fn spmv(&self, x: &[f64], y: &mut [f64]) {
+        SpmvHandle::spmv(self, x, y);
+    }
+}
+
+/// The one builder: scheme/schedule tuning knobs (forwarded to the
+/// tuning layer) plus the backend-arbitration tier. Absorbs the former
+/// `.sharded(..)` / `build_sharded()` split — sharding is just a
+/// backend now, and `build()` is the only terminal.
+pub struct SpmvBuilder<'a> {
+    crs: Cow<'a, Crs>,
+    policy: TuningPolicy,
+    backend: BackendChoice,
+    shard_policy: Option<ShardPolicy>,
+    threads: Option<usize>,
+    machine: MachineSpec,
+    quick: bool,
+    pinned: bool,
+    cv_threshold: Option<f64>,
+}
+
+impl<'a> SpmvBuilder<'a> {
+    fn from_cow(crs: Cow<'a, Crs>) -> Self {
+        SpmvBuilder {
+            crs,
+            policy: TuningPolicy::Heuristic,
+            backend: BackendChoice::Auto,
+            shard_policy: None,
+            threads: None,
+            machine: MachineSpec::nehalem(),
+            quick: false,
+            pinned: false,
+            cv_threshold: None,
+        }
+    }
+
+    /// Scheme/schedule tuning tier (default: [`TuningPolicy::Heuristic`]).
+    pub fn policy(mut self, policy: TuningPolicy) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    /// Executor choice (default: [`BackendChoice::Auto`] — arbitrate).
+    pub fn backend(mut self, backend: BackendChoice) -> Self {
+        self.backend = backend;
+        self
+    }
+
+    /// Shard tier shaping the sharded backend (candidate): shard count
+    /// and overlap mode come from this policy when the sharded backend
+    /// is forced or wins arbitration. Defaults to
+    /// [`ShardPolicy::Heuristic`].
+    pub fn shard_policy(mut self, policy: ShardPolicy) -> Self {
+        self.shard_policy = Some(policy);
+        self
+    }
+
+    /// Engine thread count (threads **per shard** for the sharded
+    /// backend). Defaults to host parallelism capped at 4.
+    pub fn threads(mut self, n: usize) -> Self {
+        self.threads = Some(n.max(1));
+        self
+    }
+
+    /// Machine model for the heuristic tiers' performance model.
+    pub fn machine(mut self, machine: MachineSpec) -> Self {
+        self.machine = machine;
+        self
+    }
+
+    /// Cheapen tuning and arbitration for smoke runs.
+    pub fn quick(mut self, quick: bool) -> Self {
+        self.quick = quick;
+        self
+    }
+
+    /// Request NUMA placement: pinned engine(s) + first-touched
+    /// workspace. Ignored (and recorded as such) by the serial backend.
+    pub fn pinned(mut self, pinned: bool) -> Self {
+        self.pinned = pinned;
+        self
+    }
+
+    /// Override the schedule heuristic's row-imbalance CV threshold
+    /// (defaults: [`tune::SCHEDULE_CV_THRESHOLD`] /
+    /// [`tune::SCHEDULE_CV_THRESHOLD_FIRST_TOUCH`]); the effective value
+    /// is recorded in the [`TuningReport`].
+    pub fn schedule_cv_threshold(mut self, threshold: f64) -> Self {
+        self.cv_threshold = Some(threshold);
+        self
+    }
+
+    /// Run the tuning policy, arbitrate (or force) the backend, and
+    /// bind the handle. Errors on non-square matrices and on a shard
+    /// policy combined with a non-sharded forced backend.
+    pub fn build(self) -> Result<SpmvHandle> {
+        let SpmvBuilder {
+            crs,
+            policy,
+            backend,
+            shard_policy,
+            threads,
+            machine,
+            quick,
+            pinned,
+            cv_threshold,
+        } = self;
+        let crs: &Crs = &crs;
+        anyhow::ensure!(
+            crs.nrows == crs.ncols,
+            "SpmvHandle requires a square matrix, got {}x{}",
+            crs.nrows,
+            crs.ncols
+        );
+        if shard_policy.is_some() {
+            anyhow::ensure!(
+                matches!(backend, BackendChoice::Auto | BackendChoice::Sharded),
+                "a shard policy only applies to the sharded or auto backend, not {}",
+                backend.name()
+            );
+        }
+        let cfg = BuildCfg {
+            crs,
+            policy,
+            shard_policy,
+            threads,
+            machine,
+            quick,
+            pinned,
+            cv_threshold,
+        };
+        let (mut backend_box, decision, rationale): (Box<dyn Backend>, _, _) = match backend {
+            BackendChoice::Serial => {
+                // The probe only donates its kernel: unpinned (no engine
+                // pool for a backend that will not use one) and at ONE
+                // thread, so a measured scheme bake-off times candidates
+                // the way they will actually serve — inline.
+                let ctx = cfg.native(false, Some(1))?;
+                (
+                    Box::new(serial_from_context(&ctx, cfg.pinned, " (forced)"))
+                        as Box<dyn Backend>,
+                    forced_decision("serial"),
+                    vec!["backend forced by caller: serial".into()],
+                )
+            }
+            BackendChoice::Native => (
+                Box::new(Native { ctx: cfg.native(cfg.pinned, cfg.threads)? })
+                    as Box<dyn Backend>,
+                forced_decision("native"),
+                vec!["backend forced by caller: native".into()],
+            ),
+            BackendChoice::Sharded => (
+                Box::new(Sharded { ctx: cfg.sharded()? }) as Box<dyn Backend>,
+                forced_decision("sharded"),
+                vec!["backend forced by caller: sharded".into()],
+            ),
+            BackendChoice::Auto => cfg.arbitrate()?,
+        };
+        let report = backend_box.report_mut();
+        report.rationale.extend(rationale);
+        report
+            .rationale
+            .push(format!("backend: {} ({} arbitration)", decision.backend, decision.policy));
+        report.backend = Some(decision);
+        Ok(SpmvHandle { backend: backend_box })
+    }
+}
+
+/// A trivial decision record for a caller-forced backend.
+fn forced_decision(backend: &'static str) -> BackendDecision {
+    BackendDecision {
+        policy: "forced".into(),
+        backend,
+        candidates: vec![BackendCandidate {
+            backend,
+            predicted_ns_per_call: None,
+            measured_ns_per_nnz: None,
+            chosen: true,
+        }],
+    }
+}
+
+/// Demote a tuned native context to the serial backend: the kernel is
+/// shared (nothing is rebuilt), the engine is discarded, and the report
+/// is corrected to the serial reality — no placement, no schedule
+/// (recorded as the static default), one thread. A caller's pinning
+/// request is recorded as ignored rather than silently erased.
+fn serial_from_context(ctx: &SpmvContext, pin_requested: bool, note: &str) -> Serial {
+    let mut report = ctx.report().clone();
+    report.n_threads = 1;
+    report.schedule = Schedule::Static { chunk: None };
+    report.placement = PlacementDecision { pin_requested: false, pin: None, first_touch: false };
+    if pin_requested {
+        report.rationale.push(
+            "serial backend ignores the pinning request (no engine threads to place)".into(),
+        );
+    }
+    report
+        .rationale
+        .push(format!("serial backend{note}: kernel executed inline, no engine, no schedule"));
+    Serial { kernel: ctx.kernel_arc(), report }
+}
+
+/// Resolved builder inputs shared by the per-backend build paths.
+struct BuildCfg<'a> {
+    crs: &'a Crs,
+    policy: TuningPolicy,
+    shard_policy: Option<ShardPolicy>,
+    threads: Option<usize>,
+    machine: MachineSpec,
+    quick: bool,
+    pinned: bool,
+    cv_threshold: Option<f64>,
+}
+
+impl BuildCfg<'_> {
+    /// Tuned native context (scheme × schedule via the tuning layer).
+    /// `threads` overrides the builder's thread count — the serial
+    /// backend probes at 1 thread so a measured bake-off times
+    /// candidates the way they will actually serve (inline).
+    fn native(&self, pinned: bool, threads: Option<usize>) -> Result<SpmvContext> {
+        let mut b = SpmvContext::builder_from_crs(self.crs)
+            .policy(self.policy)
+            .machine(self.machine.clone())
+            .quick(self.quick)
+            .pinned(pinned)
+            .schedule_cv_threshold(self.cv_threshold);
+        if let Some(t) = threads {
+            b = b.threads(t);
+        }
+        b.build()
+    }
+
+    /// Tuned sharded context: scheme and schedule from the tuning
+    /// policy, shard count and overlap mode from the shard tier.
+    fn sharded(&self) -> Result<ShardedContext> {
+        let mut b = SpmvContext::builder_from_crs(self.crs)
+            .policy(self.policy)
+            .machine(self.machine.clone())
+            .quick(self.quick)
+            .pinned(self.pinned)
+            .schedule_cv_threshold(self.cv_threshold)
+            .sharded(self.shard_policy.unwrap_or(ShardPolicy::Heuristic));
+        if let Some(t) = self.threads {
+            b = b.threads(t);
+        }
+        b.build_sharded()
+    }
+
+    /// Sharded context inheriting scheme and schedule from an
+    /// already-run tuning probe, carrying the probe's fingerprint and
+    /// candidate scoreboard over so the final report still documents the
+    /// scheme decision. The caller's shard policy wins; `default_policy`
+    /// applies otherwise (the arbitration's own partition pick).
+    fn sharded_from_probe(
+        &self,
+        probe: &SpmvContext,
+        default_policy: ShardPolicy,
+    ) -> Result<ShardedContext> {
+        let shard_policy = self.shard_policy.unwrap_or(default_policy);
+        let mut b = SpmvContext::builder_from_crs(self.crs)
+            .policy(TuningPolicy::Fixed(probe.scheme(), probe.schedule()))
+            .machine(self.machine.clone())
+            .quick(self.quick)
+            .pinned(self.pinned)
+            .schedule_cv_threshold(self.cv_threshold)
+            .sharded(shard_policy);
+        if let Some(t) = self.threads {
+            b = b.threads(t);
+        }
+        let mut ctx = b.build_sharded()?;
+        let pr = probe.report();
+        let r = ctx.report_mut();
+        r.policy = pr.policy.clone();
+        r.backward_fraction = pr.backward_fraction;
+        r.mean_abs_stride = pr.mean_abs_stride;
+        r.small_stride_fraction = pr.small_stride_fraction;
+        r.candidates = pr.candidates.clone();
+        r.rationale.push(format!(
+            "scheme/schedule inherited from the {} tuning probe",
+            pr.policy
+        ));
+        Ok(ctx)
+    }
+
+    /// Auto mode: resolve the backend per the [`TuningPolicy`] tier.
+    fn arbitrate(&self) -> Result<(Box<dyn Backend>, BackendDecision, Vec<String>)> {
+        match self.policy {
+            TuningPolicy::Fixed(..) => {
+                let ctx = self.native(self.pinned, self.threads)?;
+                let decision = BackendDecision {
+                    policy: "fixed-default".into(),
+                    backend: "native",
+                    candidates: vec![BackendCandidate {
+                        backend: "native",
+                        predicted_ns_per_call: None,
+                        measured_ns_per_nnz: None,
+                        chosen: true,
+                    }],
+                };
+                Ok((
+                    Box::new(Native { ctx }) as Box<dyn Backend>,
+                    decision,
+                    vec![
+                        "fixed tuning policy: no backend probing, native engine serves \
+                         (force another with .backend(..))"
+                            .into(),
+                    ],
+                ))
+            }
+            TuningPolicy::Heuristic => {
+                // The probe doubles as the deployed native backend (the
+                // common case), so it is built with the full requested
+                // config — including placement. When serial or sharded
+                // wins instead, the probe's engine/first-touch cost is
+                // written off (one extra pass over the matrix, at most).
+                let ctx = self.native(self.pinned, self.threads)?;
+                let (decision, shard_pick, rationale) = self.heuristic_decision(&ctx);
+                let backend: Box<dyn Backend> = match decision.backend {
+                    "serial" => {
+                        Box::new(serial_from_context(&ctx, self.pinned, " (heuristic pick)"))
+                    }
+                    "sharded" => {
+                        let (shards, mode) = shard_pick.expect("sharded pick has a partition");
+                        let ctx = self
+                            .sharded_from_probe(&ctx, ShardPolicy::Fixed { shards, mode })?;
+                        Box::new(Sharded { ctx })
+                    }
+                    _ => Box::new(Native { ctx }),
+                };
+                Ok((backend, decision, rationale))
+            }
+            TuningPolicy::Measured => self.measured_decision(),
+        }
+    }
+
+    /// Feature-based arbitration: estimated ns per whole SpMV call for
+    /// serial / native / sharded, from the perfmodel per-nnz cost, the
+    /// candidate partitions' halo features, the row-imbalance CV and
+    /// rough dispatch costs.
+    fn heuristic_decision(
+        &self,
+        ctx: &SpmvContext,
+    ) -> (BackendDecision, Option<(usize, OverlapMode)>, Vec<String>) {
+        let curve = tune::cached_curve(&self.machine, self.quick);
+        let pred = predict(&self.machine, &curve, ctx.kernel());
+        let per_nnz_ns = pred.cycles_per_nnz / self.machine.freq_ghz;
+        // Scan-only shard features: when the caller named a fixed shard
+        // policy, arbitration must score exactly the partition that
+        // would deploy; otherwise it scans the grid (matching what the
+        // shard heuristic tier would then pick). Nothing is packed.
+        let viable = |s: usize| s > 1 && self.crs.nrows >= SHARD_MIN_ROWS * s;
+        let shard_features: Vec<(usize, f64, f64)> = match self.shard_policy {
+            Some(ShardPolicy::Fixed { shards, .. }) => {
+                if viable(shards) {
+                    let (hf, bf) = ShardedCrs::partition_stats(self.crs, shards);
+                    vec![(shards, hf, bf)]
+                } else {
+                    Vec::new()
+                }
+            }
+            _ => SHARD_GRID
+                .iter()
+                .filter(|&&s| viable(s))
+                .map(|&s| {
+                    let (hf, bf) = ShardedCrs::partition_stats(self.crs, s);
+                    (s, hf, bf)
+                })
+                .collect(),
+        };
+        let (candidates, shard_pick, mut rationale) = score_backends(
+            self.crs.nnz() as f64,
+            ctx.n_threads() as f64,
+            per_nnz_ns,
+            ctx.report().row_imbalance_cv,
+            &shard_features,
+        );
+        rationale.insert(
+            0,
+            format!(
+                "backend heuristic: perfmodel {:.2} cycles/nnz on {} -> {:.2} ns/nnz",
+                pred.cycles_per_nnz, self.machine.name, per_nnz_ns
+            ),
+        );
+        if let Some(ShardPolicy::Fixed { shards, mode }) = self.shard_policy {
+            rationale.push(format!(
+                "sharded candidate restricted to the caller's shard policy \
+                 ({shards} shard(s), {} mode)",
+                mode.name()
+            ));
+        }
+        let backend = candidates
+            .iter()
+            .find(|c| c.chosen)
+            .expect("one candidate is chosen")
+            .backend;
+        (
+            BackendDecision { policy: "heuristic".into(), backend, candidates },
+            shard_pick,
+            rationale,
+        )
+    }
+
+    /// Cross-backend bake-off: time serial / native / sharded on the
+    /// host with the scheme and schedule the tuning probe picked, keep
+    /// the fastest.
+    fn measured_decision(&self) -> Result<(Box<dyn Backend>, BackendDecision, Vec<String>)> {
+        let ctx = self.native(self.pinned, self.threads)?;
+        // The sharded candidate's partition comes from the (scan-only)
+        // shard heuristic unless the caller named a shard policy.
+        let sharded = self.sharded_from_probe(&ctx, ShardPolicy::Heuristic)?;
+        let n = self.crs.nrows;
+        let nnz = self.crs.nnz().max(1) as f64;
+        let reps = if self.quick { 2 } else { 5 };
+        let mut x = vec![0.0; n];
+        Rng::new(0xA4B17).fill_f64(&mut x, -1.0, 1.0);
+        let mut y = vec![0.0; n];
+        let mut time = |f: &mut dyn FnMut(&[f64], &mut [f64])| -> f64 {
+            f(&x, &mut y); // warmup
+            let mut best = f64::INFINITY;
+            for _ in 0..reps {
+                let t0 = Instant::now();
+                f(&x, &mut y);
+                best = best.min(t0.elapsed().as_nanos() as f64 / nnz);
+            }
+            best
+        };
+        let serial_ns = time(&mut |x, y| ctx.kernel().spmv(x, y));
+        let native_ns = time(&mut |x, y| ctx.spmv(x, y));
+        let sharded_ns = time(&mut |x, y| sharded.spmv(x, y));
+        let mut candidates = vec![
+            BackendCandidate {
+                backend: "serial",
+                predicted_ns_per_call: None,
+                measured_ns_per_nnz: Some(serial_ns),
+                chosen: false,
+            },
+            BackendCandidate {
+                backend: "native",
+                predicted_ns_per_call: None,
+                measured_ns_per_nnz: Some(native_ns),
+                chosen: false,
+            },
+            BackendCandidate {
+                backend: "sharded",
+                predicted_ns_per_call: None,
+                measured_ns_per_nnz: Some(sharded_ns),
+                chosen: false,
+            },
+        ];
+        let best = min_index(candidates.iter().map(|c| c.measured_ns_per_nnz.unwrap()));
+        candidates[best].chosen = true;
+        let winner = candidates[best].backend;
+        let rationale = vec![format!(
+            "backend bake-off ({reps} reps) picks {winner} at {:.2} ns/nnz \
+             (serial {serial_ns:.2}, native {native_ns:.2}, sharded {sharded_ns:.2})",
+            candidates[best].measured_ns_per_nnz.unwrap()
+        )];
+        let decision = BackendDecision { policy: "measured".into(), backend: winner, candidates };
+        let backend: Box<dyn Backend> = match winner {
+            "serial" => Box::new(serial_from_context(&ctx, self.pinned, " (bake-off winner)")),
+            "sharded" => Box::new(Sharded { ctx: sharded }),
+            _ => Box::new(Native { ctx }),
+        };
+        Ok((backend, decision, rationale))
+    }
+}
+
+/// Index of the minimum of a non-empty score iterator.
+fn min_index(scores: impl Iterator<Item = f64>) -> usize {
+    scores
+        .enumerate()
+        .min_by(|a, b| a.1.partial_cmp(&b.1).expect("scores are finite"))
+        .expect("candidate set is never empty")
+        .0
+}
+
+/// The pure arbitration rule (unit-testable): score each backend in
+/// estimated nanoseconds per whole SpMV call.
+///
+/// - serial: `nnz × per_nnz_ns` — no dispatch cost, no parallelism;
+/// - native: work divided by `threads`, plus one engine dispatch;
+/// - sharded (best grid point): work divided by `threads × shards`,
+///   inflated by the halo gather (halved when enough interior work
+///   exists to overlap the exchange) and by the row-imbalance CV, plus
+///   the per-shard coordinator spawn cost.
+///
+/// `shard_features` lists viable `(shards, halo_fraction,
+/// boundary_nnz_fraction)` partitions; entries with a halo above
+/// [`SHARD_HALO_VIABLE_MAX`] are discarded and the overlap mode follows
+/// [`SHARD_OVERLAP_MIN_INTERIOR`] — the same constants the shard tier's
+/// own heuristic uses, so the two layers cannot drift apart
+/// (arXiv:1106.5908).
+fn score_backends(
+    nnz: f64,
+    threads: f64,
+    per_nnz_ns: f64,
+    row_cv: f64,
+    shard_features: &[(usize, f64, f64)],
+) -> (Vec<BackendCandidate>, Option<(usize, OverlapMode)>, Vec<String>) {
+    let serial_ns = nnz * per_nnz_ns;
+    let native_ns = nnz * per_nnz_ns / threads.max(1.0) + NATIVE_DISPATCH_NS;
+    let mut rationale = vec![format!(
+        "serial {serial_ns:.0} ns/call; native {native_ns:.0} ns/call \
+         ({threads:.0} thread(s) + {NATIVE_DISPATCH_NS:.0} ns dispatch)"
+    )];
+    let mut shard_pick: Option<(usize, OverlapMode, f64)> = None;
+    for &(s, hf, bf) in shard_features {
+        if hf > SHARD_HALO_VIABLE_MAX {
+            continue;
+        }
+        let mode = if (1.0 - bf) >= SHARD_OVERLAP_MIN_INTERIOR {
+            OverlapMode::Overlapped
+        } else {
+            OverlapMode::BulkSync
+        };
+        // Overlap hides roughly half the halo gather behind the
+        // interior compute; imbalanced rows concentrate in few shards.
+        let halo_cost = if mode == OverlapMode::Overlapped { 0.5 * hf } else { hf };
+        let imbalance = 1.0 + 0.25 * row_cv.min(2.0);
+        let ns = nnz * per_nnz_ns * (1.0 + halo_cost) * imbalance / (threads.max(1.0) * s as f64)
+            + SHARD_DISPATCH_NS * s as f64;
+        if shard_pick.map(|(_, _, best)| ns < best).unwrap_or(true) {
+            shard_pick = Some((s, mode, ns));
+        }
+    }
+    let mut candidates = vec![
+        BackendCandidate {
+            backend: "serial",
+            predicted_ns_per_call: Some(serial_ns),
+            measured_ns_per_nnz: None,
+            chosen: false,
+        },
+        BackendCandidate {
+            backend: "native",
+            predicted_ns_per_call: Some(native_ns),
+            measured_ns_per_nnz: None,
+            chosen: false,
+        },
+    ];
+    if let Some((s, mode, ns)) = shard_pick {
+        rationale.push(format!(
+            "sharded candidate: {s} shard(s), {} mode at {ns:.0} ns/call \
+             ({SHARD_DISPATCH_NS:.0} ns/shard coordinator cost, row CV {row_cv:.2})",
+            mode.name()
+        ));
+        candidates.push(BackendCandidate {
+            backend: "sharded",
+            predicted_ns_per_call: Some(ns),
+            measured_ns_per_nnz: None,
+            chosen: false,
+        });
+    } else {
+        rationale.push(
+            "no viable shard partition (halo > half the vector or too few rows): \
+             sharded not a candidate"
+                .into(),
+        );
+    }
+    let best = min_index(candidates.iter().map(|c| c.predicted_ns_per_call.unwrap()));
+    candidates[best].chosen = true;
+    rationale.push(format!(
+        "backend heuristic picks {} at {:.0} estimated ns/call",
+        candidates[best].backend,
+        candidates[best].predicted_ns_per_call.unwrap()
+    ));
+    (candidates, shard_pick.map(|(s, m, _)| (s, m)), rationale)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen;
+    use crate::util::stats::max_abs_diff;
+
+    fn hh() -> Coo {
+        gen::holstein_hubbard(&gen::HolsteinHubbardParams::tiny())
+    }
+
+    /// ISSUE-5 satellite: facade bit-identity — every backend × scheme ×
+    /// schedule × pin on/off reproduces serial CRS bit for bit (CRS and
+    /// SELL-C-σ both preserve the per-row accumulation order; pinning
+    /// degrades to a recorded no-op off Linux on the same code path).
+    #[test]
+    fn facade_bit_identical_across_backends() {
+        let coo = hh();
+        let crs = Crs::from_coo(&coo);
+        let n = crs.nrows;
+        let mut rng = Rng::new(120);
+        let mut x = vec![0.0; n];
+        rng.fill_f64(&mut x, -1.0, 1.0);
+        let mut want = vec![0.0; n];
+        crs.spmv(&x, &mut want);
+        let backends =
+            [BackendChoice::Serial, BackendChoice::Native, BackendChoice::Sharded];
+        let schedules = [
+            Schedule::Static { chunk: None },
+            Schedule::Dynamic { chunk: 13 },
+            Schedule::Guided { min_chunk: 4 },
+        ];
+        for backend in backends {
+            for scheme in [Scheme::Crs, Scheme::SellCs { c: 8, sigma: 64 }] {
+                for schedule in schedules {
+                    for pin in [false, true] {
+                        let mut b = SpmvHandle::builder(&coo)
+                            .policy(TuningPolicy::Fixed(scheme, schedule))
+                            .backend(backend)
+                            .threads(2)
+                            .pinned(pin);
+                        if backend == BackendChoice::Sharded {
+                            b = b.shard_policy(ShardPolicy::Fixed {
+                                shards: 3,
+                                mode: OverlapMode::Overlapped,
+                            });
+                        }
+                        let handle = b.build().unwrap();
+                        assert_eq!(handle.backend_name(), backend.name());
+                        assert_eq!(handle.scheme(), scheme);
+                        let mut got = vec![0.0; n];
+                        handle.spmv(&x, &mut got);
+                        assert_eq!(
+                            max_abs_diff(&want, &got),
+                            0.0,
+                            "{} × {scheme} × {} × pin={pin} deviates from serial CRS",
+                            backend.name(),
+                            schedule.name()
+                        );
+                        let ys = handle.spmv_batch(std::slice::from_ref(&x));
+                        assert_eq!(
+                            max_abs_diff(&ys[0], &got),
+                            0.0,
+                            "{}: batch deviates from per-vector",
+                            backend.name()
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    /// ISSUE-5 satellite: arbitration-decision determinism — the same
+    /// matrix and policy must produce the same [`BackendDecision`],
+    /// candidate scores included.
+    #[test]
+    fn heuristic_arbitration_is_deterministic_and_recorded() {
+        let coo = hh();
+        let build = || {
+            SpmvHandle::builder(&coo)
+                .policy(TuningPolicy::Heuristic)
+                .threads(3)
+                .quick(true)
+                .build()
+                .unwrap()
+        };
+        let a = build();
+        let b = build();
+        let da = a.backend_decision().expect("auto build records a decision").clone();
+        let db = b.backend_decision().unwrap().clone();
+        assert_eq!(da, db, "same matrix + policy must give the same decision");
+        assert_eq!(a.backend_name(), b.backend_name());
+        assert_eq!(da.policy, "heuristic");
+        assert_eq!(da.candidates.iter().filter(|c| c.chosen).count(), 1);
+        // Internal consistency: the chosen candidate has the best score.
+        let chosen = da.candidates.iter().find(|c| c.chosen).unwrap();
+        let best = da
+            .candidates
+            .iter()
+            .map(|c| c.predicted_ns_per_call.unwrap())
+            .fold(f64::INFINITY, f64::min);
+        assert_eq!(chosen.predicted_ns_per_call.unwrap(), best);
+        assert_eq!(chosen.backend, a.backend_name());
+        // The decision shows up in the rendered report.
+        assert!(a.report().tables().iter().any(|t| t.title.contains("backend")));
+        // And the handle still reproduces the serial CRS reference.
+        let crs = Crs::from_coo(&coo);
+        let n = crs.nrows;
+        let mut x = vec![0.0; n];
+        Rng::new(121).fill_f64(&mut x, -1.0, 1.0);
+        let mut want = vec![0.0; n];
+        crs.spmv(&x, &mut want);
+        let mut got = vec![0.0; n];
+        a.spmv(&x, &mut got);
+        assert!(max_abs_diff(&want, &got) < 1e-12);
+    }
+
+    /// A matrix whose whole multiply costs less than one engine dispatch
+    /// must be served serially by the heuristic.
+    #[test]
+    fn heuristic_picks_serial_for_tiny_matrices() {
+        let coo = gen::laplacian_1d(64);
+        let handle = SpmvHandle::builder(&coo)
+            .policy(TuningPolicy::Heuristic)
+            .threads(4)
+            .quick(true)
+            .build()
+            .unwrap();
+        assert_eq!(handle.backend_name(), "serial");
+        assert_eq!(handle.n_threads(), 1);
+        assert!(handle.kernel().is_some());
+        assert!(handle.plan().is_none(), "serial backend has no plan");
+    }
+
+    /// The pure scoring rule: dispatch costs push tiny matrices serial,
+    /// parallelism pushes large ones native, and scale + small halo
+    /// pushes the largest to the sharded executor.
+    #[test]
+    fn score_backends_crosses_over_with_scale() {
+        let features = [(2usize, 0.01, 0.05), (4usize, 0.02, 0.10), (8usize, 0.04, 0.20)];
+        // Tiny: 5k nnz at 2 ns/nnz = 10 us of work; one 20 us dispatch
+        // can never pay off.
+        let (c, _, _) = score_backends(5_000.0, 4.0, 2.0, 0.3, &features);
+        assert_eq!(c.iter().find(|x| x.chosen).unwrap().backend, "serial");
+        // Large: 5M nnz; threads win, shard spawn cost still dominates
+        // the extra parallelism at 4 threads... until the matrix is huge.
+        let (c, _, _) = score_backends(2_000_000.0, 4.0, 2.0, 0.3, &[]);
+        assert_eq!(c.iter().find(|x| x.chosen).unwrap().backend, "native");
+        // Huge + near-zero halo: the sharded executor's extra domains
+        // beat the per-shard coordinator cost.
+        let (c, pick, _) = score_backends(50_000_000.0, 4.0, 2.0, 0.3, &features);
+        assert_eq!(c.iter().find(|x| x.chosen).unwrap().backend, "sharded");
+        assert!(pick.is_some());
+        // A huge halo disqualifies the partition entirely.
+        let (c, pick, _) =
+            score_backends(50_000_000.0, 4.0, 2.0, 0.3, &[(8, 0.9, 0.9)]);
+        assert!(c.iter().all(|x| x.backend != "sharded"));
+        assert!(pick.is_none());
+    }
+
+    /// Measured arbitration times every backend and keeps the fastest.
+    #[test]
+    fn measured_arbitration_times_all_backends() {
+        let coo = hh();
+        let handle = SpmvHandle::builder(&coo)
+            .policy(TuningPolicy::Measured)
+            .threads(2)
+            .quick(true)
+            .build()
+            .unwrap();
+        let d = handle.backend_decision().unwrap();
+        assert_eq!(d.policy, "measured");
+        assert_eq!(d.candidates.len(), 3);
+        assert!(d.candidates.iter().all(|c| c.measured_ns_per_nnz.is_some()));
+        let chosen = d.candidates.iter().find(|c| c.chosen).unwrap();
+        let best = d
+            .candidates
+            .iter()
+            .map(|c| c.measured_ns_per_nnz.unwrap())
+            .fold(f64::INFINITY, f64::min);
+        assert_eq!(chosen.measured_ns_per_nnz.unwrap(), best);
+        assert_eq!(chosen.backend, handle.backend_name());
+        // Whatever won, the math is unchanged.
+        let crs = Crs::from_coo(&coo);
+        let n = crs.nrows;
+        let mut x = vec![0.0; n];
+        Rng::new(122).fill_f64(&mut x, -1.0, 1.0);
+        let mut want = vec![0.0; n];
+        crs.spmv(&x, &mut want);
+        let mut got = vec![0.0; n];
+        handle.spmv(&x, &mut got);
+        assert!(max_abs_diff(&want, &got) < 1e-12);
+    }
+
+    #[test]
+    fn forced_backends_and_capabilities() {
+        let coo = hh();
+        let fixed = TuningPolicy::Fixed(Scheme::Crs, Schedule::Static { chunk: None });
+        let native = SpmvHandle::builder(&coo)
+            .policy(fixed)
+            .backend(BackendChoice::Native)
+            .threads(2)
+            .build()
+            .unwrap();
+        assert_eq!(native.backend_name(), "native");
+        assert_eq!(native.backend_decision().unwrap().policy, "forced");
+        assert!(native.kernel().is_some() && native.plan().is_some());
+        let re = native.replanned(Schedule::Dynamic { chunk: 7 }, 3).unwrap();
+        assert_eq!(re.schedule(), Schedule::Dynamic { chunk: 7 });
+        assert_eq!(re.n_threads(), 3);
+        let mut sharded = SpmvHandle::builder(&coo)
+            .policy(fixed)
+            .backend(BackendChoice::Sharded)
+            .shard_policy(ShardPolicy::Fixed { shards: 2, mode: OverlapMode::BulkSync })
+            .threads(1)
+            .build()
+            .unwrap();
+        assert_eq!(sharded.backend_name(), "sharded");
+        assert_eq!(sharded.n_shards(), 2);
+        assert_eq!(sharded.mode(), Some(OverlapMode::BulkSync));
+        assert!(sharded.kernel().is_none() && sharded.plan().is_none());
+        assert!(sharded.replanned(Schedule::Static { chunk: None }, 2).is_err());
+        sharded.reshard(4, OverlapMode::Overlapped).unwrap();
+        assert_eq!(sharded.n_shards(), 4);
+        let serial = SpmvHandle::builder(&coo)
+            .policy(fixed)
+            .backend(BackendChoice::Serial)
+            .build()
+            .unwrap();
+        assert_eq!(serial.backend_name(), "serial");
+        assert!(serial.kernel().is_some());
+        let mut yp = vec![0.0; 4];
+        assert!(serial.spmv_permuted(&[0.0; 4], &mut yp).is_err());
+    }
+
+    #[test]
+    fn shard_policy_requires_sharded_or_auto_backend() {
+        let coo = gen::laplacian_1d(64);
+        let err = SpmvHandle::builder(&coo)
+            .backend(BackendChoice::Native)
+            .shard_policy(ShardPolicy::Heuristic)
+            .build();
+        assert!(err.is_err(), "shard policy + forced native must be rejected");
+    }
+
+    #[test]
+    fn non_square_matrix_is_rejected() {
+        let mut coo = Coo::new(4, 7);
+        coo.push(0, 6, 1.0);
+        coo.normalize();
+        assert!(SpmvHandle::builder(&coo).build().is_err());
+    }
+
+    /// ISSUE-5 satellite: the schedule CV threshold knob flows through
+    /// the facade and is recorded in the report.
+    #[test]
+    fn schedule_cv_threshold_knob_flows_through() {
+        let coo = hh();
+        let handle = SpmvHandle::builder(&coo)
+            .policy(TuningPolicy::Heuristic)
+            .backend(BackendChoice::Native)
+            .threads(2)
+            .quick(true)
+            .schedule_cv_threshold(9.0)
+            .build()
+            .unwrap();
+        assert_eq!(handle.report().schedule_cv_threshold, 9.0);
+        assert_eq!(
+            handle.schedule(),
+            Schedule::Static { chunk: None },
+            "a sky-high threshold keeps every matrix static"
+        );
+        let default = SpmvHandle::builder(&coo)
+            .policy(TuningPolicy::Heuristic)
+            .backend(BackendChoice::Native)
+            .threads(2)
+            .quick(true)
+            .build()
+            .unwrap();
+        assert_eq!(default.report().schedule_cv_threshold, tune::SCHEDULE_CV_THRESHOLD);
+    }
+
+    #[test]
+    fn rebalance_keeps_bit_identity_on_every_backend() {
+        let coo = hh();
+        let crs = Crs::from_coo(&coo);
+        let n = crs.nrows;
+        let mut x = vec![0.0; n];
+        Rng::new(123).fill_f64(&mut x, -1.0, 1.0);
+        let mut want = vec![0.0; n];
+        crs.spmv(&x, &mut want);
+        for backend in [BackendChoice::Serial, BackendChoice::Native, BackendChoice::Sharded] {
+            let mut b = SpmvHandle::builder(&coo)
+                .policy(TuningPolicy::Fixed(Scheme::Crs, Schedule::Static { chunk: None }))
+                .backend(backend)
+                .threads(2);
+            if backend == BackendChoice::Sharded {
+                b = b.shard_policy(ShardPolicy::Fixed {
+                    shards: 2,
+                    mode: OverlapMode::Overlapped,
+                });
+            }
+            let mut handle = b.build().unwrap();
+            handle.rebalance(Schedule::Dynamic { chunk: 9 });
+            let mut got = vec![0.0; n];
+            handle.spmv(&x, &mut got);
+            assert_eq!(
+                max_abs_diff(&want, &got),
+                0.0,
+                "{}: rebalance changed results",
+                backend.name()
+            );
+        }
+    }
+
+    #[test]
+    fn handle_drives_linear_op_consumers() {
+        use crate::eigen::{lanczos, LanczosConfig};
+        let coo = gen::laplacian_1d(150);
+        let crs = Crs::from_coo(&coo);
+        let want = lanczos(&crs, 1, &LanczosConfig::default());
+        let handle = SpmvHandle::builder(&coo)
+            .policy(TuningPolicy::Fixed(Scheme::Crs, Schedule::Static { chunk: None }))
+            .threads(2)
+            .quick(true)
+            .build()
+            .unwrap();
+        let got = lanczos(&handle, 1, &LanczosConfig::default());
+        assert!(got.converged);
+        assert!((got.eigenvalues[0] - want.eigenvalues[0]).abs() < 1e-10);
+    }
+
+    #[test]
+    fn backend_choice_parse_roundtrip() {
+        for c in [
+            BackendChoice::Auto,
+            BackendChoice::Serial,
+            BackendChoice::Native,
+            BackendChoice::Sharded,
+        ] {
+            assert_eq!(BackendChoice::parse(c.name()).unwrap(), c);
+        }
+        assert!(BackendChoice::parse("pjrt").is_err());
+    }
+}

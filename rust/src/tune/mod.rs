@@ -1,5 +1,8 @@
-//! Auto-tuned SpMV contexts: **one build→tune→plan→execute API** for
-//! every layer of the stack.
+//! Auto-tuned SpMV contexts: the **build→tune→plan→execute machinery**
+//! behind the [`crate::spmv::SpmvHandle`] facade. Since the facade PR
+//! the context types here are crate-internal — external consumers build
+//! a handle ([`crate::spmv::SpmvBuilder`]), which arbitrates the
+//! executor backend and drives this module for scheme/schedule tuning.
 //!
 //! The paper's central finding is that storage scheme × access pattern ×
 //! thread scheduling must be co-designed *per matrix*. The lower layers
@@ -48,7 +51,7 @@ use crate::engine::affinity::{PinMode, PinReport};
 use crate::engine::{Engine, SpmvPlan};
 use crate::kernels::SpmvKernel;
 use crate::matrix::shard::ShardedCrs;
-use crate::matrix::{Coo, Crs, Scheme, SpMv};
+use crate::matrix::{Crs, Scheme, SpMv};
 use crate::perfmodel::{predict, predict_with_dist, CostCurve};
 use crate::sched::Schedule;
 use crate::shard::{OverlapMode, ShardedSpmv};
@@ -111,6 +114,19 @@ impl ShardPolicy {
 /// Shard counts the heuristic and measured shard tiers consider.
 pub const SHARD_GRID: [usize; 4] = [1, 2, 4, 8];
 
+/// Halo-volume viability ceiling: a partition exchanging more than this
+/// fraction of the vector is never worth sharding (arXiv:1106.5908 §5).
+/// Shared with the facade's backend arbitration so the two layers can
+/// never disagree on what counts as a viable partition.
+pub(crate) const SHARD_HALO_VIABLE_MAX: f64 = 0.5;
+
+/// Minimum interior-nnz fraction for the overlapped mode to pay — below
+/// this there is not enough halo-free work to hide the exchange behind.
+pub(crate) const SHARD_OVERLAP_MIN_INTERIOR: f64 = 0.25;
+
+/// Minimum rows a shard must keep for the partition to stay useful.
+pub(crate) const SHARD_MIN_ROWS: usize = 64;
+
 /// One (shard count, overlap mode) candidate with the partition
 /// features that drove (or would drive) its selection.
 #[derive(Debug, Clone)]
@@ -136,6 +152,35 @@ pub struct ShardDecision {
     pub halo_fraction: f64,
     pub boundary_nnz_fraction: f64,
     pub candidates: Vec<ShardCandidate>,
+}
+
+/// One executor backend scored during arbitration (see
+/// [`crate::spmv::SpmvBuilder`]): serial kernel, native engine context,
+/// or sharded executor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BackendCandidate {
+    /// `"serial"`, `"native"` or `"sharded"`.
+    pub backend: &'static str,
+    /// Heuristic score: estimated nanoseconds for one whole SpMV call
+    /// (perfmodel per-nnz cost / parallelism + per-call dispatch cost).
+    pub predicted_ns_per_call: Option<f64>,
+    /// Cross-backend bake-off score (measured tier).
+    pub measured_ns_per_nnz: Option<f64>,
+    pub chosen: bool,
+}
+
+/// The executor-arbitration decision recorded in a [`TuningReport`]:
+/// which backend serves the matrix, which candidates it beat, and under
+/// which arbitration policy. The paper's lesson extended one level up —
+/// the best *executor* is a property of the matrix × machine pair, not
+/// a user choice.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BackendDecision {
+    /// `"forced"`, `"fixed-default"`, `"heuristic"` or `"measured"`.
+    pub policy: String,
+    /// The chosen backend's name.
+    pub backend: &'static str,
+    pub candidates: Vec<BackendCandidate>,
 }
 
 /// One candidate considered during tuning, with its score(s).
@@ -206,11 +251,19 @@ pub struct TuningReport {
     /// Coefficient of variation of nnz per row (load-imbalance feature
     /// driving the schedule choice).
     pub row_imbalance_cv: f64,
+    /// The CV threshold the schedule heuristic compared against —
+    /// [`SCHEDULE_CV_THRESHOLD`] / [`SCHEDULE_CV_THRESHOLD_FIRST_TOUCH`]
+    /// by default, or the caller's
+    /// [`crate::spmv::SpmvBuilder::schedule_cv_threshold`] override.
+    pub schedule_cv_threshold: f64,
     /// Realized padding overhead of the chosen kernel (0 for unpadded
     /// schemes).
     pub padding_overhead: f64,
     /// NUMA placement of the engine + workspace (pinning, first touch).
     pub placement: PlacementDecision,
+    /// Executor-arbitration decision (`None` until a
+    /// [`crate::spmv::SpmvBuilder`] records one).
+    pub backend: Option<BackendDecision>,
     /// Sharding decision (`None` for unsharded contexts).
     pub shard: Option<ShardDecision>,
     pub candidates: Vec<CandidateReport>,
@@ -240,8 +293,13 @@ impl TuningReport {
             decision.row(vec!["|stride| <= 8 fraction".into(), f(s)]);
         }
         decision.row(vec!["row imbalance (CV)".into(), f(self.row_imbalance_cv)]);
+        decision.row(vec!["schedule CV threshold".into(), f(self.schedule_cv_threshold)]);
         decision.row(vec!["padding overhead".into(), f(self.padding_overhead)]);
         decision.row(vec!["placement".into(), self.placement.summary()]);
+        if let Some(bd) = &self.backend {
+            let label = format!("{} ({} policy)", bd.backend, bd.policy);
+            decision.row(vec!["backend".into(), label]);
+        }
         if let Some(sd) = &self.shard {
             decision.row(vec!["shards".into(), format!("{} ({} policy)", sd.n_shards, sd.policy)]);
             decision.row(vec!["overlap mode".into(), sd.mode.name().into()]);
@@ -252,6 +310,23 @@ impl TuningReport {
             decision.row(vec![format!("rationale {}", i + 1), r.clone()]);
         }
         let mut tables = vec![decision];
+        if let Some(bd) = &self.backend {
+            if !bd.candidates.is_empty() {
+                let mut t = Table::new(
+                    &format!("backend candidates ({} arbitration)", bd.policy),
+                    &["backend", "pred ns/call", "measured ns/nnz", "chosen"],
+                );
+                for c in &bd.candidates {
+                    t.row(vec![
+                        c.backend.into(),
+                        c.predicted_ns_per_call.map(f).unwrap_or_else(|| "-".into()),
+                        c.measured_ns_per_nnz.map(f).unwrap_or_else(|| "-".into()),
+                        if c.chosen { "<-".into() } else { String::new() },
+                    ]);
+                }
+                tables.push(t);
+            }
+        }
         if let Some(sd) = &self.shard {
             if !sd.candidates.is_empty() {
                 let mut t = Table::new(
@@ -295,13 +370,18 @@ impl TuningReport {
 /// Builder for [`SpmvContext`]; see the module docs for the lifecycle.
 /// Borrows the CRS when the caller already holds one
 /// ([`SpmvContext::builder_from_crs`]) — tuning only reads it.
-pub struct SpmvContextBuilder<'a> {
+///
+/// Crate-internal since the `SpmvHandle` facade: external consumers go
+/// through [`crate::spmv::SpmvBuilder`], which drives this machinery
+/// and adds backend arbitration on top.
+pub(crate) struct SpmvContextBuilder<'a> {
     crs: Cow<'a, Crs>,
     policy: TuningPolicy,
     threads: Option<usize>,
     machine: MachineSpec,
     quick: bool,
     pinned: bool,
+    cv_threshold: Option<f64>,
     shard_policy: Option<ShardPolicy>,
 }
 
@@ -346,6 +426,16 @@ impl SpmvContextBuilder<'_> {
         self
     }
 
+    /// Override the row-imbalance CV threshold above which the schedule
+    /// heuristic abandons static partitions (defaults:
+    /// [`SCHEDULE_CV_THRESHOLD`], or
+    /// [`SCHEDULE_CV_THRESHOLD_FIRST_TOUCH`] under first-touch
+    /// placement). Recorded in the [`TuningReport`].
+    pub fn schedule_cv_threshold(mut self, threshold: Option<f64>) -> Self {
+        self.cv_threshold = threshold;
+        self
+    }
+
     /// Add the sharding dimension: the context becomes a
     /// [`ShardedContext`] whose shard count and overlap mode come from
     /// `policy` (scheme and schedule still come from the
@@ -362,8 +452,16 @@ impl SpmvContextBuilder<'_> {
     /// rows and columns symmetrically, and the engine's plan/workspace
     /// machinery assumes one dimension throughout.
     pub fn build(self) -> Result<SpmvContext> {
-        let SpmvContextBuilder { crs, policy, threads, machine, quick, pinned, shard_policy } =
-            self;
+        let SpmvContextBuilder {
+            crs,
+            policy,
+            threads,
+            machine,
+            quick,
+            pinned,
+            cv_threshold,
+            shard_policy,
+        } = self;
         anyhow::ensure!(
             shard_policy.is_none(),
             "builder has a shard policy: finish with build_sharded(), not build()"
@@ -381,6 +479,11 @@ impl SpmvContextBuilder<'_> {
         let nrows = crs.nrows;
         let nnz = crs.nnz();
         let row_cv = row_imbalance_cv(&crs);
+        let cv_threshold_eff = cv_threshold.unwrap_or(if pinned {
+            SCHEDULE_CV_THRESHOLD_FIRST_TOUCH
+        } else {
+            SCHEDULE_CV_THRESHOLD
+        });
         let pin_mode = if pinned { PinMode::Compact } else { PinMode::Disabled };
         let mut rationale = Vec::new();
         let mut candidates = Vec::new();
@@ -399,7 +502,8 @@ impl SpmvContextBuilder<'_> {
             TuningPolicy::Heuristic => {
                 let crs_kernel = SpmvKernel::build_from_crs(&crs, Scheme::Crs);
                 let dist = StrideDistribution::from_kernel(&crs_kernel);
-                let schedule = pick_schedule(nrows, n_threads, row_cv, pinned, &mut rationale);
+                let schedule =
+                    pick_schedule(nrows, n_threads, row_cv, pinned, cv_threshold, &mut rationale);
                 let curve = cached_curve(&machine, quick);
                 // The CRS candidate reuses the fingerprint kernel, and the
                 // winner is kept as built — no candidate is realized twice.
@@ -450,7 +554,8 @@ impl SpmvContextBuilder<'_> {
                 (kernel, schedule)
             }
             TuningPolicy::Measured => {
-                let schedule = pick_schedule(nrows, n_threads, row_cv, pinned, &mut rationale);
+                let schedule =
+                    pick_schedule(nrows, n_threads, row_cv, pinned, cv_threshold, &mut rationale);
                 // Bake off on the placement the context will actually
                 // run with: a pinned request times pinned candidates.
                 let engine = Engine::with_pinning(n_threads, pin_mode);
@@ -539,8 +644,10 @@ impl SpmvContextBuilder<'_> {
             mean_abs_stride: fingerprint.as_ref().map(|d| d.mean_abs_stride()),
             small_stride_fraction: fingerprint.as_ref().map(|d| d.fraction_within(8)),
             row_imbalance_cv: row_cv,
+            schedule_cv_threshold: cv_threshold_eff,
             padding_overhead: kernel_padding(&kernel),
             placement,
+            backend: None,
             shard: None,
             candidates,
             rationale,
@@ -562,14 +669,23 @@ impl SpmvContextBuilder<'_> {
     /// tier pick without a rectangular split kernel (the JDS family)
     /// falls back to CRS halves, recorded in the rationale.
     pub fn build_sharded(self) -> Result<ShardedContext> {
-        let SpmvContextBuilder { crs, policy, threads, machine, quick, pinned, shard_policy } =
-            self;
+        let SpmvContextBuilder {
+            crs,
+            policy,
+            threads,
+            machine,
+            quick,
+            pinned,
+            cv_threshold,
+            shard_policy,
+        } = self;
         let shard_policy = shard_policy.unwrap_or(ShardPolicy::Heuristic);
         let crs = Arc::new(crs.into_owned());
         let mut base_builder = SpmvContext::builder_from_crs(&crs)
             .policy(policy)
             .machine(machine)
-            .quick(quick);
+            .quick(quick)
+            .schedule_cv_threshold(cv_threshold);
         if let Some(t) = threads {
             base_builder = base_builder.threads(t);
         }
@@ -603,7 +719,7 @@ impl SpmvContextBuilder<'_> {
         report.placement = PlacementDecision {
             pin_requested: pinned,
             pin: if pinned { Some(sharded.aggregate_pin_report()) } else { None },
-            first_touch: pinned,
+            first_touch: sharded.first_touched(),
         };
         report.rationale.push(format!(
             "sharded: {} shard(s) × {} thread(s), {} mode ({} shard policy)",
@@ -671,7 +787,7 @@ fn decide_shards(
             let mut best = (1usize, OverlapMode::BulkSync, 0.0f64, 0.0f64);
             for &s in &grid {
                 let (hf, bf) = features(s);
-                let mode = if s > 1 && (1.0 - bf) >= 0.25 {
+                let mode = if s > 1 && (1.0 - bf) >= SHARD_OVERLAP_MIN_INTERIOR {
                     OverlapMode::Overlapped
                 } else {
                     OverlapMode::BulkSync
@@ -684,7 +800,7 @@ fn decide_shards(
                     measured_ns_per_nnz: None,
                     chosen: false,
                 });
-                let viable = s == 1 || (hf <= 0.5 && n >= 64 * s);
+                let viable = s == 1 || (hf <= SHARD_HALO_VIABLE_MAX && n >= SHARD_MIN_ROWS * s);
                 if viable {
                     best = (s, mode, hf, bf);
                 }
@@ -694,8 +810,9 @@ fn decide_shards(
                 c.chosen = c.shards == n_shards;
             }
             rationale.push(format!(
-                "shard heuristic: {n_shards} shard(s) (largest with halo fraction <= 0.5 \
-                 and >= 64 rows/shard; halo {hf:.3}), {} mode (interior nnz fraction {:.3})",
+                "shard heuristic: {n_shards} shard(s) (largest with halo fraction <= \
+                 {SHARD_HALO_VIABLE_MAX} and >= {SHARD_MIN_ROWS} rows/shard; halo {hf:.3}), \
+                 {} mode (interior nnz fraction {:.3})",
                 mode.name(),
                 1.0 - bf
             ));
@@ -782,9 +899,10 @@ fn decide_shards(
 
 /// A tuned **sharded** context: a [`ShardedSpmv`] executor bundled with
 /// the [`TuningReport`] that documents scheme, schedule, shard count
-/// and overlap mode — the sharded sibling of [`SpmvContext`]. Serve it
-/// through [`crate::coordinator::ShardedExecutor`].
-pub struct ShardedContext {
+/// and overlap mode — the sharded sibling of [`SpmvContext`].
+/// Crate-internal since the facade PR: consumers reach it as the
+/// sharded backend of a [`crate::spmv::SpmvHandle`].
+pub(crate) struct ShardedContext {
     sharded: ShardedSpmv,
     report: TuningReport,
 }
@@ -797,6 +915,12 @@ impl ShardedContext {
 
     pub fn report(&self) -> &TuningReport {
         &self.report
+    }
+
+    /// Mutable report access for the facade layer (backend decisions are
+    /// recorded after the context is built).
+    pub(crate) fn report_mut(&mut self) -> &mut TuningReport {
+        &mut self.report
     }
 
     pub fn scheme(&self) -> Scheme {
@@ -813,10 +937,6 @@ impl ShardedContext {
 
     pub fn mode(&self) -> OverlapMode {
         self.sharded.mode()
-    }
-
-    pub fn halo_fraction(&self) -> f64 {
-        self.sharded.halo_fraction()
     }
 
     /// Distributed-style SpMV across every shard (original basis).
@@ -884,12 +1004,14 @@ impl SpMv for ShardedContext {
     }
 }
 
-/// An owned, tuned kernel + plan + engine bundle — the one public
-/// execution surface of the crate. Obtain via [`SpmvContext::builder`].
+/// An owned, tuned kernel + plan + engine bundle — the native execution
+/// backend behind [`crate::spmv::SpmvHandle`]. Obtain via
+/// [`SpmvContext::builder`]. Crate-internal since the facade PR:
+/// consumers hold a handle, never this type.
 ///
 /// The engine thread pool is spawned lazily on the first execution, so
 /// simulation-only consumers (fig 8/9) never pay for host threads.
-pub struct SpmvContext {
+pub(crate) struct SpmvContext {
     kernel: Arc<SpmvKernel>,
     plan: SpmvPlan,
     n_threads: usize,
@@ -899,8 +1021,11 @@ pub struct SpmvContext {
 }
 
 impl SpmvContext {
-    /// Start a builder from an assembled COO matrix.
-    pub fn builder(coo: &Coo) -> SpmvContextBuilder<'static> {
+    /// Start a builder from an assembled COO matrix (test convenience;
+    /// production consumers enter through [`crate::spmv::SpmvBuilder`],
+    /// which converts once and drives [`SpmvContext::builder_from_crs`]).
+    #[cfg(test)]
+    pub fn builder(coo: &crate::matrix::Coo) -> SpmvContextBuilder<'static> {
         Self::builder_cow(Cow::Owned(Crs::from_coo(coo)))
     }
 
@@ -918,12 +1043,19 @@ impl SpmvContext {
             machine: MachineSpec::nehalem(),
             quick: false,
             pinned: false,
+            cv_threshold: None,
             shard_policy: None,
         }
     }
 
     pub fn kernel(&self) -> &SpmvKernel {
         &self.kernel
+    }
+
+    /// Shared handle to the tuned kernel — the serial backend of the
+    /// facade executes it directly, without plan or engine.
+    pub(crate) fn kernel_arc(&self) -> Arc<SpmvKernel> {
+        self.kernel.clone()
     }
 
     /// The scheduling plan (also consumable by
@@ -946,6 +1078,12 @@ impl SpmvContext {
 
     pub fn report(&self) -> &TuningReport {
         &self.report
+    }
+
+    /// Mutable report access for the facade layer (backend decisions are
+    /// recorded after the context is built).
+    pub(crate) fn report_mut(&mut self) -> &mut TuningReport {
+        &mut self.report
     }
 
     pub fn scheme(&self) -> Scheme {
@@ -1094,6 +1232,15 @@ fn candidate_schemes(crs: &Crs) -> Vec<Scheme> {
     v
 }
 
+/// Default row-imbalance CV threshold above which the schedule heuristic
+/// abandons static contiguous partitions for guided chunks.
+pub const SCHEDULE_CV_THRESHOLD: f64 = 0.5;
+
+/// The threshold under first-touch placement: migrating schedules are
+/// penalized (§5.2), so the imbalance must be much worse before leaving
+/// the placement-preserving static partition is worth it.
+pub const SCHEDULE_CV_THRESHOLD_FIRST_TOUCH: f64 = 1.25;
+
 /// Schedule heuristic (paper §5.2): static contiguous partitions preserve
 /// first-touch locality and are best for balanced matrices; only strong
 /// row-length imbalance justifies guided chunks. The min chunk aims at a
@@ -1105,32 +1252,43 @@ fn candidate_schemes(crs: &Crs) -> Vec<Scheme> {
 /// **penalized**: guided chunks land on whichever thread finishes first,
 /// so rows leave the domain that first-touched their pages and local
 /// traffic turns remote — the paper's §5.2 collapse. The imbalance has
-/// to be much worse (CV > 1.25 instead of 0.5) before abandoning the
-/// placement-preserving static partition is worth it.
+/// to be much worse ([`SCHEDULE_CV_THRESHOLD_FIRST_TOUCH`] instead of
+/// [`SCHEDULE_CV_THRESHOLD`]) before abandoning the placement-preserving
+/// static partition is worth it. `override_threshold` is the caller's
+/// knob replacing both defaults (the ROADMAP follow-up toward learning
+/// the threshold from measured data starts by making it settable).
 fn pick_schedule(
     nrows: usize,
     n_threads: usize,
     row_cv: f64,
     first_touch: bool,
+    override_threshold: Option<f64>,
     rationale: &mut Vec<String>,
 ) -> Schedule {
-    let threshold = if first_touch { 1.25 } else { 0.5 };
+    let default = if first_touch {
+        SCHEDULE_CV_THRESHOLD_FIRST_TOUCH
+    } else {
+        SCHEDULE_CV_THRESHOLD
+    };
+    let threshold = override_threshold.unwrap_or(default);
+    let origin = if override_threshold.is_some() { " (caller-set)" } else { "" };
     if row_cv > threshold {
         let min_chunk = 512.min((nrows / (4 * n_threads.max(1))).max(1));
         rationale.push(format!(
-            "row imbalance CV {row_cv:.2} > {threshold}: guided schedule, min chunk {min_chunk}"
+            "row imbalance CV {row_cv:.2} > {threshold}{origin}: guided schedule, \
+             min chunk {min_chunk}"
         ));
         Schedule::Guided { min_chunk }
     } else {
-        if first_touch && row_cv > 0.5 {
+        if first_touch && override_threshold.is_none() && row_cv > SCHEDULE_CV_THRESHOLD {
             rationale.push(format!(
                 "row imbalance CV {row_cv:.2} would suggest guided, but first-touch placement \
                  penalizes migrating schedules (remote-traffic hazard): keeping static"
             ));
         } else {
             rationale.push(format!(
-                "row imbalance CV {row_cv:.2} <= {threshold}: static contiguous partitions \
-                 (NUMA-safe default)"
+                "row imbalance CV {row_cv:.2} <= {threshold}{origin}: static contiguous \
+                 partitions (NUMA-safe default)"
             ));
         }
         Schedule::Static { chunk: None }
@@ -1165,8 +1323,9 @@ fn row_imbalance_cv(crs: &Crs) -> f64 {
 }
 
 /// Per-machine cost-curve cache: calibration walks the simulator, so do
-/// it once per (machine, fidelity) pair per process.
-fn cached_curve(machine: &MachineSpec, quick: bool) -> Arc<CostCurve> {
+/// it once per (machine, fidelity) pair per process. Shared with the
+/// facade's backend-arbitration heuristic.
+pub(crate) fn cached_curve(machine: &MachineSpec, quick: bool) -> Arc<CostCurve> {
     static CACHE: OnceLock<Mutex<HashMap<String, Arc<CostCurve>>>> = OnceLock::new();
     let cache = CACHE.get_or_init(|| Mutex::new(HashMap::new()));
     let key = format!("{}:{}", machine.name, quick);
@@ -1191,6 +1350,7 @@ pub fn sell_params(scheme: Scheme) -> (usize, usize) {
 mod tests {
     use super::*;
     use crate::gen;
+    use crate::matrix::Coo;
     use crate::util::stats::max_abs_diff;
 
     fn policies() -> Vec<TuningPolicy> {
@@ -1548,10 +1708,10 @@ mod tests {
     #[test]
     fn placement_penalizes_migrating_schedules() {
         let mut r1 = Vec::new();
-        let s1 = pick_schedule(10_000, 4, 0.8, false, &mut r1);
+        let s1 = pick_schedule(10_000, 4, 0.8, false, None, &mut r1);
         assert!(matches!(s1, Schedule::Guided { .. }), "CV 0.8 unpinned should go guided");
         let mut r2 = Vec::new();
-        let s2 = pick_schedule(10_000, 4, 0.8, true, &mut r2);
+        let s2 = pick_schedule(10_000, 4, 0.8, true, None, &mut r2);
         assert_eq!(
             s2,
             Schedule::Static { chunk: None },
@@ -1559,10 +1719,54 @@ mod tests {
         );
         assert!(r2.iter().any(|s| s.contains("first-touch")));
         let mut r3 = Vec::new();
-        let s3 = pick_schedule(10_000, 4, 1.5, true, &mut r3);
+        let s3 = pick_schedule(10_000, 4, 1.5, true, None, &mut r3);
         assert!(
             matches!(s3, Schedule::Guided { .. }),
             "extreme imbalance still overrides placement"
+        );
+    }
+
+    /// ISSUE-5 satellite: the CV threshold is a caller knob replacing
+    /// both placement-dependent defaults, and the effective value is
+    /// recorded in the report.
+    #[test]
+    fn schedule_cv_threshold_is_overridable_and_recorded() {
+        let mut r = Vec::new();
+        // CV 0.8 goes guided unpinned by default, but a raised caller
+        // threshold keeps it static even there.
+        let s = pick_schedule(10_000, 4, 0.8, false, Some(2.0), &mut r);
+        assert_eq!(s, Schedule::Static { chunk: None });
+        assert!(r.iter().any(|m| m.contains("caller-set")), "{r:?}");
+        // And a lowered threshold sends even a pinned build guided.
+        let mut r2 = Vec::new();
+        let s2 = pick_schedule(10_000, 4, 0.8, true, Some(0.1), &mut r2);
+        assert!(matches!(s2, Schedule::Guided { .. }));
+        // Report plumbing: default and override both land in the report.
+        let coo = gen::laplacian_1d(128);
+        let ctx = SpmvContext::builder(&coo)
+            .policy(TuningPolicy::Heuristic)
+            .threads(2)
+            .quick(true)
+            .build()
+            .unwrap();
+        assert_eq!(ctx.report().schedule_cv_threshold, SCHEDULE_CV_THRESHOLD);
+        let ctx2 = SpmvContext::builder(&coo)
+            .policy(TuningPolicy::Heuristic)
+            .threads(2)
+            .quick(true)
+            .schedule_cv_threshold(Some(3.5))
+            .build()
+            .unwrap();
+        assert_eq!(ctx2.report().schedule_cv_threshold, 3.5);
+        let pinned = SpmvContext::builder(&coo)
+            .policy(TuningPolicy::Fixed(Scheme::Crs, Schedule::Static { chunk: None }))
+            .threads(2)
+            .pinned(true)
+            .build()
+            .unwrap();
+        assert_eq!(
+            pinned.report().schedule_cv_threshold,
+            SCHEDULE_CV_THRESHOLD_FIRST_TOUCH
         );
     }
 

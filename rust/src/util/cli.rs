@@ -30,7 +30,8 @@ const VALUE_OPTS: &[&str] = &[
     "t", "u", "g", "omega", "iters", "tol", "port", "batch", "batch-window-us",
     "requests", "workers", "op", "ops", "dim", "bandwidth", "density",
     "block-size", "chunk-sizes", "threads-per-socket", "output", "scale",
-    "eigenvalues", "csv", "policy", "tolerance", "shards", "mode",
+    "eigenvalues", "csv", "policy", "tolerance", "shards", "mode", "backend",
+    "cv-threshold",
 ];
 
 impl Args {
@@ -183,6 +184,19 @@ mod tests {
         let a = parse("--threads 8 pos");
         assert_eq!(a.get_usize("threads", 0).unwrap(), 8);
         assert_eq!(a.positionals(), &["pos".to_string()]);
+    }
+
+    /// Regression: the facade PR's options must be registered, or the
+    /// space-separated form (`--backend sharded`) silently parses as a
+    /// boolean flag + stray positional and the caller sees the default.
+    #[test]
+    fn facade_options_take_values() {
+        let a = parse("--backend sharded --cv-threshold 0.8 --matrix m.mtx");
+        assert_eq!(a.get_str("backend", "auto"), "sharded");
+        assert_eq!(a.get_f64("cv-threshold", 0.0).unwrap(), 0.8);
+        assert_eq!(a.get("matrix"), Some("m.mtx"));
+        assert!(a.positionals().is_empty(), "no stray positionals");
+        assert!(a.finish().is_ok());
     }
 
     #[test]
