@@ -9,6 +9,7 @@
 use std::fmt::Write as _;
 
 use spmvperf::gen::{self, HolsteinHubbardParams};
+use spmvperf::kernels::Precision;
 use spmvperf::matrix::{Crs, Scheme};
 use spmvperf::sched::Schedule;
 use spmvperf::spmv::{BackendChoice, SpmvHandle};
@@ -75,12 +76,18 @@ fn main() {
                 f(r.ns_per_item()),
                 f(speedup),
             ]);
+            // The "name" key is the benchdiff identity: scheme x threads
+            // (plus the simd marker below) keys each row in the committed
+            // results-baseline floors.
             entries.push(format!(
                 concat!(
-                    "    {{\"scheme\": \"{}\", \"spec\": \"{}\", \"threads\": {}, ",
-                    "\"schedule\": \"static\", \"mflops\": {:.3}, \"ns_per_nnz\": {:.4}, ",
+                    "    {{\"name\": \"{} x{}\", \"scheme\": \"{}\", \"spec\": \"{}\", ",
+                    "\"threads\": {}, \"schedule\": \"static\", \"isa\": \"scalar\", ",
+                    "\"mflops\": {:.3}, \"ns_per_nnz\": {:.4}, ",
                     "\"speedup_vs_serial_crs\": {:.4}, \"padding_overhead\": {:.6}}}"
                 ),
+                scheme.name(),
+                nt,
                 scheme.name(),
                 scheme.spec(),
                 nt,
@@ -90,6 +97,59 @@ fn main() {
                 padding,
             ));
         }
+    }
+
+    // SIMD rows: the same fixed plans under the Tolerance contract. The
+    // Fixed policy binds the detected ISA ceiling, so on AVX2+ hosts these
+    // rows run the vector kernels against the scalar rows above (on a
+    // scalar-only host they serve scalar and the row is a presence check).
+    for scheme in [Scheme::Crs, Scheme::SellCs { c: 32, sigma: 256 }] {
+        let ctx = SpmvHandle::builder_from_crs(&crs)
+            .policy(TuningPolicy::Fixed(scheme, Schedule::Static { chunk: None }))
+            .backend(BackendChoice::Native)
+            .threads(4)
+            .precision(Precision::Tolerance(1e-12))
+            .build()
+            .expect("fixed-policy simd handle");
+        let padding = ctx.report().padding_overhead;
+        let kernel = ctx.kernel().expect("native kernel");
+        let mut ws = kernel.workspace(&x);
+        let nnz = kernel.nnz();
+        let r = b.run(
+            &format!("{} x4 simd ({})", scheme.name(), ctx.kernel_isa().name()),
+            nnz as u64,
+            2 * nnz as u64,
+            || {
+                ctx.spmv_permuted(&ws.xp, &mut ws.yp).expect("native permuted path");
+                ws.yp[0]
+            },
+        );
+        println!("{}", r.summary());
+        let mflops = r.mflops();
+        let speedup = if serial_crs > 0.0 { mflops / serial_crs } else { 0.0 };
+        t.row(vec![
+            format!("{} simd", scheme.name()),
+            "4".to_string(),
+            f(mflops),
+            f(r.ns_per_item()),
+            f(speedup),
+        ]);
+        entries.push(format!(
+            concat!(
+                "    {{\"name\": \"{} x4 simd\", \"scheme\": \"{}\", \"spec\": \"{}\", ",
+                "\"threads\": 4, \"schedule\": \"static\", \"precision\": \"tol:1e-12\", ",
+                "\"isa\": \"{}\", \"mflops\": {:.3}, \"ns_per_nnz\": {:.4}, ",
+                "\"speedup_vs_serial_crs\": {:.4}, \"padding_overhead\": {:.6}}}"
+            ),
+            scheme.name(),
+            scheme.name(),
+            scheme.spec(),
+            ctx.kernel_isa().name(),
+            mflops,
+            r.ns_per_item(),
+            speedup,
+            padding,
+        ));
     }
     t.print();
     if serial_crs > 0.0 && crs4 > 0.0 {

@@ -5,7 +5,8 @@
 //! partitioned execution of the same plans.
 
 use spmvperf::gen::{self, HolsteinHubbardParams};
-use spmvperf::kernels::{table1_ops, MicroBuffers};
+use spmvperf::kernels::microbench::{triad_isa, triad_scalar};
+use spmvperf::kernels::{table1_ops, IsaLevel, MicroBuffers, Precision};
 use spmvperf::matrix::{Crs, Scheme};
 use spmvperf::sched::Schedule;
 use spmvperf::spmv::{BackendChoice, SpmvHandle};
@@ -62,6 +63,72 @@ fn main() {
     }
     t.print();
 
+    // SIMD vs scalar under the Tolerance contract, on both test
+    // matrices. The Fixed policy binds the detected ISA ceiling when the
+    // scheme has a vector path, so the tol:1e-12 handle serves vectorized
+    // kernels while the default BitIdentical handle stays scalar — same
+    // plan shape, same schedule.
+    let isa = IsaLevel::detect();
+    let band_n = if quick { 2_000 } else { 60_000 };
+    let mut band_rng = Rng::new(21);
+    let band = Crs::from_coo(&gen::random_band(band_n, 12, band_n / 8, &mut band_rng));
+    let mut xb = vec![0.0; band.nrows];
+    rng.fill_f64(&mut xb, -1.0, 1.0);
+    let mut ts = Table::new(
+        &format!("simd vs scalar SpMV under tol:1e-12 (detected isa: {})", isa.name()),
+        &[
+            "matrix",
+            "scheme",
+            "scalar MFlop/s (4T)",
+            "simd MFlop/s (4T)",
+            "simd gain",
+            "serving isa",
+        ],
+    );
+    let cases: [(&str, &Crs, &Vec<f64>); 2] =
+        [("holstein-hubbard", &crs, &x), ("random-band", &band, &xb)];
+    for (mname, m, xv) in cases {
+        for scheme in
+            [Scheme::Crs, Scheme::SellCs { c: 8, sigma: 64 }, Scheme::SellCs { c: 32, sigma: 256 }]
+        {
+            let mut measured: Vec<(f64, IsaLevel)> = Vec::new();
+            for precision in [Precision::BitIdentical, Precision::Tolerance(1e-12)] {
+                let ctx = SpmvHandle::builder_from_crs(m)
+                    .policy(TuningPolicy::Fixed(scheme, Schedule::Static { chunk: None }))
+                    .backend(BackendChoice::Native)
+                    .threads(4)
+                    .precision(precision)
+                    .build()
+                    .expect("fixed-policy native handle");
+                let kernel = ctx.kernel().expect("native backend has a kernel");
+                let nnz = kernel.nnz() as u64;
+                let mut ws = kernel.workspace(xv);
+                let r = b.run(
+                    &format!("{mname} {} x4 {}", scheme.name(), ctx.kernel_isa().name()),
+                    nnz,
+                    2 * nnz,
+                    || {
+                        ctx.spmv_permuted(&ws.xp, &mut ws.yp).expect("native permuted path");
+                        ws.yp[0]
+                    },
+                );
+                println!("{}", r.summary());
+                measured.push((r.mflops(), ctx.kernel_isa()));
+            }
+            let (scalar_mf, _) = measured[0];
+            let (simd_mf, simd_isa) = measured[1];
+            ts.row(vec![
+                mname.to_string(),
+                scheme.name(),
+                f(scalar_mf),
+                f(simd_mf),
+                f(simd_mf / scalar_mf),
+                simd_isa.name().into(),
+            ]);
+        }
+    }
+    ts.print();
+
     let n = if quick { 20_000 } else { 500_000 };
     let blen = 8 << 20;
     let mut t2 = Table::new("Table-1 microbenchmark loops (host CPU, k=8)", &["op", "ns/update"]);
@@ -72,4 +139,36 @@ fn main() {
         t2.row(vec![op.name(), f(r.ns_per_item())]);
     }
     t2.print();
+
+    // Streaming triad, scalar vs vectorized — the same loop pair whose
+    // measured gain feeds the heuristic tuner's simd-vs-scalar score.
+    let tn = if quick { 16 * 1024 } else { 1 << 20 };
+    let mut ta = vec![0.0; tn];
+    let mut tb = vec![0.0; tn];
+    let mut tc = vec![0.0; tn];
+    let mut trng = Rng::new(7);
+    trng.fill_f64(&mut tb, -1.0, 1.0);
+    trng.fill_f64(&mut tc, -1.0, 1.0);
+    let mut t3 = Table::new(
+        "streaming triad a = b + s*c: scalar vs vectorized",
+        &["variant", "MFlop/s", "ns/elem"],
+    );
+    let r = b.run("triad scalar", tn as u64, 2 * tn as u64, || {
+        triad_scalar(&mut ta, &tb, &tc, 1.000001);
+        ta[0]
+    });
+    println!("{}", r.summary());
+    t3.row(vec!["scalar".into(), f(r.mflops()), f(r.ns_per_item())]);
+    for visa in [IsaLevel::Avx2, IsaLevel::Avx512] {
+        if visa > isa {
+            continue;
+        }
+        let r = b.run(&format!("triad {}", visa.name()), tn as u64, 2 * tn as u64, || {
+            triad_isa(visa, &mut ta, &tb, &tc, 1.000001);
+            ta[0]
+        });
+        println!("{}", r.summary());
+        t3.row(vec![visa.name().into(), f(r.mflops()), f(r.ns_per_item())]);
+    }
+    t3.print();
 }

@@ -9,6 +9,7 @@
 use std::fmt::Write as _;
 
 use spmvperf::gen::{self, HolsteinHubbardParams};
+use spmvperf::kernels::Precision;
 use spmvperf::matrix::{Coo, Crs, Scheme};
 use spmvperf::sched::Schedule;
 use spmvperf::spmv::{BackendChoice, SpmvHandle};
@@ -33,16 +34,30 @@ fn main() {
         ("random-band", gen::random_band(band_n, 12, band_n / 8, &mut band_rng)),
     ];
 
-    let policies: Vec<(&str, TuningPolicy)> = vec![
+    // The -simd variants rerun a policy under the Tolerance contract: the
+    // tuner may then arbitrate vector kernels into the plan (Fixed binds
+    // the detected ISA ceiling directly). The default rows stay
+    // BitIdentical and therefore scalar.
+    let policies: Vec<(&str, TuningPolicy, Precision)> = vec![
         (
             "fixed-sellcs-32-256",
             TuningPolicy::Fixed(
                 Scheme::SellCs { c: 32, sigma: 256 },
                 Schedule::Static { chunk: None },
             ),
+            Precision::BitIdentical,
         ),
-        ("heuristic", TuningPolicy::Heuristic),
-        ("measured", TuningPolicy::Measured),
+        ("heuristic", TuningPolicy::Heuristic, Precision::BitIdentical),
+        ("measured", TuningPolicy::Measured, Precision::BitIdentical),
+        (
+            "fixed-sellcs-32-256-simd",
+            TuningPolicy::Fixed(
+                Scheme::SellCs { c: 32, sigma: 256 },
+                Schedule::Static { chunk: None },
+            ),
+            Precision::Tolerance(1e-12),
+        ),
+        ("measured-simd", TuningPolicy::Measured, Precision::Tolerance(1e-12)),
     ];
 
     let mut entries: Vec<String> = Vec::new();
@@ -64,11 +79,20 @@ fn main() {
 
         let mut t = Table::new(
             &format!("tuning policies on {mname} ({threads} threads)"),
-            &["policy", "picked", "schedule", "MFlop/s", "ns/nnz", "padding", "batch amort."],
+            &[
+                "policy",
+                "picked",
+                "schedule",
+                "isa",
+                "MFlop/s",
+                "ns/nnz",
+                "padding",
+                "batch amort.",
+            ],
         );
         let mut fixed_mflops = 0.0f64;
         let mut heuristic_mflops = 0.0f64;
-        for (pname, policy) in &policies {
+        for (pname, policy, precision) in &policies {
             // The native backend is forced: this bench isolates the
             // scheme/schedule tuning dimension (and the permuted hot
             // path exists only there); benches/backend_arbitration
@@ -78,6 +102,7 @@ fn main() {
                 .backend(BackendChoice::Native)
                 .threads(threads)
                 .quick(quick)
+                .precision(*precision)
                 .build()
                 .expect("tuned native handle");
             let kernel = ctx.kernel().expect("native backend has a kernel");
@@ -129,6 +154,7 @@ fn main() {
                 pname.to_string(),
                 ctx.scheme().name(),
                 ctx.schedule().name(),
+                ctx.kernel_isa().name().into(),
                 f(mflops),
                 f(r.ns_per_item()),
                 f(ctx.report().padding_overhead),
@@ -137,6 +163,7 @@ fn main() {
             entries.push(format!(
                 concat!(
                     "    {{\"matrix\": \"{}\", \"n\": {}, \"nnz\": {}, \"policy\": \"{}\", ",
+                    "\"precision\": \"{}\", \"isa\": \"{}\", ",
                     "\"scheme\": \"{}\", \"spec\": \"{}\", \"c\": {}, \"sigma\": {}, ",
                     "\"schedule\": \"{}\", \"threads\": {}, \"mflops\": {:.3}, ",
                     "\"ns_per_nnz\": {:.4}, \"padding_overhead\": {:.6}, ",
@@ -146,6 +173,8 @@ fn main() {
                 n,
                 kernel.nnz(),
                 pname,
+                ctx.precision().name(),
+                ctx.kernel_isa().name(),
                 ctx.scheme().name(),
                 ctx.scheme().spec(),
                 c,

@@ -29,7 +29,7 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
 use crate::eigen::LinearOp;
-use crate::kernels::{SpmvKernel, Workspace};
+use crate::kernels::{IsaLevel, SpmvKernel, Workspace};
 use crate::matrix::Scheme;
 use crate::sched::{assign, Assignment, Schedule};
 
@@ -375,6 +375,10 @@ pub struct SpmvPlan {
     /// engine threads (NUMA placement) rather than by the building
     /// thread.
     first_touched: bool,
+    /// ISA the range kernels dispatch at ([`SpmvKernel::spmv_rows_permuted_isa`]).
+    /// Defaults to `Scalar` (bit-identical); the tuner raises it only
+    /// under a `Tolerance` precision contract.
+    kernel_isa: IsaLevel,
 }
 
 impl SpmvPlan {
@@ -406,6 +410,7 @@ impl SpmvPlan {
             ranges,
             ws: Mutex::new(Workspace { xp: Vec::new(), yp: Vec::new() }),
             first_touched: false,
+            kernel_isa: IsaLevel::Scalar,
         }
     }
 
@@ -447,6 +452,22 @@ impl SpmvPlan {
         self.first_touched
     }
 
+    /// The ISA the range kernels dispatch at.
+    pub fn kernel_isa(&self) -> IsaLevel {
+        self.kernel_isa
+    }
+
+    /// Bind the range kernels to `isa`
+    /// ([`SpmvKernel::spmv_rows_permuted_isa`]). The caller owns the
+    /// numerical contract: anything above `Scalar` reorders/fuses FP
+    /// accumulation and must only be bound under
+    /// [`crate::kernels::Precision::Tolerance`], with `isa` at or below
+    /// [`IsaLevel::detect`]. Survives [`SpmvPlan::rebalance`] — the ISA
+    /// is a kernel property, not a partition property.
+    pub fn set_kernel_isa(&mut self, isa: IsaLevel) {
+        self.kernel_isa = isa;
+    }
+
     /// First-touch the plan's workspace under the current assignment and
     /// stream the kernel's own rows from each owner. Two engine passes:
     ///
@@ -466,6 +487,8 @@ impl SpmvPlan {
         let mut bufs = first_touch_buffers(engine, &self.ranges, self.nrows, 2);
         let mut yp = bufs.pop().expect("two buffers requested");
         let xp = bufs.pop().expect("two buffers requested");
+        // Scalar on purpose: the vector kernels touch the same
+        // val/col_idx pages, and placement runs before any ISA binding.
         engine.run_chunks(&self.ranges, &mut yp, |a, b, out| {
             kernel.spmv_rows_permuted(a, b, &xp, out);
         });
@@ -511,6 +534,7 @@ impl SpmvPlan {
             ranges,
             ws: Mutex::new(Workspace { xp: Vec::new(), yp: Vec::new() }),
             first_touched: false,
+            kernel_isa: IsaLevel::Scalar,
         }
     }
 
@@ -569,7 +593,7 @@ impl SpmvPlan {
         assert_eq!(xp.len(), self.nrows);
         assert_eq!(yp.len(), self.nrows);
         engine.run_chunks(&self.ranges, yp, |a, b, out| {
-            kernel.spmv_rows_permuted(a, b, xp, out);
+            kernel.spmv_rows_permuted_isa(self.kernel_isa, a, b, xp, out);
         });
     }
 
@@ -605,7 +629,7 @@ impl SpmvPlan {
             assert_eq!(yp.len(), self.nrows);
         }
         engine.run_chunks_batch(&self.ranges, yps, |bi, a, b, out| {
-            kernel.spmv_rows_permuted(a, b, &xps[bi], out);
+            kernel.spmv_rows_permuted_isa(self.kernel_isa, a, b, &xps[bi], out);
         });
     }
 
@@ -631,7 +655,7 @@ impl SpmvPlan {
         if kernel.perm().is_none() {
             self.check(engine, kernel);
             engine.run_chunks_batch(&self.ranges, &mut yps, |bi, a, b, out| {
-                kernel.spmv_rows_permuted(a, b, &xs[bi], out);
+                kernel.spmv_rows_permuted_isa(self.kernel_isa, a, b, &xs[bi], out);
             });
             return yps;
         }

@@ -16,6 +16,9 @@
 //! These run both as real host kernels (wall-clock) and as logical access
 //! streams through the memory-hierarchy simulator (the paper's machines).
 
+use std::sync::OnceLock;
+
+use crate::kernels::simd::{self, IsaLevel};
 use crate::util::rng::Rng;
 
 /// How the gather index vector is produced.
@@ -225,6 +228,90 @@ pub fn is_scp(a: &[f64], b: &[f64], ind: &[u32]) -> f64 {
     s
 }
 
+// ---------------------------------------------------------------------
+// Streaming triad, scalar vs vectorized — the ISA-gain microbenchmark.
+// The SpMV heuristic tier prices simd-vs-scalar candidates with the
+// measured ratio ([`cached_isa_gain`]), the same way the perf model's
+// cycles/nnz constants come from the Table-1 loops.
+// ---------------------------------------------------------------------
+
+/// `a[i] = b[i] + scale * c[i]`, scalar reference (the classic STREAM
+/// triad; compute-bound at the L1/L2-resident sizes used here).
+#[inline(never)]
+pub fn triad_scalar(a: &mut [f64], b: &[f64], c: &[f64], scale: f64) {
+    assert_eq!(a.len(), b.len());
+    assert_eq!(a.len(), c.len());
+    for i in 0..a.len() {
+        a[i] = b[i] + scale * c[i];
+    }
+}
+
+/// Vectorized triad at `isa` ([`crate::kernels::simd::triad`]); the
+/// `Scalar` level is the plain loop.
+#[inline(never)]
+pub fn triad_isa(isa: IsaLevel, a: &mut [f64], b: &[f64], c: &[f64], scale: f64) {
+    simd::triad(isa, a, b, c, scale);
+}
+
+/// Measure the scalar/vector triad throughput ratio at `isa` on this
+/// host. > 1.0 means the vector unit pays off; a machine where it does
+/// not reports < 1.0 and the tuner scores SIMD candidates accordingly.
+fn measure_triad_gain(isa: IsaLevel) -> f64 {
+    let n = 16 * 1024; // L1/L2 resident: per-core compute, not bandwidth
+    let mut rng = Rng::new(0x751AD);
+    let mut b = vec![0.0; n];
+    let mut c = vec![0.0; n];
+    rng.fill_f64(&mut b, -1.0, 1.0);
+    rng.fill_f64(&mut c, -1.0, 1.0);
+    let mut a = vec![0.0; n];
+    let reps = 50;
+    let mut time = |f: &mut dyn FnMut(&mut [f64])| -> f64 {
+        f(&mut a); // warmup
+        let mut best = f64::INFINITY;
+        for _ in 0..reps {
+            let t0 = std::time::Instant::now();
+            f(&mut a);
+            best = best.min(t0.elapsed().as_nanos() as f64);
+        }
+        std::hint::black_box(&a);
+        best
+    };
+    let scalar_ns = time(&mut |a| triad_scalar(a, &b, &c, 3.0));
+    let simd_ns = time(&mut |a| triad_isa(isa, a, &b, &c, 3.0));
+    let gain = scalar_ns / simd_ns;
+    if gain.is_finite() && gain > 0.0 {
+        gain
+    } else {
+        1.0
+    }
+}
+
+/// Cached per-process triad gain for `isa` — the heuristic tier's
+/// simd-vs-scalar score factor. Returns 1.0 for `Scalar` and for any
+/// level above [`IsaLevel::detect`] (never measured: running an
+/// undetected ISA would be UB).
+pub fn cached_isa_gain(isa: IsaLevel) -> f64 {
+    if isa == IsaLevel::Scalar || isa > IsaLevel::detect() {
+        return 1.0;
+    }
+    static GAINS: OnceLock<[f64; 2]> = OnceLock::new();
+    let gains = GAINS.get_or_init(|| {
+        [
+            measure_triad_gain(IsaLevel::Avx2),
+            if IsaLevel::detect() >= IsaLevel::Avx512 {
+                measure_triad_gain(IsaLevel::Avx512)
+            } else {
+                1.0
+            },
+        ]
+    });
+    match isa {
+        IsaLevel::Scalar => 1.0,
+        IsaLevel::Avx2 => gains[0],
+        IsaLevel::Avx512 => gains[1],
+    }
+}
+
 /// Pre-built buffers for running a microbenchmark repeatedly.
 pub struct MicroBuffers {
     pub a: Vec<f64>,
@@ -363,5 +450,48 @@ mod tests {
         assert_eq!(ind[0], 0);
         assert_eq!(ind[1], 530);
         assert_eq!(ind[2], 60); // 1060 % 1000
+    }
+
+    #[test]
+    fn triad_isa_matches_scalar_reference() {
+        let n = 1031; // prime: exercises every vector tail length
+        let mut rng = Rng::new(7);
+        let mut b = vec![0.0; n];
+        let mut c = vec![0.0; n];
+        rng.fill_f64(&mut b, -1.0, 1.0);
+        rng.fill_f64(&mut c, -1.0, 1.0);
+        let mut want = vec![0.0; n];
+        triad_scalar(&mut want, &b, &c, 3.0);
+        for isa in [IsaLevel::Scalar, IsaLevel::Avx2, IsaLevel::Avx512] {
+            if isa > IsaLevel::detect() {
+                continue;
+            }
+            let mut got = vec![0.0; n];
+            triad_isa(isa, &mut got, &b, &c, 3.0);
+            // The triad is one mul+add per element; FMA contraction can
+            // differ by at most one rounding of the product term.
+            for i in 0..n {
+                assert!(
+                    (got[i] - want[i]).abs() <= 1e-15 * want[i].abs().max(1.0),
+                    "isa {isa}: lane {i}: {} vs {}",
+                    got[i],
+                    want[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn isa_gain_is_cached_positive_and_scalar_neutral() {
+        assert_eq!(cached_isa_gain(IsaLevel::Scalar), 1.0);
+        for isa in [IsaLevel::Avx2, IsaLevel::Avx512] {
+            let g = cached_isa_gain(isa);
+            assert!(g.is_finite() && g > 0.0, "gain for {isa} was {g}");
+            // Cached: a second call must reproduce the first bit-exactly.
+            assert_eq!(cached_isa_gain(isa), g);
+            if isa > IsaLevel::detect() {
+                assert_eq!(g, 1.0, "undetected {isa} must be neutral");
+            }
+        }
     }
 }

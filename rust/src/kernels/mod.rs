@@ -1,8 +1,11 @@
-//! Compute kernels: the Table-1 microbenchmark loops ([`microbench`]) and
-//! the unified SpMV dispatch over all storage schemes ([`spmv`]).
+//! Compute kernels: the Table-1 microbenchmark loops ([`microbench`]),
+//! the unified SpMV dispatch over all storage schemes ([`spmv`]) and
+//! the runtime-ISA-dispatched vector kernels ([`simd`]).
 
 pub mod microbench;
+pub mod simd;
 pub mod spmv;
 
 pub use microbench::{build_index, table1_ops, IndexPattern, MicroBuffers, MicroOp, OpKind};
+pub use simd::{IsaLevel, KernelIsa, Precision};
 pub use spmv::{HalfKernel, ShardKernel, SpmvKernel, Workspace};

@@ -1,0 +1,719 @@
+//! Explicitly vectorized SpMV kernels behind runtime ISA detection.
+//!
+//! The paper's first performance limit is per-core kernel throughput,
+//! and SELL-C-σ exists precisely to feed wide SIMD units (Kreutzer et
+//! al., arXiv:1307.6209): a slice stores C rows column-major so one
+//! vector FMA advances C rows in lockstep. This module provides those
+//! kernels as `std::arch` intrinsics — a 4-lane AVX2+FMA path and an
+//! 8-lane path — selected at runtime by a cached [`IsaLevel`] probe,
+//! with the scalar loops in [`crate::matrix::SellCs`] /
+//! [`crate::matrix::Crs`] as the portable fallback.
+//!
+//! ## Why the 8-lane path is paired AVX2, not `_mm512_*`
+//!
+//! The AVX-512 intrinsics stabilized only in very recent Rust; this
+//! crate builds offline on whatever toolchain is present, so the
+//! [`IsaLevel::Avx512`] kernels are implemented as **two interleaved
+//! 256-bit AVX2+FMA streams** (stable since Rust 1.27). On an AVX-512
+//! machine that still widens the per-iteration accumulator group to 8
+//! lanes and doubles the in-flight FMAs — most of the benefit with none
+//! of the MSRV risk. Upgrading the bodies to `_mm512_*` is mechanical
+//! once the toolchain floor allows.
+//!
+//! ## Numerical contract
+//!
+//! Vector kernels are **not** bit-identical to the scalar loops:
+//!
+//! - FMA fuses multiply and add into one rounding where the scalar code
+//!   rounds twice;
+//! - the SELL group kernel iterates every lane to the group's widest
+//!   row, so shorter rows accumulate explicit `+ 0.0 · x[0]` padding
+//!   terms (which can flip a `-0.0` sum to `+0.0`, and assumes finite
+//!   `x`);
+//! - the CRS gather kernel folds a row into 4/8 partial sums and
+//!   reduces them at the end, reordering the row's additions.
+//!
+//! That is exactly why the [`Precision`] contract exists: the default
+//! [`Precision::BitIdentical`] excludes every kernel in this module
+//! from tuning candidacy, and [`Precision::Tolerance`] admits them with
+//! an explicit ε the caller chose. The tuning layer
+//! ([`crate::tune`]) arbitrates simd-vs-scalar per matrix like any
+//! other candidate and records the [`KernelIsa`] pick in its report.
+
+use std::sync::OnceLock;
+
+use anyhow::Result;
+
+use crate::matrix::{Crs, SellCs};
+
+/// Instruction-set level a kernel is dispatched at. Ordered: a level
+/// compares greater than every level it strictly extends.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum IsaLevel {
+    /// Portable scalar loops (the bit-identity reference).
+    Scalar,
+    /// 4-lane f64 vectors: AVX2 + FMA.
+    Avx2,
+    /// 8-lane f64 groups (paired AVX2 streams; see module docs).
+    Avx512,
+}
+
+/// The ISA a tuned kernel was bound to — recorded in
+/// [`crate::tune::TuningReport`]. Alias of [`IsaLevel`]; the report
+/// speaks of the *choice*, the probe speaks of the *capability*.
+pub type KernelIsa = IsaLevel;
+
+impl IsaLevel {
+    /// The host's best supported level, probed once per process via
+    /// CPUID (`is_x86_feature_detected!`) and cached.
+    pub fn detect() -> IsaLevel {
+        static DETECTED: OnceLock<IsaLevel> = OnceLock::new();
+        *DETECTED.get_or_init(|| {
+            #[cfg(target_arch = "x86_64")]
+            {
+                if std::is_x86_feature_detected!("avx2")
+                    && std::is_x86_feature_detected!("fma")
+                {
+                    if std::is_x86_feature_detected!("avx512f") {
+                        return IsaLevel::Avx512;
+                    }
+                    return IsaLevel::Avx2;
+                }
+            }
+            IsaLevel::Scalar
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            IsaLevel::Scalar => "scalar",
+            IsaLevel::Avx2 => "avx2",
+            IsaLevel::Avx512 => "avx512",
+        }
+    }
+
+    /// f64 lanes advanced per accumulator group.
+    pub fn lanes(&self) -> usize {
+        match self {
+            IsaLevel::Scalar => 1,
+            IsaLevel::Avx2 => 4,
+            IsaLevel::Avx512 => 8,
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "scalar" => Ok(IsaLevel::Scalar),
+            "avx2" => Ok(IsaLevel::Avx2),
+            "avx512" => Ok(IsaLevel::Avx512),
+            other => anyhow::bail!("unknown isa level '{other}' (scalar|avx2|avx512)"),
+        }
+    }
+}
+
+impl std::fmt::Display for IsaLevel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// The numerical contract a handle is built under.
+///
+/// - [`Precision::BitIdentical`] (the default): every result is bit for
+///   bit the serial CRS reference — the invariant the whole existing
+///   backend × scheme × schedule × pinning matrix asserts. SIMD kernels
+///   are excluded from tuning candidacy.
+/// - [`Precision::Tolerance`]`(ε)`: results may deviate from the serial
+///   CRS reference by reordered/fused floating-point accumulation, and
+///   the caller accepts error up to `ε` relative to the row's
+///   accumulation magnitude. SIMD kernels become ordinary tuning
+///   candidates.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Precision {
+    BitIdentical,
+    Tolerance(f64),
+}
+
+impl Default for Precision {
+    fn default() -> Self {
+        Precision::BitIdentical
+    }
+}
+
+impl Precision {
+    /// May the tuner consider vectorized (add-reordering) kernels?
+    pub fn allows_simd(&self) -> bool {
+        matches!(self, Precision::Tolerance(_))
+    }
+
+    /// The accepted relative error, when one was granted.
+    pub fn tolerance(&self) -> Option<f64> {
+        match self {
+            Precision::BitIdentical => None,
+            Precision::Tolerance(eps) => Some(*eps),
+        }
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            Precision::BitIdentical => "bit-identical".to_string(),
+            Precision::Tolerance(eps) => format!("tolerance({eps:.1e})"),
+        }
+    }
+
+    /// Parse a CLI spelling: `bit` / `bit-identical` / `bitidentical`,
+    /// `tol:<eps>`, or a bare float (meaning `Tolerance`).
+    pub fn parse(s: &str) -> Result<Self> {
+        let t = s.trim().to_ascii_lowercase();
+        match t.as_str() {
+            "bit" | "bit-identical" | "bitidentical" => return Ok(Precision::BitIdentical),
+            _ => {}
+        }
+        let eps_str = t.strip_prefix("tol:").unwrap_or(&t);
+        let eps: f64 = eps_str.parse().map_err(|_| {
+            anyhow::anyhow!("bad --precision '{s}' (bit | tol:<eps> | <eps>)")
+        })?;
+        anyhow::ensure!(
+            eps.is_finite() && eps > 0.0,
+            "--precision tolerance must be a positive finite number, got {eps}"
+        );
+        Ok(Precision::Tolerance(eps))
+    }
+}
+
+/// Largest vector length the 32-bit gather index can address.
+#[inline]
+fn gather_indexable(len: usize) -> bool {
+    len <= i32::MAX as usize
+}
+
+/// Vectorized SELL-C-σ range kernel: permuted rows `[row_begin,
+/// row_end)` into `out[i - row_begin]`, same contract as
+/// [`SellCs::spmv_rows_permuted`]. Falls back to the scalar loop for
+/// `IsaLevel::Scalar`, off x86_64, for partial lane groups and for
+/// matrices too large for 32-bit gather indices.
+///
+/// Callers must not pass an `isa` above [`IsaLevel::detect`] — the
+/// dispatch layers ([`crate::kernels::SpmvKernel`], the tuner) only
+/// ever hand down the detected level.
+pub fn sell_rows_permuted(
+    isa: IsaLevel,
+    m: &SellCs,
+    row_begin: usize,
+    row_end: usize,
+    xp: &[f64],
+    out: &mut [f64],
+) {
+    #[cfg(target_arch = "x86_64")]
+    if isa > IsaLevel::Scalar && gather_indexable(xp.len()) {
+        x86::sell_rows(isa, m, row_begin, row_end, xp, out);
+        return;
+    }
+    let _ = isa;
+    m.spmv_rows_permuted(row_begin, row_end, xp, out);
+}
+
+/// Vectorized CRS range kernel: rows `[row_begin, row_end)` into
+/// `out[i - row_begin]`, same contract as [`Crs::spmv_rows_into`].
+/// Each row is folded into 4 (`Avx2`) or 8 (`Avx512`) gather-FMA
+/// partial sums and reduced at the end. Fallback rules as
+/// [`sell_rows_permuted`].
+pub fn crs_rows_into(
+    isa: IsaLevel,
+    m: &Crs,
+    row_begin: usize,
+    row_end: usize,
+    x: &[f64],
+    out: &mut [f64],
+) {
+    #[cfg(target_arch = "x86_64")]
+    if isa > IsaLevel::Scalar && gather_indexable(x.len()) {
+        x86::crs_rows(isa, m, row_begin, row_end, x, out);
+        return;
+    }
+    let _ = isa;
+    m.spmv_rows_into(row_begin, row_end, x, out);
+}
+
+/// Vectorized streaming triad `a[i] = b[i] + scale * c[i]` — the
+/// microbenchmark counterpart ([`crate::kernels::microbench`]) that
+/// lets the tuner's heuristic price the ISA gain on this host.
+pub fn triad(isa: IsaLevel, a: &mut [f64], b: &[f64], c: &[f64], scale: f64) {
+    assert_eq!(a.len(), b.len());
+    assert_eq!(a.len(), c.len());
+    #[cfg(target_arch = "x86_64")]
+    if isa > IsaLevel::Scalar {
+        // SAFETY: `isa > Scalar` is only reachable when IsaLevel::detect()
+        // reported AVX2+FMA support on this CPU (caller contract), which
+        // is exactly what the target_feature attribute requires.
+        unsafe { x86::triad_avx2(a, b, c, scale) };
+        return;
+    }
+    let _ = isa;
+    for i in 0..a.len() {
+        a[i] = b[i] + scale * c[i];
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    //! The intrinsics bodies. Everything here is gated on the caller
+    //! having verified AVX2+FMA support via [`IsaLevel::detect`].
+
+    use std::arch::x86_64::{
+        __m128i, __m256d, _mm256_add_pd, _mm256_castpd256_pd128, _mm256_extractf128_pd,
+        _mm256_fmadd_pd, _mm256_i32gather_pd, _mm256_loadu_pd, _mm256_set1_pd,
+        _mm256_setzero_pd, _mm256_storeu_pd, _mm_add_pd, _mm_add_sd, _mm_cvtsd_f64,
+        _mm_loadu_si128, _mm_unpackhi_pd,
+    };
+
+    use super::IsaLevel;
+    use crate::matrix::{Crs, SellCs};
+
+    /// Widest row (in non-zeros) of a lane group — the shared trip
+    /// count; shorter lanes ride through their zero padding.
+    #[inline]
+    fn group_width(row_nnz: &[u32]) -> usize {
+        row_nnz.iter().copied().max().unwrap_or(0) as usize
+    }
+
+    pub fn sell_rows(
+        isa: IsaLevel,
+        m: &SellCs,
+        row_begin: usize,
+        row_end: usize,
+        xp: &[f64],
+        out: &mut [f64],
+    ) {
+        debug_assert!(row_end <= m.nrows);
+        debug_assert_eq!(out.len(), row_end - row_begin);
+        let mut i = row_begin;
+        while i < row_end {
+            let s = i / m.c;
+            let (lo, hi) = m.slice_rows(s);
+            let h = hi - lo;
+            let base = m.slice_ptr[s];
+            let stop = hi.min(row_end);
+            if isa >= IsaLevel::Avx512 {
+                while i + 8 <= stop {
+                    let w = group_width(&m.row_nnz[i..i + 8]);
+                    let o = i - row_begin;
+                    // SAFETY: the dispatch contract guarantees the CPU
+                    // supports AVX2+FMA (IsaLevel::detect() bounded
+                    // `isa`); lane bounds are argued at the callee.
+                    unsafe {
+                        sell_lane8(
+                            &m.val,
+                            &m.col_idx,
+                            xp,
+                            base,
+                            h,
+                            i - lo,
+                            w,
+                            &mut out[o..o + 8],
+                        )
+                    };
+                    i += 8;
+                }
+            }
+            while i + 4 <= stop {
+                let w = group_width(&m.row_nnz[i..i + 4]);
+                let o = i - row_begin;
+                // SAFETY: as above — CPU support established by detect(),
+                // in-bounds access argued at the callee.
+                unsafe {
+                    sell_lane4(&m.val, &m.col_idx, xp, base, h, i - lo, w, &mut out[o..o + 4])
+                };
+                i += 4;
+            }
+            if i < stop {
+                // Partial group at the slice (or range) edge: scalar.
+                m.spmv_rows_permuted(i, stop, xp, &mut out[i - row_begin..stop - row_begin]);
+                i = stop;
+            }
+        }
+    }
+
+    /// One 4-lane SELL accumulator group: lanes `lane..lane+4` of a
+    /// slice at `base` with height `h`, iterated to width `w`.
+    ///
+    /// In-bounds argument (holds for every call from [`sell_rows`]):
+    /// `lane + 4 <= h` (the group lies inside the slice) and `w <=
+    /// slice_width[s]`, so every touched index `base + k*h + lane + t`
+    /// (`k < w`, `t < 4`) is below `slice_ptr[s+1] <= val.len()`; and
+    /// `col_idx` entries are permuted column ids `< xp.len()`.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    #[allow(clippy::too_many_arguments)]
+    unsafe fn sell_lane4(
+        val: &[f64],
+        col: &[u32],
+        xp: &[f64],
+        base: usize,
+        h: usize,
+        lane: usize,
+        w: usize,
+        out: &mut [f64],
+    ) {
+        let mut acc = _mm256_setzero_pd();
+        for k in 0..w {
+            let idx = base + k * h + lane;
+            // SAFETY: idx + 3 < val.len() and col[idx..idx+4] < xp.len()
+            // per the function-level in-bounds argument.
+            let v = _mm256_loadu_pd(val.as_ptr().add(idx));
+            let ci = _mm_loadu_si128(col.as_ptr().add(idx) as *const __m128i);
+            let xv = _mm256_i32gather_pd::<8>(xp.as_ptr(), ci);
+            acc = _mm256_fmadd_pd(v, xv, acc);
+        }
+        _mm256_storeu_pd(out.as_mut_ptr(), acc);
+    }
+
+    /// One 8-lane SELL group as two interleaved 256-bit streams (the
+    /// `Avx512` level; see module docs). Requires `lane + 8 <= h`; the
+    /// in-bounds argument of [`sell_lane4`] applies to both streams.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    #[allow(clippy::too_many_arguments)]
+    unsafe fn sell_lane8(
+        val: &[f64],
+        col: &[u32],
+        xp: &[f64],
+        base: usize,
+        h: usize,
+        lane: usize,
+        w: usize,
+        out: &mut [f64],
+    ) {
+        let mut acc0 = _mm256_setzero_pd();
+        let mut acc1 = _mm256_setzero_pd();
+        for k in 0..w {
+            let idx = base + k * h + lane;
+            // SAFETY: idx + 7 < val.len() and col[idx..idx+8] < xp.len()
+            // per the function-level in-bounds argument.
+            let v0 = _mm256_loadu_pd(val.as_ptr().add(idx));
+            let v1 = _mm256_loadu_pd(val.as_ptr().add(idx + 4));
+            let c0 = _mm_loadu_si128(col.as_ptr().add(idx) as *const __m128i);
+            let c1 = _mm_loadu_si128(col.as_ptr().add(idx + 4) as *const __m128i);
+            let x0 = _mm256_i32gather_pd::<8>(xp.as_ptr(), c0);
+            let x1 = _mm256_i32gather_pd::<8>(xp.as_ptr(), c1);
+            acc0 = _mm256_fmadd_pd(v0, x0, acc0);
+            acc1 = _mm256_fmadd_pd(v1, x1, acc1);
+        }
+        _mm256_storeu_pd(out.as_mut_ptr(), acc0);
+        _mm256_storeu_pd(out.as_mut_ptr().add(4), acc1);
+    }
+
+    pub fn crs_rows(
+        isa: IsaLevel,
+        m: &Crs,
+        row_begin: usize,
+        row_end: usize,
+        x: &[f64],
+        out: &mut [f64],
+    ) {
+        debug_assert_eq!(out.len(), row_end - row_begin);
+        for i in row_begin..row_end {
+            let (a, b) = (m.row_ptr[i], m.row_ptr[i + 1]);
+            let (val, col) = (&m.val[a..b], &m.col_idx[a..b]);
+            // SAFETY: CPU support established by detect() per the
+            // dispatch contract; the callee only touches val/col in
+            // bounds and gathers x at column ids < x.len().
+            out[i - row_begin] = if isa >= IsaLevel::Avx512 {
+                unsafe { crs_row8(val, col, x) }
+            } else {
+                unsafe { crs_row4(val, col, x) }
+            };
+        }
+    }
+
+    /// Horizontal sum of a 4-lane accumulator.
+    #[target_feature(enable = "avx2")]
+    unsafe fn hsum4(v: __m256d) -> f64 {
+        let hi = _mm256_extractf128_pd::<1>(v);
+        let lo = _mm256_castpd256_pd128(v);
+        let s = _mm_add_pd(lo, hi);
+        let shuf = _mm_unpackhi_pd(s, s);
+        _mm_cvtsd_f64(_mm_add_sd(s, shuf))
+    }
+
+    /// One CRS row as 4 gather-FMA partial sums + scalar tail.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    unsafe fn crs_row4(val: &[f64], col: &[u32], x: &[f64]) -> f64 {
+        let n = val.len();
+        let n4 = n & !3;
+        let mut acc = _mm256_setzero_pd();
+        let mut j = 0;
+        while j < n4 {
+            // SAFETY: j + 3 < n4 <= val.len() == col.len(); col entries
+            // are validated column ids < x.len().
+            let v = _mm256_loadu_pd(val.as_ptr().add(j));
+            let ci = _mm_loadu_si128(col.as_ptr().add(j) as *const __m128i);
+            let xv = _mm256_i32gather_pd::<8>(x.as_ptr(), ci);
+            acc = _mm256_fmadd_pd(v, xv, acc);
+            j += 4;
+        }
+        let mut s = hsum4(acc);
+        while j < n {
+            s += val[j] * x[col[j] as usize];
+            j += 1;
+        }
+        s
+    }
+
+    /// One CRS row as 8 partial sums in two 256-bit streams + tail.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    unsafe fn crs_row8(val: &[f64], col: &[u32], x: &[f64]) -> f64 {
+        let n = val.len();
+        let n8 = n & !7;
+        let mut acc0 = _mm256_setzero_pd();
+        let mut acc1 = _mm256_setzero_pd();
+        let mut j = 0;
+        while j < n8 {
+            // SAFETY: j + 7 < n8 <= val.len() == col.len(); col entries
+            // are validated column ids < x.len().
+            let v0 = _mm256_loadu_pd(val.as_ptr().add(j));
+            let v1 = _mm256_loadu_pd(val.as_ptr().add(j + 4));
+            let c0 = _mm_loadu_si128(col.as_ptr().add(j) as *const __m128i);
+            let c1 = _mm_loadu_si128(col.as_ptr().add(j + 4) as *const __m128i);
+            acc0 = _mm256_fmadd_pd(v0, _mm256_i32gather_pd::<8>(x.as_ptr(), c0), acc0);
+            acc1 = _mm256_fmadd_pd(v1, _mm256_i32gather_pd::<8>(x.as_ptr(), c1), acc1);
+            j += 8;
+        }
+        let mut s = hsum4(_mm256_add_pd(acc0, acc1));
+        while j < n {
+            s += val[j] * x[col[j] as usize];
+            j += 1;
+        }
+        s
+    }
+
+    /// Streaming triad `a[i] = b[i] + scale * c[i]`, 4 lanes per FMA.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn triad_avx2(a: &mut [f64], b: &[f64], c: &[f64], scale: f64) {
+        let n = a.len();
+        let n4 = n & !3;
+        let s = _mm256_set1_pd(scale);
+        let mut j = 0;
+        while j < n4 {
+            // SAFETY: j + 3 < n4 <= a.len() == b.len() == c.len()
+            // (asserted by the safe wrapper).
+            let bv = _mm256_loadu_pd(b.as_ptr().add(j));
+            let cv = _mm256_loadu_pd(c.as_ptr().add(j));
+            _mm256_storeu_pd(a.as_mut_ptr().add(j), _mm256_fmadd_pd(s, cv, bv));
+            j += 4;
+        }
+        while j < n {
+            a[j] = b[j] + scale * c[j];
+            j += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::Coo;
+    use crate::util::rng::Rng;
+
+    fn random_crs(rng: &mut Rng, n: usize, nnz: usize) -> Crs {
+        let mut coo = Coo::new(n, n);
+        for _ in 0..nnz {
+            coo.push(rng.index(n), rng.index(n), rng.f64() * 2.0 - 1.0);
+        }
+        coo.normalize();
+        Crs::from_coo(&coo)
+    }
+
+    /// Per-row relative comparison: |got - want| ≤ ε · max(1, Σ|aᵢxᵢ|).
+    fn assert_rows_close(crs: &Crs, x: &[f64], want: &[f64], got: &[f64], eps: f64, tag: &str) {
+        for i in 0..crs.nrows {
+            let scale: f64 = crs
+                .row(i)
+                .0
+                .iter()
+                .zip(crs.row(i).1)
+                .map(|(&c, &v)| (v * x[c as usize]).abs())
+                .sum();
+            let bound = eps * scale.max(1.0);
+            assert!(
+                (want[i] - got[i]).abs() <= bound,
+                "{tag}: row {i} off by {} (bound {bound})",
+                (want[i] - got[i]).abs()
+            );
+        }
+    }
+
+    #[test]
+    fn detect_is_cached_and_stable() {
+        let a = IsaLevel::detect();
+        let b = IsaLevel::detect();
+        assert_eq!(a, b);
+        assert!(a.lanes() >= 1);
+    }
+
+    #[test]
+    fn isa_level_orders_and_parses() {
+        assert!(IsaLevel::Scalar < IsaLevel::Avx2);
+        assert!(IsaLevel::Avx2 < IsaLevel::Avx512);
+        for l in [IsaLevel::Scalar, IsaLevel::Avx2, IsaLevel::Avx512] {
+            assert_eq!(IsaLevel::parse(l.name()).unwrap(), l);
+        }
+        assert!(IsaLevel::parse("sse9").is_err());
+    }
+
+    #[test]
+    fn precision_contract_semantics() {
+        assert_eq!(Precision::default(), Precision::BitIdentical);
+        assert!(!Precision::BitIdentical.allows_simd());
+        assert!(Precision::Tolerance(1e-12).allows_simd());
+        assert_eq!(Precision::Tolerance(1e-12).tolerance(), Some(1e-12));
+        assert_eq!(Precision::BitIdentical.tolerance(), None);
+        assert_eq!(Precision::parse("bit").unwrap(), Precision::BitIdentical);
+        assert_eq!(Precision::parse("bit-identical").unwrap(), Precision::BitIdentical);
+        assert_eq!(Precision::parse("tol:1e-12").unwrap(), Precision::Tolerance(1e-12));
+        assert_eq!(Precision::parse("1e-10").unwrap(), Precision::Tolerance(1e-10));
+        assert!(Precision::parse("-1.0").is_err());
+        assert!(Precision::parse("wat").is_err());
+    }
+
+    #[test]
+    fn scalar_level_is_bit_identical_passthrough() {
+        let mut rng = Rng::new(50);
+        let n = 130;
+        let crs = random_crs(&mut rng, n, n * 6);
+        let sell = SellCs::from_crs(&crs, 8, 64);
+        let mut xp = vec![0.0; n];
+        rng.fill_f64(&mut xp, -1.0, 1.0);
+        let mut want = vec![0.0; n];
+        sell.spmv_rows_permuted(0, n, &xp, &mut want);
+        let mut got = vec![0.0; n];
+        sell_rows_permuted(IsaLevel::Scalar, &sell, 0, n, &xp, &mut got);
+        assert_eq!(want, got, "Scalar level must be the exact scalar loop");
+        let mut want = vec![0.0; n];
+        crs.spmv_rows_into(0, n, &xp, &mut want);
+        let mut got = vec![0.0; n];
+        crs_rows_into(IsaLevel::Scalar, &crs, 0, n, &xp, &mut got);
+        assert_eq!(want, got);
+    }
+
+    /// SIMD SELL and CRS kernels agree with the scalar loops within a
+    /// tight relative ε over a C grid and ragged row ranges. Skips
+    /// silently on hosts without AVX2 (the only honest option: running
+    /// an undetected ISA would be UB).
+    #[test]
+    fn simd_kernels_match_scalar_within_eps() {
+        let host = IsaLevel::detect();
+        if host == IsaLevel::Scalar {
+            return;
+        }
+        let mut rng = Rng::new(51);
+        let n = 173; // not a multiple of any lane width
+        let crs = random_crs(&mut rng, n, n * 7);
+        let mut xp = vec![0.0; n];
+        rng.fill_f64(&mut xp, -1.0, 1.0);
+        for isa in [IsaLevel::Avx2, IsaLevel::Avx512] {
+            if isa > host {
+                continue;
+            }
+            let mut want = vec![0.0; n];
+            crs.spmv_rows_into(0, n, &xp, &mut want);
+            let mut got = vec![0.0; n];
+            crs_rows_into(isa, &crs, 0, n, &xp, &mut got);
+            assert_rows_close(&crs, &xp, &want, &got, 1e-13, &format!("crs {isa}"));
+            for (c, sigma) in [(1, 1), (4, 16), (8, 64), (16, 16), (32, 173), (64, 1000)] {
+                let sell = SellCs::from_crs(&crs, c, sigma);
+                let mut want = vec![0.0; n];
+                sell.spmv_rows_permuted(0, n, &xp, &mut want);
+                let mut got = vec![0.0; n];
+                sell_rows_permuted(isa, &sell, 0, n, &xp, &mut got);
+                let d: f64 = want
+                    .iter()
+                    .zip(&got)
+                    .map(|(a, b)| (a - b).abs())
+                    .fold(0.0, f64::max);
+                assert!(d <= 1e-12, "sell {c}/{sigma} {isa}: max diff {d}");
+                // Ragged piecewise dispatch (partial lane groups at
+                // every cut) agrees with the one-shot pass exactly.
+                let mut pieced = vec![0.0; n];
+                for (a, b) in [(0usize, 3usize), (3, 62), (62, 65), (65, n)] {
+                    let (head, _) = pieced.split_at_mut(b);
+                    sell_rows_permuted(isa, &sell, a, b, &xp, &mut head[a..]);
+                }
+                assert_eq!(pieced, got, "sell {c}/{sigma} {isa}: piecewise deviates");
+            }
+        }
+    }
+
+    /// Cancellation probe: rows built from ±1e16 pairs that cancel to
+    /// O(1). The SIMD result must stay within ε of the scalar result
+    /// *relative to the accumulation magnitude* (~1e16) — the exact
+    /// semantics [`Precision::Tolerance`] promises.
+    #[test]
+    fn cancellation_probe_stays_within_relative_eps() {
+        let host = IsaLevel::detect();
+        if host == IsaLevel::Scalar {
+            return;
+        }
+        let n = 64;
+        let mut coo = Coo::new(n, n);
+        let mut rng = Rng::new(52);
+        for i in 0..n {
+            // A near-cancelling pair plus small entries.
+            let big = 1e16 * (1.0 + rng.f64());
+            coo.push(i, (i + 1) % n, big);
+            coo.push(i, (i + 2) % n, -big);
+            for _ in 0..5 {
+                coo.push(i, rng.index(n), rng.f64() * 2.0 - 1.0);
+            }
+        }
+        coo.normalize();
+        let crs = Crs::from_coo(&coo);
+        let mut x = vec![0.0; n];
+        rng.fill_f64(&mut x, 0.5, 1.5);
+        let mut want = vec![0.0; n];
+        crs.spmv_rows_into(0, n, &x, &mut want);
+        for isa in [IsaLevel::Avx2, IsaLevel::Avx512] {
+            if isa > host {
+                continue;
+            }
+            let mut got = vec![0.0; n];
+            crs_rows_into(isa, &crs, 0, n, &x, &mut got);
+            assert_rows_close(&crs, &x, &want, &got, 1e-14, &format!("cancel crs {isa}"));
+            let sell = SellCs::from_crs(&crs, 8, 32);
+            let xp = sell.permute_vec(&x);
+            let mut wantp = vec![0.0; n];
+            sell.spmv_rows_permuted(0, n, &xp, &mut wantp);
+            let mut gotp = vec![0.0; n];
+            sell_rows_permuted(isa, &sell, 0, n, &xp, &mut gotp);
+            for i in 0..n {
+                assert!(
+                    (wantp[i] - gotp[i]).abs() <= 1e-14 * 1e17,
+                    "cancel sell {isa}: row {i} off by {}",
+                    (wantp[i] - gotp[i]).abs()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn triad_matches_scalar_reference() {
+        let host = IsaLevel::detect();
+        let n = 1027;
+        let mut rng = Rng::new(53);
+        let mut b = vec![0.0; n];
+        let mut c = vec![0.0; n];
+        rng.fill_f64(&mut b, -1.0, 1.0);
+        rng.fill_f64(&mut c, -1.0, 1.0);
+        let mut want = vec![0.0; n];
+        triad(IsaLevel::Scalar, &mut want, &b, &c, 3.25);
+        for i in 0..n {
+            assert_eq!(want[i], b[i] + 3.25 * c[i]);
+        }
+        if host > IsaLevel::Scalar {
+            let mut got = vec![0.0; n];
+            triad(host, &mut got, &b, &c, 3.25);
+            for i in 0..n {
+                // FMA may round differently from mul+add; stay relative.
+                assert!((want[i] - got[i]).abs() <= 1e-15 * want[i].abs().max(1.0));
+            }
+        }
+    }
+}

@@ -9,6 +9,7 @@
 //! restricted kernels reproduce the serial kernels' per-row accumulation
 //! order, so partitioned execution is bit-compatible with serial runs.
 
+use crate::kernels::simd::{self, IsaLevel};
 use crate::matrix::jds::SpmvVisitor;
 use crate::matrix::{Coo, Crs, Jds, RbJds, Scheme, SellCs, SoJds, SpMv};
 
@@ -180,6 +181,51 @@ impl SpmvKernel {
             SpmvKernel::Rb(m) => m.spmv_rows_permuted(row_begin, row_end, xp, out),
             SpmvKernel::So(m) => m.spmv_rows_permuted(row_begin, row_end, xp, out),
             SpmvKernel::Sell(m) => m.spmv_rows_permuted(row_begin, row_end, xp, out),
+        }
+    }
+
+    /// ISA-dispatched variant of [`Self::spmv_rows_permuted`]: CRS and
+    /// SELL-C-σ rows route to the vector kernels of
+    /// [`crate::kernels::simd`] when `isa` is above
+    /// [`IsaLevel::Scalar`]; every other scheme (and the `Scalar`
+    /// level) runs the exact scalar loops. Callers must not pass an
+    /// `isa` above [`IsaLevel::detect`] — the tuner only binds detected
+    /// levels, and only under [`simd::Precision::Tolerance`].
+    #[inline]
+    pub fn spmv_rows_permuted_isa(
+        &self,
+        isa: IsaLevel,
+        row_begin: usize,
+        row_end: usize,
+        xp: &[f64],
+        out: &mut [f64],
+    ) {
+        match (self, isa) {
+            (_, IsaLevel::Scalar) => self.spmv_rows_permuted(row_begin, row_end, xp, out),
+            (SpmvKernel::Crs(m), _) => simd::crs_rows_into(isa, m, row_begin, row_end, xp, out),
+            (SpmvKernel::Sell(m), _) => {
+                simd::sell_rows_permuted(isa, m, row_begin, row_end, xp, out)
+            }
+            _ => self.spmv_rows_permuted(row_begin, row_end, xp, out),
+        }
+    }
+
+    /// Does this kernel have a vector path at `isa` (i.e. does
+    /// [`Self::spmv_rows_permuted_isa`] differ from the scalar loop)?
+    pub fn has_simd_path(&self, isa: IsaLevel) -> bool {
+        isa > IsaLevel::Scalar && matches!(self, SpmvKernel::Crs(_) | SpmvKernel::Sell(_))
+    }
+
+    /// ISA-dispatched hot path: [`Self::spmv_hot`] semantics with the
+    /// vector kernels where the scheme has one.
+    #[inline]
+    pub fn spmv_hot_isa(&self, isa: IsaLevel, ws: &mut Workspace) {
+        if self.has_simd_path(isa) {
+            let n = self.nrows();
+            let Workspace { xp, yp } = ws;
+            self.spmv_rows_permuted_isa(isa, 0, n, xp, yp);
+        } else {
+            self.spmv_hot(ws);
         }
     }
 
@@ -429,6 +475,47 @@ mod tests {
                 max_abs_diff(&ws.yp, &pieced),
                 0.0,
                 "scheme {scheme}: restricted kernel deviates from serial"
+            );
+        }
+    }
+
+    /// ISSUE-6 tentpole: the ISA-dispatched range kernel is the exact
+    /// scalar loop at `Scalar` (bit identity preserved for every
+    /// scheme), and within a tight relative ε at the detected level.
+    #[test]
+    fn isa_dispatch_preserves_scalar_and_bounds_simd() {
+        let mut rng = Rng::new(39);
+        let n = 167;
+        let coo = random_coo(&mut rng, n, n * 6);
+        let host = IsaLevel::detect();
+        for scheme in Scheme::all_extended(16, 3, 8, 32) {
+            let k = SpmvKernel::build(&coo, scheme);
+            let mut x = vec![0.0; n];
+            rng.fill_f64(&mut x, -1.0, 1.0);
+            let mut ws = k.workspace(&x);
+            k.spmv_hot(&mut ws);
+            let mut scalar = vec![0.0; n];
+            k.spmv_rows_permuted_isa(IsaLevel::Scalar, 0, n, &ws.xp, &mut scalar);
+            assert_eq!(
+                max_abs_diff(&ws.yp, &scalar),
+                0.0,
+                "scheme {scheme}: Scalar isa deviates from the scalar loop"
+            );
+            if host > IsaLevel::Scalar {
+                let mut vec_out = vec![0.0; n];
+                k.spmv_rows_permuted_isa(host, 0, n, &ws.xp, &mut vec_out);
+                assert!(
+                    max_abs_diff(&ws.yp, &vec_out) < 1e-10,
+                    "scheme {scheme}: {host} isa out of tolerance"
+                );
+                let mut ws2 = k.workspace(&x);
+                k.spmv_hot_isa(host, &mut ws2);
+                assert_eq!(max_abs_diff(&ws2.yp, &vec_out), 0.0, "hot isa path deviates");
+            }
+            assert_eq!(
+                k.has_simd_path(IsaLevel::Avx2),
+                matches!(scheme, Scheme::Crs | Scheme::SellCs { .. }),
+                "scheme {scheme}"
             );
         }
     }

@@ -21,6 +21,7 @@
 
 use super::jds::SpmvVisitor;
 use super::{Coo, Crs, SpMv};
+use crate::util::alloc::AlignedVec;
 
 /// A matrix in SELL-C-σ storage.
 #[derive(Debug, Clone)]
@@ -42,9 +43,12 @@ pub struct SellCs {
     /// Non-zeros per permuted row (distinguishes entries from padding).
     pub row_nnz: Vec<u32>,
     /// Column indices in the permuted basis; padding slots hold 0.
-    pub col_idx: Vec<u32>,
-    /// Values; padding slots hold 0.0.
-    pub val: Vec<f64>,
+    /// 64-byte-aligned so SIMD lane groups start on a cache-line /
+    /// full-vector boundary ([`crate::kernels::simd`]); the kernels
+    /// still use unaligned-tolerant loads (partial slices offset them).
+    pub col_idx: AlignedVec<u32>,
+    /// Values; padding slots hold 0.0. Aligned like `col_idx`.
+    pub val: AlignedVec<f64>,
     nnz: usize,
 }
 
@@ -125,8 +129,8 @@ impl SellCs {
             slice_ptr,
             slice_width,
             row_nnz,
-            col_idx,
-            val,
+            col_idx: AlignedVec::from(col_idx),
+            val: AlignedVec::from(val),
             nnz: crs.nnz(),
         }
     }
@@ -537,6 +541,18 @@ mod tests {
             sell.spmv_rows_permuted(a, b, &xp, &mut head[a..]);
         }
         assert_eq!(max_abs_diff(&full, &pieced), 0.0, "must be bit-identical");
+    }
+
+    /// ISSUE-6 tentpole: slice storage starts on a 64-byte boundary so
+    /// vector kernels stream it cache-line-aligned.
+    #[test]
+    fn sell_storage_is_simd_aligned() {
+        let mut rng = Rng::new(48);
+        let crs = random_square(&mut rng, 100, 600);
+        let sell = SellCs::from_crs(&crs, 8, 32);
+        let a = crate::util::alloc::SIMD_ALIGN;
+        assert_eq!(sell.val.as_ptr() as usize % a, 0);
+        assert_eq!(sell.col_idx.as_ptr() as usize % a, 0);
     }
 
     #[test]

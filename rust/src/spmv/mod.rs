@@ -43,7 +43,7 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::engine::SpmvPlan;
-use crate::kernels::SpmvKernel;
+use crate::kernels::{IsaLevel, Precision, SpmvKernel};
 use crate::matrix::shard::ShardedCrs;
 use crate::matrix::{Coo, Crs, Scheme, SpMv};
 use crate::perfmodel::predict;
@@ -385,6 +385,18 @@ impl SpmvHandle {
         self.backend.pinned()
     }
 
+    /// The numerical contract the handle was built under.
+    pub fn precision(&self) -> Precision {
+        self.report().precision
+    }
+
+    /// The instruction-set level the serving kernels execute at —
+    /// `Scalar` unless the [`Precision`] contract admitted vector
+    /// kernels and the tuner bound one.
+    pub fn kernel_isa(&self) -> IsaLevel {
+        self.report().kernel_isa
+    }
+
     /// Shard count (1 for unsharded backends).
     pub fn n_shards(&self) -> usize {
         self.backend.n_shards()
@@ -476,6 +488,7 @@ pub struct SpmvBuilder<'a> {
     quick: bool,
     pinned: bool,
     cv_threshold: Option<f64>,
+    precision: Precision,
 }
 
 impl<'a> SpmvBuilder<'a> {
@@ -490,6 +503,7 @@ impl<'a> SpmvBuilder<'a> {
             quick: false,
             pinned: false,
             cv_threshold: None,
+            precision: Precision::default(),
         }
     }
 
@@ -549,6 +563,19 @@ impl<'a> SpmvBuilder<'a> {
         self
     }
 
+    /// Numerical contract for the kernels the tuner may bind (default:
+    /// [`Precision::BitIdentical`] — scalar-only candidates, results
+    /// bit-identical to the chosen scheme's serial kernel, exactly the
+    /// pre-SIMD behavior). [`Precision::Tolerance`] additionally admits
+    /// the runtime-detected vector kernels ([`IsaLevel`]), whose FMA
+    /// contraction and grouped accumulation may differ from scalar in
+    /// the low-order bits; the tuner then arbitrates simd-vs-scalar per
+    /// matrix and records the bound level in the [`TuningReport`].
+    pub fn precision(mut self, precision: Precision) -> Self {
+        self.precision = precision;
+        self
+    }
+
     /// Run the tuning policy, arbitrate (or force) the backend, and
     /// bind the handle. Errors on non-square matrices and on a shard
     /// policy combined with a non-sharded forced backend.
@@ -563,6 +590,7 @@ impl<'a> SpmvBuilder<'a> {
             quick,
             pinned,
             cv_threshold,
+            precision,
         } = self;
         let crs: &Crs = &crs;
         anyhow::ensure!(
@@ -587,6 +615,7 @@ impl<'a> SpmvBuilder<'a> {
             quick,
             pinned,
             cv_threshold,
+            precision,
         };
         let (mut backend_box, decision, rationale): (Box<dyn Backend>, _, _) = match backend {
             BackendChoice::Serial => {
@@ -649,6 +678,13 @@ fn serial_from_context(ctx: &SpmvContext, pin_requested: bool, note: &str) -> Se
     report.n_threads = 1;
     report.schedule = Schedule::Static { chunk: None };
     report.placement = PlacementDecision { pin_requested: false, pin: None, first_touch: false };
+    if report.kernel_isa > IsaLevel::Scalar {
+        report.rationale.push(format!(
+            "serial backend executes the scalar kernel inline ({} stays a tuning-probe score)",
+            report.kernel_isa.name()
+        ));
+    }
+    report.kernel_isa = IsaLevel::Scalar;
     if pin_requested {
         report.rationale.push(
             "serial backend ignores the pinning request (no engine threads to place)".into(),
@@ -670,6 +706,7 @@ struct BuildCfg<'a> {
     quick: bool,
     pinned: bool,
     cv_threshold: Option<f64>,
+    precision: Precision,
 }
 
 impl BuildCfg<'_> {
@@ -683,7 +720,8 @@ impl BuildCfg<'_> {
             .machine(self.machine.clone())
             .quick(self.quick)
             .pinned(pinned)
-            .schedule_cv_threshold(self.cv_threshold);
+            .schedule_cv_threshold(self.cv_threshold)
+            .precision(self.precision);
         if let Some(t) = threads {
             b = b.threads(t);
         }
@@ -699,6 +737,7 @@ impl BuildCfg<'_> {
             .quick(self.quick)
             .pinned(self.pinned)
             .schedule_cv_threshold(self.cv_threshold)
+            .precision(self.precision)
             .sharded(self.shard_policy.unwrap_or(ShardPolicy::Heuristic));
         if let Some(t) = self.threads {
             b = b.threads(t);
@@ -723,6 +762,7 @@ impl BuildCfg<'_> {
             .quick(self.quick)
             .pinned(self.pinned)
             .schedule_cv_threshold(self.cv_threshold)
+            .precision(self.precision)
             .sharded(shard_policy);
         if let Some(t) = self.threads {
             b = b.threads(t);
@@ -1368,5 +1408,129 @@ mod tests {
             assert_eq!(BackendChoice::parse(c.name()).unwrap(), c);
         }
         assert!(BackendChoice::parse("pjrt").is_err());
+    }
+
+    /// ISSUE-6 tentpole: the default contract is BitIdentical and no
+    /// backend ever serves a vector kernel under it — the existing
+    /// bit-identity suite is untouched by the SIMD layer.
+    #[test]
+    fn default_precision_is_bit_identical_and_scalar_on_every_backend() {
+        let coo = gen::holstein_hubbard(&gen::HolsteinHubbardParams::tiny());
+        for backend in [BackendChoice::Serial, BackendChoice::Native, BackendChoice::Sharded] {
+            let mut b = SpmvHandle::builder(&coo).backend(backend).threads(2).quick(true);
+            if backend == BackendChoice::Sharded {
+                b = b.shard_policy(ShardPolicy::Fixed {
+                    shards: 2,
+                    mode: OverlapMode::BulkSync,
+                });
+            }
+            let handle = b.build().unwrap();
+            assert_eq!(handle.precision(), Precision::BitIdentical);
+            assert_eq!(
+                handle.kernel_isa(),
+                IsaLevel::Scalar,
+                "{}: BitIdentical must stay scalar",
+                backend.name()
+            );
+        }
+    }
+
+    /// ISSUE-6: Tolerance(ε) results match the serial CRS reference
+    /// within ε across scheme × schedule × backend, and the report
+    /// records the contract plus the bound ISA per backend honestly
+    /// (serial and sharded execute scalar kernels regardless).
+    #[test]
+    fn tolerance_contract_holds_across_scheme_schedule_backend() {
+        let eps = 1e-12;
+        let coo = gen::holstein_hubbard(&gen::HolsteinHubbardParams::tiny());
+        let crs = Crs::from_coo(&coo);
+        let n = crs.nrows;
+        let mut x = vec![0.0; n];
+        Rng::new(0x51D).fill_f64(&mut x, -1.0, 1.0);
+        let mut want = vec![0.0; n];
+        crs.spmv(&x, &mut want);
+        let schemes = [Scheme::Crs, Scheme::SellCs { c: 8, sigma: 64 }];
+        let schedules = [
+            Schedule::Static { chunk: None },
+            Schedule::Dynamic { chunk: 13 },
+            Schedule::Guided { min_chunk: 8 },
+        ];
+        for backend in [BackendChoice::Serial, BackendChoice::Native, BackendChoice::Sharded] {
+            for scheme in schemes {
+                for schedule in schedules {
+                    let mut b = SpmvHandle::builder(&coo)
+                        .policy(TuningPolicy::Fixed(scheme, schedule))
+                        .backend(backend)
+                        .threads(2)
+                        .quick(true)
+                        .precision(Precision::Tolerance(eps));
+                    if backend == BackendChoice::Sharded {
+                        b = b.shard_policy(ShardPolicy::Fixed {
+                            shards: 2,
+                            mode: OverlapMode::Overlapped,
+                        });
+                    }
+                    let handle = b.build().unwrap();
+                    assert_eq!(handle.precision(), Precision::Tolerance(eps));
+                    match backend {
+                        // Serial and sharded execute scalar kernels; the
+                        // native plan runs at the contract's ceiling for
+                        // vectorizable schemes.
+                        BackendChoice::Serial | BackendChoice::Sharded => {
+                            assert_eq!(handle.kernel_isa(), IsaLevel::Scalar)
+                        }
+                        _ => assert_eq!(handle.kernel_isa(), IsaLevel::detect()),
+                    }
+                    let mut y = vec![0.0; n];
+                    handle.spmv(&x, &mut y);
+                    for i in 0..n {
+                        assert!(
+                            (y[i] - want[i]).abs() <= eps * want[i].abs().max(1.0),
+                            "{} × {} × {}: row {i} off by {:.3e} (isa {})",
+                            backend.name(),
+                            scheme.name(),
+                            schedule.name(),
+                            (y[i] - want[i]).abs(),
+                            handle.kernel_isa()
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    /// Tolerance flows through Auto arbitration: the decision is still
+    /// recorded, the ISA never exceeds the host, and results respect ε.
+    #[test]
+    fn auto_arbitration_respects_the_tolerance_contract() {
+        let eps = 1e-12;
+        let coo = gen::holstein_hubbard(&gen::HolsteinHubbardParams::tiny());
+        let crs = Crs::from_coo(&coo);
+        let n = crs.nrows;
+        let mut x = vec![0.0; n];
+        Rng::new(0x51E).fill_f64(&mut x, -1.0, 1.0);
+        let mut want = vec![0.0; n];
+        crs.spmv(&x, &mut want);
+        for policy in [TuningPolicy::Heuristic, TuningPolicy::Measured] {
+            let handle = SpmvHandle::builder(&coo)
+                .policy(policy)
+                .threads(2)
+                .quick(true)
+                .precision(Precision::Tolerance(eps))
+                .build()
+                .unwrap();
+            assert!(handle.backend_decision().is_some());
+            assert!(handle.kernel_isa() <= IsaLevel::detect());
+            let mut y = vec![0.0; n];
+            handle.spmv(&x, &mut y);
+            for i in 0..n {
+                assert!(
+                    (y[i] - want[i]).abs() <= eps * want[i].abs().max(1.0),
+                    "{} arbitration: row {i} off by {:.3e}",
+                    policy.name(),
+                    (y[i] - want[i]).abs()
+                );
+            }
+        }
     }
 }

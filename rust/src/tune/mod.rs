@@ -49,7 +49,8 @@ use anyhow::Result;
 use crate::analysis::StrideDistribution;
 use crate::engine::affinity::{PinMode, PinReport};
 use crate::engine::{Engine, SpmvPlan};
-use crate::kernels::SpmvKernel;
+use crate::kernels::microbench::cached_isa_gain;
+use crate::kernels::{IsaLevel, Precision, SpmvKernel};
 use crate::matrix::shard::ShardedCrs;
 use crate::matrix::{Crs, Scheme, SpMv};
 use crate::perfmodel::{predict, predict_with_dist, CostCurve};
@@ -188,6 +189,9 @@ pub struct BackendDecision {
 pub struct CandidateReport {
     pub scheme: Scheme,
     pub schedule: Schedule,
+    /// Instruction-set level this candidate would execute at. Scalar
+    /// unless the [`Precision`] contract admits vector kernels.
+    pub isa: IsaLevel,
     /// Performance-model score (heuristic tier), padding-adjusted.
     pub predicted_cycles_per_nnz: Option<f64>,
     /// Host bake-off score (measured tier).
@@ -259,6 +263,11 @@ pub struct TuningReport {
     /// Realized padding overhead of the chosen kernel (0 for unpadded
     /// schemes).
     pub padding_overhead: f64,
+    /// The numerical contract tuning ran under. `BitIdentical` (the
+    /// default) excludes vector kernels from the candidate set entirely.
+    pub precision: Precision,
+    /// The instruction-set level the chosen plan executes at.
+    pub kernel_isa: IsaLevel,
     /// NUMA placement of the engine + workspace (pinning, first touch).
     pub placement: PlacementDecision,
     /// Executor-arbitration decision (`None` until a
@@ -295,6 +304,8 @@ impl TuningReport {
         decision.row(vec!["row imbalance (CV)".into(), f(self.row_imbalance_cv)]);
         decision.row(vec!["schedule CV threshold".into(), f(self.schedule_cv_threshold)]);
         decision.row(vec!["padding overhead".into(), f(self.padding_overhead)]);
+        decision.row(vec!["precision".into(), self.precision.name()]);
+        decision.row(vec!["kernel isa".into(), self.kernel_isa.name().into()]);
         decision.row(vec!["placement".into(), self.placement.summary()]);
         if let Some(bd) = &self.backend {
             let label = format!("{} ({} policy)", bd.backend, bd.policy);
@@ -349,12 +360,21 @@ impl TuningReport {
         if !self.candidates.is_empty() {
             let mut t = Table::new(
                 "tuning candidates",
-                &["scheme", "schedule", "pred cycles/nnz", "measured ns/nnz", "padding", "chosen"],
+                &[
+                    "scheme",
+                    "schedule",
+                    "isa",
+                    "pred cycles/nnz",
+                    "measured ns/nnz",
+                    "padding",
+                    "chosen",
+                ],
             );
             for c in &self.candidates {
                 t.row(vec![
                     c.scheme.name(),
                     c.schedule.name(),
+                    c.isa.name().into(),
                     c.predicted_cycles_per_nnz.map(f).unwrap_or_else(|| "-".into()),
                     c.measured_ns_per_nnz.map(f).unwrap_or_else(|| "-".into()),
                     f(c.padding_overhead),
@@ -383,6 +403,7 @@ pub(crate) struct SpmvContextBuilder<'a> {
     pinned: bool,
     cv_threshold: Option<f64>,
     shard_policy: Option<ShardPolicy>,
+    precision: Precision,
 }
 
 impl SpmvContextBuilder<'_> {
@@ -436,6 +457,19 @@ impl SpmvContextBuilder<'_> {
         self
     }
 
+    /// Numerical contract for the tuned kernels (default:
+    /// [`Precision::BitIdentical`]). Under `BitIdentical` the candidate
+    /// set is scalar-only and results are bit-identical to the chosen
+    /// scheme's serial kernel — the pre-SIMD behavior, unchanged. Under
+    /// [`Precision::Tolerance`] the tuner also scores vector-kernel
+    /// variants (FMA contraction and reordered accumulation change
+    /// low-order bits; see [`crate::kernels::simd`]) and binds the
+    /// winning [`IsaLevel`] onto the plan.
+    pub fn precision(mut self, precision: Precision) -> Self {
+        self.precision = precision;
+        self
+    }
+
     /// Add the sharding dimension: the context becomes a
     /// [`ShardedContext`] whose shard count and overlap mode come from
     /// `policy` (scheme and schedule still come from the
@@ -461,6 +495,7 @@ impl SpmvContextBuilder<'_> {
             pinned,
             cv_threshold,
             shard_policy,
+            precision,
         } = self;
         anyhow::ensure!(
             shard_policy.is_none(),
@@ -489,15 +524,39 @@ impl SpmvContextBuilder<'_> {
         let mut candidates = Vec::new();
         let mut fingerprint: Option<StrideDistribution> = None;
         let mut eager_engine: Option<Engine> = None;
+        // The Precision contract caps the ISA: BitIdentical (default)
+        // pins everything to the scalar kernels, so the candidate set —
+        // and every result — is exactly the pre-SIMD behavior.
+        let isa_ceiling =
+            if precision.allows_simd() { IsaLevel::detect() } else { IsaLevel::Scalar };
+        let isa_options = |k: &SpmvKernel| -> Vec<IsaLevel> {
+            let mut v = vec![IsaLevel::Scalar];
+            if k.has_simd_path(isa_ceiling) {
+                v.push(IsaLevel::Avx2);
+                if isa_ceiling >= IsaLevel::Avx512 {
+                    v.push(IsaLevel::Avx512);
+                }
+            }
+            v
+        };
 
-        let (kernel, schedule) = match policy {
+        let (kernel, schedule, chosen_isa) = match policy {
             TuningPolicy::Fixed(scheme, schedule) => {
                 rationale.push(format!(
                     "fixed policy: caller requested {} under {}",
                     scheme.name(),
                     schedule.name()
                 ));
-                (SpmvKernel::build_from_crs(&crs, scheme), schedule)
+                let kernel = SpmvKernel::build_from_crs(&crs, scheme);
+                // Fixed skips tuning but not the precision contract:
+                // the plan runs at the ISA ceiling whenever the named
+                // scheme has a vector path.
+                let isa = if kernel.has_simd_path(isa_ceiling) {
+                    isa_ceiling
+                } else {
+                    IsaLevel::Scalar
+                };
+                (kernel, schedule, isa)
             }
             TuningPolicy::Heuristic => {
                 let crs_kernel = SpmvKernel::build_from_crs(&crs, Scheme::Crs);
@@ -508,8 +567,8 @@ impl SpmvContextBuilder<'_> {
                 // The CRS candidate reuses the fingerprint kernel, and the
                 // winner is kept as built — no candidate is realized twice.
                 let mut crs_kernel = Some(crs_kernel);
-                let mut best: Option<(usize, f64, SpmvKernel)> = None;
-                for (ci, scheme) in candidate_schemes(&crs).into_iter().enumerate() {
+                let mut best: Option<(usize, f64, SpmvKernel, IsaLevel)> = None;
+                for scheme in candidate_schemes(&crs) {
                     let k = if scheme == Scheme::Crs {
                         crs_kernel
                             .take()
@@ -528,30 +587,45 @@ impl SpmvContextBuilder<'_> {
                     // Padding streams extra val/col bytes and multiplies
                     // explicit zeros: charge it proportionally.
                     let effective = pred.cycles_per_nnz * (1.0 + padding);
-                    candidates.push(CandidateReport {
-                        scheme,
-                        schedule,
-                        predicted_cycles_per_nnz: Some(effective),
-                        measured_ns_per_nnz: None,
-                        padding_overhead: padding,
-                        chosen: false,
-                    });
-                    if best.as_ref().map(|(_, c, _)| effective < *c).unwrap_or(true) {
-                        best = Some((ci, effective, k));
+                    // Vector variants are priced by the measured triad
+                    // gain: the kernels stream the same bytes, only the
+                    // in-core factor changes.
+                    let mut scheme_best: Option<(usize, f64, IsaLevel)> = None;
+                    for isa in isa_options(&k) {
+                        let score = effective / cached_isa_gain(isa);
+                        let idx = candidates.len();
+                        candidates.push(CandidateReport {
+                            scheme,
+                            schedule,
+                            isa,
+                            predicted_cycles_per_nnz: Some(score),
+                            measured_ns_per_nnz: None,
+                            padding_overhead: padding,
+                            chosen: false,
+                        });
+                        if scheme_best.as_ref().map(|(_, c, _)| score < *c).unwrap_or(true) {
+                            scheme_best = Some((idx, score, isa));
+                        }
+                    }
+                    let (idx, score, isa) =
+                        scheme_best.expect("isa options are never empty");
+                    if best.as_ref().map(|(_, c, _, _)| score < *c).unwrap_or(true) {
+                        best = Some((idx, score, k, isa));
                     }
                 }
-                let (best_i, best_cost, kernel) =
+                let (best_i, best_cost, kernel, isa) =
                     best.expect("candidate set is never empty");
                 candidates[best_i].chosen = true;
                 rationale.push(format!(
-                    "perfmodel on {} picks {} at {:.3} padding-adjusted cycles/nnz over {} candidates",
+                    "perfmodel on {} picks {} ({} kernel) at {:.3} padding-adjusted cycles/nnz over {} candidates",
                     machine.name,
                     kernel.scheme().name(),
+                    isa.name(),
                     best_cost,
                     candidates.len()
                 ));
                 fingerprint = Some(dist);
-                (kernel, schedule)
+                (kernel, schedule, isa)
             }
             TuningPolicy::Measured => {
                 let schedule =
@@ -563,52 +637,65 @@ impl SpmvContextBuilder<'_> {
                 let mut x = vec![0.0; nrows];
                 Rng::new(0xC0FFEE).fill_f64(&mut x, -1.0, 1.0);
                 let mut y = vec![0.0; nrows];
-                let mut best: Option<(usize, f64, SpmvKernel)> = None;
-                for (ci, scheme) in candidate_schemes(&crs).into_iter().enumerate() {
+                let mut best: Option<(usize, f64, SpmvKernel, IsaLevel)> = None;
+                for scheme in candidate_schemes(&crs) {
                     let k = SpmvKernel::build_from_crs(&crs, scheme);
                     let padding = kernel_padding(&k);
                     // Each candidate is timed through its plan's own
                     // workspace under the placement the final context
                     // will deploy with (first-touched when pinned), so
-                    // the ranking and the serving path agree.
-                    let plan = if pinned {
+                    // the ranking and the serving path agree. The ISA
+                    // variants share the plan: set_kernel_isa rebinds
+                    // the execute path without re-partitioning.
+                    let mut plan = if pinned {
                         SpmvPlan::new_first_touch(&k, schedule, &engine)
                     } else {
                         SpmvPlan::new(&k, schedule, n_threads)
                     };
-                    plan.execute(&engine, &k, &x, &mut y); // warmup
-                    let mut best_ns = f64::INFINITY;
-                    for _ in 0..reps {
-                        let t0 = Instant::now();
-                        plan.execute(&engine, &k, &x, &mut y);
-                        let ns = t0.elapsed().as_nanos() as f64 / k.nnz().max(1) as f64;
-                        best_ns = best_ns.min(ns);
+                    let mut scheme_best: Option<(usize, f64, IsaLevel)> = None;
+                    for isa in isa_options(&k) {
+                        plan.set_kernel_isa(isa);
+                        plan.execute(&engine, &k, &x, &mut y); // warmup
+                        let mut best_ns = f64::INFINITY;
+                        for _ in 0..reps {
+                            let t0 = Instant::now();
+                            plan.execute(&engine, &k, &x, &mut y);
+                            let ns = t0.elapsed().as_nanos() as f64 / k.nnz().max(1) as f64;
+                            best_ns = best_ns.min(ns);
+                        }
+                        let idx = candidates.len();
+                        candidates.push(CandidateReport {
+                            scheme,
+                            schedule,
+                            isa,
+                            predicted_cycles_per_nnz: None,
+                            measured_ns_per_nnz: Some(best_ns),
+                            padding_overhead: padding,
+                            chosen: false,
+                        });
+                        if scheme_best.as_ref().map(|(_, c, _)| best_ns < *c).unwrap_or(true) {
+                            scheme_best = Some((idx, best_ns, isa));
+                        }
                     }
-                    candidates.push(CandidateReport {
-                        scheme,
-                        schedule,
-                        predicted_cycles_per_nnz: None,
-                        measured_ns_per_nnz: Some(best_ns),
-                        padding_overhead: padding,
-                        chosen: false,
-                    });
-                    if best.as_ref().map(|(_, c, _)| best_ns < *c).unwrap_or(true) {
-                        best = Some((ci, best_ns, k));
+                    let (idx, ns, isa) = scheme_best.expect("isa options are never empty");
+                    if best.as_ref().map(|(_, c, _, _)| ns < *c).unwrap_or(true) {
+                        best = Some((idx, ns, k, isa));
                     }
                 }
-                let (best_i, best_ns, kernel) =
+                let (best_i, best_ns, kernel, isa) =
                     best.expect("candidate set is never empty");
                 candidates[best_i].chosen = true;
                 rationale.push(format!(
-                    "host bake-off ({} reps, {} threads) picks {} at {:.2} ns/nnz over {} candidates",
+                    "host bake-off ({} reps, {} threads) picks {} ({} kernel) at {:.2} ns/nnz over {} candidates",
                     reps,
                     n_threads,
                     kernel.scheme().name(),
+                    isa.name(),
                     best_ns,
                     candidates.len()
                 ));
                 eager_engine = Some(engine);
-                (kernel, schedule)
+                (kernel, schedule, isa)
             }
         };
 
@@ -616,7 +703,7 @@ impl SpmvContextBuilder<'_> {
         // the plan's workspace pages are first-touched by the pinned
         // owners; without it the engine stays lazy and the workspace is
         // placed by the building thread (the pre-NUMA behavior).
-        let (plan, placement) = if pinned {
+        let (mut plan, placement) = if pinned {
             let engine =
                 eager_engine.get_or_insert_with(|| Engine::with_pinning(n_threads, pin_mode));
             let plan = SpmvPlan::new_first_touch(&kernel, schedule, engine);
@@ -633,6 +720,16 @@ impl SpmvContextBuilder<'_> {
                 PlacementDecision { pin_requested: false, pin: None, first_touch: false },
             )
         };
+        // First touch above ran scalar (placement precedes ISA binding;
+        // the vector kernels stream the same pages); the serving path
+        // executes at the arbitrated level from here on.
+        plan.set_kernel_isa(chosen_isa);
+        rationale.push(format!(
+            "precision {}: kernel isa {} (host detects {})",
+            precision.name(),
+            chosen_isa.name(),
+            IsaLevel::detect().name()
+        ));
         let report = TuningReport {
             policy: policy.name().to_string(),
             scheme: kernel.scheme(),
@@ -646,6 +743,8 @@ impl SpmvContextBuilder<'_> {
             row_imbalance_cv: row_cv,
             schedule_cv_threshold: cv_threshold_eff,
             padding_overhead: kernel_padding(&kernel),
+            precision,
+            kernel_isa: chosen_isa,
             placement,
             backend: None,
             shard: None,
@@ -678,6 +777,7 @@ impl SpmvContextBuilder<'_> {
             pinned,
             cv_threshold,
             shard_policy,
+            precision,
         } = self;
         let shard_policy = shard_policy.unwrap_or(ShardPolicy::Heuristic);
         let crs = Arc::new(crs.into_owned());
@@ -703,6 +803,19 @@ impl SpmvContextBuilder<'_> {
             scheme = Scheme::Crs;
             report.scheme = scheme;
             report.padding_overhead = 0.0;
+        }
+        // The sharded executor runs the rectangular split kernels, which
+        // have no vector path yet (ROADMAP follow-up): the probe above
+        // tuned under BitIdentical semantics either way, and the report
+        // records the caller's contract with a scalar ISA honestly.
+        report.precision = precision;
+        report.kernel_isa = IsaLevel::Scalar;
+        if precision.allows_simd() {
+            report.rationale.push(format!(
+                "precision {}: sharded executor keeps scalar kernels \
+                 (split kernels have no vector path yet)",
+                precision.name()
+            ));
         }
         let (decision, shard_rationale) =
             decide_shards(&crs, shard_policy, scheme, schedule, n_threads, pinned, quick)?;
@@ -1045,6 +1158,7 @@ impl SpmvContext {
             pinned: false,
             cv_threshold: None,
             shard_policy: None,
+            precision: Precision::default(),
         }
     }
 
@@ -1098,6 +1212,17 @@ impl SpmvContext {
         self.n_threads
     }
 
+    /// The instruction-set level the plan executes at (Scalar unless the
+    /// [`Precision`] contract admitted vector kernels and one won).
+    pub fn kernel_isa(&self) -> IsaLevel {
+        self.plan.kernel_isa()
+    }
+
+    /// The numerical contract this context was tuned under.
+    pub fn precision(&self) -> Precision {
+        self.report.precision
+    }
+
     /// Original-basis parallel SpMV through the tuned plan.
     pub fn spmv(&self, x: &[f64], y: &mut [f64]) {
         self.plan.execute(self.engine(), &self.kernel, x, y);
@@ -1129,7 +1254,7 @@ impl SpmvContext {
         // A pinned parent re-places eagerly: the new partition's pages
         // must be first-touched by the new owners (§5.2 — a thread-count
         // change is exactly the migration hazard `rebalance` covers).
-        let plan = if self.pinned() {
+        let mut plan = if self.pinned() {
             let e = Engine::with_pinning(n_threads, self.pin_mode);
             let plan = SpmvPlan::new_first_touch(&self.kernel, schedule, &e);
             report.placement = PlacementDecision {
@@ -1146,6 +1271,9 @@ impl SpmvContext {
                 PlacementDecision { pin_requested: false, pin: None, first_touch: false };
             SpmvPlan::new(&self.kernel, schedule, n_threads)
         };
+        // The sibling keeps serving at the parent's arbitrated ISA: the
+        // precision contract was decided at build time, not per plan.
+        plan.set_kernel_isa(self.plan.kernel_isa());
         report.schedule = schedule;
         report.n_threads = n_threads;
         report.policy = format!("{} (replanned)", self.report.policy);
@@ -1925,6 +2053,130 @@ mod tests {
             assert_eq!(max_abs_diff(&want, &got), 0.0, "pin={pin}: post-reshard");
             assert!(ctx.report().rationale.iter().any(|r| r.contains("resharded")));
         }
+    }
+
+    /// ISSUE-6 tentpole: the default BitIdentical contract never admits
+    /// a vector kernel — every candidate and the chosen plan are scalar,
+    /// so all pre-SIMD bit-identity guarantees hold unchanged.
+    #[test]
+    fn bit_identical_default_never_picks_simd() {
+        let coo = gen::holstein_hubbard(&gen::HolsteinHubbardParams::tiny());
+        for policy in policies() {
+            let ctx = SpmvContext::builder(&coo)
+                .policy(policy)
+                .threads(2)
+                .quick(true)
+                .build()
+                .unwrap();
+            assert_eq!(ctx.precision(), Precision::BitIdentical);
+            assert_eq!(ctx.kernel_isa(), IsaLevel::Scalar);
+            assert_eq!(ctx.report().kernel_isa, IsaLevel::Scalar);
+            assert!(
+                ctx.report().candidates.iter().all(|c| c.isa == IsaLevel::Scalar),
+                "{}: BitIdentical candidate set must be scalar-only",
+                policy.name()
+            );
+        }
+    }
+
+    /// ISSUE-6 tentpole: under Tolerance(ε) the tuner scores ISA
+    /// variants, binds a level no higher than the host detects, and the
+    /// result stays within ε of the serial CRS reference across every
+    /// policy tier.
+    #[test]
+    fn tolerance_contract_arbitrates_isa_within_eps() {
+        let eps = 1e-12;
+        let matrices: Vec<(&str, Coo)> = vec![
+            ("holstein-hubbard", gen::holstein_hubbard(&gen::HolsteinHubbardParams::tiny())),
+            ("random-band", gen::random_band(300, 9, 40, &mut Rng::new(95))),
+        ];
+        for (name, coo) in &matrices {
+            let crs = Crs::from_coo(coo);
+            let n = crs.nrows;
+            let mut x = vec![0.0; n];
+            Rng::new(96).fill_f64(&mut x, -1.0, 1.0);
+            let mut want = vec![0.0; n];
+            crs.spmv(&x, &mut want);
+            for policy in policies() {
+                let ctx = SpmvContext::builder(coo)
+                    .policy(policy)
+                    .threads(2)
+                    .quick(true)
+                    .precision(Precision::Tolerance(eps))
+                    .build()
+                    .unwrap();
+                assert_eq!(ctx.precision(), Precision::Tolerance(eps));
+                assert!(ctx.kernel_isa() <= IsaLevel::detect());
+                assert_eq!(ctx.report().kernel_isa, ctx.kernel_isa());
+                // On a SIMD host the tuning tiers must have *scored*
+                // vector variants for the vectorizable schemes.
+                if IsaLevel::detect() > IsaLevel::Scalar
+                    && !matches!(policy, TuningPolicy::Fixed(..))
+                {
+                    assert!(
+                        ctx.report().candidates.iter().any(|c| c.isa > IsaLevel::Scalar),
+                        "{name} × {}: no vector candidate scored on a SIMD host",
+                        policy.name()
+                    );
+                }
+                let mut y = vec![0.0; n];
+                ctx.spmv(&x, &mut y);
+                for i in 0..n {
+                    assert!(
+                        (y[i] - want[i]).abs() <= eps * want[i].abs().max(1.0),
+                        "{name} × {}: row {i} off by {} (isa {})",
+                        policy.name(),
+                        (y[i] - want[i]).abs(),
+                        ctx.kernel_isa()
+                    );
+                }
+                // The batch path runs the same ISA-bound plan.
+                let ys = ctx.spmv_batch(std::slice::from_ref(&x));
+                assert_eq!(max_abs_diff(&ys[0], &y), 0.0);
+            }
+        }
+    }
+
+    /// The arbitrated ISA survives replanning and rebalancing — the
+    /// contract is a property of the context, not of one partition.
+    #[test]
+    fn kernel_isa_survives_replan_and_rebalance() {
+        let coo = gen::holstein_hubbard(&gen::HolsteinHubbardParams::tiny());
+        let n = coo.nrows;
+        let mut ctx = SpmvContext::builder(&coo)
+            .policy(TuningPolicy::Fixed(
+                Scheme::SellCs { c: 8, sigma: 64 },
+                Schedule::Static { chunk: None },
+            ))
+            .threads(2)
+            .precision(Precision::Tolerance(1e-12))
+            .build()
+            .unwrap();
+        let isa = ctx.kernel_isa();
+        // Fixed + Tolerance binds the ceiling on vectorizable schemes.
+        assert_eq!(isa, IsaLevel::detect());
+        let mut x = vec![0.0; n];
+        Rng::new(97).fill_f64(&mut x, -1.0, 1.0);
+        let crs = Crs::from_coo(&coo);
+        let mut want = vec![0.0; n];
+        crs.spmv(&x, &mut want);
+        // A schedule change re-partitions rows, moving boundary rows
+        // between vector groups and the scalar remainder — so the
+        // invariant across replans is the ε contract, not bit identity.
+        let within_eps = |got: &[f64]| {
+            got.iter()
+                .zip(&want)
+                .all(|(g, w)| (g - w).abs() <= 1e-12 * w.abs().max(1.0))
+        };
+        let re = ctx.replanned(Schedule::Guided { min_chunk: 8 }, 3);
+        assert_eq!(re.kernel_isa(), isa, "replanned sibling dropped the ISA");
+        let mut y = vec![0.0; n];
+        re.spmv(&x, &mut y);
+        assert!(within_eps(&y), "replanned sibling left the ε contract");
+        ctx.rebalance(Schedule::Dynamic { chunk: 7 });
+        assert_eq!(ctx.kernel_isa(), isa, "rebalance dropped the ISA");
+        ctx.spmv(&x, &mut y);
+        assert!(within_eps(&y), "rebalanced context left the ε contract");
     }
 
     #[test]

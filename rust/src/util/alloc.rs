@@ -1,0 +1,156 @@
+//! 64-byte-aligned buffer storage for SIMD-fed kernel arrays.
+//!
+//! SELL-C-σ slice storage is streamed by vector loads
+//! ([`crate::kernels::simd`]); starting `val`/`col_idx` on a cache-line
+//! (and full AVX-512 vector) boundary keeps the first lane group of
+//! every matrix load-aligned and the arrays split cleanly across cache
+//! lines. The kernels themselves use unaligned-*tolerant* loads —
+//! partial slices and odd lane offsets make per-access alignment
+//! impossible to guarantee — so this is a throughput nicety, not a
+//! correctness requirement, and [`AlignedVec`] stays a drop-in
+//! read-only replacement for `Vec` via `Deref<Target = [T]>`.
+
+use std::alloc::{alloc_zeroed, dealloc, Layout};
+use std::ops::{Deref, DerefMut};
+use std::ptr::NonNull;
+
+/// Alignment of the buffer start, in bytes (one x86 cache line, one
+/// AVX-512 vector).
+pub const SIMD_ALIGN: usize = 64;
+
+/// A fixed-length, 64-byte-aligned buffer of plain-old-data elements.
+/// Built once from a `Vec` (or slice) and then used as a slice.
+pub struct AlignedVec<T: Copy> {
+    ptr: NonNull<T>,
+    len: usize,
+}
+
+// SAFETY: AlignedVec owns its allocation exclusively and T: Copy holds
+// no interior mutability or thread affinity — moving or sharing the
+// buffer across threads is as safe as for Vec<T>.
+unsafe impl<T: Copy + Send> Send for AlignedVec<T> {}
+// SAFETY: shared access is read-only through &self (Deref to &[T]).
+unsafe impl<T: Copy + Sync> Sync for AlignedVec<T> {}
+
+impl<T: Copy> AlignedVec<T> {
+    /// Copy `src` into a fresh 64-byte-aligned allocation.
+    pub fn from_slice(src: &[T]) -> Self {
+        let len = src.len();
+        if len == 0 || std::mem::size_of::<T>() == 0 {
+            // A dangling, well-aligned pointer is valid for empty
+            // slices (same trick Vec uses).
+            return AlignedVec { ptr: NonNull::dangling(), len };
+        }
+        let layout = Layout::from_size_align(len * std::mem::size_of::<T>(), SIMD_ALIGN)
+            .expect("aligned layout");
+        // SAFETY: layout has non-zero size (len > 0, size_of::<T>() > 0).
+        let raw = unsafe { alloc_zeroed(layout) } as *mut T;
+        let ptr = NonNull::new(raw).unwrap_or_else(|| std::alloc::handle_alloc_error(layout));
+        // SAFETY: the allocation holds exactly `len` T slots, src and
+        // dst cannot overlap (dst is freshly allocated), and T: Copy.
+        unsafe { std::ptr::copy_nonoverlapping(src.as_ptr(), ptr.as_ptr(), len) };
+        AlignedVec { ptr, len }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+}
+
+impl<T: Copy> From<Vec<T>> for AlignedVec<T> {
+    fn from(v: Vec<T>) -> Self {
+        AlignedVec::from_slice(&v)
+    }
+}
+
+impl<T: Copy> Drop for AlignedVec<T> {
+    fn drop(&mut self) {
+        if self.len > 0 && std::mem::size_of::<T>() > 0 {
+            let layout =
+                Layout::from_size_align(self.len * std::mem::size_of::<T>(), SIMD_ALIGN)
+                    .expect("aligned layout");
+            // SAFETY: ptr was returned by alloc_zeroed with this exact
+            // layout in from_slice, and is freed exactly once.
+            unsafe { dealloc(self.ptr.as_ptr() as *mut u8, layout) };
+        }
+    }
+}
+
+impl<T: Copy> Deref for AlignedVec<T> {
+    type Target = [T];
+    fn deref(&self) -> &[T] {
+        // SAFETY: ptr is valid for `len` initialized T (copied in
+        // from_slice; dangling only when len == 0, where the empty
+        // slice constructor accepts any well-aligned pointer).
+        unsafe { std::slice::from_raw_parts(self.ptr.as_ptr(), self.len) }
+    }
+}
+
+impl<T: Copy> DerefMut for AlignedVec<T> {
+    fn deref_mut(&mut self) -> &mut [T] {
+        // SAFETY: as in Deref, plus &mut self guarantees exclusivity.
+        unsafe { std::slice::from_raw_parts_mut(self.ptr.as_ptr(), self.len) }
+    }
+}
+
+impl<T: Copy> Clone for AlignedVec<T> {
+    fn clone(&self) -> Self {
+        AlignedVec::from_slice(self)
+    }
+}
+
+impl<T: Copy + std::fmt::Debug> std::fmt::Debug for AlignedVec<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        self.deref().fmt(f)
+    }
+}
+
+impl<T: Copy + PartialEq> PartialEq for AlignedVec<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.deref() == other.deref()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buffer_start_is_64_byte_aligned() {
+        for n in [1usize, 3, 64, 1000] {
+            let v: Vec<f64> = (0..n).map(|i| i as f64).collect();
+            let a = AlignedVec::from_slice(&v);
+            assert_eq!(a.as_ptr() as usize % SIMD_ALIGN, 0, "n={n}");
+            assert_eq!(&a[..], &v[..]);
+        }
+        let u: Vec<u32> = (0..97).collect();
+        let a: AlignedVec<u32> = u.clone().into();
+        assert_eq!(a.as_ptr() as usize % SIMD_ALIGN, 0);
+        assert_eq!(&a[..], &u[..]);
+    }
+
+    #[test]
+    fn empty_clone_and_eq() {
+        let e = AlignedVec::<f64>::from_slice(&[]);
+        assert!(e.is_empty());
+        assert_eq!(e.len(), 0);
+        assert_eq!(&e[..], &[] as &[f64]);
+        let a = AlignedVec::from_slice(&[1.0, 2.0, 3.0]);
+        let b = a.clone();
+        assert_eq!(a, b);
+        assert_ne!(a, AlignedVec::from_slice(&[1.0, 2.0]));
+        assert_eq!(format!("{a:?}"), "[1.0, 2.0, 3.0]");
+    }
+
+    #[test]
+    fn deref_mut_writes_stick() {
+        let mut a = AlignedVec::from_slice(&[0u32; 8]);
+        a[3] = 7;
+        assert_eq!(a[3], 7);
+        assert_eq!(a.iter().sum::<u32>(), 7);
+    }
+}

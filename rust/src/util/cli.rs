@@ -31,7 +31,7 @@ const VALUE_OPTS: &[&str] = &[
     "requests", "workers", "op", "ops", "dim", "bandwidth", "density",
     "block-size", "chunk-sizes", "threads-per-socket", "output", "scale",
     "eigenvalues", "csv", "policy", "tolerance", "shards", "mode", "backend",
-    "cv-threshold",
+    "cv-threshold", "precision", "factor",
 ];
 
 impl Args {
@@ -195,6 +195,18 @@ mod tests {
         assert_eq!(a.get_str("backend", "auto"), "sharded");
         assert_eq!(a.get_f64("cv-threshold", 0.0).unwrap(), 0.8);
         assert_eq!(a.get("matrix"), Some("m.mtx"));
+        assert!(a.positionals().is_empty(), "no stray positionals");
+        assert!(a.finish().is_ok());
+    }
+
+    /// Regression: the SIMD PR's options must be registered too —
+    /// `--precision tol:1e-12` would otherwise parse as a flag + stray
+    /// positional and the tuner would silently stay on BitIdentical.
+    #[test]
+    fn precision_and_factor_options_take_values() {
+        let a = parse("--precision tol:1e-12 --factor 0.7");
+        assert_eq!(a.get_str("precision", "bit"), "tol:1e-12");
+        assert_eq!(a.get_f64("factor", 0.0).unwrap(), 0.7);
         assert!(a.positionals().is_empty(), "no stray positionals");
         assert!(a.finish().is_ok());
     }

@@ -2,6 +2,7 @@
 //! report/table rendering. All built from scratch — no external crates for
 //! these exist in the offline vendor set.
 
+pub mod alloc;
 pub mod bench;
 pub mod cli;
 pub mod report;
