@@ -1,107 +1,73 @@
-//! SpMV-as-a-service demo: the L3 coordinator routing batched requests
-//! to the PJRT-compiled JAX/Pallas kernel, with a synthetic open-loop
-//! load generator and latency/throughput/batching metrics — the paper's
-//! SpMVM as the hot path of a serving system.
-//!
-//! Falls back to the native executor when artifacts are missing.
+//! SpMV-as-a-service demo: a short client of [`spmvperf::serve::Server`]
+//! — the paper's SpMVM as the hot path of a serving system. Two tenants
+//! register the same Holstein-Hubbard Hamiltonian (the second hits the
+//! tuned-handle cache), an open-loop burst of requests is coalesced into
+//! batched dispatches, and the printed stats show the amortization.
 //!
 //!     cargo run --release --example spmv_service [requests] [window_us]
 
-use std::sync::atomic::Ordering::Relaxed;
 use std::time::{Duration, Instant};
 
-use spmvperf::coordinator::{
-    BatchExecutor, Coordinator, Executor, PjrtExecutor, Service, ServiceConfig,
-};
 use spmvperf::gen::{holstein_hubbard, HolsteinHubbardParams};
-use spmvperf::matrix::{Crs, EllMatrix};
-use spmvperf::runtime::{default_artifacts_dir, Runtime};
-use spmvperf::spmv::SpmvHandle;
-use spmvperf::tune::TuningPolicy;
+use spmvperf::matrix::{Crs, SpMv};
+use spmvperf::serve::{ServeConfig, Server};
 use spmvperf::util::report::{f, Table};
 use spmvperf::util::rng::Rng;
 
 fn main() -> anyhow::Result<()> {
     let args: Vec<String> = std::env::args().collect();
-    let requests: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(256);
+    let requests: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(64);
     let window_us: u64 = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(300);
 
-    let h = holstein_hubbard(&HolsteinHubbardParams::tiny());
-    let ell = EllMatrix::from_crs(&Crs::from_coo(&h), Some(24))?;
-    let n = ell.n;
+    let crs = Crs::from_coo(&holstein_hubbard(&HolsteinHubbardParams::tiny()));
+    let n = crs.nrows;
 
-    let have_artifacts = default_artifacts_dir().join("spmv_b8_d24_n540.hlo.txt").exists();
-    let backend = if have_artifacts { "pjrt/pallas" } else { "native (artifacts missing)" };
-    eprintln!("starting service: dim {n}, backend {backend}, window {window_us}us");
+    let mut server = Server::start(ServeConfig {
+        max_delay: Duration::from_micros(window_us),
+        ..ServeConfig::default()
+    });
+    // Same matrix, two tenants: the first registration tunes a handle,
+    // the second reuses it from the fingerprint-keyed cache.
+    for tenant in ["alice", "bob"] {
+        let outcome = server.register(tenant, crs.clone())?;
+        eprintln!("register {tenant}: cache {}", outcome.name());
+    }
 
-    let ell_worker = ell.clone();
-    let h_worker = h.clone();
-    let svc = Service::start(
-        ServiceConfig { batch_window: Duration::from_micros(window_us) },
-        n,
-        move || {
-            if have_artifacts {
-                let rt = Runtime::new(&default_artifacts_dir())?;
-                let bound = rt.bind(&ell_worker, rt.load("spmv_b8_d24_n540.hlo.txt")?)?;
-                Ok(Box::new(PjrtExecutor { bound }) as Box<dyn BatchExecutor>)
-            } else {
-                // Auto-tuned fallback: the tuning layer picks the
-                // (scheme, C, σ, schedule) co-design AND arbitration
-                // picks the executor backend for this matrix — the
-                // example never names one. Each coalesced batch runs as
-                // one fused dispatch. Basis caveat: this executor
-                // interprets requests in the ORIGINAL basis, while the
-                // PJRT artifact uses its ELL permuted basis — so the
-                // printed checksum is NOT comparable across the two for
-                // the same seed; it only guards against regressions
-                // within one backend.
-                let handle = SpmvHandle::builder(&h_worker)
-                    .policy(TuningPolicy::Heuristic)
-                    .threads(4)
-                    .quick(true)
-                    .build()?;
-                eprintln!(
-                    "worker: tuned fallback -> {} under {} on the {} backend",
-                    handle.scheme().name(),
-                    handle.schedule().name(),
-                    handle.backend_name()
-                );
-                Ok(Box::new(Executor::from_handle(handle, 8)) as Box<dyn BatchExecutor>)
-            }
-        },
-    )?;
-    let mut router = Coordinator::new();
-    router.register("holstein-hubbard", svc);
-
-    // Open-loop load: fire all requests, then gather.
-    let svc = router.route("holstein-hubbard")?;
+    // Open-loop burst: fire everything, then gather. Tickets block until
+    // the dispatcher serves their coalesced batch.
     let mut rng = Rng::new(1234);
     let t0 = Instant::now();
-    let rxs: Vec<_> = (0..requests)
-        .map(|_| {
+    let tickets: Vec<_> = (0..requests)
+        .map(|i| {
             let mut x = vec![0.0; n];
             rng.fill_f64(&mut x, -1.0, 1.0);
-            svc.submit(x).unwrap()
+            let tenant = if i % 2 == 0 { "alice" } else { "bob" };
+            (x.clone(), server.submit(tenant, x).expect("admitted"))
         })
         .collect();
-    let mut checksum = 0.0f64;
-    for rx in rxs {
-        let y = rx.recv().unwrap().map_err(|e| anyhow::anyhow!(e))?;
-        checksum += y.iter().sum::<f64>();
+    let mut max_err = 0.0f64;
+    for (x, ticket) in tickets {
+        let y = ticket.wait();
+        let mut want = vec![0.0; n];
+        crs.spmv(&x, &mut want);
+        for (a, b) in y.iter().zip(&want) {
+            max_err = max_err.max((a - b).abs());
+        }
     }
     let dt = t0.elapsed();
+    anyhow::ensure!(max_err < 1e-12, "served results diverged: {max_err:e}");
 
-    let m = &svc.metrics;
-    let mut t = Table::new("service metrics", &["metric", "value"]);
-    t.row(vec!["backend".into(), backend.to_string()]);
-    t.row(vec!["requests".into(), m.requests.load(Relaxed).to_string()]);
-    t.row(vec!["batches".into(), m.batches.load(Relaxed).to_string()]);
-    t.row(vec!["avg batch size".into(), f(m.avg_batch())]);
-    t.row(vec!["avg latency (us)".into(), f(m.avg_latency_us())]);
-    t.row(vec!["p_max latency (us)".into(), m.latency_us_max.load(Relaxed).to_string()]);
-    t.row(vec!["errors".into(), m.errors.load(Relaxed).to_string()]);
+    let stats = server.stats();
+    let mut t = Table::new("serve stats", &["metric", "value"]);
+    t.row(vec!["requests".into(), stats.completed.to_string()]);
+    t.row(vec!["dispatches".into(), stats.dispatches.to_string()]);
+    t.row(vec!["avg batch size".into(), f(stats.avg_batch())]);
+    let cache = format!("{} / {}", stats.cache_hits, stats.cache_misses);
+    t.row(vec!["cache hits / misses".into(), cache]);
+    t.row(vec!["shed".into(), stats.shed.to_string()]);
     t.row(vec!["throughput (req/s)".into(), f(requests as f64 / dt.as_secs_f64())]);
-    t.row(vec!["checksum".into(), format!("{checksum:.6e}")]);
+    t.row(vec!["max |err| vs serial".into(), format!("{max_err:.1e}")]);
     t.print();
+    server.shutdown();
     Ok(())
 }

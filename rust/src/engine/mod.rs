@@ -355,6 +355,130 @@ struct SendPtr(*mut f64);
 unsafe impl Send for SendPtr {}
 unsafe impl Sync for SendPtr {}
 
+/// A pool of long-lived *role* threads parked on their channels between
+/// dispatches — the coordinator-side sibling of [`Engine`]'s worker
+/// pool. Where the engine partitions one kernel across its threads (and
+/// the caller executes partition 0 itself), a `TaskPool` runs `count`
+/// independent roles — shard coordinators, exchange threads — while the
+/// caller only waits, so the caller's own affinity is never touched and
+/// **no thread is ever spawned on a hot path**: every slot is spawned
+/// once at construction, parks on a blocking `recv` when idle (no
+/// spinning), and is reused by every subsequent [`TaskPool::run`].
+///
+/// [`TaskPool::spawned`] exposes the lifetime spawn count so callers can
+/// assert the no-spawn-per-call contract in regression tests.
+pub struct TaskPool {
+    senders: Vec<mpsc::Sender<Job>>,
+    workers: Vec<JoinHandle<()>>,
+    spawned: usize,
+}
+
+impl TaskPool {
+    /// A pool of `n_slots` unpinned role threads.
+    pub fn new(n_slots: usize) -> Self {
+        Self::with_pin(n_slots, |_| None)
+    }
+
+    /// A pool whose slot `i` pins itself to `pin(i)` (when `Some`) once
+    /// at spawn — persistent coordinators pay the pin syscall once, not
+    /// per call. On platforms without affinity support the pin degrades
+    /// to a recorded no-op exactly like [`Engine`] workers.
+    pub fn with_pin<P: Fn(usize) -> Option<usize>>(n_slots: usize, pin: P) -> Self {
+        assert!(n_slots > 0, "task pool needs at least one slot");
+        let mut senders = Vec::with_capacity(n_slots);
+        let mut workers = Vec::with_capacity(n_slots);
+        for i in 0..n_slots {
+            let (tx, rx) = mpsc::channel::<Job>();
+            senders.push(tx);
+            let cpu = pin(i);
+            let handle = std::thread::Builder::new()
+                .name(format!("spmv-coord-{i}"))
+                .spawn(move || {
+                    if let Some(c) = cpu {
+                        let _ = affinity::pin_current_thread(c);
+                    }
+                    // Parked here between dispatches; exits when the
+                    // pool drops its sender.
+                    for job in rx {
+                        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                            (job.f)(job.tid)
+                        }));
+                        if r.is_err() {
+                            job.done.poisoned.store(true, std::sync::atomic::Ordering::SeqCst);
+                        }
+                        job.done.count_down();
+                    }
+                })
+                .expect("spawning task-pool role thread");
+            workers.push(handle);
+        }
+        TaskPool { senders, workers, spawned: n_slots }
+    }
+
+    pub fn n_slots(&self) -> usize {
+        self.senders.len()
+    }
+
+    /// Threads ever spawned by this pool — fixed at construction, so a
+    /// test that snapshots it before a burst of calls and compares after
+    /// proves the hot path spawns nothing.
+    pub fn spawned(&self) -> usize {
+        self.spawned
+    }
+
+    /// Run `f(i)` for every `i in 0..count` concurrently on the parked
+    /// slots and return once all completed. Unlike [`Engine::run`] the
+    /// caller executes nothing itself — it only blocks on the completion
+    /// latch — so pinned slots keep their placement and the caller's
+    /// affinity mask is untouched.
+    pub fn run<F: Fn(usize) + Sync>(&self, count: usize, f: F) {
+        assert!(
+            count <= self.senders.len(),
+            "dispatching {count} roles on a {}-slot pool",
+            self.senders.len()
+        );
+        if count == 0 {
+            return;
+        }
+        let latch = Arc::new(Latch::new(count));
+        let fr: &(dyn Fn(usize) + Sync) = &f;
+        // Safety: `latch.wait()` below blocks until every slot dropped
+        // its job, so the erased borrow cannot outlive `f` (the same
+        // contract as [`Engine::run`]).
+        let fr = unsafe {
+            std::mem::transmute::<&(dyn Fn(usize) + Sync), &'static (dyn Fn(usize) + Sync)>(fr)
+        };
+        for (i, tx) in self.senders[..count].iter().enumerate() {
+            let job = Job { f: fr, tid: i, done: latch.clone() };
+            if let Err(mpsc::SendError(job)) = tx.send(job) {
+                // Slot gone (contained panics make this unreachable in
+                // practice): degrade to inline execution so the latch
+                // still resolves.
+                let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    (job.f)(job.tid)
+                }));
+                if r.is_err() {
+                    job.done.poisoned.store(true, std::sync::atomic::Ordering::SeqCst);
+                }
+                job.done.count_down();
+            }
+        }
+        latch.wait();
+        if latch.poisoned.load(std::sync::atomic::Ordering::SeqCst) {
+            panic!("task-pool role thread panicked during dispatch");
+        }
+    }
+}
+
+impl Drop for TaskPool {
+    fn drop(&mut self) {
+        self.senders.clear(); // close channels; slots drain and exit
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
 /// A persistent, reusable execution plan for one kernel: scheme +
 /// schedule + thread count resolved to per-thread row partitions, plus a
 /// preallocated permuted-basis workspace for original-basis calls.
@@ -1285,6 +1409,58 @@ mod tests {
                 }
             }
         }
+    }
+
+    /// ISSUE-7: the role pool runs `count ≤ n_slots` concurrent roles,
+    /// reuses the same parked threads across dispatches (spawn count is
+    /// fixed at construction), and leaves slots beyond `count` parked.
+    #[test]
+    fn task_pool_runs_roles_without_respawning() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let pool = TaskPool::new(4);
+        assert_eq!(pool.n_slots(), 4);
+        assert_eq!(pool.spawned(), 4);
+        let hits = [AtomicUsize::new(0), AtomicUsize::new(0), AtomicUsize::new(0)];
+        for round in 1..=5usize {
+            pool.run(3, |i| {
+                hits[i].fetch_add(1, Ordering::SeqCst);
+            });
+            for h in &hits {
+                assert_eq!(h.load(Ordering::SeqCst), round);
+            }
+        }
+        pool.run(0, |_| unreachable!("zero-role dispatch runs nothing"));
+        assert_eq!(pool.spawned(), 4, "dispatches must not spawn");
+    }
+
+    /// Roles on distinct slots genuinely overlap: two roles that each
+    /// wait for the other's gate would deadlock on a single thread.
+    #[test]
+    fn task_pool_roles_run_concurrently() {
+        let pool = TaskPool::new(2);
+        let a = HaloGate::new();
+        let b = HaloGate::new();
+        pool.run(2, |i| {
+            if i == 0 {
+                a.signal();
+                b.wait();
+            } else {
+                a.wait();
+                b.signal();
+            }
+        });
+        assert!(a.is_open() && b.is_open());
+    }
+
+    #[test]
+    #[should_panic(expected = "task-pool role thread panicked")]
+    fn task_pool_propagates_role_panics() {
+        let pool = TaskPool::new(2);
+        pool.run(2, |i| {
+            if i == 1 {
+                panic!("role boom");
+            }
+        });
     }
 
     #[test]

@@ -41,6 +41,12 @@
 //!   splits, halo exchange behind a transport trait, and bulk-synchronous
 //!   vs compute/exchange-overlapped execution (arXiv:1106.5908) — each
 //!   shard backed by its own pinned engine and first-touched buffers;
+//! - a **serving layer** ([`serve`]): a [`serve::Server`] with one
+//!   persistent dispatcher thread, deadline-based batch coalescing into
+//!   `spmv_batch`, a multi-tenant LRU cache of tuned handles keyed by
+//!   [`tune::MatrixFingerprint`] ([`serve::HandleCache`]), and admission
+//!   control with per-tenant fairness and typed overload shedding
+//!   ([`serve::Rejected`]);
 //! - a PJRT runtime that loads the AOT-compiled JAX/Pallas SpMV artifacts
 //!   and a coordinator serving batched SpMV requests ([`runtime`],
 //!   [`coordinator`]) through one backend-agnostic
@@ -68,6 +74,7 @@ pub mod matrix;
 pub mod perfmodel;
 pub mod runtime;
 pub mod sched;
+pub mod serve;
 pub mod shard;
 pub mod simulator;
 pub mod spmv;

@@ -22,18 +22,20 @@
 //!                     — BENCH_*.json regression gate (CI)
 //! spmvperf benchdiff  --suggest-floors <current.json> [--factor 0.7]
 //!                     — print a committable baseline floored at factor × measured
-//! spmvperf serve      [--requests 64 --batch-window-us 500] — PJRT service demo
+//! spmvperf serve      [--bench] [--quick] [--max-batch 8 --max-delay-us 200]
+//!                     [--tenants 2 --queue-cap 256 --duration 300]
+//!                     — serving-layer load sweep (p50/p99 × throughput × shed);
+//!                       --bench writes results/BENCH_serve.json for CI
 //! spmvperf matrix     [--out FILE.mtx] — generate + analyze the test matrix
 //! spmvperf info       — platform, machines, artifacts
 //! ```
 
 use anyhow::{bail, Context, Result};
-use spmvperf::coordinator::{BatchExecutor, PjrtExecutor, Service, ServiceConfig};
 use spmvperf::eigen::LanczosConfig;
 use spmvperf::experiments::{self, ExpOptions};
 use spmvperf::gen::{self, HolsteinHubbardParams};
 use spmvperf::kernels::{IsaLevel, Precision, SpmvKernel};
-use spmvperf::matrix::{Crs, EllMatrix, Scheme, SpMv};
+use spmvperf::matrix::{Crs, Scheme, SpMv};
 use spmvperf::perfmodel::{predict, CostCurve};
 use spmvperf::runtime::{default_artifacts_dir, Runtime};
 use spmvperf::sched::Schedule;
@@ -95,7 +97,8 @@ USAGE:
                       [--policy heuristic|measured] [--quick|--full]
   spmvperf benchdiff  <baseline.json> <current.json> [--tolerance 0.2]
   spmvperf benchdiff  --suggest-floors <current.json> [--factor 0.7]
-  spmvperf serve      [--requests 64 --batch-window-us 500]
+  spmvperf serve      [--bench] [--quick] [--max-batch 8] [--max-delay-us 200]
+                      [--tenants 2] [--queue-cap 256] [--duration 300]
   spmvperf matrix     [--out FILE.mtx] [--full|--quick]
   spmvperf info
 "#;
@@ -628,53 +631,23 @@ fn cmd_benchdiff(args: &mut Args) -> Result<()> {
     Ok(())
 }
 
+/// The serving-layer bench/demo over `serve::Server` (persistent
+/// dispatcher, deadline coalescing, multi-tenant handle cache,
+/// admission control). Always runs the self-validated load sweep;
+/// `--bench` additionally emits `results/BENCH_serve.json` for the CI
+/// regression gate.
 fn cmd_serve(args: &Args) -> Result<()> {
-    let requests = args.get_usize("requests", 64)?;
-    let window_us = args.get_u64("batch-window-us", 500)?;
+    let opts = spmvperf::serve::BenchOpts {
+        quick: args.flag("quick"),
+        max_batch: args.get_usize("max-batch", 8)?,
+        max_delay_us: args.get_u64("max-delay-us", 200)?,
+        tenants: args.get_usize("tenants", 2)?,
+        queue_cap: args.get_usize("queue-cap", 256)?,
+        duration_ms: args.get_u64("duration", 300)?,
+        write_json: args.flag("bench"),
+    };
     args.finish()?;
-    let h = gen::holstein_hubbard(&HolsteinHubbardParams::tiny());
-    let crs = Crs::from_coo(&h);
-    let ell = EllMatrix::from_crs(&crs, Some(24))?;
-    let n = ell.n;
-    let ell2 = ell.clone();
-    eprintln!("starting PJRT-backed SpMV service (dim {n}) ...");
-    let svc = Service::start(
-        ServiceConfig { batch_window: std::time::Duration::from_micros(window_us) },
-        n,
-        move || {
-            let rt = Runtime::new(&default_artifacts_dir())?;
-            eprintln!("worker: PJRT platform = {}", rt.platform());
-            let bound = rt.bind(&ell2, rt.load("spmv_b8_d24_n540.hlo.txt")?)?;
-            Ok(Box::new(PjrtExecutor { bound }) as Box<dyn BatchExecutor>)
-        },
-    )?;
-    let mut rng = spmvperf::util::rng::Rng::new(7);
-    let t0 = std::time::Instant::now();
-    let rxs: Vec<_> = (0..requests)
-        .map(|_| {
-            let mut x = vec![0.0; n];
-            rng.fill_f64(&mut x, -1.0, 1.0);
-            svc.submit(x).unwrap()
-        })
-        .collect();
-    let mut checksum = 0.0;
-    for rx in rxs {
-        let y = rx.recv().unwrap().map_err(|e| anyhow::anyhow!(e))?;
-        checksum += y[0];
-    }
-    let dt = t0.elapsed();
-    let m = &svc.metrics;
-    use std::sync::atomic::Ordering::Relaxed;
-    let mut t = Table::new("SpMV service run", &["metric", "value"]);
-    t.row(vec!["requests".into(), m.requests.load(Relaxed).to_string()]);
-    t.row(vec!["batches".into(), m.batches.load(Relaxed).to_string()]);
-    t.row(vec!["avg batch size".into(), f(m.avg_batch())]);
-    t.row(vec!["avg latency (us)".into(), f(m.avg_latency_us())]);
-    t.row(vec!["max latency (us)".into(), m.latency_us_max.load(Relaxed).to_string()]);
-    t.row(vec!["throughput (req/s)".into(), f(requests as f64 / dt.as_secs_f64())]);
-    t.row(vec!["checksum".into(), format!("{checksum:.6e}")]);
-    t.print();
-    Ok(())
+    spmvperf::serve::run_bench(&opts)
 }
 
 fn cmd_matrix(args: &Args) -> Result<()> {

@@ -1,0 +1,365 @@
+//! The serving-layer bench behind `spmvperf serve [--bench]`: an
+//! open-loop load generator sweeping offered load against a live
+//! [`Server`], emitting `results/BENCH_serve.json` (p50/p99 latency ×
+//! achieved throughput × shed rate per load point) for the CI
+//! regression gate.
+//!
+//! Self-validating before timing: served results must be bit-identical
+//! to a directly built [`crate::spmv::SpmvHandle`] with the same build
+//! options, and within 1e-12 of serial CRS; repeat-tenant registrations
+//! must hit the handle cache. The acceptance ratio — coalesced batched
+//! dispatch vs one-request-per-dispatch at the same offered load — is
+//! recorded as the `coalesce-ratio` entry.
+//!
+//! Latency is stamped client-side by an in-order collector thread
+//! (submit time → reply received); because dispatch is FIFO per tenant
+//! and oldest-head-first across tenants, the in-order wait bias is
+//! bounded by one batch window.
+
+use std::fmt::Write as _;
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::gen::{self, HolsteinHubbardParams};
+use crate::matrix::{Crs, SpMv};
+use crate::util::bench::write_bench_json;
+use crate::util::report::{f, Table};
+use crate::util::rng::Rng;
+use crate::util::stats::{max_abs_diff, quantile};
+
+use super::{build_handle, Server, ServeConfig, Ticket};
+
+/// Knobs for [`run_bench`] — mirrored 1:1 by the `spmvperf serve` CLI
+/// options (`--max-batch`, `--max-delay-us`, `--tenants`,
+/// `--queue-cap`, `--duration`, `--quick`, `--bench`).
+#[derive(Debug, Clone, Copy)]
+pub struct BenchOpts {
+    /// Shrink every measurement window (CI smoke).
+    pub quick: bool,
+    pub max_batch: usize,
+    pub max_delay_us: u64,
+    pub tenants: usize,
+    pub queue_cap: usize,
+    /// Per-load-point measurement window, milliseconds.
+    pub duration_ms: u64,
+    /// Emit `results/BENCH_serve.json` (the `--bench` flag).
+    pub write_json: bool,
+}
+
+impl Default for BenchOpts {
+    fn default() -> Self {
+        BenchOpts {
+            quick: false,
+            max_batch: 8,
+            max_delay_us: 200,
+            tenants: 2,
+            queue_cap: 256,
+            duration_ms: 300,
+            write_json: false,
+        }
+    }
+}
+
+/// One open-loop measurement at a fixed offered load.
+struct Point {
+    completed: u64,
+    achieved_rps: f64,
+    p50_us: f64,
+    p99_us: f64,
+    shed_rate: f64,
+}
+
+pub fn run_bench(o: &BenchOpts) -> Result<()> {
+    anyhow::ensure!(o.tenants >= 1, "need at least one tenant");
+    anyhow::ensure!(o.max_batch >= 1, "--max-batch must be at least 1");
+    let crs = Crs::from_coo(&gen::holstein_hubbard(&HolsteinHubbardParams::tiny()));
+    let n = crs.nrows;
+    let nnz = crs.nnz();
+    let point_dur =
+        Duration::from_millis(if o.quick { o.duration_ms.min(80) } else { o.duration_ms });
+    let cfg = ServeConfig {
+        max_batch: o.max_batch,
+        max_delay: Duration::from_micros(o.max_delay_us),
+        queue_cap: o.queue_cap,
+        ..ServeConfig::default()
+    };
+    let tenants: Vec<String> = (0..o.tenants).map(|t| format!("t{t}")).collect();
+    eprintln!(
+        "serve bench: dim {n}, nnz {nnz}, {} tenant(s), max_batch {} / max_delay {} us, \
+         queue cap {}, {} ms/point",
+        o.tenants,
+        o.max_batch,
+        o.max_delay_us,
+        o.queue_cap,
+        point_dur.as_millis()
+    );
+
+    let mut server = Server::start(cfg);
+    for t in &tenants {
+        server.register(t, crs.clone())?;
+    }
+    let s = server.stats();
+    anyhow::ensure!(
+        s.cache_misses == 1 && s.cache_hits == o.tenants as u64 - 1,
+        "repeat-tenant registrations must hit the handle cache \
+         (misses {}, hits {}, tenants {})",
+        s.cache_misses,
+        s.cache_hits,
+        o.tenants
+    );
+
+    // Self-validation before any timing: the serving path must not
+    // change the math.
+    let mut rng = Rng::new(7);
+    let mut x = vec![0.0; n];
+    rng.fill_f64(&mut x, -1.0, 1.0);
+    let direct = build_handle(&crs, &cfg.build_opts())?;
+    let mut want = vec![0.0; n];
+    direct.spmv(&x, &mut want);
+    let mut want_crs = vec![0.0; n];
+    crs.spmv(&x, &mut want_crs);
+    for t in &tenants {
+        let got = server
+            .submit(t, x.clone())
+            .map_err(|r| anyhow::anyhow!("validation submit rejected: {}", r.reason()))?
+            .wait();
+        anyhow::ensure!(
+            max_abs_diff(&want, &got) == 0.0,
+            "served result not bit-identical to a directly built handle"
+        );
+        anyhow::ensure!(
+            max_abs_diff(&want_crs, &got) < 1e-12,
+            "served result deviates from serial CRS"
+        );
+    }
+    eprintln!(
+        "self-validation OK: served == direct handle (bit-identical), == serial CRS (1e-12); \
+         cache hits {}/{} registrations",
+        s.cache_hits,
+        o.tenants
+    );
+
+    // Closed-loop capacity estimate, then the open-loop sweep around it.
+    let burst = (4 * o.max_batch).min(o.queue_cap).max(1);
+    let cap_dur = point_dur.min(Duration::from_millis(150));
+    let cap_rps = closed_loop_capacity(&server, &tenants, &x, burst, cap_dur).max(50.0);
+    eprintln!("closed-loop capacity ~ {cap_rps:.0} req/s (burst {burst})");
+
+    let mut table = Table::new(
+        "serve: open-loop load sweep (Holstein-Hubbard tiny)",
+        &["config", "offered req/s", "achieved req/s", "p50 us", "p99 us", "shed rate", "MFlop/s"],
+    );
+    let mut entries: Vec<String> = Vec::new();
+    let mut push_entry = |config: &str, p: &Point, offered_rps: f64, mflops: f64| {
+        entries.push(format!(
+            concat!(
+                "    {{\"matrix\": \"holstein-hubbard\", \"config\": \"{}\", ",
+                "\"tenants\": {}, \"max_batch\": {}, \"max_delay_us\": {}, ",
+                "\"queue_cap\": {}, \"offered_rps\": {:.1}, \"achieved_rps\": {:.1}, ",
+                "\"p50_us\": {:.1}, \"p99_us\": {:.1}, \"shed_rate\": {:.4}, ",
+                "\"completed\": {}, \"mflops\": {:.3}}}"
+            ),
+            config,
+            o.tenants,
+            o.max_batch,
+            o.max_delay_us,
+            o.queue_cap,
+            offered_rps,
+            p.achieved_rps,
+            p.p50_us,
+            p.p99_us,
+            p.shed_rate,
+            p.completed,
+            mflops,
+        ));
+    };
+    let mut batched_at_capacity = 0.0_f64;
+    for (label, mult) in [("load0.5x", 0.5), ("load1x", 1.0), ("load2x", 2.0)] {
+        let offered_rps = cap_rps * mult;
+        let p = open_loop_point(&server, &tenants, &x, offered_rps, point_dur);
+        if label == "load1x" {
+            batched_at_capacity = p.achieved_rps;
+        }
+        let mflops = p.achieved_rps * (2 * nnz) as f64 / 1e6;
+        table.row(vec![
+            label.to_string(),
+            f(offered_rps),
+            f(p.achieved_rps),
+            f(p.p50_us),
+            f(p.p99_us),
+            f(p.shed_rate),
+            f(mflops),
+        ]);
+        push_entry(label, &p, offered_rps, mflops);
+    }
+    server.shutdown();
+
+    // The acceptance ratio: the same offered load served with batch
+    // coalescing disabled (max_batch = 1, one request per dispatch).
+    let single_cfg = ServeConfig { max_batch: 1, ..cfg };
+    let mut single = Server::start(single_cfg);
+    for t in &tenants {
+        single.register(t, crs.clone())?;
+    }
+    let p1 = open_loop_point(&single, &tenants, &x, cap_rps, point_dur);
+    single.shutdown();
+    anyhow::ensure!(p1.completed > 0, "single-dispatch run served nothing");
+    let single_mflops = p1.achieved_rps * (2 * nnz) as f64 / 1e6;
+    let ratio = batched_at_capacity / p1.achieved_rps.max(1e-9);
+    table.row(vec![
+        "coalesce-single".into(),
+        f(cap_rps),
+        f(p1.achieved_rps),
+        f(p1.p50_us),
+        f(p1.p99_us),
+        f(p1.shed_rate),
+        f(single_mflops),
+    ]);
+    push_entry("coalesce-single", &p1, cap_rps, single_mflops);
+    entries.push(format!(
+        concat!(
+            "    {{\"matrix\": \"holstein-hubbard\", \"config\": \"coalesce-ratio\", ",
+            "\"batched_rps\": {:.1}, \"single_rps\": {:.1}, \"mflops\": {:.4}}}"
+        ),
+        batched_at_capacity, p1.achieved_rps, ratio,
+    ));
+    table.print();
+    println!(
+        "coalesced/single-dispatch throughput at the same offered load: {ratio:.3}x \
+         ({batched_at_capacity:.0} vs {:.0} req/s)",
+        p1.achieved_rps
+    );
+
+    if o.write_json {
+        let mut json = String::new();
+        let _ = writeln!(json, "{{");
+        let _ = writeln!(json, "  \"bench\": \"serve\",");
+        let _ = writeln!(
+            json,
+            "  \"note\": \"coalesce-ratio mflops field is the batched/single throughput \
+             ratio, not MFlop/s\","
+        );
+        let _ = writeln!(json, "  \"results\": [");
+        let _ = writeln!(json, "{}", entries.join(",\n"));
+        let _ = writeln!(json, "  ]");
+        let _ = writeln!(json, "}}");
+        write_bench_json("BENCH_serve.json", &json);
+    }
+    Ok(())
+}
+
+/// Saturated closed-loop bursts: submit `burst` requests round-robin
+/// across tenants, wait for all, repeat — the server's sustainable
+/// req/s under full batches, used to anchor the open-loop sweep.
+fn closed_loop_capacity(
+    server: &Server,
+    tenants: &[String],
+    x: &[f64],
+    burst: usize,
+    dur: Duration,
+) -> f64 {
+    let t0 = Instant::now();
+    let mut done = 0u64;
+    let mut ti = 0usize;
+    while t0.elapsed() < dur {
+        let tickets: Vec<Ticket> = (0..burst)
+            .filter_map(|_| {
+                let t = &tenants[ti % tenants.len()];
+                ti += 1;
+                server.submit(t, x.to_vec()).ok()
+            })
+            .collect();
+        if tickets.is_empty() {
+            break;
+        }
+        for t in tickets {
+            t.wait();
+            done += 1;
+        }
+    }
+    done as f64 / t0.elapsed().as_secs_f64().max(1e-9)
+}
+
+/// One open-loop point: submit on a fixed arrival schedule regardless
+/// of completions (deficit-based, so a stalled server does not slow the
+/// offered load), collect per-request latency on a side thread, and
+/// count shed submissions.
+fn open_loop_point(
+    server: &Server,
+    tenants: &[String],
+    x: &[f64],
+    offered_rps: f64,
+    dur: Duration,
+) -> Point {
+    let (tx, rx) = mpsc::channel::<(Instant, Ticket)>();
+    let collector = std::thread::spawn(move || {
+        let mut lats: Vec<f64> = Vec::new();
+        let mut checksum = 0.0;
+        let mut last: Option<Instant> = None;
+        for (t0, ticket) in rx {
+            let y = ticket.wait();
+            lats.push(t0.elapsed().as_secs_f64() * 1e6);
+            checksum += y[0];
+            last = Some(Instant::now());
+        }
+        (lats, last, checksum)
+    });
+    let start = Instant::now();
+    let mut offered = 0u64;
+    let mut shed = 0u64;
+    let mut ti = 0usize;
+    loop {
+        let el = start.elapsed();
+        if el >= dur {
+            break;
+        }
+        // Open loop: arrivals due so far at this offered rate, minus
+        // what we already submitted.
+        let due = (el.as_secs_f64() * offered_rps) as u64 + 1;
+        while offered < due {
+            let t = &tenants[ti % tenants.len()];
+            ti += 1;
+            match server.submit(t, x.to_vec()) {
+                Ok(ticket) => {
+                    let _ = tx.send((Instant::now(), ticket));
+                }
+                Err(r) => {
+                    debug_assert!(r.is_shed(), "load generator mis-submitted: {}", r.reason());
+                    shed += 1;
+                }
+            }
+            offered += 1;
+        }
+        std::thread::sleep(Duration::from_micros(200));
+    }
+    drop(tx);
+    let (lats, last, _checksum) = collector.join().expect("latency collector panicked");
+    let completed = lats.len() as u64;
+    let wall = last
+        .map(|l| l.duration_since(start))
+        .unwrap_or_else(|| start.elapsed())
+        .as_secs_f64()
+        .max(1e-9);
+    Point {
+        completed,
+        achieved_rps: completed as f64 / wall,
+        p50_us: quantile(&lats, 0.5),
+        p99_us: quantile(&lats, 0.99),
+        shed_rate: shed as f64 / offered.max(1) as f64,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The whole bench pipeline (validation, capacity, sweep, ratio) in
+    /// a tiny quick run — no JSON side effects.
+    #[test]
+    fn quick_bench_runs_end_to_end() {
+        let o = BenchOpts { quick: true, duration_ms: 30, ..BenchOpts::default() };
+        run_bench(&o).unwrap();
+    }
+}

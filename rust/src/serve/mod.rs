@@ -1,0 +1,884 @@
+//! The serving layer: persistent dispatch, adaptive batching, and a
+//! multi-tenant handle cache — the production face of the repo's
+//! north-star ("serve heavy traffic from millions of users").
+//!
+//! The paper's central finding is that SpMV is bandwidth-bound, so
+//! sustained service throughput comes from amortizing per-call
+//! overheads. Three layers below this one already amortize — the engine
+//! pays its completion latch once per batch (`spmv_batch`), the sharded
+//! backend parks persistent coordinator/exchange roles between calls
+//! ([`crate::engine::TaskPool`]), and the tuner's per-matrix search pays
+//! off only across many calls (arXiv:1711.05487). [`Server`] is the
+//! piece that turns *independent caller requests* into those amortized
+//! shapes:
+//!
+//! - **Submission queue + deadline coalescing**: [`Server::submit`]
+//!   enqueues; a persistent dispatcher thread collects same-tenant
+//!   requests into one `spmv_batch` dispatch, releasing a batch when it
+//!   reaches `max_batch` requests or its oldest request has waited
+//!   `max_delay` — latency-bounded batching.
+//! - **Multi-tenant handle cache**: [`HandleCache`] keeps an LRU of
+//!   tuned [`SpmvHandle`]s keyed by [`MatrixFingerprint`], so repeat
+//!   tenants (or tenants sharing a matrix) skip the tune cost entirely
+//!   (full hit) or at least the tuning search (structural "plan hit":
+//!   same pattern, new values ⇒ reuse scheme/schedule/backend, rebuild
+//!   on the new values). Evicted handles drop their engines cleanly
+//!   when the last tenant reference goes.
+//! - **Admission control**: a bounded global queue plus a per-tenant
+//!   quota (`queue_cap / n_tenants`) shed overload with a typed
+//!   [`Rejected`] reason instead of unbounded latency, and keep one hot
+//!   tenant from starving the rest; among deadline-ready tenants the
+//!   dispatcher always serves the oldest head (FIFO across tenants).
+//!
+//! Threading: [`SpmvHandle`] is deliberately **not** `Send` (a future
+//! PJRT backend won't be), so handles never cross threads — the
+//! dispatcher thread builds, caches (`Rc`), and executes them; clients
+//! talk to it only through the control queue and per-request reply
+//! channels. See DESIGN.md §6 for the sequence diagram.
+
+use std::collections::{HashMap, VecDeque};
+use std::rc::Rc;
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::kernels::Precision;
+use crate::matrix::Crs;
+use crate::spmv::{BackendChoice, SpmvHandle};
+use crate::tune::{MatrixFingerprint, TuningPolicy};
+
+mod bench;
+pub use bench::{run_bench, BenchOpts};
+
+/// How the server builds and batches. `Default` is the tuned-but-quick
+/// profile the CLI and tests use.
+#[derive(Debug, Clone, Copy)]
+pub struct ServeConfig {
+    /// Largest coalesced batch per dispatch.
+    pub max_batch: usize,
+    /// Longest a request may wait for co-batching before its batch is
+    /// released anyway.
+    pub max_delay: Duration,
+    /// Global bound on queued (admitted, undispatched) requests; the
+    /// per-tenant quota is `queue_cap / n_tenants` (at least 1).
+    pub queue_cap: usize,
+    /// Capacity of the tuned-handle LRU cache.
+    pub cache_cap: usize,
+    /// Engine threads per tuned handle.
+    pub threads: usize,
+    /// Quick tuning (short measured probes) when the policy measures.
+    pub quick: bool,
+    /// Pin handle engines (serving usually leaves this off — tenants
+    /// share the machine).
+    pub pinned: bool,
+    pub precision: Precision,
+    pub policy: TuningPolicy,
+    pub backend: BackendChoice,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            max_batch: 8,
+            max_delay: Duration::from_micros(200),
+            queue_cap: 256,
+            cache_cap: 8,
+            threads: 2,
+            quick: true,
+            pinned: false,
+            precision: Precision::BitIdentical,
+            policy: TuningPolicy::Heuristic,
+            backend: BackendChoice::Auto,
+        }
+    }
+}
+
+impl ServeConfig {
+    fn build_opts(&self) -> BuildOpts {
+        BuildOpts {
+            policy: self.policy,
+            backend: self.backend,
+            threads: self.threads,
+            quick: self.quick,
+            pinned: self.pinned,
+            precision: self.precision,
+        }
+    }
+}
+
+/// How the cache builds a handle on a miss (a [`ServeConfig`] slice,
+/// separated so [`HandleCache`] is testable without a server).
+#[derive(Debug, Clone, Copy)]
+pub struct BuildOpts {
+    pub policy: TuningPolicy,
+    pub backend: BackendChoice,
+    pub threads: usize,
+    pub quick: bool,
+    pub pinned: bool,
+    pub precision: Precision,
+}
+
+impl Default for BuildOpts {
+    fn default() -> Self {
+        ServeConfig::default().build_opts()
+    }
+}
+
+fn build_handle(crs: &Crs, opts: &BuildOpts) -> Result<SpmvHandle> {
+    SpmvHandle::builder_from_crs(crs)
+        .policy(opts.policy)
+        .backend(opts.backend)
+        .threads(opts.threads)
+        .quick(opts.quick)
+        .pinned(opts.pinned)
+        .precision(opts.precision)
+        .build()
+}
+
+/// What [`HandleCache::get_or_build`] did for a lookup.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CacheOutcome {
+    /// Same structure and same values: the cached handle is reused as
+    /// is — the tune cost is skipped entirely.
+    Hit,
+    /// Same structure, different values (a fingerprint "collision" on
+    /// the tuning-relevant identity): the cached *plan* — scheme,
+    /// schedule, backend — transfers, but the handle is rebuilt on the
+    /// new values so results stay correct.
+    PlanHit,
+    /// Unknown matrix: full tuning run.
+    Miss,
+}
+
+impl CacheOutcome {
+    pub fn name(&self) -> &'static str {
+        match self {
+            CacheOutcome::Hit => "hit",
+            CacheOutcome::PlanHit => "plan-hit",
+            CacheOutcome::Miss => "miss",
+        }
+    }
+}
+
+/// LRU cache of tuned handles keyed by [`MatrixFingerprint`]. Entries
+/// are `Rc` so the dispatcher's tenant registry can keep a served
+/// handle alive past eviction; when the last reference drops, the
+/// handle's backend (and its engine worker pools) shut down cleanly —
+/// that is the whole eviction contract.
+pub struct HandleCache {
+    cap: usize,
+    /// MRU first.
+    entries: Vec<(MatrixFingerprint, Rc<SpmvHandle>)>,
+    hits: u64,
+    plan_hits: u64,
+    misses: u64,
+    evictions: u64,
+}
+
+impl HandleCache {
+    pub fn new(cap: usize) -> Self {
+        assert!(cap > 0, "handle cache needs capacity for at least one handle");
+        HandleCache { cap, entries: Vec::new(), hits: 0, plan_hits: 0, misses: 0, evictions: 0 }
+    }
+
+    /// Look `crs` up by fingerprint; build (and insert MRU) on a miss
+    /// or plan hit. See [`CacheOutcome`] for the three paths.
+    pub fn get_or_build(
+        &mut self,
+        crs: &Crs,
+        opts: &BuildOpts,
+    ) -> Result<(Rc<SpmvHandle>, CacheOutcome)> {
+        let fp = MatrixFingerprint::of(crs);
+        if let Some(i) = self.entries.iter().position(|(k, _)| *k == fp) {
+            let e = self.entries.remove(i);
+            self.entries.insert(0, e);
+            self.hits += 1;
+            return Ok((self.entries[0].1.clone(), CacheOutcome::Hit));
+        }
+        if let Some(i) = self.entries.iter().position(|(k, _)| k.same_structure(&fp)) {
+            // Plan hit: the tuning decisions depend only on structure,
+            // so pin them from the cached handle and rebuild on the new
+            // values. The value-stale entry is replaced (its engines
+            // drop with the last outside reference).
+            let (_, stale) = self.entries.remove(i);
+            let mut pinned_opts = *opts;
+            pinned_opts.policy = TuningPolicy::Fixed(stale.scheme(), stale.schedule());
+            pinned_opts.backend =
+                BackendChoice::parse(stale.backend_name()).unwrap_or(opts.backend);
+            drop(stale);
+            let h = Rc::new(build_handle(crs, &pinned_opts)?);
+            self.entries.insert(0, (fp, h.clone()));
+            self.plan_hits += 1;
+            self.trim();
+            return Ok((h, CacheOutcome::PlanHit));
+        }
+        let h = Rc::new(build_handle(crs, opts)?);
+        self.entries.insert(0, (fp, h.clone()));
+        self.misses += 1;
+        self.trim();
+        Ok((h, CacheOutcome::Miss))
+    }
+
+    fn trim(&mut self) {
+        while self.entries.len() > self.cap {
+            self.entries.pop();
+            self.evictions += 1;
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+    /// Cached fingerprints, most recently used first.
+    pub fn fingerprints(&self) -> Vec<MatrixFingerprint> {
+        self.entries.iter().map(|(k, _)| *k).collect()
+    }
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+    pub fn plan_hits(&self) -> u64 {
+        self.plan_hits
+    }
+    pub fn misses(&self) -> u64 {
+        self.misses
+    }
+    pub fn evictions(&self) -> u64 {
+        self.evictions
+    }
+}
+
+/// Why [`Server::submit`] refused a request. Overload refusals
+/// ([`Rejected::is_shed`]) are the graceful-shedding half of admission
+/// control; the others are caller errors.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Rejected {
+    /// No [`Server::register`] for this tenant yet.
+    UnknownTenant,
+    /// Input length does not match the tenant's registered matrix.
+    DimMismatch { want: usize, got: usize },
+    /// The global queue is at `queue_cap`.
+    QueueFull,
+    /// This tenant is at its fairness quota (`queue_cap / n_tenants`).
+    TenantQuota,
+    /// The server is draining for shutdown.
+    ShuttingDown,
+}
+
+impl Rejected {
+    pub fn reason(&self) -> &'static str {
+        match self {
+            Rejected::UnknownTenant => "unknown-tenant",
+            Rejected::DimMismatch { .. } => "dim-mismatch",
+            Rejected::QueueFull => "queue-full",
+            Rejected::TenantQuota => "tenant-quota",
+            Rejected::ShuttingDown => "shutting-down",
+        }
+    }
+
+    /// Overload shedding (counted in [`ServeStats::shed`]) as opposed
+    /// to a malformed request.
+    pub fn is_shed(&self) -> bool {
+        matches!(self, Rejected::QueueFull | Rejected::TenantQuota | Rejected::ShuttingDown)
+    }
+}
+
+/// An admitted request's claim check: blocks until the dispatcher
+/// serves its batch.
+pub struct Ticket {
+    rx: mpsc::Receiver<Vec<f64>>,
+}
+
+impl Ticket {
+    /// Wait for the result. Admitted requests are always served — the
+    /// dispatcher drains every queue before shutting down.
+    pub fn wait(self) -> Vec<f64> {
+        self.rx.recv().expect("serve dispatcher dropped an admitted request")
+    }
+}
+
+/// Counters snapshot; see [`Server::stats`]. The `cache_*` fields
+/// mirror the dispatcher-side [`HandleCache`] counters after each
+/// registration.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ServeStats {
+    pub submitted: u64,
+    pub completed: u64,
+    pub shed: u64,
+    pub dispatches: u64,
+    pub dispatched_requests: u64,
+    pub cache_hits: u64,
+    pub cache_plan_hits: u64,
+    pub cache_misses: u64,
+    pub cache_evictions: u64,
+}
+
+impl ServeStats {
+    /// Mean coalesced batch size — the amortization the queue actually
+    /// achieved.
+    pub fn avg_batch(&self) -> f64 {
+        if self.dispatches == 0 {
+            0.0
+        } else {
+            self.dispatched_requests as f64 / self.dispatches as f64
+        }
+    }
+}
+
+#[derive(Default)]
+struct StatsInner {
+    submitted: AtomicU64,
+    completed: AtomicU64,
+    shed: AtomicU64,
+    dispatches: AtomicU64,
+    dispatched_requests: AtomicU64,
+    cache_hits: AtomicU64,
+    cache_plan_hits: AtomicU64,
+    cache_misses: AtomicU64,
+    cache_evictions: AtomicU64,
+}
+
+impl StatsInner {
+    fn sync_cache(&self, cache: &HandleCache) {
+        self.cache_hits.store(cache.hits(), Relaxed);
+        self.cache_plan_hits.store(cache.plan_hits(), Relaxed);
+        self.cache_misses.store(cache.misses(), Relaxed);
+        self.cache_evictions.store(cache.evictions(), Relaxed);
+    }
+}
+
+struct Pending {
+    x: Vec<f64>,
+    enqueued: Instant,
+    reply: mpsc::Sender<Vec<f64>>,
+}
+
+struct TenantState {
+    dim: usize,
+    queue: VecDeque<Pending>,
+}
+
+enum Control {
+    Register {
+        tenant: String,
+        crs: Box<Crs>,
+        reply: mpsc::Sender<std::result::Result<CacheOutcome, String>>,
+    },
+}
+
+struct Shared {
+    tenants: HashMap<String, TenantState>,
+    total_queued: usize,
+    control: VecDeque<Control>,
+    shutting_down: bool,
+}
+
+struct Inner {
+    shared: Mutex<Shared>,
+    work: Condvar,
+}
+
+/// The serving front end; see the module docs. Clients call
+/// [`Server::register`] once per tenant and [`Server::submit`] per
+/// request; one persistent dispatcher thread owns every handle.
+pub struct Server {
+    inner: Arc<Inner>,
+    stats: Arc<StatsInner>,
+    cfg: ServeConfig,
+    dispatcher: Option<JoinHandle<()>>,
+}
+
+impl Server {
+    pub fn start(cfg: ServeConfig) -> Server {
+        assert!(cfg.max_batch > 0, "max_batch must be at least 1");
+        assert!(cfg.queue_cap > 0, "queue_cap must be at least 1");
+        let inner = Arc::new(Inner {
+            shared: Mutex::new(Shared {
+                tenants: HashMap::new(),
+                total_queued: 0,
+                control: VecDeque::new(),
+                shutting_down: false,
+            }),
+            work: Condvar::new(),
+        });
+        let stats = Arc::new(StatsInner::default());
+        let dispatcher = {
+            let inner = inner.clone();
+            let stats = stats.clone();
+            std::thread::Builder::new()
+                .name("spmv-serve-dispatch".to_string())
+                .spawn(move || dispatcher_loop(&inner, &stats, cfg))
+                .expect("spawning serve dispatcher")
+        };
+        Server { inner, stats, cfg, dispatcher: Some(dispatcher) }
+    }
+
+    pub fn config(&self) -> &ServeConfig {
+        &self.cfg
+    }
+
+    /// Register (or re-register) `tenant` to serve `crs`. Blocks until
+    /// the dispatcher has a tuned handle — cached or freshly built —
+    /// and returns how the cache resolved it. After `Ok`, submissions
+    /// for this tenant are admitted.
+    pub fn register(&self, tenant: &str, crs: Crs) -> Result<CacheOutcome> {
+        let (tx, rx) = mpsc::channel();
+        {
+            let mut sh = self.inner.shared.lock().unwrap();
+            anyhow::ensure!(!sh.shutting_down, "server is shutting down");
+            sh.control.push_back(Control::Register {
+                tenant: tenant.to_string(),
+                crs: Box::new(crs),
+                reply: tx,
+            });
+        }
+        self.inner.work.notify_all();
+        match rx.recv() {
+            Ok(Ok(outcome)) => Ok(outcome),
+            Ok(Err(msg)) => Err(anyhow::Error::msg(msg)),
+            Err(_) => Err(anyhow::Error::msg("serve dispatcher exited during registration")),
+        }
+    }
+
+    /// Admit one request, or refuse with a typed reason. Admission is
+    /// O(1) under the shared lock; the returned [`Ticket`] resolves
+    /// when the dispatcher serves the request's coalesced batch.
+    pub fn submit(&self, tenant: &str, x: Vec<f64>) -> std::result::Result<Ticket, Rejected> {
+        let mut sh = self.inner.shared.lock().unwrap();
+        if sh.shutting_down {
+            drop(sh);
+            self.stats.shed.fetch_add(1, Relaxed);
+            return Err(Rejected::ShuttingDown);
+        }
+        let n_tenants = sh.tenants.len().max(1);
+        let quota = (self.cfg.queue_cap / n_tenants).max(1);
+        let total = sh.total_queued;
+        let cap = self.cfg.queue_cap;
+        let Some(ts) = sh.tenants.get_mut(tenant) else {
+            return Err(Rejected::UnknownTenant);
+        };
+        if x.len() != ts.dim {
+            return Err(Rejected::DimMismatch { want: ts.dim, got: x.len() });
+        }
+        let refused = if total >= cap {
+            Some(Rejected::QueueFull)
+        } else if ts.queue.len() >= quota {
+            Some(Rejected::TenantQuota)
+        } else {
+            None
+        };
+        if let Some(r) = refused {
+            drop(sh);
+            self.stats.shed.fetch_add(1, Relaxed);
+            return Err(r);
+        }
+        let (tx, rx) = mpsc::channel();
+        ts.queue.push_back(Pending { x, enqueued: Instant::now(), reply: tx });
+        sh.total_queued += 1;
+        drop(sh);
+        self.stats.submitted.fetch_add(1, Relaxed);
+        self.inner.work.notify_all();
+        Ok(Ticket { rx })
+    }
+
+    pub fn stats(&self) -> ServeStats {
+        ServeStats {
+            submitted: self.stats.submitted.load(Relaxed),
+            completed: self.stats.completed.load(Relaxed),
+            shed: self.stats.shed.load(Relaxed),
+            dispatches: self.stats.dispatches.load(Relaxed),
+            dispatched_requests: self.stats.dispatched_requests.load(Relaxed),
+            cache_hits: self.stats.cache_hits.load(Relaxed),
+            cache_plan_hits: self.stats.cache_plan_hits.load(Relaxed),
+            cache_misses: self.stats.cache_misses.load(Relaxed),
+            cache_evictions: self.stats.cache_evictions.load(Relaxed),
+        }
+    }
+
+    /// Admitted requests not yet dispatched.
+    pub fn queue_depth(&self) -> usize {
+        self.inner.shared.lock().unwrap().total_queued
+    }
+
+    /// Graceful shutdown: stop admitting, serve everything already
+    /// queued, join the dispatcher. Idempotent; also run by `Drop`.
+    pub fn shutdown(&mut self) {
+        self.inner.shared.lock().unwrap().shutting_down = true;
+        self.inner.work.notify_all();
+        if let Some(h) = self.dispatcher.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// The persistent dispatcher: drain control messages, serve the oldest
+/// deadline-ready tenant one coalesced batch at a time, park on the
+/// condvar (bounded by the earliest batching deadline) when idle.
+fn dispatcher_loop(inner: &Inner, stats: &StatsInner, cfg: ServeConfig) {
+    let mut cache = HandleCache::new(cfg.cache_cap);
+    let mut handles: HashMap<String, Rc<SpmvHandle>> = HashMap::new();
+    let opts = cfg.build_opts();
+    let mut sh = inner.shared.lock().unwrap();
+    loop {
+        // Registrations first: tuning runs without the lock held, so
+        // admission and other tenants' dispatches are never blocked on
+        // a tune.
+        while let Some(Control::Register { tenant, crs, reply }) = sh.control.pop_front() {
+            drop(sh);
+            let dim = crs.nrows;
+            let built = cache.get_or_build(&crs, &opts);
+            stats.sync_cache(&cache);
+            sh = inner.shared.lock().unwrap();
+            match built {
+                Ok((h, outcome)) => {
+                    let ts = sh
+                        .tenants
+                        .entry(tenant.clone())
+                        .or_insert_with(|| TenantState { dim, queue: VecDeque::new() });
+                    if ts.dim != dim && !ts.queue.is_empty() {
+                        let _ = reply.send(Err(format!(
+                            "tenant '{tenant}' re-registered with dim {dim} while {} \
+                             dim-{} requests are queued",
+                            ts.queue.len(),
+                            ts.dim
+                        )));
+                    } else {
+                        ts.dim = dim;
+                        handles.insert(tenant, h);
+                        let _ = reply.send(Ok(outcome));
+                    }
+                }
+                Err(e) => {
+                    let _ = reply.send(Err(e.to_string()));
+                }
+            }
+        }
+        // Fairness: among tenants whose head batch is ready (full,
+        // past its deadline, or draining for shutdown), serve the one
+        // whose head request has waited longest.
+        let now = Instant::now();
+        let mut pick: Option<(String, Instant)> = None;
+        for (name, ts) in &sh.tenants {
+            if let Some(head) = ts.queue.front() {
+                let ready = sh.shutting_down
+                    || ts.queue.len() >= cfg.max_batch
+                    || head.enqueued + cfg.max_delay <= now;
+                let older = match &pick {
+                    None => true,
+                    Some((_, oldest)) => head.enqueued < *oldest,
+                };
+                if ready && older {
+                    pick = Some((name.clone(), head.enqueued));
+                }
+            }
+        }
+        if let Some((name, _)) = pick {
+            let ts = sh.tenants.get_mut(&name).expect("picked tenant exists");
+            let take = ts.queue.len().min(cfg.max_batch);
+            let batch: Vec<Pending> = ts.queue.drain(..take).collect();
+            sh.total_queued -= take;
+            drop(sh);
+            let handle = handles.get(&name).expect("registered tenant has a handle").clone();
+            let mut xs = Vec::with_capacity(take);
+            let mut replies = Vec::with_capacity(take);
+            for p in batch {
+                xs.push(p.x);
+                replies.push(p.reply);
+            }
+            let ys = handle.spmv_batch(&xs);
+            for (y, reply) in ys.into_iter().zip(replies) {
+                let _ = reply.send(y);
+            }
+            stats.dispatches.fetch_add(1, Relaxed);
+            stats.dispatched_requests.fetch_add(take as u64, Relaxed);
+            stats.completed.fetch_add(take as u64, Relaxed);
+            sh = inner.shared.lock().unwrap();
+            continue;
+        }
+        if sh.shutting_down && sh.total_queued == 0 && sh.control.is_empty() {
+            return;
+        }
+        // Park: until the earliest head's batching deadline, or until
+        // a submit/register/shutdown notifies.
+        let next_deadline = sh
+            .tenants
+            .values()
+            .filter_map(|ts| ts.queue.front().map(|p| p.enqueued + cfg.max_delay))
+            .min();
+        sh = match next_deadline {
+            Some(d) => {
+                let wait = d.saturating_duration_since(Instant::now());
+                if wait.is_zero() {
+                    continue; // became ready between the scan and now
+                }
+                inner.work.wait_timeout(sh, wait).unwrap().0
+            }
+            None => inner.work.wait(sh).unwrap(),
+        };
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::{self, HolsteinHubbardParams};
+    use crate::util::rng::Rng;
+    use crate::util::stats::max_abs_diff;
+
+    fn hh_crs() -> Crs {
+        Crs::from_coo(&gen::holstein_hubbard(&HolsteinHubbardParams::tiny()))
+    }
+
+    fn band_crs(seed: u64, n: usize) -> Crs {
+        Crs::from_coo(&gen::random_band(n, 7, 20, &mut Rng::new(seed)))
+    }
+
+    fn rand_x(seed: u64, n: usize) -> Vec<f64> {
+        let mut rng = Rng::new(seed);
+        let mut x = vec![0.0; n];
+        rng.fill_f64(&mut x, -1.0, 1.0);
+        x
+    }
+
+    /// ISSUE-7 satellite: LRU order — a re-used entry moves to MRU and
+    /// survives the insert that evicts the actual least-recently-used
+    /// one; counters track every path.
+    #[test]
+    fn handle_cache_lru_eviction_order() {
+        let opts = BuildOpts::default();
+        let mut cache = HandleCache::new(2);
+        let (a, b, c) = (band_crs(1, 90), band_crs(2, 100), band_crs(3, 110));
+        let (fa, fb, fc) =
+            (MatrixFingerprint::of(&a), MatrixFingerprint::of(&b), MatrixFingerprint::of(&c));
+        assert!(cache.is_empty());
+        let (_, o) = cache.get_or_build(&a, &opts).unwrap();
+        assert_eq!(o, CacheOutcome::Miss);
+        let (_, o) = cache.get_or_build(&b, &opts).unwrap();
+        assert_eq!(o, CacheOutcome::Miss);
+        // Touch A: it becomes MRU, so B is now the LRU entry.
+        let (_, o) = cache.get_or_build(&a, &opts).unwrap();
+        assert_eq!(o, CacheOutcome::Hit);
+        assert_eq!(cache.fingerprints(), vec![fa, fb]);
+        // C evicts B (the LRU), not A.
+        let (_, o) = cache.get_or_build(&c, &opts).unwrap();
+        assert_eq!(o, CacheOutcome::Miss);
+        assert_eq!(cache.fingerprints(), vec![fc, fa]);
+        assert_eq!(cache.evictions(), 1);
+        // B was evicted: coming back is a fresh miss that evicts A.
+        let (_, o) = cache.get_or_build(&b, &opts).unwrap();
+        assert_eq!(o, CacheOutcome::Miss);
+        assert_eq!(cache.fingerprints(), vec![fb, fc]);
+        assert_eq!((cache.hits(), cache.misses(), cache.evictions()), (1, 4, 2));
+        assert_eq!(cache.len(), 2);
+    }
+
+    /// ISSUE-7 satellite: fingerprint collision on structure — same
+    /// pattern with different values must reuse the tuned *plan* but
+    /// still produce correct (bit-identical-to-its-own-serial) results
+    /// for the new values.
+    #[test]
+    fn handle_cache_plan_hit_reuses_plan_with_correct_results() {
+        let opts = BuildOpts::default();
+        let mut cache = HandleCache::new(4);
+        let a = hh_crs();
+        let mut a2 = a.clone();
+        for v in &mut a2.val {
+            *v *= 1.5;
+        }
+        let (ha, o) = cache.get_or_build(&a, &opts).unwrap();
+        assert_eq!(o, CacheOutcome::Miss);
+        let (ha2, o) = cache.get_or_build(&a2, &opts).unwrap();
+        assert_eq!(o, CacheOutcome::PlanHit);
+        assert_eq!(cache.plan_hits(), 1);
+        assert_eq!(cache.len(), 1, "plan hit replaces the value-stale entry");
+        // Same plan ...
+        assert_eq!(ha2.scheme(), ha.scheme());
+        assert_eq!(ha2.schedule(), ha.schedule());
+        assert_eq!(ha2.backend_name(), ha.backend_name());
+        // ... correct results for the *new* values.
+        use crate::matrix::SpMv;
+        let x = rand_x(21, a.nrows);
+        let mut want = vec![0.0; a.nrows];
+        a2.spmv(&x, &mut want);
+        let mut got = vec![0.0; a.nrows];
+        ha2.spmv(&x, &mut got);
+        assert!(max_abs_diff(&want, &got) < 1e-12, "plan-hit handle serves wrong values");
+        // And the full hit still works afterwards.
+        let (_, o) = cache.get_or_build(&a2, &opts).unwrap();
+        assert_eq!(o, CacheOutcome::Hit);
+    }
+
+    /// ISSUE-7 satellite: served results are bit-identical to a
+    /// directly built handle with the same options (and within 1e-12 of
+    /// serial CRS) under the default `Precision::BitIdentical`.
+    #[test]
+    fn served_results_bit_identical_to_direct_handle() {
+        use crate::matrix::SpMv;
+        let crs = hh_crs();
+        let n = crs.nrows;
+        let cfg = ServeConfig::default();
+        assert_eq!(cfg.precision, Precision::BitIdentical);
+        let direct = build_handle(&crs, &cfg.build_opts()).unwrap();
+        let mut server = Server::start(cfg);
+        server.register("t0", crs.clone()).unwrap();
+        for seed in 0..3u64 {
+            let x = rand_x(30 + seed, n);
+            let mut want = vec![0.0; n];
+            direct.spmv(&x, &mut want);
+            let got = server.submit("t0", x.clone()).unwrap().wait();
+            assert_eq!(
+                max_abs_diff(&want, &got),
+                0.0,
+                "served result deviates from the direct handle"
+            );
+            let mut want_crs = vec![0.0; n];
+            crs.spmv(&x, &mut want_crs);
+            assert!(max_abs_diff(&want_crs, &got) < 1e-12);
+        }
+        server.shutdown();
+    }
+
+    /// ISSUE-7 acceptance: repeat-tenant registrations hit the cache —
+    /// counters asserted through the server's stats mirror.
+    #[test]
+    fn repeat_tenants_hit_the_handle_cache() {
+        let crs = hh_crs();
+        let mut server = Server::start(ServeConfig::default());
+        assert_eq!(server.register("t0", crs.clone()).unwrap(), CacheOutcome::Miss);
+        assert_eq!(server.register("t1", crs.clone()).unwrap(), CacheOutcome::Hit);
+        assert_eq!(server.register("t2", crs.clone()).unwrap(), CacheOutcome::Hit);
+        let mut rescaled = crs.clone();
+        for v in &mut rescaled.val {
+            *v *= 0.5;
+        }
+        assert_eq!(server.register("t3", rescaled).unwrap(), CacheOutcome::PlanHit);
+        let s = server.stats();
+        assert_eq!((s.cache_misses, s.cache_hits, s.cache_plan_hits), (1, 2, 1));
+        // Every tenant actually serves.
+        let x = rand_x(40, crs.nrows);
+        for t in ["t0", "t1", "t2", "t3"] {
+            let y = server.submit(t, x.clone()).unwrap().wait();
+            assert_eq!(y.len(), crs.nrows);
+        }
+        server.shutdown();
+    }
+
+    /// Admission control: typed rejections for caller errors, per-tenant
+    /// quota before the global cap, graceful shedding counted — and the
+    /// admitted requests still all get served.
+    #[test]
+    fn admission_sheds_overload_with_reasons() {
+        let crs = hh_crs();
+        let n = crs.nrows;
+        // A far-off deadline keeps submissions queued deterministically;
+        // the shutdown drain below releases them.
+        let cfg = ServeConfig {
+            max_batch: 64,
+            max_delay: Duration::from_secs(30),
+            queue_cap: 4,
+            ..ServeConfig::default()
+        };
+        let mut server = Server::start(cfg);
+        server.register("t0", crs.clone()).unwrap();
+        server.register("t1", crs.clone()).unwrap();
+        assert_eq!(server.submit("nobody", vec![0.0; n]).unwrap_err(), Rejected::UnknownTenant);
+        let wrong = server.submit("t0", vec![0.0; n + 1]).unwrap_err();
+        assert_eq!(wrong, Rejected::DimMismatch { want: n, got: n + 1 });
+        assert_eq!(wrong.reason(), "dim-mismatch");
+        assert!(!wrong.is_shed());
+        // Quota = queue_cap / tenants = 2 per tenant.
+        let x = rand_x(50, n);
+        let a0 = server.submit("t0", x.clone()).unwrap();
+        let a1 = server.submit("t0", x.clone()).unwrap();
+        let q = server.submit("t0", x.clone()).unwrap_err();
+        assert_eq!(q, Rejected::TenantQuota);
+        assert!(q.is_shed());
+        let b0 = server.submit("t1", x.clone()).unwrap();
+        let b1 = server.submit("t1", x.clone()).unwrap();
+        // Global queue now full: even the other tenant is refused.
+        let full = server.submit("t1", x.clone()).unwrap_err();
+        assert_eq!(full, Rejected::QueueFull);
+        assert_eq!(full.reason(), "queue-full");
+        // Shutdown drains: all four admitted requests are still served
+        // correctly.
+        use crate::matrix::SpMv;
+        server.shutdown();
+        let mut want = vec![0.0; n];
+        crs.spmv(&x, &mut want);
+        for t in [a0, a1, b0, b1] {
+            assert!(max_abs_diff(&want, &t.wait()) < 1e-12);
+        }
+        let s = server.stats();
+        assert_eq!(s.submitted, 4);
+        assert_eq!(s.completed, 4);
+        assert_eq!(s.shed, 2);
+        assert_eq!(server.submit("t0", x).unwrap_err(), Rejected::ShuttingDown);
+    }
+
+    /// Deadline coalescing: several quick same-tenant submissions under
+    /// `max_batch` ride one `spmv_batch` dispatch (released by the
+    /// deadline), and shutdown drains instead of dropping.
+    #[test]
+    fn coalesces_same_tenant_requests_into_one_dispatch() {
+        let crs = hh_crs();
+        let n = crs.nrows;
+        let cfg = ServeConfig {
+            max_batch: 8,
+            max_delay: Duration::from_secs(30),
+            ..ServeConfig::default()
+        };
+        let mut server = Server::start(cfg);
+        server.register("t0", crs.clone()).unwrap();
+        let x = rand_x(60, n);
+        let tickets: Vec<Ticket> =
+            (0..4).map(|_| server.submit("t0", x.clone()).unwrap()).collect();
+        // Shutdown drains the queue — the four requests must come back
+        // as one coalesced dispatch, not four.
+        server.shutdown();
+        for t in tickets {
+            assert_eq!(t.wait().len(), n);
+        }
+        let s = server.stats();
+        assert_eq!(s.completed, 4);
+        assert_eq!(s.dispatches, 1, "4 queued same-tenant requests must coalesce");
+        assert_eq!(s.dispatched_requests, 4);
+        assert!((s.avg_batch() - 4.0).abs() < 1e-9);
+    }
+
+    /// `max_batch` caps a dispatch: more queued requests than the batch
+    /// bound split into ceil(queued / max_batch) dispatches.
+    #[test]
+    fn max_batch_bounds_each_dispatch() {
+        let crs = hh_crs();
+        let n = crs.nrows;
+        let cfg = ServeConfig {
+            max_batch: 3,
+            max_delay: Duration::from_secs(30),
+            queue_cap: 64,
+            ..ServeConfig::default()
+        };
+        let mut server = Server::start(cfg);
+        server.register("t0", crs.clone()).unwrap();
+        let x = rand_x(70, n);
+        let tickets: Vec<Ticket> =
+            (0..7).map(|_| server.submit("t0", x.clone()).unwrap()).collect();
+        server.shutdown();
+        for t in tickets {
+            t.wait();
+        }
+        let s = server.stats();
+        assert_eq!(s.completed, 7);
+        assert_eq!(s.dispatches, 3, "7 requests at max_batch=3 → 3+3+1");
+    }
+}

@@ -12,10 +12,16 @@
 //!
 //! - [`OverlapMode::BulkSync`] (*vector mode*): gather the full halo,
 //!   then run both halves back to back;
-//! - [`OverlapMode::Overlapped`] (*task mode*): a dedicated exchange
-//!   thread per shard copies the halo segments while the shard's engine
+//! - [`OverlapMode::Overlapped`] (*task mode*): a **persistent** exchange
+//!   role per shard copies the halo segments while the shard's engine
 //!   computes the interior rows, and the boundary rows run once the
 //!   [`HaloGate`] opens ([`crate::engine::TwoPhasePlan`]).
+//!
+//! Coordinator and exchange roles live in a [`TaskPool`] spawned once at
+//! construction and parked between calls — the hot path wakes them
+//! through channels and **spawns no thread per call** (PR 4's recorded
+//! follow-up, retired). [`ShardedSpmv::coordinator_spawns`] exposes the
+//! lifetime spawn count so tests can assert exactly that.
 //!
 //! Both modes drive identical kernels in identical per-row order, so
 //! sharded output is **bit-identical to the serial CRS kernel** for
@@ -33,7 +39,7 @@ use std::sync::{Arc, Mutex};
 use anyhow::Result;
 
 use crate::engine::affinity::{self, PinMode};
-use crate::engine::{first_touch_buffers, Engine, HaloGate, SpmvPlan, TwoPhasePlan};
+use crate::engine::{first_touch_buffers, Engine, HaloGate, SpmvPlan, TaskPool, TwoPhasePlan};
 use crate::kernels::ShardKernel;
 use crate::matrix::shard::{ShardCrs, ShardedCrs};
 use crate::matrix::{Crs, Scheme, SpMv};
@@ -125,6 +131,11 @@ pub(crate) struct ShardedSpmv {
     pinned: bool,
     storage: ShardedCrs,
     units: Vec<ShardUnit>,
+    /// Persistent coordinator + exchange role threads, spawned once and
+    /// parked between calls (PR 4's spawn-per-call follow-up, retired):
+    /// slot `s` coordinates shard `s`, slot `n_shards + s` is shard
+    /// `s`'s exchange role (dispatched only in overlapped mode).
+    pool: TaskPool,
 }
 
 /// Raw output pointer shared across shard coordinators: every global
@@ -142,6 +153,20 @@ unsafe impl Sync for SharedOut {}
 struct SharedBuf(*mut f64);
 unsafe impl Send for SharedBuf {}
 unsafe impl Sync for SharedBuf {}
+
+/// Raw views of one shard's buffers, captured while the caller holds the
+/// shard's buffer lock, so the persistent coordinator and exchange roles
+/// can reach them without taking the mutex themselves (the lock lives on
+/// the dispatching thread for the whole call; see [`ShardedSpmv::run_calls`]).
+#[derive(Clone, Copy)]
+struct ShardPtrs {
+    concat: SharedBuf,
+    concat_len: usize,
+    local: SharedBuf,
+    local_len: usize,
+    remote: SharedBuf,
+    remote_len: usize,
+}
 
 impl ShardedSpmv {
     /// Shard `crs` and bundle per-shard kernels/plans/engines. With
@@ -166,6 +191,7 @@ impl ShardedSpmv {
         let threads_per_shard = threads_per_shard.max(1);
         let storage = ShardedCrs::from_crs(&crs, n_shards);
         let units = Self::build_units(&storage, scheme, schedule, threads_per_shard, pinned)?;
+        let pool = Self::build_pool(units.len(), threads_per_shard, pinned);
         Ok(ShardedSpmv {
             crs,
             scheme,
@@ -175,6 +201,19 @@ impl ShardedSpmv {
             pinned,
             storage,
             units,
+            pool,
+        })
+    }
+
+    /// The persistent role pool: `2 × n_shards` slots so a mode flip to
+    /// overlapped never needs a rebuild; under pinning both of shard
+    /// `s`'s roles land on the shard's base core — exactly where the
+    /// retired ephemeral coordinators used to pin themselves per call
+    /// (the nested exchange thread inherited that mask).
+    fn build_pool(n_shards: usize, threads_per_shard: usize, pinned: bool) -> TaskPool {
+        let n_cpus = affinity::n_cpus();
+        TaskPool::with_pin(2 * n_shards.max(1), move |i| {
+            pinned.then(|| affinity::cpu_for((i % n_shards.max(1)) * threads_per_shard, n_cpus))
         })
     }
 
@@ -367,34 +406,37 @@ impl ShardedSpmv {
             self.threads_per_shard,
             self.pinned,
         )?;
+        if units.len() != self.units.len() {
+            // Role threads are per-shard; only a shard-count change
+            // needs a new pool (mode flips reuse the parked slots).
+            self.pool = Self::build_pool(units.len(), self.threads_per_shard, self.pinned);
+        }
         self.storage = storage;
         self.units = units;
         self.mode = mode;
         Ok(())
     }
 
+    /// Threads ever spawned for coordination (coordinator + exchange
+    /// roles). Fixed at construction/reshard — the no-spawn-on-hot-path
+    /// regression test snapshots it around repeated `spmv` calls.
+    pub fn coordinator_spawns(&self) -> usize {
+        self.pool.spawned()
+    }
+
     /// Distributed-style SpMV: every shard runs concurrently on its own
-    /// coordinator + engine; see the module docs for the two modes.
+    /// persistent coordinator + engine; see the module docs for the two
+    /// modes. **No thread is spawned here** — the roles were spawned at
+    /// construction and are parked between calls.
     pub fn spmv(&self, x: &[f64], y: &mut [f64]) {
         assert_eq!(x.len(), self.storage.nrows);
         assert_eq!(y.len(), self.storage.nrows);
-        let transport = SharedVecExchange(x);
-        let ybase = SharedOut(y.as_mut_ptr());
-        std::thread::scope(|scope| {
-            for (s, (unit, shard)) in self.units.iter().zip(&self.storage.shards).enumerate() {
-                let transport = &transport;
-                scope.spawn(move || {
-                    self.pin_coordinator(s);
-                    let mut bufs = unit.bufs.lock().unwrap();
-                    self.run_shard(unit, shard, x, transport, &mut bufs, ybase);
-                });
-            }
-        });
+        self.run_calls(&[x], &[SharedOut(y.as_mut_ptr())]);
     }
 
-    /// Batched sharded SpMV in **one** dispatch: the shard coordinators
-    /// are spawned once per batch and stream every vector through their
-    /// engines, so the per-call spawn/join cost is paid per batch — the
+    /// Batched sharded SpMV in **one** dispatch: the parked coordinators
+    /// wake once per batch and stream every vector through their
+    /// engines, so the per-call wakeup cost is paid per batch — the
     /// sharded counterpart of [`crate::engine::Engine::run_chunks_batch`].
     pub fn spmv_batch(&self, xs: &[Vec<f64>]) -> Vec<Vec<f64>> {
         let n = self.storage.nrows;
@@ -405,116 +447,178 @@ impl ShardedSpmv {
         if xs.is_empty() {
             return ys;
         }
+        let xrefs: Vec<&[f64]> = xs.iter().map(|x| x.as_slice()).collect();
         let ybases: Vec<SharedOut> = ys.iter_mut().map(|y| SharedOut(y.as_mut_ptr())).collect();
-        std::thread::scope(|scope| {
-            for (s, (unit, shard)) in self.units.iter().zip(&self.storage.shards).enumerate() {
-                let ybases = &ybases;
-                scope.spawn(move || {
-                    self.pin_coordinator(s);
-                    let mut bufs = unit.bufs.lock().unwrap();
-                    for (bi, x) in xs.iter().enumerate() {
-                        let transport = SharedVecExchange(x);
-                        self.run_shard(unit, shard, x, &transport, &mut bufs, ybases[bi]);
-                    }
-                });
-            }
-        });
+        self.run_calls(&xrefs, &ybases);
         ys
     }
 
-    /// Shard coordinators are ephemeral scoped threads; under pinning
-    /// they re-pin themselves to their shard's base core each call (the
-    /// engine's workers were pinned at spawn and partition 0 runs right
-    /// here). The thread dies at scope exit, so no restore is needed.
-    fn pin_coordinator(&self, s: usize) {
-        if self.pinned {
-            let base = s * self.threads_per_shard;
-            let _ = affinity::pin_current_thread(affinity::cpu_for(base, affinity::n_cpus()));
+    /// The one dispatch path under `spmv` and `spmv_batch`: wake the
+    /// parked roles, stream every vector through every shard, return
+    /// when all shards scattered all vectors.
+    fn run_calls(&self, xs: &[&[f64]], ybases: &[SharedOut]) {
+        debug_assert_eq!(xs.len(), ybases.len());
+        if xs.is_empty() {
+            return;
         }
+        let n = self.units.len();
+        let b = xs.len();
+        // Hold every shard's buffer lock for the whole dispatch: this
+        // serializes concurrent `&self` callers (what the per-call
+        // coordinator locks used to do) and keeps the buffer storage
+        // addresses stable while the roles reach them through the raw
+        // views below.
+        let mut guards: Vec<std::sync::MutexGuard<'_, ShardBufs>> =
+            self.units.iter().map(|u| u.bufs.lock().unwrap()).collect();
+        let ptrs: Vec<ShardPtrs> = guards
+            .iter_mut()
+            .map(|g| ShardPtrs {
+                concat: SharedBuf(g.concat.as_mut_ptr()),
+                concat_len: g.concat.len(),
+                local: SharedBuf(g.local_out.as_mut_ptr()),
+                local_len: g.local_out.len(),
+                remote: SharedBuf(g.remote_out.as_mut_ptr()),
+                remote_len: g.remote_out.len(),
+            })
+            .collect();
+        // One exchange→compute gate per (shard, vector); in overlapped
+        // mode also one compute→exchange gate per (shard, vector) so the
+        // parked exchange role never refills a gather buffer the remote
+        // phase is still reading.
+        let ready: Vec<HaloGate> = (0..n * b).map(|_| HaloGate::new()).collect();
+        let free: Vec<HaloGate> = (0..n * b).map(|_| HaloGate::new()).collect();
+        let slots = match self.mode {
+            OverlapMode::BulkSync => n,
+            OverlapMode::Overlapped => 2 * n,
+        };
+        self.pool.run(slots, |i| {
+            let s = i % n;
+            let (ready, free) = (&ready[s * b..(s + 1) * b], &free[s * b..(s + 1) * b]);
+            if i < n {
+                self.coordinate(s, xs, ybases, &ptrs[s], ready, free);
+            } else {
+                self.exchange_role(s, xs, &ptrs[s], ready, free);
+            }
+        });
+        drop(guards);
     }
 
-    /// One shard, one vector: gather/exchange + two-phase compute +
-    /// scatter into the global output.
-    fn run_shard(
+    /// The coordinator role for shard `s`: per vector, (bulk-sync only)
+    /// gather, then two-phase compute + scatter into the global output.
+    fn coordinate(
         &self,
-        unit: &ShardUnit,
-        shard: &ShardCrs,
-        x: &[f64],
-        transport: &dyn HaloExchange,
-        bufs: &mut ShardBufs,
-        ybase: SharedOut,
+        s: usize,
+        xs: &[&[f64]],
+        ybases: &[SharedOut],
+        ptrs: &ShardPtrs,
+        ready: &[HaloGate],
+        free: &[HaloGate],
     ) {
-        let ShardBufs { concat, local_out, remote_out, .. } = bufs;
-        let w = shard.width();
-        let x_local = &x[shard.row_begin..shard.row_end];
+        let unit = &self.units[s];
+        let shard = &self.storage.shards[s];
         let kernel = &unit.kernel;
+        let w = shard.width();
         let two = TwoPhasePlan { local: &unit.local_plan, remote: &unit.remote_plan };
-        let gate = HaloGate::new();
-        match self.mode {
-            OverlapMode::BulkSync => {
-                // Vector mode: full gather, then both phases.
-                concat[..w].copy_from_slice(x_local);
-                transport.exchange(shard, &mut concat[w..]);
-                gate.signal();
-                let concat_ref: &[f64] = concat;
-                two.execute(
-                    &unit.engine,
-                    &gate,
-                    local_out,
-                    remote_out,
-                    |a, b, out| kernel.local.spmv_rows(a, b, x_local, out),
-                    |a, b, out| kernel.remote.spmv_rows(a, b, concat_ref, out),
-                );
-            }
-            OverlapMode::Overlapped => {
-                // Task mode: the exchange thread fills the gather
-                // buffer (owned slice + halo segments) while the
-                // engine computes interior rows; boundary rows wait on
-                // the gate.
-                let cptr = SharedBuf(concat.as_mut_ptr());
-                let clen = concat.len();
-                let gate_ref = &gate;
-                std::thread::scope(|es| {
-                    es.spawn(move || {
-                        // Safety: no Rust reference to the gather
-                        // buffer is alive during these writes (the
-                        // remote closure materializes its slice only
-                        // after the gate opens), and the gate's mutex
-                        // hand-off orders the writes before every
-                        // post-wait read.
-                        let cbuf = unsafe { std::slice::from_raw_parts_mut(cptr.0, clen) };
-                        cbuf[..w].copy_from_slice(x_local);
-                        transport.exchange(shard, &mut cbuf[w..]);
-                        gate_ref.signal();
-                    });
+        for (bi, x) in xs.iter().enumerate() {
+            let x_local = &x[shard.row_begin..shard.row_end];
+            // Safety: the dispatching thread holds this shard's buffer
+            // lock for the whole call and only this coordinator role
+            // touches the output halves, so these views are exclusive.
+            let local_out =
+                unsafe { std::slice::from_raw_parts_mut(ptrs.local.0, ptrs.local_len) };
+            let remote_out =
+                unsafe { std::slice::from_raw_parts_mut(ptrs.remote.0, ptrs.remote_len) };
+            match self.mode {
+                OverlapMode::BulkSync => {
+                    // Vector mode: full gather inline, then both phases.
+                    // Safety: no exchange role is dispatched in
+                    // bulk-sync — this coordinator is the gather
+                    // buffer's only user.
+                    let concat = unsafe {
+                        std::slice::from_raw_parts_mut(ptrs.concat.0, ptrs.concat_len)
+                    };
+                    concat[..w].copy_from_slice(x_local);
+                    SharedVecExchange(x).exchange(shard, &mut concat[w..]);
+                    ready[bi].signal();
+                    let concat_ref: &[f64] = concat;
                     two.execute(
                         &unit.engine,
-                        gate_ref,
+                        &ready[bi],
+                        local_out,
+                        remote_out,
+                        |a, b, out| kernel.local.spmv_rows(a, b, x_local, out),
+                        |a, b, out| kernel.remote.spmv_rows(a, b, concat_ref, out),
+                    );
+                }
+                OverlapMode::Overlapped => {
+                    // Task mode: the exchange role fills the gather
+                    // buffer while the engine computes interior rows;
+                    // boundary rows wait on the ready gate.
+                    let (cptr, clen) = (ptrs.concat, ptrs.concat_len);
+                    two.execute(
+                        &unit.engine,
+                        &ready[bi],
                         local_out,
                         remote_out,
                         |a, b, out| kernel.local.spmv_rows(a, b, x_local, out),
                         move |a, b, out| {
-                            // Safety: runs strictly after `gate` opened
-                            // (TwoPhasePlan waits before dispatching),
-                            // so the exchange writes are complete and
-                            // ordered before this read.
+                            // Safety: runs strictly after `ready[bi]`
+                            // opened (TwoPhasePlan waits before
+                            // dispatching), so the exchange role's
+                            // writes are complete and ordered before
+                            // this read.
                             let cbuf = unsafe { std::slice::from_raw_parts(cptr.0, clen) };
                             kernel.remote.spmv_rows(a, b, cbuf, out)
                         },
                     );
-                });
+                    // The remote phase is done with the gather buffer:
+                    // let the exchange role refill it for the next
+                    // vector while this one is scattered.
+                    free[bi].signal();
+                }
+            }
+            // Scatter both halves' slots to their global rows. Safety:
+            // each global row has exactly one writer (row partition
+            // across shards, interior XOR boundary within the shard).
+            let ybase = ybases[bi];
+            for (slot, &v) in local_out.iter().enumerate() {
+                let row = shard.interior_rows[kernel.local.storage_row(slot)] as usize;
+                unsafe { *ybase.0.add(row) = v };
+            }
+            for (slot, &v) in remote_out.iter().enumerate() {
+                let row = shard.boundary_rows[kernel.remote.storage_row(slot)] as usize;
+                unsafe { *ybase.0.add(row) = v };
             }
         }
-        // Scatter both halves' slots to their global rows. Safety: each
-        // global row has exactly one writer (row partition across
-        // shards, interior XOR boundary within the shard).
-        for (slot, &v) in local_out.iter().enumerate() {
-            let row = shard.interior_rows[kernel.local.storage_row(slot)] as usize;
-            unsafe { *ybase.0.add(row) = v };
-        }
-        for (slot, &v) in remote_out.iter().enumerate() {
-            let row = shard.boundary_rows[kernel.remote.storage_row(slot)] as usize;
-            unsafe { *ybase.0.add(row) = v };
+    }
+
+    /// The exchange role for shard `s` (overlapped mode only): fill the
+    /// `[owned | halo]` gather buffer for each vector concurrently with
+    /// the coordinator's interior compute, pipelined one vector ahead at
+    /// most (the `free` gates hold it back until the previous remote
+    /// phase finished reading).
+    fn exchange_role(
+        &self,
+        s: usize,
+        xs: &[&[f64]],
+        ptrs: &ShardPtrs,
+        ready: &[HaloGate],
+        free: &[HaloGate],
+    ) {
+        let shard = &self.storage.shards[s];
+        let w = shard.width();
+        for (bi, x) in xs.iter().enumerate() {
+            if bi > 0 {
+                free[bi - 1].wait();
+            }
+            // Safety: before `ready[bi]` opens the compute side never
+            // touches the gather buffer, and the `free[bi-1]` wait
+            // above orders this fill after every read of the previous
+            // one; both gates' mutex hand-offs order the accesses.
+            let cbuf = unsafe { std::slice::from_raw_parts_mut(ptrs.concat.0, ptrs.concat_len) };
+            cbuf[..w].copy_from_slice(&x[shard.row_begin..shard.row_end]);
+            SharedVecExchange(x).exchange(shard, &mut cbuf[w..]);
+            ready[bi].signal();
         }
     }
 }
@@ -689,6 +793,51 @@ mod tests {
                 );
             }
             assert!(sh.spmv_batch(&[]).is_empty());
+        }
+    }
+
+    /// ISSUE-7 satellite — PR 4's named follow-up retired: the
+    /// coordinator + exchange roles are spawned once at construction and
+    /// parked between calls, so repeated `spmv`/`spmv_batch` calls spawn
+    /// **zero** threads on the hot path, in both overlap modes, while
+    /// staying bit-identical to serial CRS.
+    #[test]
+    fn repeated_spmv_spawns_no_coordinator_threads() {
+        let crs = Arc::new(hh_crs());
+        let n = crs.nrows;
+        let mut rng = Rng::new(114);
+        let mut x = vec![0.0; n];
+        rng.fill_f64(&mut x, -1.0, 1.0);
+        let mut want = vec![0.0; n];
+        crs.spmv(&x, &mut want);
+        for mode in modes() {
+            let sh = ShardedSpmv::new(
+                crs.clone(),
+                Scheme::Crs,
+                Schedule::Static { chunk: None },
+                4,
+                2,
+                mode,
+                false,
+            )
+            .unwrap();
+            let spawned = sh.coordinator_spawns();
+            assert_eq!(spawned, 2 * sh.n_shards(), "{}: one pair of roles per shard", mode.name());
+            let mut got = vec![0.0; n];
+            for _ in 0..10 {
+                sh.spmv(&x, &mut got);
+                assert_eq!(max_abs_diff(&want, &got), 0.0, "{}: spmv deviates", mode.name());
+            }
+            let ys = sh.spmv_batch(&[x.clone(), x.clone(), x.clone()]);
+            for y in &ys {
+                assert_eq!(max_abs_diff(&want, y), 0.0, "{}: batch deviates", mode.name());
+            }
+            assert_eq!(
+                sh.coordinator_spawns(),
+                spawned,
+                "{}: hot path must not spawn coordinator threads",
+                mode.name()
+            );
         }
     }
 

@@ -62,10 +62,12 @@ use crate::util::rng::Rng;
 /// arbitration heuristic.
 const NATIVE_DISPATCH_NS: f64 = 20_000.0;
 
-/// Rough per-shard, per-call coordinator cost (scoped spawn + join +
-/// halo gate), charged to the sharded candidate per SpMV call. Sharding
-/// only pays once the per-nnz work amortizes this — the reason tiny
-/// matrices stay native or serial.
+/// Rough per-shard, per-call coordinator cost (parked-role wakeup +
+/// completion latch + halo gate; the roles themselves are persistent
+/// since the serve PR), charged to the sharded candidate per SpMV call.
+/// Sharding only pays once the per-nnz work amortizes this — the reason
+/// tiny matrices stay native or serial. Hand-set; the learned-tuning
+/// ROADMAP item replaces it with measured data.
 const SHARD_DISPATCH_NS: f64 = 60_000.0;
 
 /// The object-safe executor seam: everything a consumer may do with a

@@ -83,6 +83,83 @@ impl TuningPolicy {
     }
 }
 
+/// A compact identity for a matrix — the serve layer's handle-cache key
+/// (arXiv:1711.05487's lesson: per-matrix tuning pays off only when its
+/// cost is amortized across many calls, so repeat tenants must be able
+/// to reuse tuned handles without re-hashing trust in the caller).
+///
+/// Two FNV-1a hashes over the CRS arrays: `structure` covers the
+/// dimensions + `row_ptr` + `col_idx` (everything the tuning decisions
+/// depend on), `values` additionally folds in the numeric entries
+/// (everything the *results* depend on). Equal structure with different
+/// values means the cached **plan** (scheme/schedule/backend) transfers,
+/// but the handle must be rebuilt on the new values for correct results
+/// — the serve cache's "plan hit" path.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct MatrixFingerprint {
+    pub nrows: usize,
+    pub ncols: usize,
+    pub nnz: usize,
+    /// FNV-1a over dims + `row_ptr` + `col_idx`.
+    pub structure: u64,
+    /// `structure` folded with the bit patterns of `val`.
+    pub values: u64,
+}
+
+impl MatrixFingerprint {
+    pub fn of(crs: &Crs) -> Self {
+        let mut h = Fnv1a::new();
+        h.write_u64(crs.nrows as u64);
+        h.write_u64(crs.ncols as u64);
+        for &p in &crs.row_ptr {
+            h.write_u64(p as u64);
+        }
+        for &c in &crs.col_idx {
+            h.write_u64(c as u64);
+        }
+        let structure = h.finish();
+        let mut hv = Fnv1a::new();
+        hv.write_u64(structure);
+        for &v in &crs.val {
+            hv.write_u64(v.to_bits());
+        }
+        MatrixFingerprint {
+            nrows: crs.nrows,
+            ncols: crs.ncols,
+            nnz: crs.val.len(),
+            structure,
+            values: hv.finish(),
+        }
+    }
+
+    /// Same sparsity pattern — the tuning-relevant identity; the full
+    /// `==` (which also compares `values`) is the result-relevant one.
+    pub fn same_structure(&self, other: &Self) -> bool {
+        self.nrows == other.nrows
+            && self.ncols == other.ncols
+            && self.nnz == other.nnz
+            && self.structure == other.structure
+    }
+}
+
+/// Minimal FNV-1a (64-bit) so the fingerprint is stable across runs and
+/// platforms — `std`'s `DefaultHasher` is explicitly not.
+struct Fnv1a(u64);
+
+impl Fnv1a {
+    fn new() -> Self {
+        Fnv1a(0xcbf2_9ce4_8422_2325)
+    }
+    fn write_u64(&mut self, v: u64) {
+        for b in v.to_le_bytes() {
+            self.0 = (self.0 ^ b as u64).wrapping_mul(0x100_0000_01b3);
+        }
+    }
+    fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
 /// The sharding dimension of the tuning space: how many in-process
 /// domains to row-partition the matrix into, and whether to overlap
 /// the halo exchange with the interior compute
@@ -1499,6 +1576,36 @@ mod tests {
         }
         coo.normalize();
         coo
+    }
+
+    /// ISSUE-7: the serve cache key. Identical matrices fingerprint
+    /// identically; changing one value flips only the value hash (same
+    /// structure ⇒ plan transfers); changing the pattern flips both.
+    #[test]
+    fn matrix_fingerprint_separates_structure_from_values() {
+        let coo = random_coo(&mut Rng::new(83), 120, 120 * 5);
+        let crs = Crs::from_coo(&coo);
+        let fp = MatrixFingerprint::of(&crs);
+        assert_eq!(fp, MatrixFingerprint::of(&crs), "fingerprint must be deterministic");
+        assert_eq!(fp.nnz, crs.val.len());
+        // Same pattern, one perturbed value: structure holds, values differ.
+        let mut revalued = crs.clone();
+        revalued.val[0] += 1.0;
+        let fp_v = MatrixFingerprint::of(&revalued);
+        assert!(fp.same_structure(&fp_v));
+        assert_eq!(fp.structure, fp_v.structure);
+        assert_ne!(fp.values, fp_v.values);
+        assert_ne!(fp, fp_v);
+        // Different pattern (extra entry off the tridiagonal band):
+        // both hashes differ.
+        let tri = Crs::from_coo(&gen::laplacian_1d(120));
+        let mut coo2 = gen::laplacian_1d(120);
+        coo2.push(7, 100, 0.5);
+        coo2.normalize();
+        let fp_tri = MatrixFingerprint::of(&tri);
+        let fp_s = MatrixFingerprint::of(&Crs::from_coo(&coo2));
+        assert!(!fp_tri.same_structure(&fp_s));
+        assert_ne!(fp_tri.structure, fp_s.structure);
     }
 
     /// Every policy tier must agree with the serial CRS reference (1e-12:

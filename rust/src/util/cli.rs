@@ -31,7 +31,8 @@ const VALUE_OPTS: &[&str] = &[
     "requests", "workers", "op", "ops", "dim", "bandwidth", "density",
     "block-size", "chunk-sizes", "threads-per-socket", "output", "scale",
     "eigenvalues", "csv", "policy", "tolerance", "shards", "mode", "backend",
-    "cv-threshold", "precision", "factor",
+    "cv-threshold", "precision", "factor", "max-batch", "max-delay-us", "tenants",
+    "queue-cap", "duration",
 ];
 
 impl Args {
@@ -207,6 +208,23 @@ mod tests {
         let a = parse("--precision tol:1e-12 --factor 0.7");
         assert_eq!(a.get_str("precision", "bit"), "tol:1e-12");
         assert_eq!(a.get_f64("factor", 0.0).unwrap(), 0.7);
+        assert!(a.positionals().is_empty(), "no stray positionals");
+        assert!(a.finish().is_ok());
+    }
+
+    /// Regression: the serving-layer PR's options must be registered —
+    /// `--max-batch 8` would otherwise parse as a flag + stray positional
+    /// and the server would silently run with the default batch size.
+    #[test]
+    fn serve_options_take_values() {
+        let a = parse(
+            "--max-batch 16 --max-delay-us 500 --tenants 4 --queue-cap 128 --duration 1000",
+        );
+        assert_eq!(a.get_usize("max-batch", 8).unwrap(), 16);
+        assert_eq!(a.get_u64("max-delay-us", 200).unwrap(), 500);
+        assert_eq!(a.get_usize("tenants", 2).unwrap(), 4);
+        assert_eq!(a.get_usize("queue-cap", 256).unwrap(), 128);
+        assert_eq!(a.get_u64("duration", 300).unwrap(), 1000);
         assert!(a.positionals().is_empty(), "no stray positionals");
         assert!(a.finish().is_ok());
     }
