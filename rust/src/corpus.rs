@@ -1,0 +1,502 @@
+//! Corpus arbitration benchmark: sweep a fixed set of generated
+//! matrices (plus optional MatrixMarket files) through all three tuning
+//! tiers and record, per matrix, what the arbitration actually decided
+//! — backend, scheme, schedule — together with measured throughput and
+//! the **heuristic-vs-measured agreement rate**, the standing quality
+//! metric for the zero-measurement tier.
+//!
+//! The corpus is deliberately scenario-diverse: a scale-free power-law
+//! graph and an RMAT instance (extreme row imbalance — the regime where
+//! static schedules collapse), a 2-D Laplacian (regular stencil, the
+//! friendly case) and a random band matrix (the paper's bandwidth-bound
+//! middle ground). Every configuration self-validates before timing:
+//! SpMV against the serial CRS reference, blocked-x SpMM against `k`
+//! independent per-vector calls, and the CG / power-iteration /
+//! PageRank solvers against their serial-operator runs — so the emitted
+//! `BENCH_corpus.json` doubles as an end-to-end correctness gate.
+//!
+//! `spmvperf corpus [--quick]` drives [`run_corpus`] and writes
+//! `results/BENCH_corpus.json` for the CI `benchdiff` gate. The
+//! per-matrix decision record is also the training-set format for a
+//! future learned tuning tier (see ROADMAP).
+
+use std::fmt::Write as _;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::eigen::{
+    cg, cg_with_handle, pagerank, pagerank_with_handle, power_iteration,
+    power_iteration_with_handle, transition_matrix, CgConfig, PowerConfig,
+};
+use crate::gen;
+use crate::kernels::Precision;
+use crate::matrix::{Coo, Crs, Scheme, SpMv};
+use crate::sched::Schedule;
+use crate::spmv::{BackendChoice, SpmvHandle};
+use crate::tune::TuningPolicy;
+use crate::util::bench::{Bench, BenchResult};
+use crate::util::rng::Rng;
+use crate::util::stats::max_abs_diff;
+
+/// Everything `spmvperf corpus` can vary. Defaults mirror the CLI
+/// defaults so library callers and the command agree.
+#[derive(Debug, Clone)]
+pub struct CorpusOptions {
+    /// Shrink matrices and bench repetitions to a CI smoke scale.
+    pub quick: bool,
+    pub seed: u64,
+    pub threads: usize,
+    pub pin: bool,
+    pub precision: Precision,
+    /// SpMM width `k` for the blocked-x entries.
+    pub block: usize,
+    /// Power-law degree exponent for the generated graph.
+    pub exponent: f64,
+    /// Target average nnz/row for the power-law graph.
+    pub avg_nnz: usize,
+    /// Edges per vertex for the RMAT instance.
+    pub edge_factor: usize,
+    /// Restrict the sweep to these matrix names (empty = all).
+    pub only: Vec<String>,
+    /// Extra MatrixMarket files appended to the corpus.
+    pub matrix_files: Vec<String>,
+}
+
+impl Default for CorpusOptions {
+    fn default() -> Self {
+        Self {
+            quick: false,
+            seed: 42,
+            threads: 4,
+            pin: false,
+            precision: Precision::BitIdentical,
+            block: 4,
+            exponent: 2.2,
+            avg_nnz: 8,
+            edge_factor: 8,
+            only: Vec::new(),
+            matrix_files: Vec::new(),
+        }
+    }
+}
+
+/// One matrix × policy data point of the sweep.
+#[derive(Debug, Clone)]
+pub struct CorpusEntry {
+    pub matrix: String,
+    pub policy: String,
+    pub backend: &'static str,
+    pub scheme: String,
+    pub schedule: String,
+    pub mflops: f64,
+    pub ns_per_nnz: f64,
+}
+
+/// The sweep's outcome: the JSON document for `BENCH_corpus.json`, the
+/// flat decision records, and the headline agreement rate.
+#[derive(Debug, Clone)]
+pub struct CorpusReport {
+    pub entries: Vec<CorpusEntry>,
+    /// Fraction of corpus matrices where the heuristic tier picked the
+    /// same (backend, scheme family, schedule kind) as the measured
+    /// bake-off. `None` when the sweep covered no matrices.
+    pub agreement_rate: Option<f64>,
+    pub json: String,
+}
+
+/// The family/kind level at which heuristic and measured picks are
+/// compared: chunk sizes and SELL (C, σ) parameters may legitimately
+/// differ between the tiers without the decision being "wrong".
+fn schedule_kind(s: Schedule) -> &'static str {
+    match s {
+        Schedule::Static { .. } => "static",
+        Schedule::Dynamic { .. } => "dynamic",
+        Schedule::Guided { .. } => "guided",
+    }
+}
+
+/// The generated corpus, scaled by `quick`. Names are stable — they are
+/// the benchdiff identities the committed baseline floors key on.
+fn generated_corpus(opts: &CorpusOptions) -> Vec<(String, Coo)> {
+    let mut rng = Rng::new(opts.seed);
+    let (pl_n, rmat_scale, lap, band_n) =
+        if opts.quick { (600, 8, 24, 1500) } else { (20_000, 14, 300, 40_000) };
+    vec![
+        (
+            "power-law".to_string(),
+            gen::power_law(pl_n, opts.avg_nnz, opts.exponent, &mut rng),
+        ),
+        (
+            "rmat".to_string(),
+            gen::rmat(rmat_scale, opts.edge_factor, (0.57, 0.19, 0.19, 0.05), &mut rng),
+        ),
+        ("laplacian-2d".to_string(), gen::laplacian_2d(lap, lap)),
+        ("random-band".to_string(), gen::random_band(band_n, 10, band_n / 8, &mut rng)),
+    ]
+}
+
+/// SpMV correctness bound for a tuned handle under `precision`,
+/// mirroring the `spmvperf tune` spot-check contract.
+fn validate_spmv(name: &str, precision: Precision, y_ref: &[f64], y: &[f64]) -> Result<()> {
+    let err = match precision {
+        Precision::BitIdentical => max_abs_diff(y_ref, y),
+        Precision::Tolerance(_) => y
+            .iter()
+            .zip(y_ref)
+            .map(|(g, w)| (g - w).abs() / w.abs().max(1.0))
+            .fold(0.0, f64::max),
+    };
+    let bound = precision.tolerance().unwrap_or(1e-12);
+    ensure!(
+        err <= bound,
+        "{name}: deviates from serial CRS by {err:.2e} (bound {bound:.1e})"
+    );
+    Ok(())
+}
+
+fn bench_config(quick: bool) -> Bench {
+    if quick {
+        Bench {
+            warmup: std::time::Duration::from_millis(10),
+            samples: 3,
+            min_sample_time: std::time::Duration::from_millis(2),
+        }
+    } else {
+        Bench::default()
+    }
+}
+
+fn push_entry(entries: &mut Vec<String>, e: &CorpusEntry, extra: &str) {
+    entries.push(format!(
+        concat!(
+            "    {{\"bench\": \"corpus\", \"matrix\": \"{}\", \"policy\": \"{}\", ",
+            "\"backend\": \"{}\", \"scheme\": \"{}\", \"schedule\": \"{}\"{}, ",
+            "\"mflops\": {:.3}, \"ns_per_nnz\": {:.4}}}"
+        ),
+        e.matrix, e.policy, e.backend, e.scheme, e.schedule, extra, e.mflops, e.ns_per_nnz
+    ));
+}
+
+/// Sweep the corpus through the three tuning tiers plus the blocked-x
+/// SpMM path, self-validating every configuration, and assemble the
+/// `BENCH_corpus.json` document. Pure computation — the caller decides
+/// whether to write the file.
+pub fn run_corpus(opts: &CorpusOptions) -> Result<CorpusReport> {
+    ensure!(opts.block >= 1, "--block must be at least 1");
+    let mut matrices = generated_corpus(opts);
+    for path in &opts.matrix_files {
+        let coo = crate::matrix::io::read_matrix_market(std::path::Path::new(path))
+            .with_context(|| format!("reading corpus matrix {path}"))?;
+        let name = std::path::Path::new(path)
+            .file_stem()
+            .map(|s| s.to_string_lossy().into_owned())
+            .unwrap_or_else(|| path.clone());
+        matrices.push((name, coo));
+    }
+    if !opts.only.is_empty() {
+        matrices.retain(|(name, _)| opts.only.iter().any(|m| m == name));
+        ensure!(
+            !matrices.is_empty(),
+            "--matrices matched nothing (known: power-law, rmat, laplacian-2d, random-band)"
+        );
+    }
+
+    let b = bench_config(opts.quick);
+    let policies: [(&str, TuningPolicy); 3] = [
+        ("fixed", TuningPolicy::Fixed(Scheme::Crs, Schedule::Static { chunk: None })),
+        ("heuristic", TuningPolicy::Heuristic),
+        ("measured", TuningPolicy::Measured),
+    ];
+
+    let mut entries: Vec<CorpusEntry> = Vec::new();
+    let mut lines: Vec<String> = Vec::new();
+    let mut agree = 0usize;
+    let mut compared = 0usize;
+
+    for (mname, coo) in &matrices {
+        let crs = Crs::from_coo(coo);
+        let n = crs.nrows;
+        let nnz = crs.nnz() as u64;
+        eprintln!("corpus matrix {mname}: N={n} nnz={nnz}");
+        let mut rng = Rng::new(opts.seed.wrapping_add(1));
+        let mut x = vec![0.0; n];
+        rng.fill_f64(&mut x, -1.0, 1.0);
+        let mut y_ref = vec![0.0; n];
+        crs.spmv(&x, &mut y_ref);
+
+        let mut picks: Vec<(&str, &'static str, String, &'static str)> = Vec::new();
+        let mut y = vec![0.0; n];
+        for (pname, policy) in &policies {
+            let handle = SpmvHandle::builder_from_crs(&crs)
+                .policy(*policy)
+                .backend(BackendChoice::Auto)
+                .threads(opts.threads)
+                .quick(opts.quick)
+                .pinned(opts.pin)
+                .precision(opts.precision)
+                .build()
+                .with_context(|| format!("building {mname}/{pname}"))?;
+            handle.spmv(&x, &mut y);
+            validate_spmv(&format!("{mname}/{pname}"), opts.precision, &y_ref, &y)?;
+            let r: BenchResult = b.run(&format!("{mname}/{pname}"), nnz, 2 * nnz, || {
+                handle.spmv(&x, &mut y);
+                y[0]
+            });
+            println!("{}", r.summary());
+            let decision =
+                handle.backend_decision().context("the builder records a decision")?;
+            let e = CorpusEntry {
+                matrix: mname.clone(),
+                policy: pname.to_string(),
+                backend: decision.backend,
+                scheme: handle.scheme().spec(),
+                schedule: handle.schedule().name(),
+                mflops: r.mflops(),
+                ns_per_nnz: r.ns_per_item(),
+            };
+            push_entry(&mut lines, &e, "");
+            entries.push(e);
+            picks.push((
+                pname,
+                handle.backend_name(),
+                handle.scheme().name(),
+                schedule_kind(handle.schedule()),
+            ));
+        }
+        let find = |p: &str| picks.iter().find(|(name, ..)| *name == p);
+        if let (Some(h), Some(m)) = (find("heuristic"), find("measured")) {
+            compared += 1;
+            if h.1 == m.1 && h.2 == m.2 && h.3 == m.3 {
+                agree += 1;
+            } else {
+                eprintln!(
+                    "{mname}: heuristic picked {}/{}/{} but measured {}/{}/{}",
+                    h.1, h.2, h.3, m.1, m.2, m.3
+                );
+            }
+        }
+
+        // Blocked-x SpMM: validate against k independent per-vector
+        // calls on the same handle, then time the multi path.
+        let handle = SpmvHandle::builder_from_crs(&crs)
+            .policy(TuningPolicy::Heuristic)
+            .backend(BackendChoice::Auto)
+            .threads(opts.threads)
+            .quick(opts.quick)
+            .pinned(opts.pin)
+            .precision(opts.precision)
+            .build()?;
+        let k = opts.block;
+        let xs: Vec<Vec<f64>> = (0..k)
+            .map(|_| {
+                let mut v = vec![0.0; n];
+                rng.fill_f64(&mut v, -1.0, 1.0);
+                v
+            })
+            .collect();
+        let ys = handle.spmv_multi(&xs);
+        ensure!(ys.len() == k, "{mname}: spmv_multi returned {} of {k} vectors", ys.len());
+        for (xi, yi) in xs.iter().zip(&ys) {
+            handle.spmv(xi, &mut y);
+            let err = max_abs_diff(&y, yi);
+            ensure!(
+                err == 0.0 || opts.precision != Precision::BitIdentical,
+                "{mname}: blocked-x SpMM deviates from per-vector spmv by {err:.2e}"
+            );
+        }
+        let d = handle.multi_decision(k);
+        let r = b.run(&format!("{mname}/blocked-x"), nnz * k as u64, 2 * nnz * k as u64, || {
+            let ys = handle.spmv_multi(&xs);
+            ys[0][0]
+        });
+        println!("{}", r.summary());
+        let e = CorpusEntry {
+            matrix: mname.clone(),
+            policy: "blocked-x".to_string(),
+            backend: handle.backend_name(),
+            scheme: handle.scheme().spec(),
+            schedule: handle.schedule().name(),
+            mflops: r.mflops(),
+            ns_per_nnz: r.ns_per_item(),
+        };
+        push_entry(&mut lines, &e, &format!(", \"block\": {k}, \"fused\": {}", d.blocked));
+        entries.push(e);
+    }
+
+    // Solver self-validation: CG and power iteration on the SPD stencil,
+    // PageRank on the scale-free graph — each handle-backed run checked
+    // against its serial-operator reference. Presence-gated entries
+    // (mflops 0.0) so CI notices if a solver is dropped from the sweep.
+    let mut solver_lines: Vec<String> = Vec::new();
+    if let Some((_, coo)) = matrices.iter().find(|(n, _)| n == "laplacian-2d") {
+        let crs = Crs::from_coo(coo);
+        let mut rng = Rng::new(opts.seed.wrapping_add(2));
+        let mut rhs = vec![0.0; crs.nrows];
+        rng.fill_f64(&mut rhs, -1.0, 1.0);
+        let cfg = CgConfig { max_iters: 2 * crs.nrows, tol: 1e-10 };
+        let serial = cg(&crs, &rhs, &cfg);
+        ensure!(serial.converged, "serial CG failed to converge on laplacian-2d");
+        let handle = SpmvHandle::builder_from_crs(&crs)
+            .policy(TuningPolicy::Heuristic)
+            .threads(opts.threads)
+            .quick(opts.quick)
+            .precision(opts.precision)
+            .build()?;
+        let tuned = cg_with_handle(&handle, &rhs, &cfg);
+        ensure!(tuned.converged, "handle-backed CG failed to converge on laplacian-2d");
+        // Under BitIdentical the whole solve reproduces serially bit for
+        // bit; under Tolerance(ε) the trajectories legitimately diverge
+        // and each run's converged residual is the correctness witness.
+        if opts.precision == Precision::BitIdentical {
+            let err = max_abs_diff(&serial.x, &tuned.x);
+            ensure!(err == 0.0, "CG solutions diverge under BitIdentical: {err:.2e}");
+        }
+        solver_lines.push(format!(
+            concat!(
+                "    {{\"bench\": \"corpus\", \"name\": \"cg-laplacian-2d\", ",
+                "\"iterations\": {}, \"residual\": {:.3e}, \"mflops\": 0.0}}"
+            ),
+            tuned.iterations, tuned.residual_norm
+        ));
+    }
+    {
+        // Power iteration on a fixed small probe: the corpus stencils'
+        // spectral gap closes as they grow (λ₂/λ₁ → 1), pushing plain
+        // power iteration past any fixed budget, so the solver path is
+        // validated on a probe whose gap is designed (n = 20 ⇒ ratio
+        // ≈ 0.983, convergence near iteration 1300).
+        let probe = Crs::from_coo(&gen::laplacian_1d(20));
+        let pcfg = PowerConfig::default();
+        let ps = power_iteration(&probe, &pcfg);
+        let handle = SpmvHandle::builder_from_crs(&probe)
+            .policy(TuningPolicy::Heuristic)
+            .threads(opts.threads)
+            .quick(opts.quick)
+            .precision(opts.precision)
+            .build()?;
+        let pt = power_iteration_with_handle(&handle, &pcfg);
+        ensure!(
+            ps.converged && pt.converged,
+            "power iteration failed to converge on the laplacian-1d probe"
+        );
+        let rel = (ps.eigenvalue - pt.eigenvalue).abs() / ps.eigenvalue.abs().max(1.0);
+        ensure!(rel <= 1e-6, "power-iteration eigenvalues diverge: {rel:.2e}");
+        solver_lines.push(format!(
+            concat!(
+                "    {{\"bench\": \"corpus\", \"name\": \"power-iteration-probe\", ",
+                "\"eigenvalue\": {:.6}, \"iterations\": {}, \"mflops\": 0.0}}"
+            ),
+            pt.eigenvalue, pt.iterations
+        ));
+    }
+    if let Some((_, coo)) = matrices.iter().find(|(n, _)| n == "power-law") {
+        let m = transition_matrix(coo);
+        let crs = Crs::from_coo(&m);
+        let pcfg = PowerConfig::default();
+        let serial = pagerank(&crs, 0.85, &pcfg);
+        ensure!(serial.converged, "serial PageRank failed to converge on power-law");
+        let handle = SpmvHandle::builder_from_crs(&crs)
+            .policy(TuningPolicy::Heuristic)
+            .threads(opts.threads)
+            .quick(opts.quick)
+            .precision(opts.precision)
+            .build()?;
+        let tuned = pagerank_with_handle(&handle, 0.85, &pcfg);
+        ensure!(tuned.converged, "handle-backed PageRank failed to converge on power-law");
+        let err = max_abs_diff(&serial.ranks, &tuned.ranks);
+        ensure!(err <= 1e-8, "PageRank vectors diverge: {err:.2e}");
+        solver_lines.push(format!(
+            concat!(
+                "    {{\"bench\": \"corpus\", \"name\": \"pagerank-power-law\", ",
+                "\"iterations\": {}, \"mflops\": 0.0}}"
+            ),
+            tuned.iterations
+        ));
+    }
+
+    let agreement_rate = (compared > 0).then(|| agree as f64 / compared as f64);
+    if let Some(rate) = agreement_rate {
+        eprintln!(
+            "heuristic-vs-measured agreement: {agree}/{compared} matrices ({:.0}%)",
+            rate * 100.0
+        );
+        solver_lines.push(format!(
+            concat!(
+                "    {{\"bench\": \"corpus\", \"name\": \"heuristic-vs-measured-agreement\", ",
+                "\"agreement_rate\": {:.4}, \"matrices\": {}, \"mflops\": 0.0}}"
+            ),
+            rate, compared
+        ));
+    }
+    lines.extend(solver_lines);
+
+    let mut json = String::new();
+    let _ = writeln!(json, "{{");
+    let _ = writeln!(json, "  \"bench\": \"corpus\",");
+    let _ = writeln!(
+        json,
+        "  \"note\": \"Arbitration-quality benchmark: generated graph/stencil/band corpus \
+         through all three tuning tiers plus blocked-x SpMM; solver entries and the \
+         agreement-rate entry are presence-only floors (mflops 0).\","
+    );
+    let _ = writeln!(json, "  \"threads\": {},", opts.threads);
+    let _ = writeln!(json, "  \"block\": {},", opts.block);
+    let _ = writeln!(json, "  \"results\": [");
+    let _ = writeln!(json, "{}", lines.join(",\n"));
+    let _ = writeln!(json, "  ]");
+    let _ = writeln!(json, "}}");
+    Ok(CorpusReport { entries, agreement_rate, json })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::bench::parse_bench_entries;
+
+    fn tiny_opts() -> CorpusOptions {
+        CorpusOptions { quick: true, threads: 2, ..Default::default() }
+    }
+
+    /// The full quick sweep self-validates and emits the benchdiff
+    /// identities the committed baseline floors key on.
+    #[test]
+    fn quick_sweep_emits_stable_identities_and_agreement_entry() {
+        let report = run_corpus(&tiny_opts()).unwrap();
+        let parsed = parse_bench_entries(&report.json);
+        for m in ["power-law", "rmat", "laplacian-2d", "random-band"] {
+            for p in ["fixed", "heuristic", "measured", "blocked-x"] {
+                let label = format!("corpus/{m}/{p}");
+                assert!(
+                    parsed.iter().any(|e| e.label == label),
+                    "missing bench entry {label}"
+                );
+            }
+        }
+        for solver in ["cg-laplacian-2d", "power-iteration-probe", "pagerank-power-law"] {
+            let label = format!("corpus/{solver}");
+            let e = parsed.iter().find(|e| e.label == label).expect("solver entry");
+            assert_eq!(e.mflops, 0.0, "{label} must stay a presence-only floor");
+        }
+        let rate = report.agreement_rate.expect("agreement over 4 matrices");
+        assert!((0.0..=1.0).contains(&rate));
+        assert!(report
+            .json
+            .contains("\"name\": \"heuristic-vs-measured-agreement\""));
+        // 4 matrices × (3 tiers + blocked-x).
+        assert_eq!(report.entries.len(), 16);
+        assert!(report.entries.iter().all(|e| e.mflops > 0.0));
+    }
+
+    /// `--matrices` restricts the sweep; an unknown name is an error,
+    /// not an empty no-op that would vacuously pass CI.
+    #[test]
+    fn matrix_filter_restricts_and_rejects_unknown_names() {
+        let mut opts = tiny_opts();
+        opts.only = vec!["random-band".to_string()];
+        let report = run_corpus(&opts).unwrap();
+        assert!(report.entries.iter().all(|e| e.matrix == "random-band"));
+        assert_eq!(report.entries.len(), 4);
+        opts.only = vec!["no-such-matrix".to_string()];
+        assert!(run_corpus(&opts).is_err());
+    }
+}

@@ -1,10 +1,18 @@
-//! Eigensolvers: the Lanczos iteration driving SpMV (the paper's
-//! motivating application) and a dense Jacobi reference oracle.
+//! Eigensolvers and iterative solvers: the Lanczos iteration driving
+//! SpMV (the paper's motivating application), conjugate gradients and
+//! power iteration / PageRank ([`solve`]) as further pure-SpMV
+//! consumers, and a dense Jacobi reference oracle.
 
 pub mod dense;
 pub mod lanczos;
+pub mod solve;
 
 pub use dense::{jacobi_eigen, tridiag_eigenvalues};
 pub use lanczos::{
     inverse_shifted_power, lanczos, lanczos_with_handle, LanczosConfig, LanczosResult, LinearOp,
+};
+pub use solve::{
+    cg, cg_with_handle, pagerank, pagerank_with_handle, power_iteration,
+    power_iteration_with_handle, transition_matrix, CgConfig, CgResult, PageRankResult,
+    PowerConfig, PowerResult,
 };

@@ -268,11 +268,12 @@ impl Engine {
         self.run_chunks_ptrs(partitions, n, &bases, |_bi, a, b, out| f(a, b, out));
     }
 
-    /// The **single place** the disjoint-write raw-pointer carving
-    /// lives: validates the partition set against length `n` (bounds
-    /// always; chunk disjointness in debug builds), then runs
-    /// `f(bi, a, b, out)` on the owning thread for every chunk `(a, b)`
-    /// × output base `bi`.
+    /// The per-base disjoint-write raw-pointer carving (its blocked-x
+    /// sibling [`Engine::run_chunks_multi`] carves all bases per chunk;
+    /// both validate through [`Engine::validate_chunks`]): checks the
+    /// partition set against length `n` (bounds always; chunk
+    /// disjointness in debug builds), then runs `f(bi, a, b, out)` on
+    /// the owning thread for every chunk `(a, b)` × output base `bi`.
     fn run_chunks_ptrs<F>(
         &self,
         partitions: &[Vec<(usize, usize)>],
@@ -282,6 +283,25 @@ impl Engine {
     ) where
         F: Fn(usize, usize, usize, &mut [f64]) + Sync,
     {
+        self.validate_chunks(partitions, n);
+        self.run(|t| {
+            for &(a, b) in &partitions[t] {
+                for (bi, base) in bases.iter().enumerate() {
+                    // Safety: chunks are disjoint across threads (caller
+                    // contract, validated in debug builds) and in bounds
+                    // (checked above), and every base points at its own
+                    // allocation — each sub-slice has exactly one owner.
+                    let out = unsafe { std::slice::from_raw_parts_mut(base.0.add(a), b - a) };
+                    f(bi, a, b, out);
+                }
+            }
+        });
+    }
+
+    /// Shared precondition check for the carving dispatches: partition
+    /// count matches the pool, chunks in bounds for length `n` (always),
+    /// chunks disjoint across the whole partition set (debug builds).
+    fn validate_chunks(&self, partitions: &[Vec<(usize, usize)>], n: usize) {
         assert_eq!(partitions.len(), self.n_threads());
         for part in partitions {
             for &(a, b) in part {
@@ -300,18 +320,6 @@ impl Engine {
                 }
             }
         }
-        self.run(|t| {
-            for &(a, b) in &partitions[t] {
-                for (bi, base) in bases.iter().enumerate() {
-                    // Safety: chunks are disjoint across threads (caller
-                    // contract, validated in debug builds) and in bounds
-                    // (checked above), and every base points at its own
-                    // allocation — each sub-slice has exactly one owner.
-                    let out = unsafe { std::slice::from_raw_parts_mut(base.0.add(a), b - a) };
-                    f(bi, a, b, out);
-                }
-            }
-        });
     }
 }
 
@@ -337,6 +345,43 @@ impl Engine {
         }
         let bases: Vec<SendPtr> = ys.iter_mut().map(|y| SendPtr(y.as_mut_ptr())).collect();
         self.run_chunks_ptrs(partitions, n, &bases, f);
+    }
+
+    /// Blocked-x partitioned dispatch: like [`Engine::run_chunks_batch`]
+    /// but each chunk receives ALL `k` output slices in **one** call —
+    /// `f(a, b, outs)` with `outs[bi] = &mut ys[bi][a..b]` — so the
+    /// worker can stream the matrix rows once and reuse every loaded
+    /// entry across the whole column block. Requirements mirror
+    /// `run_chunks_batch` (one shared length, chunks in bounds and
+    /// disjoint across the partition set).
+    pub fn run_chunks_multi<F>(&self, partitions: &[Vec<(usize, usize)>], ys: &mut [Vec<f64>], f: F)
+    where
+        F: Fn(usize, usize, &mut [&mut [f64]]) + Sync,
+    {
+        if ys.is_empty() {
+            return;
+        }
+        let n = ys[0].len();
+        for y in ys.iter() {
+            assert_eq!(y.len(), n, "multi outputs must share one length");
+        }
+        self.validate_chunks(partitions, n);
+        let bases: Vec<SendPtr> = ys.iter_mut().map(|y| SendPtr(y.as_mut_ptr())).collect();
+        self.run(|t| {
+            for &(a, b) in &partitions[t] {
+                // Safety: chunks are disjoint across threads (caller
+                // contract, validated above in debug builds) and in
+                // bounds (checked above), and every base points at its
+                // own allocation — so each (chunk, base) sub-slice has
+                // exactly one owner, and the k slices handed to one
+                // call come from k distinct allocations.
+                let mut outs: Vec<&mut [f64]> = bases
+                    .iter()
+                    .map(|base| unsafe { std::slice::from_raw_parts_mut(base.0.add(a), b - a) })
+                    .collect();
+                f(a, b, &mut outs);
+            }
+        });
     }
 }
 
@@ -792,6 +837,57 @@ impl SpmvPlan {
             })
             .collect();
         self.execute_batch_permuted(engine, kernel, &xps, &mut yps);
+        for (xp, yp) in xps.iter_mut().zip(&yps) {
+            kernel.unpermute_into(yp, xp);
+        }
+        xps
+    }
+
+    /// Blocked-x SpMM: the whole column block of `k` vectors is computed
+    /// in a single engine dispatch that streams each matrix chunk ONCE
+    /// ([`Engine::run_chunks_multi`] + [`SpmvKernel::spmv_rows_multi`]),
+    /// reusing every loaded matrix entry across all `k` vectors — where
+    /// [`SpmvPlan::execute_batch`] re-reads the matrix per vector. The
+    /// fused loops keep the exact scalar accumulation order per vector,
+    /// so each output is bit-identical to a per-vector
+    /// [`SpmvPlan::execute`] at [`IsaLevel::Scalar`]; when a vector ISA
+    /// is bound, the tuner's blocked-vs-batch pricing routes to the
+    /// per-vector path instead (the fused loop has no SIMD body yet).
+    pub fn execute_multi(
+        &self,
+        engine: &Engine,
+        kernel: &SpmvKernel,
+        xs: &[Vec<f64>],
+    ) -> Vec<Vec<f64>> {
+        if xs.is_empty() {
+            return Vec::new();
+        }
+        for x in xs {
+            assert_eq!(x.len(), self.nrows);
+        }
+        self.check(engine, kernel);
+        let mut yps: Vec<Vec<f64>> = xs.iter().map(|_| vec![0.0; self.nrows]).collect();
+        if kernel.perm().is_none() {
+            let xrefs: Vec<&[f64]> = xs.iter().map(|x| x.as_slice()).collect();
+            engine.run_chunks_multi(&self.ranges, &mut yps, |a, b, outs| {
+                kernel.spmv_rows_multi(a, b, &xrefs, outs);
+            });
+            return yps;
+        }
+        let mut xps: Vec<Vec<f64>> = xs
+            .iter()
+            .map(|x| {
+                let mut xp = vec![0.0; self.nrows];
+                kernel.permute_into(x, &mut xp);
+                xp
+            })
+            .collect();
+        {
+            let xrefs: Vec<&[f64]> = xps.iter().map(|x| x.as_slice()).collect();
+            engine.run_chunks_multi(&self.ranges, &mut yps, |a, b, outs| {
+                kernel.spmv_rows_multi(a, b, &xrefs, outs);
+            });
+        }
         for (xp, yp) in xps.iter_mut().zip(&yps) {
             kernel.unpermute_into(yp, xp);
         }

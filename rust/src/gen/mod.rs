@@ -7,4 +7,6 @@ pub mod holstein_hubbard;
 pub mod synthetic;
 
 pub use holstein_hubbard::{holstein_hubbard, HolsteinHubbardParams};
-pub use synthetic::{banded, laplacian_1d, laplacian_2d, random_band, random_square};
+pub use synthetic::{
+    banded, laplacian_1d, laplacian_2d, power_law, random_band, random_square, rmat,
+};

@@ -104,6 +104,71 @@ pub fn random_square(n: usize, nnz: usize, rng: &mut Rng) -> Coo {
     coo
 }
 
+/// Scale-free/power-law graph adjacency matrix. Row `i`'s out-degree
+/// follows a Zipf profile `(i+1)^(-1/(exponent-1))`, giving a degree
+/// distribution with tail exponent ≈ `exponent` (web/social graphs sit
+/// in (2, 3]); column endpoints are drawn preferentially toward the
+/// low-index hubs. The extreme row imbalance is the point: it exercises
+/// dynamic/guided schedules and the backend arbitration in ways band
+/// matrices never do. Entries are positive so a row-stochastic
+/// normalization (PageRank's transition matrix) is well-defined.
+pub fn power_law(n: usize, avg_nnz: usize, exponent: f64, rng: &mut Rng) -> Coo {
+    assert!(n > 0 && exponent > 1.0, "need n > 0 and exponent > 1");
+    let alpha = 1.0 / (exponent - 1.0);
+    let weights: Vec<f64> = (0..n).map(|i| ((i + 1) as f64).powf(-alpha)).collect();
+    let total: f64 = weights.iter().sum();
+    let budget = (n * avg_nnz) as f64;
+    let mut coo = Coo::with_capacity(n, n, n * avg_nnz + n);
+    for (i, w) in weights.iter().enumerate() {
+        let degree = ((budget * w / total).round() as usize).clamp(1, n);
+        for _ in 0..degree {
+            // Preferential endpoint draw: u^(1+alpha) concentrates
+            // columns on the low-index hubs without an alias table.
+            // Duplicate (i, j) draws are summed by `normalize`.
+            let j = ((n as f64) * rng.f64().powf(1.0 + alpha)) as usize;
+            coo.push(i, j.min(n - 1), 0.5 + rng.f64());
+        }
+    }
+    coo.normalize();
+    coo
+}
+
+/// RMAT-style recursive matrix (the Graph500 generator family):
+/// `1 << scale` rows, `edge_factor` edges per row, each edge placed by
+/// recursively descending into quadrants with probabilities
+/// `(a, b, c, d)` (must sum to 1; the classic skewed setting is
+/// `(0.57, 0.19, 0.19, 0.05)`). Duplicate edges are summed by
+/// [`Coo::normalize`], so realized nnz sits slightly below
+/// `edge_factor << scale` on skewed settings.
+pub fn rmat(scale: u32, edge_factor: usize, probs: (f64, f64, f64, f64), rng: &mut Rng) -> Coo {
+    let (pa, pb, pc, pd) = probs;
+    let sum = pa + pb + pc + pd;
+    assert!((sum - 1.0).abs() < 1e-6, "quadrant probabilities must sum to 1, got {sum}");
+    let n = 1usize << scale;
+    let mut coo = Coo::with_capacity(n, n, edge_factor * n);
+    for _ in 0..edge_factor * n {
+        let (mut row, mut col) = (0usize, 0usize);
+        let mut half = n >> 1;
+        while half > 0 {
+            let u = rng.f64();
+            if u < pa {
+                // top-left: nothing to add
+            } else if u < pa + pb {
+                col += half;
+            } else if u < pa + pb + pc {
+                row += half;
+            } else {
+                row += half;
+                col += half;
+            }
+            half >>= 1;
+        }
+        coo.push(row, col, 0.5 + rng.f64());
+    }
+    coo.normalize();
+    coo
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -164,11 +229,52 @@ mod tests {
             laplacian_1d(36),
             banded(36, 2, &mut rng),
             random_square(36, 200, &mut rng),
+            power_law(36, 4, 2.3, &mut rng),
         ] {
             let x = vec![1.0; 36];
             let mut y = vec![0.0; 36];
             m.spmv(&x, &mut y);
             assert!(y.iter().all(|v| v.is_finite()));
         }
+    }
+
+    #[test]
+    fn power_law_has_heavy_tail_row_imbalance() {
+        let mut rng = Rng::new(11);
+        let m = power_law(400, 8, 2.2, &mut rng);
+        assert_eq!(m.nrows, 400);
+        let counts = m.row_counts();
+        let max = *counts.iter().max().unwrap() as f64;
+        let avg = m.nnz() as f64 / m.nrows as f64;
+        assert!(max > 4.0 * avg, "hub row {max} vs avg {avg}: no heavy tail");
+        assert!(counts.iter().all(|&c| c >= 1), "every row keeps at least one entry");
+        // Positive entries: a row-stochastic normalization exists.
+        assert!(m.entries.iter().all(|&(_, _, v)| v > 0.0));
+    }
+
+    #[test]
+    fn rmat_is_skewed_and_power_of_two_sized() {
+        let mut rng = Rng::new(12);
+        let m = rmat(7, 8, (0.57, 0.19, 0.19, 0.05), &mut rng);
+        assert_eq!(m.nrows, 128);
+        assert!(m.nnz() > 0 && m.nnz() <= 8 * 128);
+        let counts = m.row_counts();
+        let max = *counts.iter().max().unwrap() as f64;
+        let avg = m.nnz() as f64 / m.nrows as f64;
+        assert!(max > 2.0 * avg, "rmat quadrant skew should create hub rows");
+        let x = vec![1.0; 128];
+        let mut y = vec![0.0; 128];
+        m.spmv(&x, &mut y);
+        assert!(y.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn graph_generators_are_deterministic_by_seed() {
+        let a = power_law(120, 6, 2.5, &mut Rng::new(42));
+        let b = power_law(120, 6, 2.5, &mut Rng::new(42));
+        assert_eq!(a.entries, b.entries);
+        let c = rmat(6, 8, (0.57, 0.19, 0.19, 0.05), &mut Rng::new(42));
+        let d = rmat(6, 8, (0.57, 0.19, 0.19, 0.05), &mut Rng::new(42));
+        assert_eq!(c.entries, d.entries);
     }
 }

@@ -184,6 +184,74 @@ impl SpmvKernel {
         }
     }
 
+    /// Blocked-x multi-vector variant of [`Self::spmv_rows_permuted`]
+    /// (SpMM with the column block of `k` vectors kept resident): computes
+    /// the same permuted row range for every input vector at once,
+    /// streaming each matrix entry ONCE and reusing the loaded
+    /// `(val, col)` pair across all `k` vectors — the x-reuse that shifts
+    /// the memory-traffic balance (cf. arXiv:1711.05487). Per vector the
+    /// floating-point accumulation order is exactly the scalar kernel's,
+    /// so the result is bit-identical to `k` independent
+    /// [`Self::spmv_rows_permuted`] calls. CRS and SELL-C-σ have fused
+    /// loops; the JDS family and the blocked schemes delegate per vector
+    /// (their traversal orders give no rectangular reuse win).
+    pub fn spmv_rows_multi(
+        &self,
+        row_begin: usize,
+        row_end: usize,
+        xps: &[&[f64]],
+        outs: &mut [&mut [f64]],
+    ) {
+        debug_assert_eq!(xps.len(), outs.len());
+        let k = xps.len();
+        match self {
+            SpmvKernel::Crs(m) => {
+                let mut acc = vec![0.0; k];
+                for i in row_begin..row_end {
+                    let (a, b) = (m.row_ptr[i], m.row_ptr[i + 1]);
+                    acc.fill(0.0);
+                    for j in a..b {
+                        let v = m.val[j];
+                        let c = m.col_idx[j] as usize;
+                        for (sum, xp) in acc.iter_mut().zip(xps) {
+                            *sum += v * xp[c];
+                        }
+                    }
+                    for (out, &sum) in outs.iter_mut().zip(acc.iter()) {
+                        out[i - row_begin] = sum;
+                    }
+                }
+            }
+            SpmvKernel::Sell(m) => {
+                let mut acc = vec![0.0; k];
+                for i in row_begin..row_end {
+                    let sl = i / m.c;
+                    let (lo, hi) = m.slice_rows(sl);
+                    let h = hi - lo;
+                    let lane = i - lo;
+                    let base = m.slice_ptr[sl];
+                    acc.fill(0.0);
+                    for t in 0..m.row_nnz[i] as usize {
+                        let idx = base + t * h + lane;
+                        let v = m.val[idx];
+                        let c = m.col_idx[idx] as usize;
+                        for (sum, xp) in acc.iter_mut().zip(xps) {
+                            *sum += v * xp[c];
+                        }
+                    }
+                    for (out, &sum) in outs.iter_mut().zip(acc.iter()) {
+                        out[i - row_begin] = sum;
+                    }
+                }
+            }
+            _ => {
+                for (xp, out) in xps.iter().zip(outs.iter_mut()) {
+                    self.spmv_rows_permuted(row_begin, row_end, xp, out);
+                }
+            }
+        }
+    }
+
     /// ISA-dispatched variant of [`Self::spmv_rows_permuted`]: CRS and
     /// SELL-C-σ rows route to the vector kernels of
     /// [`crate::kernels::simd`] when `isa` is above
@@ -476,6 +544,50 @@ mod tests {
                 0.0,
                 "scheme {scheme}: restricted kernel deviates from serial"
             );
+        }
+    }
+
+    /// ISSUE-8 tentpole: the blocked-x multi-vector kernel is
+    /// bit-identical to `k` independent range-restricted calls for every
+    /// scheme (fused CRS and SELL-C-σ loops included), over arbitrary
+    /// row splits.
+    #[test]
+    fn multi_vector_kernel_bit_identical_to_per_vector() {
+        let mut rng = Rng::new(41);
+        let n = 141;
+        let k_vecs = 4;
+        let coo = random_coo(&mut rng, n, n * 6);
+        for scheme in Scheme::all_extended(16, 3, 8, 32) {
+            let k = SpmvKernel::build(&coo, scheme);
+            let xs: Vec<Vec<f64>> = (0..k_vecs)
+                .map(|_| {
+                    let mut x = vec![0.0; n];
+                    rng.fill_f64(&mut x, -1.0, 1.0);
+                    x
+                })
+                .collect();
+            let xps: Vec<Vec<f64>> = xs
+                .iter()
+                .map(|x| {
+                    let mut xp = vec![0.0; n];
+                    k.permute_into(x, &mut xp);
+                    xp
+                })
+                .collect();
+            let mut want: Vec<Vec<f64>> = vec![vec![0.0; n]; k_vecs];
+            for (xp, yp) in xps.iter().zip(want.iter_mut()) {
+                k.spmv_rows_permuted(0, n, xp, yp);
+            }
+            let mut got: Vec<Vec<f64>> = vec![vec![0.0; n]; k_vecs];
+            for (a, b) in [(0usize, 1usize), (1, 52), (52, 107), (107, n)] {
+                let xp_refs: Vec<&[f64]> = xps.iter().map(|x| x.as_slice()).collect();
+                let mut out_refs: Vec<&mut [f64]> =
+                    got.iter_mut().map(|y| &mut y[a..b]).collect();
+                k.spmv_rows_multi(a, b, &xp_refs, &mut out_refs);
+            }
+            for (w, g) in want.iter().zip(got.iter()) {
+                assert_eq!(max_abs_diff(w, g), 0.0, "scheme {scheme}: multi deviates");
+            }
         }
     }
 

@@ -35,7 +35,14 @@
 //!   prefetchers, ccNUMA, OpenMP-style scheduling;
 //! - sparsity/stride analysis and a predictive performance model
 //!   ([`analysis`], [`perfmodel`]);
-//! - a Lanczos eigensolver as the motivating application ([`eigen`]);
+//! - solvers as the motivating applications ([`eigen`]): the Lanczos
+//!   eigensolver plus conjugate gradients, power iteration and PageRank
+//!   ([`eigen::solve`]) — all pure SpMV+axpy loops over
+//!   [`eigen::LinearOp`] so they run through any [`spmv::SpmvHandle`];
+//! - a **corpus arbitration benchmark** ([`corpus`]): generated
+//!   graph/stencil/band matrices swept through all three tuning tiers
+//!   plus blocked-x SpMM, recording per-matrix decisions and the
+//!   heuristic-vs-measured agreement rate (`BENCH_corpus.json`);
 //! - a **sharding layer** ([`matrix::shard`], [`shard`]): the matrix
 //!   row-partitioned into in-process domains with per-shard local/halo
 //!   splits, halo exchange behind a transport trait, and bulk-synchronous
@@ -65,6 +72,7 @@
 
 pub mod analysis;
 pub mod coordinator;
+pub mod corpus;
 pub mod eigen;
 pub mod engine;
 pub mod experiments;

@@ -26,6 +26,10 @@
 //!                     [--tenants 2 --queue-cap 256 --duration 300]
 //!                     — serving-layer load sweep (p50/p99 × throughput × shed);
 //!                       --bench writes results/BENCH_serve.json for CI
+//! spmvperf corpus     [--quick] [--seed 42] [--threads 4] [--pin|--no-pin]
+//!                     [--precision bit|tol:EPS] [--block 4] [--exponent 2.2]
+//!                     [--avg-nnz 8] [--edge-factor 8] [--matrices a,b] [--matrix FILE.mtx]
+//!                     — corpus arbitration sweep; writes results/BENCH_corpus.json for CI
 //! spmvperf matrix     [--out FILE.mtx] — generate + analyze the test matrix
 //! spmvperf info       — platform, machines, artifacts
 //! ```
@@ -65,6 +69,7 @@ fn run() -> Result<()> {
         "shard" => cmd_shard(&args),
         "benchdiff" => cmd_benchdiff(&mut args),
         "serve" => cmd_serve(&args),
+        "corpus" => cmd_corpus(&args),
         "matrix" => cmd_matrix(&args),
         "info" => cmd_info(&args),
         "help" | "--help" | "-h" => {
@@ -99,6 +104,10 @@ USAGE:
   spmvperf benchdiff  --suggest-floors <current.json> [--factor 0.7]
   spmvperf serve      [--bench] [--quick] [--max-batch 8] [--max-delay-us 200]
                       [--tenants 2] [--queue-cap 256] [--duration 300]
+  spmvperf corpus     [--quick] [--seed 42] [--threads 4] [--pin|--no-pin]
+                      [--precision bit|tol:EPS] [--block 4] [--exponent 2.2]
+                      [--avg-nnz 8] [--edge-factor 8]
+                      [--matrices power-law,rmat,...] [--matrix FILE.mtx]
   spmvperf matrix     [--out FILE.mtx] [--full|--quick]
   spmvperf info
 "#;
@@ -648,6 +657,52 @@ fn cmd_serve(args: &Args) -> Result<()> {
     };
     args.finish()?;
     spmvperf::serve::run_bench(&opts)
+}
+
+/// `spmvperf corpus` — sweep the generated graph/stencil/band corpus
+/// (plus optional `--matrix FILE.mtx`) through all three tuning tiers
+/// and the blocked-x SpMM path, self-validating every configuration,
+/// then write `results/BENCH_corpus.json` — the standing
+/// arbitration-quality benchmark gated by `benchdiff` in CI.
+fn cmd_corpus(args: &Args) -> Result<()> {
+    let mut opts = spmvperf::corpus::CorpusOptions {
+        quick: args.flag("quick"),
+        seed: args.get_u64("seed", 42)?,
+        threads: args.get_usize("threads", 4)?.max(1),
+        pin: pin_flag(args)?,
+        precision: Precision::parse(&args.get_str("precision", "bit"))?,
+        block: args.get_usize("block", 4)?,
+        exponent: args.get_f64("exponent", 2.2)?,
+        avg_nnz: args.get_usize("avg-nnz", 8)?,
+        edge_factor: args.get_usize("edge-factor", 8)?,
+        only: args.get_str_list("matrices", &[]),
+        matrix_files: Vec::new(),
+    };
+    if let Some(path) = args.get("matrix") {
+        opts.matrix_files.push(path.to_string());
+    }
+    args.finish()?;
+    let report = spmvperf::corpus::run_corpus(&opts)?;
+    let mut t = Table::new(
+        &format!("corpus arbitration sweep ({} threads, block {})", opts.threads, opts.block),
+        &["matrix", "policy", "backend", "scheme", "schedule", "MFlop/s"],
+    );
+    for e in &report.entries {
+        t.row(vec![
+            e.matrix.clone(),
+            e.policy.clone(),
+            e.backend.into(),
+            e.scheme.clone(),
+            e.schedule.clone(),
+            f(e.mflops),
+        ]);
+    }
+    t.print();
+    if let Some(rate) = report.agreement_rate {
+        println!("heuristic-vs-measured agreement rate: {:.0}%", rate * 100.0);
+    }
+    spmvperf::util::bench::write_bench_json("BENCH_corpus.json", &report.json);
+    Ok(())
 }
 
 fn cmd_matrix(args: &Args) -> Result<()> {

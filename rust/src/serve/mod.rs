@@ -206,8 +206,18 @@ impl HandleCache {
             let (_, stale) = self.entries.remove(i);
             let mut pinned_opts = *opts;
             pinned_opts.policy = TuningPolicy::Fixed(stale.scheme(), stale.schedule());
-            pinned_opts.backend =
-                BackendChoice::parse(stale.backend_name()).unwrap_or(opts.backend);
+            // Only replay the cached backend when the caller left the
+            // choice to arbitration. An explicit request wins: replaying
+            // verbatim re-asserted every backend-capability artifact of
+            // the cached build with it — e.g. a sharded handle's report
+            // carries kernel_isa = Scalar because the split kernels have
+            // no vector path, and a tenant asking for native would
+            // silently inherit that cap instead of the Fixed tier's
+            // actual-capability ISA rule.
+            if opts.backend == BackendChoice::Auto {
+                pinned_opts.backend =
+                    BackendChoice::parse(stale.backend_name()).unwrap_or(opts.backend);
+            }
             drop(stale);
             let h = Rc::new(build_handle(crs, &pinned_opts)?);
             self.entries.insert(0, (fp, h.clone()));
@@ -717,6 +727,77 @@ mod tests {
         // And the full hit still works afterwards.
         let (_, o) = cache.get_or_build(&a2, &opts).unwrap();
         assert_eq!(o, CacheOutcome::Hit);
+    }
+
+    /// ISSUE-8 satellite: the PlanHit path must honor an explicitly
+    /// requested backend instead of replaying the cached decision
+    /// verbatim. A sharded handle's report carries `kernel_isa =
+    /// Scalar` — a backend-capability artifact (the split kernels have
+    /// no vector path), not a tuning decision — so a same-structure
+    /// tenant asking for native under a Tolerance contract must be
+    /// rebuilt native, with the ISA re-derived from the rebuilt
+    /// backend's actual capability.
+    #[test]
+    fn plan_hit_honors_requested_backend_isa_capability() {
+        use crate::kernels::IsaLevel;
+        let a = band_crs(5, 160);
+        let mut a2 = a.clone();
+        for v in &mut a2.val {
+            *v *= 2.0;
+        }
+        let mut cache = HandleCache::new(4);
+        let sharded_opts = BuildOpts {
+            backend: BackendChoice::Sharded,
+            precision: Precision::Tolerance(1e-12),
+            ..BuildOpts::default()
+        };
+        let (h1, o) = cache.get_or_build(&a, &sharded_opts).unwrap();
+        assert_eq!(o, CacheOutcome::Miss);
+        assert_eq!(h1.backend_name(), "sharded");
+        assert_eq!(h1.kernel_isa(), IsaLevel::Scalar, "split kernels have no vector path");
+        // Same structure, new values, explicit native request.
+        let native_opts = BuildOpts {
+            backend: BackendChoice::Native,
+            precision: Precision::Tolerance(1e-12),
+            ..BuildOpts::default()
+        };
+        let (h2, o) = cache.get_or_build(&a2, &native_opts).unwrap();
+        assert_eq!(o, CacheOutcome::PlanHit);
+        assert_eq!(
+            h2.backend_name(),
+            "native",
+            "an explicit backend request must win on a plan hit"
+        );
+        // Scheme/schedule transfer; the ISA comes from the rebuilt
+        // backend's capability, not the cached report's scalar reset.
+        assert_eq!(h2.scheme(), h1.scheme());
+        assert_eq!(h2.schedule(), h1.schedule());
+        let expect = if h2.kernel().is_some_and(|k| k.has_simd_path(IsaLevel::detect())) {
+            IsaLevel::detect()
+        } else {
+            IsaLevel::Scalar
+        };
+        assert_eq!(h2.kernel_isa(), expect);
+        // A tenant that leaves the backend to arbitration still replays
+        // the cached decision (now native).
+        let mut a3 = a.clone();
+        for v in &mut a3.val {
+            *v *= 3.0;
+        }
+        let auto_opts =
+            BuildOpts { precision: Precision::Tolerance(1e-12), ..BuildOpts::default() };
+        assert_eq!(auto_opts.backend, BackendChoice::Auto);
+        let (h3, o) = cache.get_or_build(&a3, &auto_opts).unwrap();
+        assert_eq!(o, CacheOutcome::PlanHit);
+        assert_eq!(h3.backend_name(), "native", "auto replays the cached backend");
+        // Results stay correct for the new values.
+        use crate::matrix::SpMv;
+        let x = rand_x(22, a.nrows);
+        let mut want = vec![0.0; a.nrows];
+        a2.spmv(&x, &mut want);
+        let mut got = vec![0.0; a.nrows];
+        h2.spmv(&x, &mut got);
+        assert!(max_abs_diff(&want, &got) < 1e-10, "plan-hit handle serves wrong values");
     }
 
     /// ISSUE-7 satellite: served results are bit-identical to a

@@ -51,9 +51,9 @@ use crate::sched::Schedule;
 use crate::shard::OverlapMode;
 use crate::simulator::MachineSpec;
 use crate::tune::{
-    self, BackendCandidate, BackendDecision, PlacementDecision, ShardPolicy, ShardedContext,
-    SpmvContext, TuningPolicy, TuningReport, SHARD_GRID, SHARD_HALO_VIABLE_MAX,
-    SHARD_MIN_ROWS, SHARD_OVERLAP_MIN_INTERIOR,
+    self, price_multi, BackendCandidate, BackendDecision, MultiDecision, PlacementDecision,
+    ShardPolicy, ShardedContext, SpmvContext, TuningPolicy, TuningReport, SHARD_GRID,
+    SHARD_HALO_VIABLE_MAX, SHARD_MIN_ROWS, SHARD_OVERLAP_MIN_INTERIOR,
 };
 use crate::util::rng::Rng;
 
@@ -86,6 +86,13 @@ pub trait Backend {
     fn spmv(&self, x: &[f64], y: &mut [f64]);
     /// Batched SpMV — one fused dispatch where the backend supports it.
     fn spmv_batch(&self, xs: &[Vec<f64>]) -> Vec<Vec<f64>>;
+    /// Blocked-x SpMM over a column block of `k` vectors: backends with
+    /// a fused multi kernel stream the matrix once and reuse each entry
+    /// across the block; the default is the per-vector batch (already
+    /// correct everywhere, just without the x-reuse traffic win).
+    fn spmv_multi(&self, xs: &[Vec<f64>]) -> Vec<Vec<f64>> {
+        self.spmv_batch(xs)
+    }
     /// Re-partition for a new schedule and re-home workspace buffers
     /// (the §5.2 hazard); the serial backend records the no-op.
     fn rebalance(&mut self, schedule: Schedule);
@@ -215,6 +222,9 @@ impl Backend for Native {
     }
     fn spmv_batch(&self, xs: &[Vec<f64>]) -> Vec<Vec<f64>> {
         self.ctx.spmv_batch(xs)
+    }
+    fn spmv_multi(&self, xs: &[Vec<f64>]) -> Vec<Vec<f64>> {
+        self.ctx.spmv_multi(xs)
     }
     fn rebalance(&mut self, schedule: Schedule) {
         self.ctx.rebalance(schedule);
@@ -418,6 +428,31 @@ impl SpmvHandle {
     /// each result is bit-identical to the per-vector [`Self::spmv`].
     pub fn spmv_batch(&self, xs: &[Vec<f64>]) -> Vec<Vec<f64>> {
         self.backend.spmv_batch(xs)
+    }
+
+    /// SpMM over a column block of `k` vectors, with the tuner pricing
+    /// blocked-x against the per-vector batch ([`Self::multi_decision`]):
+    /// the fused multi kernel streams the matrix once per chunk and
+    /// reuses every loaded entry across the block, which wins whenever
+    /// `k >= 2` and no vector ISA is bound; otherwise the call routes to
+    /// [`Self::spmv_batch`]. Either way each result is bit-identical to
+    /// the per-vector [`Self::spmv`] under
+    /// [`Precision::BitIdentical`].
+    pub fn spmv_multi(&self, xs: &[Vec<f64>]) -> Vec<Vec<f64>> {
+        if self.multi_decision(xs.len()).blocked {
+            self.backend.spmv_multi(xs)
+        } else {
+            self.backend.spmv_batch(xs)
+        }
+    }
+
+    /// Price a `k`-wide SpMM call on this handle: blocked-x against the
+    /// per-vector batch, from the modeled memory traffic of each path
+    /// ([`tune::price_multi`]) and the bound kernel ISA.
+    pub fn multi_decision(&self, k: usize) -> MultiDecision {
+        let nnz = self.backend.nnz();
+        let nrows = self.backend.nrows();
+        price_multi(nnz, nrows, k, self.kernel_isa() > IsaLevel::Scalar)
     }
 
     /// Permuted-basis hot path, where the backend has one (serial and
@@ -1078,16 +1113,15 @@ mod tests {
         gen::holstein_hubbard(&gen::HolsteinHubbardParams::tiny())
     }
 
-    /// ISSUE-5 satellite: facade bit-identity — every backend × scheme ×
-    /// schedule × pin on/off reproduces serial CRS bit for bit (CRS and
-    /// SELL-C-σ both preserve the per-row accumulation order; pinning
-    /// degrades to a recorded no-op off Linux on the same code path).
-    #[test]
-    fn facade_bit_identical_across_backends() {
-        let coo = hh();
-        let crs = Crs::from_coo(&coo);
+    /// Property body of the facade bit-identity tests: every backend ×
+    /// scheme × schedule × pin on/off reproduces serial CRS bit for bit
+    /// on `coo` (CRS and SELL-C-σ both preserve the per-row accumulation
+    /// order; pinning degrades to a recorded no-op off Linux on the same
+    /// code path).
+    fn assert_facade_bit_identity(coo: &Coo, seed: u64) {
+        let crs = Crs::from_coo(coo);
         let n = crs.nrows;
-        let mut rng = Rng::new(120);
+        let mut rng = Rng::new(seed);
         let mut x = vec![0.0; n];
         rng.fill_f64(&mut x, -1.0, 1.0);
         let mut want = vec![0.0; n];
@@ -1103,7 +1137,7 @@ mod tests {
             for scheme in [Scheme::Crs, Scheme::SellCs { c: 8, sigma: 64 }] {
                 for schedule in schedules {
                     for pin in [false, true] {
-                        let mut b = SpmvHandle::builder(&coo)
+                        let mut b = SpmvHandle::builder(coo)
                             .policy(TuningPolicy::Fixed(scheme, schedule))
                             .backend(backend)
                             .threads(2)
@@ -1137,6 +1171,127 @@ mod tests {
                 }
             }
         }
+    }
+
+    /// ISSUE-5 satellite: facade bit-identity on the paper's Hamiltonian.
+    #[test]
+    fn facade_bit_identical_across_backends() {
+        assert_facade_bit_identity(&hh(), 120);
+    }
+
+    /// ISSUE-8 satellite: the same property on a scale-free power-law
+    /// instance, whose hub rows actually stress the dynamic/guided
+    /// partitions (a hub row can outweigh whole chunks of tail rows).
+    #[test]
+    fn facade_bit_identical_across_backends_on_power_law() {
+        let coo = gen::power_law(300, 6, 2.2, &mut Rng::new(77));
+        assert_facade_bit_identity(&coo, 121);
+    }
+
+    /// ISSUE-8 tentpole: SpMM through the facade — `spmv_multi` is
+    /// bit-identical to `k` independent `spmv` calls under the default
+    /// `Precision::BitIdentical` on every backend (fused blocked-x on
+    /// native, per-vector fallback on serial/sharded), and the pricing
+    /// decision is recorded and sane.
+    #[test]
+    fn spmv_multi_bit_identical_to_per_vector_spmv() {
+        let coo = hh();
+        let crs = Crs::from_coo(&coo);
+        let n = crs.nrows;
+        let k = 4;
+        let mut rng = Rng::new(123);
+        let xs: Vec<Vec<f64>> = (0..k)
+            .map(|_| {
+                let mut x = vec![0.0; n];
+                rng.fill_f64(&mut x, -1.0, 1.0);
+                x
+            })
+            .collect();
+        let backends =
+            [BackendChoice::Serial, BackendChoice::Native, BackendChoice::Sharded];
+        for backend in backends {
+            for scheme in [Scheme::Crs, Scheme::SellCs { c: 8, sigma: 64 }] {
+                let mut b = SpmvHandle::builder(&coo)
+                    .policy(TuningPolicy::Fixed(scheme, Schedule::Dynamic { chunk: 13 }))
+                    .backend(backend)
+                    .threads(2);
+                if backend == BackendChoice::Sharded {
+                    b = b.shard_policy(ShardPolicy::Fixed {
+                        shards: 2,
+                        mode: OverlapMode::Overlapped,
+                    });
+                }
+                let handle = b.build().unwrap();
+                assert_eq!(handle.precision(), Precision::BitIdentical);
+                let d = handle.multi_decision(k);
+                assert!(d.blocked, "k={k} under BitIdentical must price blocked-x");
+                assert!(d.bytes_blocked < d.bytes_per_vector);
+                let ys = handle.spmv_multi(&xs);
+                assert_eq!(ys.len(), k);
+                for (x, y) in xs.iter().zip(&ys) {
+                    let mut want = vec![0.0; n];
+                    handle.spmv(x, &mut want);
+                    assert_eq!(
+                        max_abs_diff(&want, y),
+                        0.0,
+                        "{} × {scheme}: spmv_multi deviates from per-vector spmv",
+                        backend.name()
+                    );
+                }
+            }
+        }
+        // A single vector has nothing to block over.
+        let h = SpmvHandle::builder(&coo)
+            .policy(TuningPolicy::Fixed(Scheme::Crs, Schedule::Static { chunk: None }))
+            .backend(BackendChoice::Native)
+            .threads(2)
+            .build()
+            .unwrap();
+        assert!(!h.multi_decision(1).blocked);
+    }
+
+    /// ISSUE-8 satellite: arbitration on graph-scale row imbalance — a
+    /// generated power-law instance crosses the schedule heuristic's CV
+    /// threshold and flips to dynamic/guided, while a regular band
+    /// matrix of the same size stays static.
+    #[test]
+    fn power_law_flips_schedule_above_cv_threshold() {
+        let mut rng = Rng::new(9);
+        let skew = gen::power_law(600, 8, 2.1, &mut rng);
+        let handle = SpmvHandle::builder(&skew)
+            .policy(TuningPolicy::Heuristic)
+            .backend(BackendChoice::Native)
+            .threads(4)
+            .quick(true)
+            .build()
+            .unwrap();
+        let rep = handle.report();
+        assert!(
+            rep.row_imbalance_cv > rep.schedule_cv_threshold,
+            "power-law CV {} must exceed the threshold {}",
+            rep.row_imbalance_cv,
+            rep.schedule_cv_threshold
+        );
+        assert!(
+            matches!(handle.schedule(), Schedule::Dynamic { .. } | Schedule::Guided { .. }),
+            "imbalance above the CV threshold must flip the schedule, got {}",
+            handle.schedule().name()
+        );
+        let flat = gen::random_band(600, 8, 30, &mut rng);
+        let regular = SpmvHandle::builder(&flat)
+            .policy(TuningPolicy::Heuristic)
+            .backend(BackendChoice::Native)
+            .threads(4)
+            .quick(true)
+            .build()
+            .unwrap();
+        let rep = regular.report();
+        assert!(rep.row_imbalance_cv < rep.schedule_cv_threshold);
+        assert!(
+            matches!(regular.schedule(), Schedule::Static { .. }),
+            "a regular band matrix must stay static, got {}",
+            regular.schedule().name()
+        );
     }
 
     /// ISSUE-5 satellite: arbitration-decision determinism — the same

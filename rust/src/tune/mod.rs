@@ -261,6 +261,61 @@ pub struct BackendDecision {
     pub candidates: Vec<BackendCandidate>,
 }
 
+/// Blocked-x-vs-per-vector arbitration for a `k`-wide SpMM call
+/// (see [`price_multi`]): whether the column block should run through
+/// the fused multi kernel or fall back to the per-vector batch path.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MultiDecision {
+    /// Column-block width the call was priced for.
+    pub k: usize,
+    /// Route to the fused blocked-x kernel (`spmv_multi`) rather than
+    /// the per-vector batch (`spmv_batch`).
+    pub blocked: bool,
+    /// Modeled main-memory traffic of `k` per-vector passes (bytes).
+    pub bytes_per_vector: f64,
+    /// Modeled traffic of one blocked-x pass (matrix streamed once).
+    pub bytes_blocked: f64,
+    pub rationale: String,
+}
+
+/// Price a `k`-wide SpMM: per-vector batching streams the matrix
+/// (~12 B/nnz for CRS: 8 B value + 4 B column index) once **per
+/// vector**, while the blocked-x kernel streams it once for the whole
+/// block and reuses each loaded entry across all `k` right-hand sides —
+/// the x-reuse traffic shift of arXiv:1711.05487. Both paths move the
+/// same x-read + y-write bytes (~8 B/nnz + 16 B/row per vector), so
+/// blocking wins whenever `k >= 2`... unless a vector ISA is bound
+/// (`simd_active`): the fused loop is scalar today, and giving up the
+/// measured SIMD win to save matrix re-reads is the wrong trade, so
+/// SIMD routes per-vector.
+pub fn price_multi(nnz: usize, nrows: usize, k: usize, simd_active: bool) -> MultiDecision {
+    let (nnz, nrows, kf) = (nnz as f64, nrows as f64, k as f64);
+    let per_vec = kf * (12.0 * nnz + 8.0 * nnz + 16.0 * nrows);
+    let blocked = 12.0 * nnz + kf * (8.0 * nnz + 16.0 * nrows);
+    let choose_blocked = k >= 2 && !simd_active;
+    let rationale = if k < 2 {
+        format!("k={k}: single vector, nothing to block over")
+    } else if simd_active {
+        format!(
+            "k={k}: vector ISA bound — fused multi loop is scalar, \
+             per-vector batch keeps the SIMD kernels"
+        )
+    } else {
+        format!(
+            "k={k}: blocked-x streams the matrix once ({:.0} KiB vs {:.0} KiB modeled traffic)",
+            blocked / 1024.0,
+            per_vec / 1024.0
+        )
+    };
+    MultiDecision {
+        k,
+        blocked: choose_blocked,
+        bytes_per_vector: per_vec,
+        bytes_blocked: blocked,
+        rationale,
+    }
+}
+
 /// One candidate considered during tuning, with its score(s).
 #[derive(Debug, Clone)]
 pub struct CandidateReport {
@@ -1315,6 +1370,14 @@ impl SpmvContext {
     /// Each result is bit-identical to the per-vector [`Self::spmv`].
     pub fn spmv_batch(&self, xs: &[Vec<f64>]) -> Vec<Vec<f64>> {
         self.plan.execute_batch(self.engine(), &self.kernel, xs)
+    }
+
+    /// Blocked-x SpMM through the tuned plan: the matrix is streamed
+    /// once per chunk and reused across the whole column block
+    /// ([`SpmvPlan::execute_multi`]). Bit-identical to [`Self::spmv`]
+    /// per vector when the plan executes at [`IsaLevel::Scalar`].
+    pub fn spmv_multi(&self, xs: &[Vec<f64>]) -> Vec<Vec<f64>> {
+        self.plan.execute_multi(self.engine(), &self.kernel, xs)
     }
 
     /// Re-plan the same tuned kernel for a different schedule / thread

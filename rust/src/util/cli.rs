@@ -32,7 +32,7 @@ const VALUE_OPTS: &[&str] = &[
     "block-size", "chunk-sizes", "threads-per-socket", "output", "scale",
     "eigenvalues", "csv", "policy", "tolerance", "shards", "mode", "backend",
     "cv-threshold", "precision", "factor", "max-batch", "max-delay-us", "tenants",
-    "queue-cap", "duration",
+    "queue-cap", "duration", "exponent", "avg-nnz", "edge-factor", "matrices",
 ];
 
 impl Args {
@@ -225,6 +225,23 @@ mod tests {
         assert_eq!(a.get_usize("tenants", 2).unwrap(), 4);
         assert_eq!(a.get_usize("queue-cap", 256).unwrap(), 128);
         assert_eq!(a.get_u64("duration", 300).unwrap(), 1000);
+        assert!(a.positionals().is_empty(), "no stray positionals");
+        assert!(a.finish().is_ok());
+    }
+
+    /// Regression: the corpus/generator PR's options must be registered —
+    /// `--exponent 2.2` would otherwise parse as a flag + stray positional
+    /// and the sweep would silently use the default degree exponent.
+    #[test]
+    fn corpus_and_generator_options_take_values() {
+        let a = parse(
+            "--exponent 2.5 --avg-nnz 12 --edge-factor 16 --matrices power-law,rmat --block 8",
+        );
+        assert_eq!(a.get_f64("exponent", 2.2).unwrap(), 2.5);
+        assert_eq!(a.get_usize("avg-nnz", 8).unwrap(), 12);
+        assert_eq!(a.get_usize("edge-factor", 8).unwrap(), 16);
+        assert_eq!(a.get_str_list("matrices", &[]), vec!["power-law", "rmat"]);
+        assert_eq!(a.get_usize("block", 4).unwrap(), 8);
         assert!(a.positionals().is_empty(), "no stray positionals");
         assert!(a.finish().is_ok());
     }
