@@ -12,6 +12,7 @@
 use std::fmt::Write as _;
 
 use spmvperf::gen::{self, HolsteinHubbardParams};
+use spmvperf::kernels::Precision;
 use spmvperf::matrix::{Crs, Scheme, SpMv};
 use spmvperf::sched::Schedule;
 use spmvperf::shard::OverlapMode;
@@ -43,22 +44,27 @@ fn main() {
     let mut y_ref = vec![0.0; n];
     crs.spmv(&x, &mut y_ref);
 
-    // (config name, shard count, scheme): the CRS sweep over the full
-    // shard grid plus one SELL-C-σ point, each in both overlap modes.
-    let mut configs: Vec<(String, usize, Scheme)> = SHARD_COUNTS
+    // (config name, shard count, scheme, precision): the CRS sweep over
+    // the full shard grid plus one SELL-C-σ point, each in both overlap
+    // modes — then the same s4 partitions under the Tolerance contract,
+    // where the tuner arbitrates a vector ISA for the split kernels
+    // (ISSUE 9) instead of forcing scalar.
+    let mut configs: Vec<(String, usize, Scheme, Precision)> = SHARD_COUNTS
         .iter()
-        .map(|&s| (format!("s{s}"), s, Scheme::Crs))
+        .map(|&s| (format!("s{s}"), s, Scheme::Crs, Precision::BitIdentical))
         .collect();
-    configs.push(("s4-sell".to_string(), 4, SELL));
+    configs.push(("s4-sell".to_string(), 4, SELL, Precision::BitIdentical));
+    configs.push(("s4-simd".to_string(), 4, Scheme::Crs, Precision::Tolerance(1e-12)));
+    configs.push(("s4-sell-simd".to_string(), 4, SELL, Precision::Tolerance(1e-12)));
 
     let mut table = Table::new(
         "sharded SpMV: bulk-sync vs overlapped (Holstein-Hubbard)",
-        &["config", "mode", "halo frac", "boundary nnz frac", "MFlop/s", "ns/nnz"],
+        &["config", "mode", "isa", "halo frac", "boundary nnz frac", "MFlop/s", "ns/nnz"],
     );
     let mut entries: Vec<String> = Vec::new();
     let mut by_name: Vec<(String, f64)> = Vec::new();
     let mut y = vec![0.0; n];
-    for (name, shards, scheme) in &configs {
+    for (name, shards, scheme, precision) in &configs {
         for mode in [OverlapMode::BulkSync, OverlapMode::Overlapped] {
             // Every configuration is a forced-sharded SpmvHandle — the
             // bench never names the executor type.
@@ -67,17 +73,30 @@ fn main() {
                 .backend(BackendChoice::Sharded)
                 .shard_policy(ShardPolicy::Fixed { shards: *shards, mode })
                 .threads(THREADS_PER_SHARD)
+                .precision(*precision)
                 .build()
                 .expect("sharded handle over a square matrix");
             let label = format!("{name}-{}", short(mode));
             // Self-validate before timing: sharding and overlap must
-            // never change the math.
+            // never change the math — bit-identical under the default
+            // contract, within ε when a vector ISA is bound.
             sh.spmv(&x, &mut y);
-            assert_eq!(
-                max_abs_diff(&y_ref, &y),
-                0.0,
-                "{label}: output deviates from serial CRS"
-            );
+            match *precision {
+                Precision::BitIdentical => assert_eq!(
+                    max_abs_diff(&y_ref, &y),
+                    0.0,
+                    "{label}: output deviates from serial CRS"
+                ),
+                Precision::Tolerance(eps) => {
+                    for i in 0..n {
+                        assert!(
+                            (y[i] - y_ref[i]).abs() <= eps * y_ref[i].abs().max(1.0),
+                            "{label}: row {i} leaves the ε contract (isa {})",
+                            sh.kernel_isa().name()
+                        );
+                    }
+                }
+            }
             let r = b.run(&format!("shard/{label}"), nnz, 2 * nnz, || {
                 sh.spmv(&x, &mut y);
                 y[0]
@@ -89,6 +108,7 @@ fn main() {
             table.row(vec![
                 name.clone(),
                 mode.name().into(),
+                sh.kernel_isa().name().into(),
                 f(halo_fraction),
                 f(boundary_nnz_fraction),
                 f(r.mflops()),
@@ -98,6 +118,7 @@ fn main() {
                 concat!(
                     "    {{\"matrix\": \"holstein-hubbard\", \"config\": \"{}\", ",
                     "\"shards\": {}, \"mode\": \"{}\", \"scheme\": \"{}\", ",
+                    "\"precision\": \"{}\", \"isa\": \"{}\", ",
                     "\"threads_per_shard\": {}, \"halo_fraction\": {:.4}, ",
                     "\"boundary_nnz_fraction\": {:.4}, ",
                     "\"mflops\": {:.3}, \"ns_per_nnz\": {:.4}}}"
@@ -106,6 +127,8 @@ fn main() {
                 shards,
                 mode.name(),
                 scheme.spec(),
+                sh.precision().name(),
+                sh.kernel_isa().name(),
                 THREADS_PER_SHARD,
                 halo_fraction,
                 boundary_nnz_fraction,

@@ -36,8 +36,9 @@ fn main() {
 
     // The -simd variants rerun a policy under the Tolerance contract: the
     // tuner may then arbitrate vector kernels into the plan (Fixed binds
-    // the detected ISA ceiling directly). The default rows stay
-    // BitIdentical and therefore scalar.
+    // the detected ISA ceiling directly; the heuristic tier prices the
+    // vector variants by the measured gather gain since ISSUE 9). The
+    // default rows stay BitIdentical and therefore scalar.
     let policies: Vec<(&str, TuningPolicy, Precision)> = vec![
         (
             "fixed-sellcs-32-256",
@@ -57,6 +58,7 @@ fn main() {
             ),
             Precision::Tolerance(1e-12),
         ),
+        ("heuristic-simd", TuningPolicy::Heuristic, Precision::Tolerance(1e-12)),
         ("measured-simd", TuningPolicy::Measured, Precision::Tolerance(1e-12)),
     ];
 
@@ -141,6 +143,19 @@ fn main() {
                     ys[0][0]
                 },
             );
+            // Blocked-x SpMM (ISSUE 9): the fused multi kernel streams
+            // the matrix once per column block — with vector bodies, a
+            // bound ISA keeps its win instead of falling back to the
+            // per-vector batch.
+            let r_multi = b.run(
+                &format!("{mname}/{pname} batch{BATCH} blocked-x"),
+                BATCH as u64 * nnz,
+                2 * BATCH as u64 * nnz,
+                || {
+                    let ys = ctx.spmv_multi(&xs);
+                    ys[0][0]
+                },
+            );
             let amortization = r_pervec.median_secs() / r_fused.median_secs();
             let mflops = r.mflops();
             if *pname == "fixed-sellcs-32-256" {
@@ -167,7 +182,8 @@ fn main() {
                     "\"scheme\": \"{}\", \"spec\": \"{}\", \"c\": {}, \"sigma\": {}, ",
                     "\"schedule\": \"{}\", \"threads\": {}, \"mflops\": {:.3}, ",
                     "\"ns_per_nnz\": {:.4}, \"padding_overhead\": {:.6}, ",
-                    "\"batch{}_fused_mflops\": {:.3}, \"batch_amortization\": {:.4}}}"
+                    "\"batch{}_fused_mflops\": {:.3}, \"batch_amortization\": {:.4}, ",
+                    "\"batch{}_multi_mflops\": {:.3}, \"multi_blocked\": {}}}"
                 ),
                 mname,
                 n,
@@ -187,6 +203,9 @@ fn main() {
                 BATCH,
                 r_fused.mflops(),
                 amortization,
+                BATCH,
+                r_multi.mflops(),
+                ctx.multi_decision(BATCH).blocked,
             ));
         }
         t.print();

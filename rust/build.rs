@@ -1,0 +1,39 @@
+//! Toolchain probe for the native AVX-512 kernel bodies.
+//!
+//! The `_mm512_*` intrinsics stabilized in Rust 1.89; this crate builds
+//! offline on whatever toolchain is present, so instead of raising the
+//! MSRV the build script asks the compiling rustc for its version and
+//! sets the `spmv_avx512_native` cfg when the floor allows. The SIMD
+//! module ([`kernels::simd`]) then compiles its `IsaLevel::Avx512` lane
+//! bodies as native 512-bit FMAs; without the cfg the same entry points
+//! compile as paired 256-bit AVX2 streams (stable since Rust 1.27).
+
+use std::process::Command;
+
+/// Minor version of a `1.x` rustc, `u32::MAX` for a post-1.x compiler,
+/// `None` when the probe fails (unparsable / exotic wrapper) — the
+/// caller then keeps the conservative paired-stream bodies.
+fn rustc_minor() -> Option<u32> {
+    let rustc = std::env::var_os("RUSTC")?;
+    let out = Command::new(rustc).arg("--version").output().ok()?;
+    let text = String::from_utf8(out.stdout).ok()?;
+    // "rustc 1.89.0 (… 2025-08-04)" / "rustc 1.91.0-nightly (…)"
+    let ver = text.split_whitespace().nth(1)?;
+    let mut parts = ver.split(['.', '-', '+']);
+    let major: u32 = parts.next()?.parse().ok()?;
+    if major > 1 {
+        return Some(u32::MAX);
+    }
+    parts.next()?.parse().ok()
+}
+
+fn main() {
+    // Declare the custom cfg so rustc/clippy runs with `-D warnings`
+    // accept it on toolchains where it stays unset (unexpected_cfgs).
+    println!("cargo:rustc-check-cfg=cfg(spmv_avx512_native)");
+    if rustc_minor().is_some_and(|minor| minor >= 89) {
+        println!("cargo:rustc-cfg=spmv_avx512_native");
+    }
+    println!("cargo:rerun-if-changed=build.rs");
+    println!("cargo:rerun-if-env-changed=RUSTC");
+}

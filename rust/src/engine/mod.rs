@@ -847,12 +847,17 @@ impl SpmvPlan {
     /// in a single engine dispatch that streams each matrix chunk ONCE
     /// ([`Engine::run_chunks_multi`] + [`SpmvKernel::spmv_rows_multi`]),
     /// reusing every loaded matrix entry across all `k` vectors — where
-    /// [`SpmvPlan::execute_batch`] re-reads the matrix per vector. The
-    /// fused loops keep the exact scalar accumulation order per vector,
-    /// so each output is bit-identical to a per-vector
-    /// [`SpmvPlan::execute`] at [`IsaLevel::Scalar`]; when a vector ISA
-    /// is bound, the tuner's blocked-vs-batch pricing routes to the
-    /// per-vector path instead (the fused loop has no SIMD body yet).
+    /// [`SpmvPlan::execute_batch`] re-reads the matrix per vector. At
+    /// [`IsaLevel::Scalar`] the fused loops keep the exact scalar
+    /// accumulation order per vector, so each output is bit-identical
+    /// to a per-vector [`SpmvPlan::execute`]; when a vector ISA is
+    /// bound the fused vector bodies ([`crate::kernels::simd`]
+    /// `*_rows_multi`) broadcast each matrix entry and FMA it across
+    /// the column block, preserving per-vector entry order so the
+    /// deviation stays within the [`Precision::Tolerance`] contraction
+    /// bound.
+    ///
+    /// [`Precision::Tolerance`]: crate::kernels::Precision::Tolerance
     pub fn execute_multi(
         &self,
         engine: &Engine,
@@ -870,7 +875,7 @@ impl SpmvPlan {
         if kernel.perm().is_none() {
             let xrefs: Vec<&[f64]> = xs.iter().map(|x| x.as_slice()).collect();
             engine.run_chunks_multi(&self.ranges, &mut yps, |a, b, outs| {
-                kernel.spmv_rows_multi(a, b, &xrefs, outs);
+                kernel.spmv_rows_multi_isa(self.kernel_isa, a, b, &xrefs, outs);
             });
             return yps;
         }
@@ -885,7 +890,7 @@ impl SpmvPlan {
         {
             let xrefs: Vec<&[f64]> = xps.iter().map(|x| x.as_slice()).collect();
             engine.run_chunks_multi(&self.ranges, &mut yps, |a, b, outs| {
-                kernel.spmv_rows_multi(a, b, &xrefs, outs);
+                kernel.spmv_rows_multi_isa(self.kernel_isa, a, b, &xrefs, outs);
             });
         }
         for (xp, yp) in xps.iter_mut().zip(&yps) {

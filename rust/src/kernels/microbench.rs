@@ -286,10 +286,48 @@ fn measure_triad_gain(isa: IsaLevel) -> f64 {
     }
 }
 
-/// Cached per-process triad gain for `isa` — the heuristic tier's
+/// Scalar/vector throughput ratio of the gather-FMA reduction
+/// ([`crate::kernels::simd::gather_scp`], IS-SCP's vector twin) at
+/// `isa`: index + value streams L1-sized, the gathered B array
+/// L2-resident with short geometric strides — per-core gather
+/// throughput, not DRAM bandwidth, exactly the regime where the SpMV
+/// x-gather lives.
+fn measure_gather_gain(isa: IsaLevel) -> f64 {
+    let n = 16 * 1024;
+    let b_len = 32 * 1024;
+    let mut rng = Rng::new(0x6A74E2);
+    let mut a = vec![0.0; n];
+    rng.fill_f64(&mut a, -1.0, 1.0);
+    let mut b = vec![0.0; b_len];
+    rng.fill_f64(&mut b, -1.0, 1.0);
+    let ind = build_index(IndexPattern::Geometric { mean: 4.0 }, n, b_len, &mut rng);
+    let reps = 50;
+    let time = |level: IsaLevel| -> f64 {
+        std::hint::black_box(simd::gather_scp(level, &a, &b, &ind)); // warmup
+        let mut best = f64::INFINITY;
+        for _ in 0..reps {
+            let t0 = std::time::Instant::now();
+            std::hint::black_box(simd::gather_scp(level, &a, &b, &ind));
+            best = best.min(t0.elapsed().as_nanos() as f64);
+        }
+        best
+    };
+    let scalar_ns = time(IsaLevel::Scalar);
+    let simd_ns = time(isa);
+    let gain = scalar_ns / simd_ns;
+    if gain.is_finite() && gain > 0.0 {
+        gain
+    } else {
+        1.0
+    }
+}
+
+/// Cached per-process triad gain for `isa` — the streaming
 /// simd-vs-scalar score factor. Returns 1.0 for `Scalar` and for any
 /// level above [`IsaLevel::detect`] (never measured: running an
-/// undetected ISA would be UB).
+/// undetected ISA would be UB). The heuristic tier prices the
+/// gather-FMA SpMV kernels by [`cached_gather_gain`] instead — the
+/// triad has no indirection, so its gain is optimistic for SpMV.
 pub fn cached_isa_gain(isa: IsaLevel) -> f64 {
     if isa == IsaLevel::Scalar || isa > IsaLevel::detect() {
         return 1.0;
@@ -300,6 +338,34 @@ pub fn cached_isa_gain(isa: IsaLevel) -> f64 {
             measure_triad_gain(IsaLevel::Avx2),
             if IsaLevel::detect() >= IsaLevel::Avx512 {
                 measure_triad_gain(IsaLevel::Avx512)
+            } else {
+                1.0
+            },
+        ]
+    });
+    match isa {
+        IsaLevel::Scalar => 1.0,
+        IsaLevel::Avx2 => gains[0],
+        IsaLevel::Avx512 => gains[1],
+    }
+}
+
+/// Cached per-process **gather** gain for `isa` — the factor the
+/// heuristic tier prices gather-FMA SpMV candidates by (ISSUE-9: the
+/// triad gain measures pure streaming FMA throughput, which overstates
+/// the vector payoff once every x operand arrives through a gather).
+/// Same neutrality rules as [`cached_isa_gain`]: 1.0 for `Scalar` and
+/// for any level above [`IsaLevel::detect`].
+pub fn cached_gather_gain(isa: IsaLevel) -> f64 {
+    if isa == IsaLevel::Scalar || isa > IsaLevel::detect() {
+        return 1.0;
+    }
+    static GAINS: OnceLock<[f64; 2]> = OnceLock::new();
+    let gains = GAINS.get_or_init(|| {
+        [
+            measure_gather_gain(IsaLevel::Avx2),
+            if IsaLevel::detect() >= IsaLevel::Avx512 {
+                measure_gather_gain(IsaLevel::Avx512)
             } else {
                 1.0
             },
@@ -492,6 +558,47 @@ mod tests {
             if isa > IsaLevel::detect() {
                 assert_eq!(g, 1.0, "undetected {isa} must be neutral");
             }
+        }
+    }
+
+    /// ISSUE-9 satellite: the gather gain follows the same caching and
+    /// neutrality rules as the triad gain, and the measured kernel
+    /// agrees with the scalar IS-SCP loop.
+    #[test]
+    fn gather_gain_is_cached_positive_and_scalar_neutral() {
+        assert_eq!(cached_gather_gain(IsaLevel::Scalar), 1.0);
+        for isa in [IsaLevel::Avx2, IsaLevel::Avx512] {
+            let g = cached_gather_gain(isa);
+            assert!(g.is_finite() && g > 0.0, "gather gain for {isa} was {g}");
+            assert_eq!(cached_gather_gain(isa), g);
+            if isa > IsaLevel::detect() {
+                assert_eq!(g, 1.0, "undetected {isa} must be neutral");
+            }
+        }
+    }
+
+    #[test]
+    fn gather_scp_matches_is_scp_reference() {
+        let mut rng = Rng::new(61);
+        let n = 1021; // prime: exercises the vector tail
+        let b_len = 4096;
+        let mut a = vec![0.0; n];
+        rng.fill_f64(&mut a, -1.0, 1.0);
+        let mut b = vec![0.0; b_len];
+        rng.fill_f64(&mut b, -1.0, 1.0);
+        let ind: Vec<u32> = (0..n).map(|_| rng.index(b_len) as u32).collect();
+        let want = is_scp(&a, &b, &ind);
+        assert_eq!(simd::gather_scp(IsaLevel::Scalar, &a, &b, &ind), want);
+        let host = IsaLevel::detect();
+        if host > IsaLevel::Scalar {
+            let got = simd::gather_scp(host, &a, &b, &ind);
+            // Partial-sum reordering: stay relative to Σ|aᵢ·b[ind[i]]|.
+            let scale: f64 =
+                a.iter().zip(&ind).map(|(x, &j)| (x * b[j as usize]).abs()).sum();
+            assert!(
+                (want - got).abs() <= 1e-13 * scale.max(1.0),
+                "gather_scp {host}: {want} vs {got}"
+            );
         }
     }
 }

@@ -9,16 +9,22 @@
 //! with the scalar loops in [`crate::matrix::SellCs`] /
 //! [`crate::matrix::Crs`] as the portable fallback.
 //!
-//! ## Why the 8-lane path is paired AVX2, not `_mm512_*`
+//! ## The two 8-lane bodies: native `_mm512_*` vs paired AVX2
 //!
-//! The AVX-512 intrinsics stabilized only in very recent Rust; this
-//! crate builds offline on whatever toolchain is present, so the
-//! [`IsaLevel::Avx512`] kernels are implemented as **two interleaved
-//! 256-bit AVX2+FMA streams** (stable since Rust 1.27). On an AVX-512
-//! machine that still widens the per-iteration accumulator group to 8
-//! lanes and doubles the in-flight FMAs — most of the benefit with none
-//! of the MSRV risk. Upgrading the bodies to `_mm512_*` is mechanical
-//! once the toolchain floor allows.
+//! The AVX-512 intrinsics stabilized in Rust 1.89; this crate builds
+//! offline on whatever toolchain is present, so `build.rs` probes the
+//! compiling rustc and sets the `spmv_avx512_native` cfg when the
+//! floor allows. With the cfg, the [`IsaLevel::Avx512`] lane bodies
+//! are **native 512-bit**: one `_mm512_fmadd_pd` per group iteration,
+//! fed by two 256-bit gathers merged with `_mm512_insertf64x4` (the
+//! f64 gather still indexes with `i32`, so the 256-bit gather pair is
+//! the natural feeder). On older toolchains the same entry points
+//! compile as **two interleaved 256-bit AVX2+FMA streams** (stable
+//! since Rust 1.27) — the per-iteration accumulator group is still 8
+//! lanes wide, so the tuner's `Avx512` candidate exists either way and
+//! only the instruction encoding differs. The fused multi-vector
+//! (SpMM) bodies stay 4-lane at every level: they pack x-values from
+//! `k` separate base pointers, which no gather width accelerates.
 //!
 //! ## Numerical contract
 //!
@@ -44,7 +50,7 @@ use std::sync::OnceLock;
 
 use anyhow::Result;
 
-use crate::matrix::{Crs, SellCs};
+use crate::matrix::{Crs, SellCs, SellRect};
 
 /// Instruction-set level a kernel is dispatched at. Ordered: a level
 /// compares greater than every level it strictly extends.
@@ -54,7 +60,8 @@ pub enum IsaLevel {
     Scalar,
     /// 4-lane f64 vectors: AVX2 + FMA.
     Avx2,
-    /// 8-lane f64 groups (paired AVX2 streams; see module docs).
+    /// 8-lane f64 groups (native `_mm512_*` on new-enough toolchains,
+    /// paired AVX2 streams otherwise; see module docs).
     Avx512,
 }
 
@@ -235,6 +242,114 @@ pub fn crs_rows_into(
     m.spmv_rows_into(row_begin, row_end, x, out);
 }
 
+/// Vectorized rectangular-SELL (shard-half) range kernel over permuted
+/// row **slots** — same contract as [`SellRect::spmv_rows`], reading
+/// `x` in the half's own column space (the owned slice for a local
+/// half, the concatenated `[owned | halo]` gather buffer for a remote
+/// half). Reuses the square-SELL lane bodies: the slice layout (`idx =
+/// base + k*h + lane`) is identical, per-row accumulation stays
+/// ascending `k` = the original CRS entry order, so only FMA fusion
+/// and explicit `+ 0.0 · x[0]` padding terms separate it from the
+/// scalar loop — the [`Precision::Tolerance`] bound holds per row.
+/// Fallback rules as [`sell_rows_permuted`].
+pub fn sell_rect_rows(
+    isa: IsaLevel,
+    m: &SellRect,
+    row_begin: usize,
+    row_end: usize,
+    x: &[f64],
+    out: &mut [f64],
+) {
+    #[cfg(target_arch = "x86_64")]
+    if isa > IsaLevel::Scalar && gather_indexable(x.len()) {
+        x86::sell_rect_rows(isa, m, row_begin, row_end, x, out);
+        return;
+    }
+    let _ = isa;
+    m.spmv_rows(row_begin, row_end, x, out);
+}
+
+/// Vectorized fused blocked-x SpMM over CRS rows: every matrix entry
+/// is loaded once, broadcast, and FMAed across the column block of `k`
+/// vectors — the vector body behind
+/// [`crate::kernels::SpmvKernel::spmv_rows_multi_isa`]. Per vector the
+/// entry order is exactly the fused scalar loop's (ascending `j`), so
+/// the deviation is FMA fusion only and the [`Precision::Tolerance`]
+/// bound holds. Falls back to the fused scalar loop at
+/// `IsaLevel::Scalar` and off x86_64.
+pub fn crs_rows_multi(
+    isa: IsaLevel,
+    m: &Crs,
+    row_begin: usize,
+    row_end: usize,
+    xps: &[&[f64]],
+    outs: &mut [&mut [f64]],
+) {
+    debug_assert_eq!(xps.len(), outs.len());
+    #[cfg(target_arch = "x86_64")]
+    if isa > IsaLevel::Scalar {
+        x86::crs_multi(m, row_begin, row_end, xps, outs);
+        return;
+    }
+    let _ = isa;
+    let mut acc = vec![0.0; xps.len()];
+    for i in row_begin..row_end {
+        let (a, b) = (m.row_ptr[i], m.row_ptr[i + 1]);
+        acc.fill(0.0);
+        for j in a..b {
+            let v = m.val[j];
+            let c = m.col_idx[j] as usize;
+            for (sum, xp) in acc.iter_mut().zip(xps) {
+                *sum += v * xp[c];
+            }
+        }
+        for (out, &sum) in outs.iter_mut().zip(acc.iter()) {
+            out[i - row_begin] = sum;
+        }
+    }
+}
+
+/// Vectorized fused blocked-x SpMM over SELL-C-σ rows — the SELL
+/// counterpart of [`crs_rows_multi`], walking each permuted row's
+/// strided slice entries (ascending `k`, the fused scalar loop's
+/// order) and broadcasting each entry across the vector block.
+pub fn sell_rows_multi(
+    isa: IsaLevel,
+    m: &SellCs,
+    row_begin: usize,
+    row_end: usize,
+    xps: &[&[f64]],
+    outs: &mut [&mut [f64]],
+) {
+    debug_assert_eq!(xps.len(), outs.len());
+    #[cfg(target_arch = "x86_64")]
+    if isa > IsaLevel::Scalar {
+        x86::sell_multi(m, row_begin, row_end, xps, outs);
+        return;
+    }
+    let _ = isa;
+    let mut acc = vec![0.0; xps.len()];
+    for i in row_begin..row_end {
+        let s = i / m.c;
+        let (lo, hi) = m.slice_rows(s);
+        let h = hi - lo;
+        let lane = i - lo;
+        let base = m.slice_ptr[s];
+        acc.fill(0.0);
+        for t in 0..m.row_nnz[i] as usize {
+            let idx = base + t * h + lane;
+            let v = m.val[idx];
+            let c = m.col_idx[idx] as usize;
+            for (sum, xp) in acc.iter_mut().zip(xps) {
+                *sum += v * xp[c];
+            }
+        }
+        for (out, &sum) in outs.iter_mut().zip(acc.iter()) {
+            out[i - row_begin] = sum;
+        }
+    }
+}
+
 /// Vectorized streaming triad `a[i] = b[i] + scale * c[i]` — the
 /// microbenchmark counterpart ([`crate::kernels::microbench`]) that
 /// lets the tuner's heuristic price the ISA gain on this host.
@@ -255,20 +370,52 @@ pub fn triad(isa: IsaLevel, a: &mut [f64], b: &[f64], c: &[f64], scale: f64) {
     }
 }
 
+/// Gather-FMA reduction `Σᵢ a[i]·b[ind[i]]` — the vector counterpart
+/// of the Table-1 IS-SCP loop
+/// ([`crate::kernels::microbench::is_scp`]). The gather-bandwidth
+/// microbenchmark ([`crate::kernels::microbench::cached_gather_gain`])
+/// measures it against its own `Scalar` level to price the gather-FMA
+/// SpMV kernels. Indices are bounds-checked up front on **every**
+/// level, so the scalar/vector timing comparison stays symmetric.
+pub fn gather_scp(isa: IsaLevel, a: &[f64], b: &[f64], ind: &[u32]) -> f64 {
+    assert_eq!(a.len(), ind.len());
+    assert!(ind.iter().all(|&j| (j as usize) < b.len()), "gather index out of range");
+    #[cfg(target_arch = "x86_64")]
+    if isa > IsaLevel::Scalar && gather_indexable(b.len()) {
+        // SAFETY: `isa > Scalar` is only reachable when IsaLevel::detect()
+        // reported AVX2+FMA support (caller contract); every index was
+        // validated in range just above.
+        return unsafe { x86::gather_scp(a, b, ind) };
+    }
+    let _ = isa;
+    let mut s = 0.0;
+    for (x, &j) in a.iter().zip(ind) {
+        s += x * b[j as usize];
+    }
+    s
+}
+
 #[cfg(target_arch = "x86_64")]
 mod x86 {
     //! The intrinsics bodies. Everything here is gated on the caller
     //! having verified AVX2+FMA support via [`IsaLevel::detect`].
 
     use std::arch::x86_64::{
-        __m128i, __m256d, _mm256_add_pd, _mm256_castpd256_pd128, _mm256_extractf128_pd,
-        _mm256_fmadd_pd, _mm256_i32gather_pd, _mm256_loadu_pd, _mm256_set1_pd,
+        __m128i, __m256d, _mm256_castpd256_pd128, _mm256_extractf128_pd, _mm256_fmadd_pd,
+        _mm256_i32gather_pd, _mm256_loadu_pd, _mm256_set1_pd, _mm256_set_pd,
         _mm256_setzero_pd, _mm256_storeu_pd, _mm_add_pd, _mm_add_sd, _mm_cvtsd_f64,
         _mm_loadu_si128, _mm_unpackhi_pd,
     };
+    #[cfg(not(spmv_avx512_native))]
+    use std::arch::x86_64::_mm256_add_pd;
+    #[cfg(spmv_avx512_native)]
+    use std::arch::x86_64::{
+        _mm512_castpd256_pd512, _mm512_fmadd_pd, _mm512_insertf64x4, _mm512_loadu_pd,
+        _mm512_reduce_add_pd, _mm512_setzero_pd, _mm512_storeu_pd,
+    };
 
     use super::IsaLevel;
-    use crate::matrix::{Crs, SellCs};
+    use crate::matrix::{Crs, SellCs, SellRect};
 
     /// Widest row (in non-zeros) of a lane group — the shared trip
     /// count; shorter lanes ride through their zero padding.
@@ -334,6 +481,69 @@ mod x86 {
         }
     }
 
+    /// The rectangular (shard-half) twin of [`sell_rows`]: identical
+    /// slice layout, so the lane bodies are shared; only the matrix
+    /// type and the column space (`x` is the half's own space, columns
+    /// not relabeled) differ.
+    pub fn sell_rect_rows(
+        isa: IsaLevel,
+        m: &SellRect,
+        row_begin: usize,
+        row_end: usize,
+        x: &[f64],
+        out: &mut [f64],
+    ) {
+        debug_assert!(row_end <= m.nrows);
+        debug_assert_eq!(out.len(), row_end - row_begin);
+        let mut i = row_begin;
+        while i < row_end {
+            let s = i / m.c;
+            let lo = s * m.c;
+            let hi = ((s + 1) * m.c).min(m.nrows);
+            let h = hi - lo;
+            let base = m.slice_ptr[s];
+            let stop = hi.min(row_end);
+            if isa >= IsaLevel::Avx512 {
+                while i + 8 <= stop {
+                    let w = group_width(&m.row_nnz[i..i + 8]);
+                    let o = i - row_begin;
+                    // SAFETY: dispatch contract (detect() bounded
+                    // `isa`); lane bounds argued at the callee — the
+                    // group lies inside slice `s` and `w` is its width
+                    // bound, col entries are half-space ids < x.len().
+                    unsafe {
+                        sell_lane8(
+                            &m.val,
+                            &m.col_idx,
+                            x,
+                            base,
+                            h,
+                            i - lo,
+                            w,
+                            &mut out[o..o + 8],
+                        )
+                    };
+                    i += 8;
+                }
+            }
+            while i + 4 <= stop {
+                let w = group_width(&m.row_nnz[i..i + 4]);
+                let o = i - row_begin;
+                // SAFETY: as above — CPU support established by
+                // detect(), in-bounds access argued at the callee.
+                unsafe {
+                    sell_lane4(&m.val, &m.col_idx, x, base, h, i - lo, w, &mut out[o..o + 4])
+                };
+                i += 4;
+            }
+            if i < stop {
+                // Partial group at the slice (or range) edge: scalar.
+                m.spmv_rows(i, stop, x, &mut out[i - row_begin..stop - row_begin]);
+                i = stop;
+            }
+        }
+    }
+
     /// One 4-lane SELL accumulator group: lanes `lane..lane+4` of a
     /// slice at `base` with height `h`, iterated to width `w`.
     ///
@@ -368,8 +578,10 @@ mod x86 {
     }
 
     /// One 8-lane SELL group as two interleaved 256-bit streams (the
-    /// `Avx512` level; see module docs). Requires `lane + 8 <= h`; the
-    /// in-bounds argument of [`sell_lane4`] applies to both streams.
+    /// `Avx512` level on pre-1.89 toolchains; see module docs).
+    /// Requires `lane + 8 <= h`; the in-bounds argument of
+    /// [`sell_lane4`] applies to both streams.
+    #[cfg(not(spmv_avx512_native))]
     #[target_feature(enable = "avx2", enable = "fma")]
     #[allow(clippy::too_many_arguments)]
     unsafe fn sell_lane8(
@@ -399,6 +611,44 @@ mod x86 {
         }
         _mm256_storeu_pd(out.as_mut_ptr(), acc0);
         _mm256_storeu_pd(out.as_mut_ptr().add(4), acc1);
+    }
+
+    /// One 8-lane SELL group, native 512-bit (the `Avx512` level when
+    /// `build.rs` found a 1.89+ toolchain; see module docs): one
+    /// `_mm512_fmadd_pd` per slice column, fed by a pair of 256-bit
+    /// gathers merged with `_mm512_insertf64x4`. Requires `lane + 8 <=
+    /// h`; the in-bounds argument of [`sell_lane4`] applies to both
+    /// gather halves. Per-lane accumulation order is unchanged from the
+    /// paired-stream body (each lane owns one row), so the Tolerance
+    /// bound is identical.
+    #[cfg(spmv_avx512_native)]
+    #[target_feature(enable = "avx512f", enable = "avx2", enable = "fma")]
+    #[allow(clippy::too_many_arguments)]
+    unsafe fn sell_lane8(
+        val: &[f64],
+        col: &[u32],
+        xp: &[f64],
+        base: usize,
+        h: usize,
+        lane: usize,
+        w: usize,
+        out: &mut [f64],
+    ) {
+        let mut acc = _mm512_setzero_pd();
+        for k in 0..w {
+            let idx = base + k * h + lane;
+            // SAFETY: idx + 7 < val.len() and col[idx..idx+8] < xp.len()
+            // per the function-level in-bounds argument; avx512f support
+            // established by IsaLevel::detect() (dispatch contract).
+            let v = _mm512_loadu_pd(val.as_ptr().add(idx));
+            let c0 = _mm_loadu_si128(col.as_ptr().add(idx) as *const __m128i);
+            let c1 = _mm_loadu_si128(col.as_ptr().add(idx + 4) as *const __m128i);
+            let x0 = _mm256_i32gather_pd::<8>(xp.as_ptr(), c0);
+            let x1 = _mm256_i32gather_pd::<8>(xp.as_ptr(), c1);
+            let xv = _mm512_insertf64x4::<1>(_mm512_castpd256_pd512(x0), x1);
+            acc = _mm512_fmadd_pd(v, xv, acc);
+        }
+        _mm512_storeu_pd(out.as_mut_ptr(), acc);
     }
 
     pub fn crs_rows(
@@ -458,7 +708,9 @@ mod x86 {
         s
     }
 
-    /// One CRS row as 8 partial sums in two 256-bit streams + tail.
+    /// One CRS row as 8 partial sums in two 256-bit streams + tail
+    /// (the `Avx512` level on pre-1.89 toolchains).
+    #[cfg(not(spmv_avx512_native))]
     #[target_feature(enable = "avx2", enable = "fma")]
     unsafe fn crs_row8(val: &[f64], col: &[u32], x: &[f64]) -> f64 {
         let n = val.len();
@@ -480,6 +732,212 @@ mod x86 {
         let mut s = hsum4(_mm256_add_pd(acc0, acc1));
         while j < n {
             s += val[j] * x[col[j] as usize];
+            j += 1;
+        }
+        s
+    }
+
+    /// One CRS row as 8 native 512-bit partial sums + tail (the
+    /// `Avx512` level when `build.rs` found a 1.89+ toolchain). The
+    /// final `_mm512_reduce_add_pd` reorders the lane reduction vs the
+    /// paired-stream body — both are within the same Tolerance bound
+    /// (the row is already folded into 8 reordered partials either
+    /// way).
+    #[cfg(spmv_avx512_native)]
+    #[target_feature(enable = "avx512f", enable = "avx2", enable = "fma")]
+    unsafe fn crs_row8(val: &[f64], col: &[u32], x: &[f64]) -> f64 {
+        let n = val.len();
+        let n8 = n & !7;
+        let mut acc = _mm512_setzero_pd();
+        let mut j = 0;
+        while j < n8 {
+            // SAFETY: j + 7 < n8 <= val.len() == col.len(); col entries
+            // are validated column ids < x.len(); avx512f support
+            // established by IsaLevel::detect() (dispatch contract).
+            let v = _mm512_loadu_pd(val.as_ptr().add(j));
+            let c0 = _mm_loadu_si128(col.as_ptr().add(j) as *const __m128i);
+            let c1 = _mm_loadu_si128(col.as_ptr().add(j + 4) as *const __m128i);
+            let x0 = _mm256_i32gather_pd::<8>(x.as_ptr(), c0);
+            let x1 = _mm256_i32gather_pd::<8>(x.as_ptr(), c1);
+            let xv = _mm512_insertf64x4::<1>(_mm512_castpd256_pd512(x0), x1);
+            acc = _mm512_fmadd_pd(v, xv, acc);
+            j += 8;
+        }
+        let mut s = _mm512_reduce_add_pd(acc);
+        while j < n {
+            s += val[j] * x[col[j] as usize];
+            j += 1;
+        }
+        s
+    }
+
+    /// Fused vectors per pass of the blocked-x SpMM bodies: 8 groups ×
+    /// 4 lanes = 32 vectors share one load of each matrix entry before
+    /// a (never-in-practice) wider block re-streams the row.
+    const MULTI_GROUPS: usize = 8;
+
+    pub fn crs_multi(
+        m: &Crs,
+        row_begin: usize,
+        row_end: usize,
+        xps: &[&[f64]],
+        outs: &mut [&mut [f64]],
+    ) {
+        for i in row_begin..row_end {
+            let (a, b) = (m.row_ptr[i], m.row_ptr[i + 1]);
+            // SAFETY: dispatch contract (IsaLevel::detect() bounded the
+            // ISA ⇒ AVX2+FMA present); the callee touches val/col only
+            // inside [a, b) and x-values at validated column ids.
+            unsafe { row_multi(&m.val[a..b], &m.col_idx[a..b], xps, outs, i - row_begin) };
+        }
+    }
+
+    pub fn sell_multi(
+        m: &SellCs,
+        row_begin: usize,
+        row_end: usize,
+        xps: &[&[f64]],
+        outs: &mut [&mut [f64]],
+    ) {
+        for i in row_begin..row_end {
+            let s = i / m.c;
+            let (lo, hi) = m.slice_rows(s);
+            let h = hi - lo;
+            let lane = i - lo;
+            let base = m.slice_ptr[s];
+            let nnz = m.row_nnz[i] as usize;
+            let o = i - row_begin;
+            // SAFETY: dispatch contract as in crs_multi; the callee
+            // walks only this row's real entries (k < row_nnz[i], all
+            // inside slice s) with bounds-checked slice indexing.
+            unsafe { sell_row_multi(&m.val, &m.col_idx, base, h, lane, nnz, xps, outs, o) };
+        }
+    }
+
+    /// One row × k-vector fused pass over contiguous entries: broadcast
+    /// each matrix entry, pack 4 x-values from 4 separate vector base
+    /// pointers (`_mm256_set_pd` — separate allocations forbid a single
+    /// gather), FMA into per-group accumulators. Vectors beyond
+    /// 4·[`MULTI_GROUPS`] re-stream the row; the `k % 4` remainder runs
+    /// the fused scalar order. Per-vector entry order is ascending `j`
+    /// in every path, so only FMA fusion separates this from the scalar
+    /// fused loop.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    unsafe fn row_multi(
+        val: &[f64],
+        col: &[u32],
+        xps: &[&[f64]],
+        outs: &mut [&mut [f64]],
+        o: usize,
+    ) {
+        let mut v0 = 0;
+        while v0 < xps.len() {
+            let vend = (v0 + 4 * MULTI_GROUPS).min(xps.len());
+            let groups = (vend - v0) / 4;
+            let mut acc = [_mm256_setzero_pd(); MULTI_GROUPS];
+            for (&vj, &cj) in val.iter().zip(col.iter()) {
+                let v = _mm256_set1_pd(vj);
+                let c = cj as usize;
+                for (g, a) in acc.iter_mut().take(groups).enumerate() {
+                    let t = v0 + 4 * g;
+                    let xv = _mm256_set_pd(xps[t + 3][c], xps[t + 2][c], xps[t + 1][c], xps[t][c]);
+                    *a = _mm256_fmadd_pd(v, xv, *a);
+                }
+            }
+            for (g, a) in acc.iter().take(groups).enumerate() {
+                let mut tmp = [0.0f64; 4];
+                // SAFETY: tmp is a 4-element f64 array — exactly one
+                // 256-bit store.
+                _mm256_storeu_pd(tmp.as_mut_ptr(), *a);
+                for (t, &s) in tmp.iter().enumerate() {
+                    outs[v0 + 4 * g + t][o] = s;
+                }
+            }
+            for t in (v0 + 4 * groups)..vend {
+                let mut s = 0.0;
+                for (&vj, &cj) in val.iter().zip(col.iter()) {
+                    s += vj * xps[t][cj as usize];
+                }
+                outs[t][o] = s;
+            }
+            v0 = vend;
+        }
+    }
+
+    /// The SELL twin of [`row_multi`]: the row's entries sit at `base +
+    /// k·h + lane` for ascending `k` (the original entry order); only
+    /// the real entries (`k < nnz`) are walked, so padding never enters
+    /// the sum and the result matches the fused scalar SELL loop up to
+    /// FMA fusion.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    #[allow(clippy::too_many_arguments)]
+    unsafe fn sell_row_multi(
+        val: &[f64],
+        col: &[u32],
+        base: usize,
+        h: usize,
+        lane: usize,
+        nnz: usize,
+        xps: &[&[f64]],
+        outs: &mut [&mut [f64]],
+        o: usize,
+    ) {
+        let mut v0 = 0;
+        while v0 < xps.len() {
+            let vend = (v0 + 4 * MULTI_GROUPS).min(xps.len());
+            let groups = (vend - v0) / 4;
+            let mut acc = [_mm256_setzero_pd(); MULTI_GROUPS];
+            for k in 0..nnz {
+                let idx = base + k * h + lane;
+                let v = _mm256_set1_pd(val[idx]);
+                let c = col[idx] as usize;
+                for (g, a) in acc.iter_mut().take(groups).enumerate() {
+                    let t = v0 + 4 * g;
+                    let xv = _mm256_set_pd(xps[t + 3][c], xps[t + 2][c], xps[t + 1][c], xps[t][c]);
+                    *a = _mm256_fmadd_pd(v, xv, *a);
+                }
+            }
+            for (g, a) in acc.iter().take(groups).enumerate() {
+                let mut tmp = [0.0f64; 4];
+                // SAFETY: tmp is a 4-element f64 array — exactly one
+                // 256-bit store.
+                _mm256_storeu_pd(tmp.as_mut_ptr(), *a);
+                for (t, &s) in tmp.iter().enumerate() {
+                    outs[v0 + 4 * g + t][o] = s;
+                }
+            }
+            for t in (v0 + 4 * groups)..vend {
+                let mut s = 0.0;
+                for k in 0..nnz {
+                    let idx = base + k * h + lane;
+                    s += val[idx] * xps[t][col[idx] as usize];
+                }
+                outs[t][o] = s;
+            }
+            v0 = vend;
+        }
+    }
+
+    /// `Σ a[i]·b[ind[i]]` as 4 gather-FMA partial sums + scalar tail —
+    /// the measured kernel behind the gather-bandwidth microbenchmark.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn gather_scp(a: &[f64], b: &[f64], ind: &[u32]) -> f64 {
+        let n = a.len();
+        let n4 = n & !3;
+        let mut acc = _mm256_setzero_pd();
+        let mut j = 0;
+        while j < n4 {
+            // SAFETY: j + 3 < n4 <= a.len() == ind.len(); every ind
+            // entry is < b.len() (validated by the safe wrapper).
+            let v = _mm256_loadu_pd(a.as_ptr().add(j));
+            let ci = _mm_loadu_si128(ind.as_ptr().add(j) as *const __m128i);
+            let xv = _mm256_i32gather_pd::<8>(b.as_ptr(), ci);
+            acc = _mm256_fmadd_pd(v, xv, acc);
+            j += 4;
+        }
+        let mut s = hsum4(acc);
+        while j < n {
+            s += a[j] * b[ind[j] as usize];
             j += 1;
         }
         s
@@ -689,6 +1147,187 @@ mod tests {
                     "cancel sell {isa}: row {i} off by {}",
                     (wantp[i] - gotp[i]).abs()
                 );
+            }
+        }
+    }
+
+    /// ISSUE-9 tentpole: the rectangular (shard-half) SELL kernel is
+    /// the exact scalar loop at `Scalar`, matches it within ε at every
+    /// detected vector level, and its ragged piecewise dispatch (the
+    /// engine's chunk boundaries) reproduces the one-shot pass exactly.
+    #[test]
+    fn sell_rect_simd_matches_scalar_within_eps() {
+        let mut rng = Rng::new(54);
+        let n = 151; // not a multiple of any lane width
+        let crs = random_crs(&mut rng, n, n * 7);
+        let rect = SellRect::from_crs(&crs, 8, 32);
+        let mut x = vec![0.0; n];
+        rng.fill_f64(&mut x, -1.0, 1.0);
+        let mut want = vec![0.0; n];
+        rect.spmv_rows(0, n, &x, &mut want);
+        let mut got = vec![0.0; n];
+        sell_rect_rows(IsaLevel::Scalar, &rect, 0, n, &x, &mut got);
+        assert_eq!(want, got, "Scalar level must be the exact scalar loop");
+        let host = IsaLevel::detect();
+        for isa in [IsaLevel::Avx2, IsaLevel::Avx512] {
+            if isa > host {
+                continue;
+            }
+            let mut got = vec![0.0; n];
+            sell_rect_rows(isa, &rect, 0, n, &x, &mut got);
+            let d: f64 = want.iter().zip(&got).map(|(a, b)| (a - b).abs()).fold(0.0, f64::max);
+            assert!(d <= 1e-12, "rect {isa}: max diff {d}");
+            let mut pieced = vec![0.0; n];
+            for (a, b) in [(0usize, 5usize), (5, 77), (77, 80), (80, n)] {
+                let (head, _) = pieced.split_at_mut(b);
+                sell_rect_rows(isa, &rect, a, b, &x, &mut head[a..]);
+            }
+            assert_eq!(pieced, got, "rect {isa}: piecewise deviates");
+        }
+    }
+
+    /// The ±1e16 cancellation probe through the shard-half kernel: the
+    /// rect path preserves per-row entry order, so its vector deviation
+    /// stays within ε relative to the ~1e16 accumulation magnitude —
+    /// the bound the sharded `Tolerance` contract relies on.
+    #[test]
+    fn sell_rect_cancellation_probe_stays_within_relative_eps() {
+        let host = IsaLevel::detect();
+        if host == IsaLevel::Scalar {
+            return;
+        }
+        let n = 96;
+        let mut coo = Coo::new(n, n);
+        let mut rng = Rng::new(55);
+        for i in 0..n {
+            let big = 1e16 * (1.0 + rng.f64());
+            coo.push(i, (i + 1) % n, big);
+            coo.push(i, (i + 2) % n, -big);
+            for _ in 0..5 {
+                coo.push(i, rng.index(n), rng.f64() * 2.0 - 1.0);
+            }
+        }
+        coo.normalize();
+        let crs = Crs::from_coo(&coo);
+        let rect = SellRect::from_crs(&crs, 8, 32);
+        let mut x = vec![0.0; n];
+        rng.fill_f64(&mut x, 0.5, 1.5);
+        let mut want = vec![0.0; n];
+        rect.spmv_rows(0, n, &x, &mut want);
+        for isa in [IsaLevel::Avx2, IsaLevel::Avx512] {
+            if isa > host {
+                continue;
+            }
+            let mut got = vec![0.0; n];
+            sell_rect_rows(isa, &rect, 0, n, &x, &mut got);
+            for i in 0..n {
+                assert!(
+                    (want[i] - got[i]).abs() <= 1e-14 * 1e17,
+                    "rect cancel {isa}: slot {i} off by {}",
+                    (want[i] - got[i]).abs()
+                );
+            }
+        }
+    }
+
+    /// ISSUE-9 tentpole: the fused blocked-x SpMM dispatchers are the
+    /// exact fused scalar loops at `Scalar` — and the fused scalar CRS
+    /// loop is itself bit-identical per vector to the serial CRS kernel
+    /// (same ascending-`j` order), the SpMM half of the BitIdentical
+    /// contract.
+    #[test]
+    fn multi_fused_scalar_is_bit_identical_per_vector() {
+        let mut rng = Rng::new(56);
+        let n = 120;
+        let crs = random_crs(&mut rng, n, n * 6);
+        let k = 5;
+        let xs: Vec<Vec<f64>> = (0..k)
+            .map(|_| {
+                let mut x = vec![0.0; n];
+                rng.fill_f64(&mut x, -1.0, 1.0);
+                x
+            })
+            .collect();
+        let xrefs: Vec<&[f64]> = xs.iter().map(|x| x.as_slice()).collect();
+        let mut got = vec![vec![0.0; n]; k];
+        {
+            let mut outs: Vec<&mut [f64]> = got.iter_mut().map(|y| y.as_mut_slice()).collect();
+            crs_rows_multi(IsaLevel::Scalar, &crs, 0, n, &xrefs, &mut outs);
+        }
+        for (x, y) in xs.iter().zip(&got) {
+            let mut want = vec![0.0; n];
+            crs.spmv_rows_into(0, n, x, &mut want);
+            assert_eq!(&want, y, "fused scalar CRS must equal serial CRS per vector");
+        }
+    }
+
+    /// ISSUE-9 tentpole: the fused SpMM vector bodies equal the fused
+    /// scalar loops within ε, for block sizes across the lane and
+    /// re-stream boundaries (k % 4 remainders, and k > 4·MULTI_GROUPS
+    /// forcing a second pass), for both CRS and SELL.
+    #[test]
+    fn multi_simd_matches_scalar_fused_within_eps() {
+        let host = IsaLevel::detect();
+        if host == IsaLevel::Scalar {
+            return;
+        }
+        let mut rng = Rng::new(58);
+        let n = 149;
+        let crs = random_crs(&mut rng, n, n * 6);
+        let sell = SellCs::from_crs(&crs, 8, 64);
+        for k in [1usize, 2, 3, 4, 7, 8, 32, 37] {
+            let xs: Vec<Vec<f64>> = (0..k)
+                .map(|_| {
+                    let mut x = vec![0.0; n];
+                    rng.fill_f64(&mut x, -1.0, 1.0);
+                    x
+                })
+                .collect();
+            let xrefs: Vec<&[f64]> = xs.iter().map(|x| x.as_slice()).collect();
+            for isa in [IsaLevel::Avx2, IsaLevel::Avx512] {
+                if isa > host {
+                    continue;
+                }
+                let mut want = vec![vec![0.0; n]; k];
+                let mut got = vec![vec![0.0; n]; k];
+                {
+                    let mut outs: Vec<&mut [f64]> =
+                        want.iter_mut().map(|y| y.as_mut_slice()).collect();
+                    crs_rows_multi(IsaLevel::Scalar, &crs, 0, n, &xrefs, &mut outs);
+                }
+                {
+                    let mut outs: Vec<&mut [f64]> =
+                        got.iter_mut().map(|y| y.as_mut_slice()).collect();
+                    crs_rows_multi(isa, &crs, 0, n, &xrefs, &mut outs);
+                }
+                for t in 0..k {
+                    assert_rows_close(
+                        &crs,
+                        &xs[t],
+                        &want[t],
+                        &got[t],
+                        1e-13,
+                        &format!("multi crs {isa} k={k} v={t}"),
+                    );
+                }
+                {
+                    let mut outs: Vec<&mut [f64]> =
+                        want.iter_mut().map(|y| y.as_mut_slice()).collect();
+                    sell_rows_multi(IsaLevel::Scalar, &sell, 0, n, &xrefs, &mut outs);
+                }
+                {
+                    let mut outs: Vec<&mut [f64]> =
+                        got.iter_mut().map(|y| y.as_mut_slice()).collect();
+                    sell_rows_multi(isa, &sell, 0, n, &xrefs, &mut outs);
+                }
+                for t in 0..k {
+                    let d: f64 = want[t]
+                        .iter()
+                        .zip(&got[t])
+                        .map(|(a, b)| (a - b).abs())
+                        .fold(0.0, f64::max);
+                    assert!(d <= 1e-12, "multi sell {isa} k={k} v={t}: max diff {d}");
+                }
             }
         }
     }

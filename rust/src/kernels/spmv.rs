@@ -252,6 +252,34 @@ impl SpmvKernel {
         }
     }
 
+    /// ISA-dispatched variant of [`Self::spmv_rows_multi`]: the fused
+    /// CRS and SELL-C-σ loops route to the vector SpMM bodies of
+    /// [`crate::kernels::simd`] (broadcast each matrix entry, FMA
+    /// across the column block) when `isa` is above
+    /// [`IsaLevel::Scalar`]; every other scheme — and the `Scalar`
+    /// level — runs the exact fused scalar loops, preserving bit
+    /// identity. Per vector the vector bodies keep the scalar entry
+    /// order, so [`simd::Precision::Tolerance`] bounds hold per row.
+    pub fn spmv_rows_multi_isa(
+        &self,
+        isa: IsaLevel,
+        row_begin: usize,
+        row_end: usize,
+        xps: &[&[f64]],
+        outs: &mut [&mut [f64]],
+    ) {
+        match (self, isa) {
+            (_, IsaLevel::Scalar) => self.spmv_rows_multi(row_begin, row_end, xps, outs),
+            (SpmvKernel::Crs(m), _) => {
+                simd::crs_rows_multi(isa, m, row_begin, row_end, xps, outs)
+            }
+            (SpmvKernel::Sell(m), _) => {
+                simd::sell_rows_multi(isa, m, row_begin, row_end, xps, outs)
+            }
+            _ => self.spmv_rows_multi(row_begin, row_end, xps, outs),
+        }
+    }
+
     /// ISA-dispatched variant of [`Self::spmv_rows_permuted`]: CRS and
     /// SELL-C-σ rows route to the vector kernels of
     /// [`crate::kernels::simd`] when `isa` is above
@@ -414,6 +442,38 @@ impl HalfKernel {
             HalfKernel::Sell(m) => m.spmv_rows(row_begin, row_end, x, out),
         }
     }
+
+    /// ISA-dispatched variant of [`Self::spmv_rows`]: both rectangular
+    /// realizations have vector bodies in [`crate::kernels::simd`] —
+    /// CRS rows gather-FMA, SELL slices run lane groups over the same
+    /// layout as the square kernels. `x` stays the half's own column
+    /// space (the owned slice locally, the concatenated `[owned |
+    /// halo]` buffer remotely); per-row entry order is preserved, so
+    /// [`simd::Precision::Tolerance`] bounds hold. At `Scalar` this is
+    /// exactly [`Self::spmv_rows`] (bit identity preserved).
+    #[inline]
+    pub fn spmv_rows_isa(
+        &self,
+        isa: IsaLevel,
+        row_begin: usize,
+        row_end: usize,
+        x: &[f64],
+        out: &mut [f64],
+    ) {
+        match (self, isa) {
+            (_, IsaLevel::Scalar) => self.spmv_rows(row_begin, row_end, x, out),
+            (HalfKernel::Crs(m), _) => simd::crs_rows_into(isa, m, row_begin, row_end, x, out),
+            (HalfKernel::Sell(m), _) => simd::sell_rect_rows(isa, m, row_begin, row_end, x, out),
+        }
+    }
+
+    /// Does this half have a vector path at `isa`? Both rectangular
+    /// realizations do, so this is a pure level check — kept as a
+    /// method so the tuner asks halves the same question it asks
+    /// [`SpmvKernel::has_simd_path`].
+    pub fn has_simd_path(&self, isa: IsaLevel) -> bool {
+        isa > IsaLevel::Scalar
+    }
 }
 
 /// A shard's two halves realized in one scheme — the unit the sharding
@@ -437,6 +497,13 @@ impl ShardKernel {
 
     pub fn nnz(&self) -> usize {
         self.local.nnz() + self.remote.nnz()
+    }
+
+    /// Do both halves have a vector path at `isa`? (They always agree
+    /// — the supported schemes both vectorize — but the sharded
+    /// executor asks the kernel, not the scheme.)
+    pub fn has_simd_path(&self, isa: IsaLevel) -> bool {
+        self.local.has_simd_path(isa) && self.remote.has_simd_path(isa)
     }
 }
 

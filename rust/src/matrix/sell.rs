@@ -286,9 +286,12 @@ pub struct SellRect {
     /// Non-zeros per permuted row slot.
     pub row_nnz: Vec<u32>,
     /// Column indices in the half's own space; padding slots hold 0.
-    pub col_idx: Vec<u32>,
-    /// Values; padding slots hold 0.0.
-    pub val: Vec<f64>,
+    /// 64-byte-aligned like [`SellCs::col_idx`] so the split vector
+    /// kernels ([`crate::kernels::simd`]) stream slice storage from a
+    /// cache-line / full-vector boundary.
+    pub col_idx: AlignedVec<u32>,
+    /// Values; padding slots hold 0.0. Aligned like `col_idx`.
+    pub val: AlignedVec<f64>,
     nnz: usize,
 }
 
@@ -349,8 +352,8 @@ impl SellRect {
             slice_ptr,
             slice_width,
             row_nnz,
-            col_idx,
-            val,
+            col_idx: AlignedVec::from(col_idx),
+            val: AlignedVec::from(val),
             nnz: crs.nnz(),
         }
     }
@@ -629,6 +632,19 @@ mod tests {
             // bit-equality here proves the storage order survived.
             assert_eq!(slots[i], want[old as usize]);
         }
+    }
+
+    /// ISSUE-9 tentpole: SellRect storage is 64-byte aligned like
+    /// SellCs, so the split vector kernels stream it from a cache-line
+    /// boundary.
+    #[test]
+    fn sell_rect_storage_is_simd_aligned() {
+        let mut rng = Rng::new(49);
+        let crs = random_square(&mut rng, 100, 600);
+        let rect = SellRect::from_crs(&crs, 8, 32);
+        let a = crate::util::alloc::SIMD_ALIGN;
+        assert_eq!(rect.val.as_ptr() as usize % a, 0);
+        assert_eq!(rect.col_idx.as_ptr() as usize % a, 0);
     }
 
     #[test]

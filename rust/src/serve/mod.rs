@@ -209,11 +209,14 @@ impl HandleCache {
             // Only replay the cached backend when the caller left the
             // choice to arbitration. An explicit request wins: replaying
             // verbatim re-asserted every backend-capability artifact of
-            // the cached build with it — e.g. a sharded handle's report
-            // carries kernel_isa = Scalar because the split kernels have
-            // no vector path, and a tenant asking for native would
-            // silently inherit that cap instead of the Fixed tier's
-            // actual-capability ISA rule.
+            // the cached build with it — e.g. a serial handle's report
+            // pins kernel_isa = Scalar (inline execution), and a tenant
+            // asking for native would silently inherit that cap. The
+            // rebuild below then re-derives kernel_isa from the rebuilt
+            // backend's actual capability under the Fixed tier — since
+            // ISSUE 9 the sharded split kernels vectorize too, so a
+            // Tolerance tenant gets a vector ISA on sharded exactly as
+            // on native.
             if opts.backend == BackendChoice::Auto {
                 pinned_opts.backend =
                     BackendChoice::parse(stale.backend_name()).unwrap_or(opts.backend);
@@ -643,6 +646,8 @@ fn dispatcher_loop(inner: &Inner, stats: &StatsInner, cfg: ServeConfig) {
 mod tests {
     use super::*;
     use crate::gen::{self, HolsteinHubbardParams};
+    use crate::matrix::Scheme;
+    use crate::sched::Schedule;
     use crate::util::rng::Rng;
     use crate::util::stats::max_abs_diff;
 
@@ -729,14 +734,13 @@ mod tests {
         assert_eq!(o, CacheOutcome::Hit);
     }
 
-    /// ISSUE-8 satellite: the PlanHit path must honor an explicitly
-    /// requested backend instead of replaying the cached decision
-    /// verbatim. A sharded handle's report carries `kernel_isa =
-    /// Scalar` — a backend-capability artifact (the split kernels have
-    /// no vector path), not a tuning decision — so a same-structure
-    /// tenant asking for native under a Tolerance contract must be
-    /// rebuilt native, with the ISA re-derived from the rebuilt
-    /// backend's actual capability.
+    /// ISSUE-8 satellite, amended by ISSUE-9: the PlanHit path must
+    /// honor an explicitly requested backend instead of replaying the
+    /// cached decision verbatim, and the ISA must be re-derived from
+    /// the rebuilt backend's actual capability. Since ISSUE 9 the
+    /// sharded split kernels vectorize, so the Tolerance tenant's
+    /// sharded handle itself binds the arbitrated ceiling — the old
+    /// `kernel_isa = Scalar` backend-capability artifact is gone.
     #[test]
     fn plan_hit_honors_requested_backend_isa_capability() {
         use crate::kernels::IsaLevel;
@@ -746,7 +750,10 @@ mod tests {
             *v *= 2.0;
         }
         let mut cache = HandleCache::new(4);
+        // A Fixed tier makes the arbitration deterministic: the
+        // contract's ceiling binds whenever the scheme vectorizes.
         let sharded_opts = BuildOpts {
+            policy: TuningPolicy::Fixed(Scheme::Crs, Schedule::Static { chunk: None }),
             backend: BackendChoice::Sharded,
             precision: Precision::Tolerance(1e-12),
             ..BuildOpts::default()
@@ -754,7 +761,20 @@ mod tests {
         let (h1, o) = cache.get_or_build(&a, &sharded_opts).unwrap();
         assert_eq!(o, CacheOutcome::Miss);
         assert_eq!(h1.backend_name(), "sharded");
-        assert_eq!(h1.kernel_isa(), IsaLevel::Scalar, "split kernels have no vector path");
+        assert_eq!(
+            h1.kernel_isa(),
+            IsaLevel::detect(),
+            "a Tolerance sharded tenant binds the arbitrated vector isa (ISSUE 9)"
+        );
+        {
+            // The vectorized split kernels still honor ε for the tenant.
+            let x = rand_x(23, a.nrows);
+            let mut want = vec![0.0; a.nrows];
+            a.spmv(&x, &mut want);
+            let mut got = vec![0.0; a.nrows];
+            h1.spmv(&x, &mut got);
+            assert!(max_abs_diff(&want, &got) < 1e-10, "sharded Tolerance tenant off");
+        }
         // Same structure, new values, explicit native request.
         let native_opts = BuildOpts {
             backend: BackendChoice::Native,
@@ -769,7 +789,7 @@ mod tests {
             "an explicit backend request must win on a plan hit"
         );
         // Scheme/schedule transfer; the ISA comes from the rebuilt
-        // backend's capability, not the cached report's scalar reset.
+        // backend's own capability, not from replaying the cached report.
         assert_eq!(h2.scheme(), h1.scheme());
         assert_eq!(h2.schedule(), h1.schedule());
         let expect = if h2.kernel().is_some_and(|k| k.has_simd_path(IsaLevel::detect())) {

@@ -40,7 +40,7 @@ use anyhow::Result;
 
 use crate::engine::affinity::{self, PinMode};
 use crate::engine::{first_touch_buffers, Engine, HaloGate, SpmvPlan, TaskPool, TwoPhasePlan};
-use crate::kernels::ShardKernel;
+use crate::kernels::{IsaLevel, ShardKernel};
 use crate::matrix::shard::{ShardCrs, ShardedCrs};
 use crate::matrix::{Crs, Scheme, SpMv};
 use crate::sched::Schedule;
@@ -131,6 +131,14 @@ pub(crate) struct ShardedSpmv {
     pinned: bool,
     storage: ShardedCrs,
     units: Vec<ShardUnit>,
+    /// ISA every shard's split kernels execute at. Defaults to scalar
+    /// ([`crate::kernels::Precision::BitIdentical`]'s only admissible
+    /// level); the tuner binds a vector level under `Tolerance` via
+    /// [`ShardedSpmv::set_kernel_isa`]. A kernel property, not a
+    /// partition property: [`ShardedSpmv::rebalance`] and
+    /// [`ShardedSpmv::reshard`] both preserve it (every supported
+    /// scheme's halves have the same vector paths at any shard count).
+    kernel_isa: IsaLevel,
     /// Persistent coordinator + exchange role threads, spawned once and
     /// parked between calls (PR 4's spawn-per-call follow-up, retired):
     /// slot `s` coordinates shard `s`, slot `n_shards + s` is shard
@@ -201,6 +209,7 @@ impl ShardedSpmv {
             pinned,
             storage,
             units,
+            kernel_isa: IsaLevel::Scalar,
             pool,
         })
     }
@@ -327,6 +336,21 @@ impl ShardedSpmv {
 
     pub fn pinned(&self) -> bool {
         self.pinned
+    }
+
+    /// ISA the split kernels execute at (see the field docs).
+    pub fn kernel_isa(&self) -> IsaLevel {
+        self.kernel_isa
+    }
+
+    /// Bind the split kernels' ISA. The caller (the tuner) owns the
+    /// precision contract: scalar keeps every path bit-identical to
+    /// serial CRS, vector levels reorder each row's FMA reduction
+    /// within the `Tolerance(ε)` bound (per-row entry order is
+    /// preserved by both halves, including the remote half's gathers
+    /// from the `[owned | halo]` concat space).
+    pub fn set_kernel_isa(&mut self, isa: IsaLevel) {
+        self.kernel_isa = isa;
     }
 
     /// The sharded storage (halo maps, fractions) backing this executor.
@@ -517,6 +541,7 @@ impl ShardedSpmv {
         let unit = &self.units[s];
         let shard = &self.storage.shards[s];
         let kernel = &unit.kernel;
+        let isa = self.kernel_isa;
         let w = shard.width();
         let two = TwoPhasePlan { local: &unit.local_plan, remote: &unit.remote_plan };
         for (bi, x) in xs.iter().enumerate() {
@@ -546,8 +571,8 @@ impl ShardedSpmv {
                         &ready[bi],
                         local_out,
                         remote_out,
-                        |a, b, out| kernel.local.spmv_rows(a, b, x_local, out),
-                        |a, b, out| kernel.remote.spmv_rows(a, b, concat_ref, out),
+                        |a, b, out| kernel.local.spmv_rows_isa(isa, a, b, x_local, out),
+                        |a, b, out| kernel.remote.spmv_rows_isa(isa, a, b, concat_ref, out),
                     );
                 }
                 OverlapMode::Overlapped => {
@@ -560,7 +585,7 @@ impl ShardedSpmv {
                         &ready[bi],
                         local_out,
                         remote_out,
-                        |a, b, out| kernel.local.spmv_rows(a, b, x_local, out),
+                        |a, b, out| kernel.local.spmv_rows_isa(isa, a, b, x_local, out),
                         move |a, b, out| {
                             // Safety: runs strictly after `ready[bi]`
                             // opened (TwoPhasePlan waits before
@@ -568,7 +593,7 @@ impl ShardedSpmv {
                             // writes are complete and ordered before
                             // this read.
                             let cbuf = unsafe { std::slice::from_raw_parts(cptr.0, clen) };
-                            kernel.remote.spmv_rows(a, b, cbuf, out)
+                            kernel.remote.spmv_rows_isa(isa, a, b, cbuf, out)
                         },
                     );
                     // The remote phase is done with the gather buffer:
@@ -755,6 +780,96 @@ mod tests {
                 );
             }
         }
+    }
+
+    /// ISSUE-9 tentpole: with a vector ISA bound, every shard count ×
+    /// scheme × schedule × overlap mode stays within the
+    /// `Tolerance(ε)` bound of serial CRS — probed with ±1e16
+    /// cancelling rows so a kernel that broke per-row entry order (or
+    /// the remote half's `[owned | halo]` concat-space gather) would
+    /// blow past the bound instead of landing near it. The default
+    /// scalar binding stays exactly bit-identical (the exhaustive
+    /// grids above).
+    #[test]
+    fn vector_isa_stays_within_tolerance_across_grid() {
+        let host = IsaLevel::detect();
+        if host == IsaLevel::Scalar {
+            return;
+        }
+        let n = 200;
+        let mut coo = crate::matrix::Coo::new(n, n);
+        let mut rng = Rng::new(115);
+        for i in 0..n {
+            // A near-cancelling pair plus small entries per row.
+            let big = 1e16 * (1.0 + rng.f64());
+            coo.push(i, (i + 1) % n, big);
+            coo.push(i, (i + 2) % n, -big);
+            for _ in 0..6 {
+                coo.push(i, rng.index(n), rng.f64() * 2.0 - 1.0);
+            }
+        }
+        coo.normalize();
+        let crs = Arc::new(Crs::from_coo(&coo));
+        let mut x = vec![0.0; n];
+        rng.fill_f64(&mut x, 0.5, 1.5);
+        let mut want = vec![0.0; n];
+        crs.spmv(&x, &mut want);
+        // Accumulations reach ~1e16, so ε relative to the accumulation
+        // magnitude means ~ε × 1e17 absolute.
+        let bound = 1e-14 * 1e17;
+        for n_shards in [1usize, 2, 4] {
+            for scheme in [Scheme::Crs, Scheme::SellCs { c: 8, sigma: 32 }] {
+                for schedule in
+                    [Schedule::Static { chunk: None }, Schedule::Dynamic { chunk: 13 }]
+                {
+                    for mode in modes() {
+                        let mut sh = ShardedSpmv::new(
+                            crs.clone(),
+                            scheme,
+                            schedule,
+                            n_shards,
+                            2,
+                            mode,
+                            false,
+                        )
+                        .unwrap();
+                        sh.set_kernel_isa(host);
+                        let mut got = vec![0.0; n];
+                        sh.spmv(&x, &mut got);
+                        let diff = max_abs_diff(&want, &got);
+                        assert!(
+                            diff <= bound,
+                            "{n_shards} shards × {scheme} × {} × {}: off by {diff}",
+                            schedule.name(),
+                            mode.name()
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    /// The ISA binding is a kernel property, not a partition property:
+    /// both rebalance and reshard preserve it.
+    #[test]
+    fn kernel_isa_survives_rebalance_and_reshard() {
+        let crs = Arc::new(hh_crs());
+        let mut sh = ShardedSpmv::new(
+            crs,
+            Scheme::Crs,
+            Schedule::Static { chunk: None },
+            4,
+            2,
+            OverlapMode::BulkSync,
+            false,
+        )
+        .unwrap();
+        assert_eq!(sh.kernel_isa(), IsaLevel::Scalar, "scalar until the tuner binds");
+        sh.set_kernel_isa(IsaLevel::Avx2);
+        sh.rebalance(Schedule::Dynamic { chunk: 9 });
+        assert_eq!(sh.kernel_isa(), IsaLevel::Avx2, "rebalance must preserve the binding");
+        sh.reshard(2, OverlapMode::Overlapped).unwrap();
+        assert_eq!(sh.kernel_isa(), IsaLevel::Avx2, "reshard must preserve the binding");
     }
 
     #[test]

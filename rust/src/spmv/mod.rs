@@ -434,10 +434,11 @@ impl SpmvHandle {
     /// blocked-x against the per-vector batch ([`Self::multi_decision`]):
     /// the fused multi kernel streams the matrix once per chunk and
     /// reuses every loaded entry across the block, which wins whenever
-    /// `k >= 2` and no vector ISA is bound; otherwise the call routes to
-    /// [`Self::spmv_batch`]. Either way each result is bit-identical to
-    /// the per-vector [`Self::spmv`] under
-    /// [`Precision::BitIdentical`].
+    /// `k >= 2` — since ISSUE 9 the fused loops have vector bodies too,
+    /// so a bound vector ISA keeps its win instead of forcing the
+    /// per-vector batch. `k < 2` routes to [`Self::spmv_batch`]. Either
+    /// way each result is bit-identical to the per-vector [`Self::spmv`]
+    /// under [`Precision::BitIdentical`].
     pub fn spmv_multi(&self, xs: &[Vec<f64>]) -> Vec<Vec<f64>> {
         if self.multi_decision(xs.len()).blocked {
             self.backend.spmv_multi(xs)
@@ -1592,10 +1593,12 @@ mod tests {
         }
     }
 
-    /// ISSUE-6: Tolerance(ε) results match the serial CRS reference
-    /// within ε across scheme × schedule × backend, and the report
-    /// records the contract plus the bound ISA per backend honestly
-    /// (serial and sharded execute scalar kernels regardless).
+    /// ISSUE-6 (amended by ISSUE-9): Tolerance(ε) results match the
+    /// serial CRS reference within ε across scheme × schedule ×
+    /// backend, and the report records the contract plus the bound ISA
+    /// per backend honestly. Since ISSUE 9 the sharded split kernels
+    /// have vector bodies, so sharded binds the same arbitrated ceiling
+    /// as native; only serial still executes scalar inline.
     #[test]
     fn tolerance_contract_holds_across_scheme_schedule_backend() {
         let eps = 1e-12;
@@ -1630,10 +1633,11 @@ mod tests {
                     let handle = b.build().unwrap();
                     assert_eq!(handle.precision(), Precision::Tolerance(eps));
                     match backend {
-                        // Serial and sharded execute scalar kernels; the
-                        // native plan runs at the contract's ceiling for
-                        // vectorizable schemes.
-                        BackendChoice::Serial | BackendChoice::Sharded => {
+                        // Serial executes scalar inline; native and
+                        // sharded both run at the contract's ceiling
+                        // for vectorizable schemes (the sharded split
+                        // kernels gained vector bodies in ISSUE 9).
+                        BackendChoice::Serial => {
                             assert_eq!(handle.kernel_isa(), IsaLevel::Scalar)
                         }
                         _ => assert_eq!(handle.kernel_isa(), IsaLevel::detect()),
@@ -1650,6 +1654,23 @@ mod tests {
                             (y[i] - want[i]).abs(),
                             handle.kernel_isa()
                         );
+                    }
+                    // Blocked-x SpMM keeps its win under a vector ISA
+                    // (ISSUE 9 re-pricing) and stays within ε too.
+                    let d = handle.multi_decision(3);
+                    assert!(d.blocked, "k=3 must price blocked-x even with SIMD bound");
+                    let xs = vec![x.clone(), x.clone(), x.clone()];
+                    for y in handle.spmv_multi(&xs) {
+                        for i in 0..n {
+                            assert!(
+                                (y[i] - want[i]).abs() <= eps * want[i].abs().max(1.0),
+                                "{} × {} × {}: multi row {i} off by {:.3e}",
+                                backend.name(),
+                                scheme.name(),
+                                schedule.name(),
+                                (y[i] - want[i]).abs()
+                            );
+                        }
                     }
                 }
             }

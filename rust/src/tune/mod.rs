@@ -49,7 +49,7 @@ use anyhow::Result;
 use crate::analysis::StrideDistribution;
 use crate::engine::affinity::{PinMode, PinReport};
 use crate::engine::{Engine, SpmvPlan};
-use crate::kernels::microbench::cached_isa_gain;
+use crate::kernels::microbench::cached_gather_gain;
 use crate::kernels::{IsaLevel, Precision, SpmvKernel};
 use crate::matrix::shard::ShardedCrs;
 use crate::matrix::{Crs, Scheme, SpMv};
@@ -284,21 +284,24 @@ pub struct MultiDecision {
 /// block and reuses each loaded entry across all `k` right-hand sides —
 /// the x-reuse traffic shift of arXiv:1711.05487. Both paths move the
 /// same x-read + y-write bytes (~8 B/nnz + 16 B/row per vector), so
-/// blocking wins whenever `k >= 2`... unless a vector ISA is bound
-/// (`simd_active`): the fused loop is scalar today, and giving up the
-/// measured SIMD win to save matrix re-reads is the wrong trade, so
-/// SIMD routes per-vector.
+/// blocking wins whenever `k >= 2` — including under a vector ISA
+/// (`simd_active`): since ISSUE 9 the fused loop has its own vector
+/// bodies (broadcast the entry, FMA across the column block), so the
+/// blocked path no longer trades the SIMD win for the matrix re-read
+/// saving. `simd_active` now only flavors the rationale.
 pub fn price_multi(nnz: usize, nrows: usize, k: usize, simd_active: bool) -> MultiDecision {
     let (nnz, nrows, kf) = (nnz as f64, nrows as f64, k as f64);
     let per_vec = kf * (12.0 * nnz + 8.0 * nnz + 16.0 * nrows);
     let blocked = 12.0 * nnz + kf * (8.0 * nnz + 16.0 * nrows);
-    let choose_blocked = k >= 2 && !simd_active;
+    let choose_blocked = k >= 2;
     let rationale = if k < 2 {
         format!("k={k}: single vector, nothing to block over")
     } else if simd_active {
         format!(
-            "k={k}: vector ISA bound — fused multi loop is scalar, \
-             per-vector batch keeps the SIMD kernels"
+            "k={k}: blocked-x streams the matrix once and the fused \
+             vector bodies keep the SIMD win ({:.0} KiB vs {:.0} KiB modeled traffic)",
+            blocked / 1024.0,
+            per_vec / 1024.0
         )
     } else {
         format!(
@@ -719,12 +722,14 @@ impl SpmvContextBuilder<'_> {
                     // Padding streams extra val/col bytes and multiplies
                     // explicit zeros: charge it proportionally.
                     let effective = pred.cycles_per_nnz * (1.0 + padding);
-                    // Vector variants are priced by the measured triad
-                    // gain: the kernels stream the same bytes, only the
-                    // in-core factor changes.
+                    // Vector variants are priced by the measured gather
+                    // gain (ISSUE 9): the kernels stream the same bytes,
+                    // only the in-core gather-FMA factor changes — and
+                    // the streaming triad has no indirection, so its
+                    // gain overstates the SpMV payoff.
                     let mut scheme_best: Option<(usize, f64, IsaLevel)> = None;
                     for isa in isa_options(&k) {
-                        let score = effective / cached_isa_gain(isa);
+                        let score = effective / cached_gather_gain(isa);
                         let idx = candidates.len();
                         candidates.push(CandidateReport {
                             scheme,
@@ -917,6 +922,7 @@ impl SpmvContextBuilder<'_> {
             .policy(policy)
             .machine(machine)
             .quick(quick)
+            .precision(precision)
             .schedule_cv_threshold(cv_threshold);
         if let Some(t) = threads {
             base_builder = base_builder.threads(t);
@@ -935,24 +941,29 @@ impl SpmvContextBuilder<'_> {
             scheme = Scheme::Crs;
             report.scheme = scheme;
             report.padding_overhead = 0.0;
+            // The JDS-family pick had no vector path, so the probe's
+            // arbitration was scalar-only; the CRS halves it fell back
+            // to have the full gather-FMA paths, so the precision
+            // ceiling applies again.
+            let ceiling =
+                if precision.allows_simd() { IsaLevel::detect() } else { IsaLevel::Scalar };
+            if ceiling > report.kernel_isa {
+                report.kernel_isa = ceiling;
+                report.rationale.push(format!(
+                    "CRS-halves fallback restores the vector path: kernel isa {}",
+                    ceiling.name()
+                ));
+            }
         }
-        // The sharded executor runs the rectangular split kernels, which
-        // have no vector path yet (ROADMAP follow-up): the probe above
-        // tuned under BitIdentical semantics either way, and the report
-        // records the caller's contract with a scalar ISA honestly.
-        report.precision = precision;
-        report.kernel_isa = IsaLevel::Scalar;
-        if precision.allows_simd() {
-            report.rationale.push(format!(
-                "precision {}: sharded executor keeps scalar kernels \
-                 (split kernels have no vector path yet)",
-                precision.name()
-            ));
-        }
+        // ISSUE 9: the split kernels have vector bodies, so the base
+        // probe above (which received the caller's precision contract)
+        // arbitrated ISA for the sharded candidate exactly as it does
+        // natively — its tiers scored scalar and vector variants and
+        // `report.kernel_isa` is the winner. The executor binds it below.
         let (decision, shard_rationale) =
             decide_shards(&crs, shard_policy, scheme, schedule, n_threads, pinned, quick)?;
         report.rationale.extend(shard_rationale);
-        let sharded = ShardedSpmv::new(
+        let mut sharded = ShardedSpmv::new(
             crs,
             scheme,
             schedule,
@@ -961,6 +972,11 @@ impl SpmvContextBuilder<'_> {
             decision.mode,
             pinned,
         )?;
+        sharded.set_kernel_isa(report.kernel_isa);
+        report.rationale.push(format!(
+            "sharded split kernels bound to the arbitrated {} isa",
+            report.kernel_isa.name()
+        ));
         report.placement = PlacementDecision {
             pin_requested: pinned,
             pin: if pinned { Some(sharded.aggregate_pin_report()) } else { None },
@@ -2347,6 +2363,93 @@ mod tests {
         assert_eq!(ctx.kernel_isa(), isa, "rebalance dropped the ISA");
         ctx.spmv(&x, &mut y);
         assert!(within_eps(&y), "rebalanced context left the ε contract");
+    }
+
+    /// ISSUE-9 satellite: a Tolerance sharded candidate records a
+    /// non-scalar `kernel_isa` on SIMD hosts — arbitrated by the base
+    /// probe's tiers (not forced) and bound onto the executor — while
+    /// the sharded output stays within ε of serial CRS. The JDS
+    /// fallback path re-derives the ceiling instead of inheriting the
+    /// abandoned scheme's scalar-only pick.
+    #[test]
+    fn sharded_tolerance_arbitrates_vector_isa_within_eps() {
+        let eps = 1e-12;
+        let coo = gen::holstein_hubbard(&gen::HolsteinHubbardParams::tiny());
+        let n = coo.nrows;
+        let mut x = vec![0.0; n];
+        Rng::new(98).fill_f64(&mut x, -1.0, 1.0);
+        let crs = Crs::from_coo(&coo);
+        let mut want = vec![0.0; n];
+        crs.spmv(&x, &mut want);
+        let within_eps = |got: &[f64], label: &str, isa: IsaLevel| {
+            for i in 0..n {
+                assert!(
+                    (got[i] - want[i]).abs() <= eps * want[i].abs().max(1.0),
+                    "{label}: row {i} off by {} (isa {isa})",
+                    (got[i] - want[i]).abs()
+                );
+            }
+        };
+        let ctx = SpmvContext::builder(&coo)
+            .policy(TuningPolicy::Fixed(
+                Scheme::SellCs { c: 8, sigma: 64 },
+                Schedule::Static { chunk: None },
+            ))
+            .threads(2)
+            .quick(true)
+            .precision(Precision::Tolerance(eps))
+            .sharded(ShardPolicy::Fixed { shards: 2, mode: OverlapMode::Overlapped })
+            .build_sharded()
+            .unwrap();
+        assert_eq!(ctx.report().precision, Precision::Tolerance(eps));
+        assert!(ctx.report().kernel_isa <= IsaLevel::detect());
+        assert_eq!(
+            ctx.sharded().kernel_isa(),
+            ctx.report().kernel_isa,
+            "executor must run the isa the report records"
+        );
+        if IsaLevel::detect() > IsaLevel::Scalar {
+            assert!(
+                ctx.report().kernel_isa > IsaLevel::Scalar,
+                "Tolerance sharded candidate must record a vector isa on a SIMD host"
+            );
+        }
+        assert!(ctx
+            .report()
+            .rationale
+            .iter()
+            .any(|r| r.contains("sharded split kernels bound to the arbitrated")));
+        let mut y = vec![0.0; n];
+        ctx.spmv(&x, &mut y);
+        within_eps(&y, "sell sharded", ctx.report().kernel_isa);
+        // JDS tier pick: the probe arbitrated scalar-only (no vector
+        // path on JDS), but the CRS halves it falls back to vectorize.
+        let fb = SpmvContext::builder(&coo)
+            .policy(TuningPolicy::Fixed(
+                Scheme::NbJds { block: 64 },
+                Schedule::Static { chunk: None },
+            ))
+            .threads(1)
+            .precision(Precision::Tolerance(eps))
+            .sharded(ShardPolicy::Fixed { shards: 2, mode: OverlapMode::BulkSync })
+            .build_sharded()
+            .unwrap();
+        assert_eq!(fb.scheme(), Scheme::Crs);
+        assert_eq!(fb.sharded().kernel_isa(), fb.report().kernel_isa);
+        if IsaLevel::detect() > IsaLevel::Scalar {
+            assert!(
+                fb.report().kernel_isa > IsaLevel::Scalar,
+                "CRS-halves fallback must restore the vector path"
+            );
+            assert!(fb
+                .report()
+                .rationale
+                .iter()
+                .any(|r| r.contains("CRS-halves fallback restores the vector path")));
+        }
+        let mut y2 = vec![0.0; n];
+        fb.spmv(&x, &mut y2);
+        within_eps(&y2, "jds-fallback sharded", fb.report().kernel_isa);
     }
 
     #[test]

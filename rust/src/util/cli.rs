@@ -246,6 +246,22 @@ mod tests {
         assert!(a.finish().is_ok());
     }
 
+    /// Regression: the SIMD-SpMM PR mixes `--block` (column-block width)
+    /// with `--precision` (vector-kernel contract) on the same command
+    /// line. Both must stay registered as value options — if either
+    /// degrades to a flag, the other's value is swallowed as a stray
+    /// positional and the run silently uses defaults.
+    #[test]
+    fn spmm_block_and_precision_combine() {
+        let a = parse("--block 8 --precision tol:1e-12 --backend sharded --policy fixed");
+        assert_eq!(a.get_usize("block", 4).unwrap(), 8);
+        assert_eq!(a.get_str("precision", "bit"), "tol:1e-12");
+        assert_eq!(a.get_str("backend", "auto"), "sharded");
+        assert_eq!(a.get_str("policy", "heuristic"), "fixed");
+        assert!(a.positionals().is_empty(), "no stray positionals");
+        assert!(a.finish().is_ok());
+    }
+
     #[test]
     fn lists_parse() {
         let a = parse("--blocks 1,2,4");
