@@ -1,0 +1,162 @@
+//! In-repo static analysis for the crate's own concurrency invariants.
+//!
+//! `spmvperf audit` (and the tier-1 self-test below) runs six rules
+//! over `src/` and `benches/`:
+//!
+//! | rule             | contract |
+//! |------------------|----------|
+//! | `unsafe_safety`  | every `unsafe` carries a `// SAFETY:` comment within 8 lines |
+//! | `atomic_registry`| every `Ordering::*` site is justified in `rust/audit.toml` |
+//! | `thread_spawn`   | raw thread spawns only in `src/engine/` |
+//! | `isa_dispatch`   | x86 intrinsics stay inside `kernels::simd` |
+//! | `hot_path_panic` | no panicking calls in kernels/engine without a waiver |
+//! | `bench_baseline` | BENCH emitters keep baseline twins and identity keys |
+//!
+//! A site can be exempted with `// audit:allow(<rule>): <reason>` on or up
+//! to [`scanner::WAIVER_SPAN`] lines above it; the reason is mandatory.
+//! The pass is a scanner, not a parser (see [`scanner`]) — it needs no
+//! dependencies, runs offline, and is cheap enough to gate every build.
+
+pub mod registry;
+pub mod rules;
+pub mod scanner;
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+pub use registry::AtomicEntry;
+pub use rules::{Corpus, Finding, Rule, RULES};
+
+/// Result of one audit run.
+pub struct AuditReport {
+    pub findings: Vec<Finding>,
+    /// Number of source files scanned.
+    pub files: usize,
+}
+
+/// The crate root this binary was built from — where `src/`,
+/// `benches/`, `audit.toml`, and `results-baseline/` live.
+pub fn crate_root() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    for entry in
+        fs::read_dir(dir).with_context(|| format!("audit: reading {}", dir.display()))?
+    {
+        let path = entry?.path();
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Load every rule input from disk: scanned sources under `src/` and
+/// `benches/`, the atomic registry, and the committed baselines.
+pub fn load_corpus(root: &Path) -> Result<Corpus> {
+    let mut paths = Vec::new();
+    for sub in ["src", "benches"] {
+        let dir = root.join(sub);
+        if dir.is_dir() {
+            collect_rs(&dir, &mut paths)?;
+        }
+    }
+    paths.sort();
+    let mut files = Vec::new();
+    for p in &paths {
+        let rel = p.strip_prefix(root).unwrap_or(p).to_string_lossy().into_owned();
+        let text =
+            fs::read_to_string(p).with_context(|| format!("audit: reading {}", p.display()))?;
+        files.push(scanner::scan_source(&rel, &text));
+    }
+
+    let reg_path = root.join("audit.toml");
+    let reg_text = fs::read_to_string(&reg_path)
+        .with_context(|| format!("audit: reading {}", reg_path.display()))?;
+    let registry = registry::parse(&reg_text)?;
+
+    let mut baselines = Vec::new();
+    let bdir = root.join("results-baseline");
+    if bdir.is_dir() {
+        for entry in fs::read_dir(&bdir)? {
+            let path = entry?.path();
+            let name = path.file_name().unwrap_or_default().to_string_lossy().into_owned();
+            if name.starts_with("BENCH_") && name.ends_with(".json") {
+                let text = fs::read_to_string(&path)
+                    .with_context(|| format!("audit: reading {}", path.display()))?;
+                baselines.push((name, text));
+            }
+        }
+    }
+    baselines.sort();
+
+    Ok(Corpus { files, registry, registry_path: "audit.toml".to_string(), baselines })
+}
+
+/// Run the audit over the crate at `root`, optionally restricted to one
+/// rule. Unknown rule names are an error, not an empty pass.
+pub fn audit_crate(root: &Path, rule: Option<&str>) -> Result<AuditReport> {
+    if let Some(r) = rule {
+        if !RULES.iter().any(|rl| rl.name == r) {
+            let names: Vec<&str> = RULES.iter().map(|rl| rl.name).collect();
+            bail!("audit: unknown rule `{r}` (rules: {})", names.join(", "));
+        }
+    }
+    let corpus = load_corpus(root)?;
+    let files = corpus.files.len();
+    Ok(AuditReport { findings: rules::run(&corpus, rule), files })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn render(findings: &[Finding]) -> String {
+        findings.iter().map(|f| format!("  {f}\n")).collect()
+    }
+
+    /// The audit is a tier-1 gate: the live crate must pass every rule.
+    #[test]
+    fn live_crate_audits_clean() {
+        let report = audit_crate(&crate_root(), None).unwrap();
+        assert!(
+            report.findings.is_empty(),
+            "live crate must audit clean; findings:\n{}",
+            render(&report.findings)
+        );
+        assert!(report.files > 20, "walker found only {} files", report.files);
+    }
+
+    /// The registry must keep covering the concurrency-heavy modules —
+    /// if one of these rows disappears, either the atomics were removed
+    /// (update this list) or the walker/counter regressed.
+    #[test]
+    fn registry_covers_concurrency_modules() {
+        let corpus = load_corpus(&crate_root()).unwrap();
+        for file in ["src/engine/mod.rs", "src/serve/mod.rs", "src/coordinator/mod.rs"] {
+            assert!(
+                corpus.registry.iter().any(|e| e.file == file),
+                "audit.toml lost its entry for {file}"
+            );
+        }
+        // src/shard/mod.rs synchronizes through HaloGate (Mutex +
+        // Condvar), not atomics — the audit proves that stays true.
+        assert!(
+            !corpus.registry.iter().any(|e| e.file.starts_with("src/shard/")),
+            "shard grew atomics; justify them in audit.toml and update this test"
+        );
+    }
+
+    #[test]
+    fn single_rule_filter_and_unknown_rule() {
+        let report = audit_crate(&crate_root(), Some("unsafe_safety")).unwrap();
+        assert!(report.findings.is_empty());
+        let err = audit_crate(&crate_root(), Some("bogus")).unwrap_err();
+        assert!(format!("{err:#}").contains("unknown rule"));
+    }
+}

@@ -1,0 +1,161 @@
+//! The `rust/audit.toml` atomic-ordering registry and its parser.
+//!
+//! The registry is deliberately a TOML *subset* — `[[atomic]]` array
+//! tables with `key = "string"` / `key = integer` pairs and `#`
+//! comments — parsed by hand so the audit stays dependency-free. The
+//! parser is strict: unknown tables, unknown keys, malformed values,
+//! and incomplete entries are hard errors, not findings, because a
+//! registry that cannot be trusted silences the rule it backs.
+
+use anyhow::{bail, Context, Result};
+
+/// One registered atomic-ordering site group: all uses of one
+/// `Ordering` variant in one file, with an exact count and a one-line
+/// justification.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct AtomicEntry {
+    pub file: String,
+    pub ordering: String,
+    pub count: usize,
+    pub why: String,
+    /// Line of the entry's `[[atomic]]` header, for diagnostics.
+    pub line: usize,
+}
+
+#[derive(Default)]
+struct Partial {
+    file: Option<String>,
+    ordering: Option<String>,
+    count: Option<usize>,
+    why: Option<String>,
+    line: usize,
+}
+
+impl Partial {
+    fn finish(self) -> Result<AtomicEntry> {
+        let line = self.line;
+        let missing = |k: &str| format!("audit.toml: [[atomic]] at line {line} missing `{k}`");
+        Ok(AtomicEntry {
+            file: self.file.with_context(|| missing("file"))?,
+            ordering: self.ordering.with_context(|| missing("ordering"))?,
+            count: self.count.with_context(|| missing("count"))?,
+            why: self.why.with_context(|| missing("why"))?,
+            line,
+        })
+    }
+}
+
+/// Parse registry text into entries.
+pub fn parse(text: &str) -> Result<Vec<AtomicEntry>> {
+    let mut entries = Vec::new();
+    let mut current: Option<Partial> = None;
+    for (idx, rawline) in text.lines().enumerate() {
+        let num = idx + 1;
+        let line = rawline.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        if line.starts_with('[') {
+            if line != "[[atomic]]" {
+                bail!("audit.toml:{num}: unknown table `{line}` (only [[atomic]] is allowed)");
+            }
+            if let Some(p) = current.take() {
+                entries.push(p.finish()?);
+            }
+            current = Some(Partial { line: num, ..Partial::default() });
+            continue;
+        }
+        let Some((key, value)) = line.split_once('=') else {
+            bail!("audit.toml:{num}: expected `key = value`, got `{line}`");
+        };
+        let Some(p) = current.as_mut() else {
+            bail!("audit.toml:{num}: `{}` outside any [[atomic]] entry", key.trim());
+        };
+        let (key, value) = (key.trim(), value.trim());
+        let string = |v: &str| -> Result<String> {
+            let inner = v
+                .strip_prefix('"')
+                .and_then(|v| v.strip_suffix('"'))
+                .with_context(|| format!("audit.toml:{num}: `{key}` expects a quoted string"))?;
+            Ok(inner.to_string())
+        };
+        match key {
+            "file" => p.file = Some(string(value)?),
+            "ordering" => p.ordering = Some(string(value)?),
+            "why" => p.why = Some(string(value)?),
+            "count" => {
+                p.count = Some(value.parse::<usize>().with_context(|| {
+                    format!("audit.toml:{num}: `count` expects an integer, got `{value}`")
+                })?)
+            }
+            other => bail!("audit.toml:{num}: unknown key `{other}` in [[atomic]]"),
+        }
+    }
+    if let Some(p) = current.take() {
+        entries.push(p.finish()?);
+    }
+    Ok(entries)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const GOOD: &str = "\
+# comment
+[[atomic]]
+file = \"src/engine/mod.rs\"
+ordering = \"SeqCst\"
+count = 6
+why = \"latch poison flag\"
+
+[[atomic]]
+file = \"src/serve/mod.rs\"
+ordering = \"Relaxed\"
+count = 19
+why = \"stats counters\"
+";
+
+    #[test]
+    fn parses_entries_in_order() {
+        let es = parse(GOOD).unwrap();
+        assert_eq!(es.len(), 2);
+        assert_eq!(es[0].file, "src/engine/mod.rs");
+        assert_eq!(es[0].ordering, "SeqCst");
+        assert_eq!(es[0].count, 6);
+        assert_eq!(es[0].why, "latch poison flag");
+        assert_eq!(es[1].ordering, "Relaxed");
+        assert_eq!(es[1].count, 19);
+    }
+
+    #[test]
+    fn unknown_key_is_an_error() {
+        let e = parse("[[atomic]]\nfile = \"a\"\nbogus = 1\n").unwrap_err();
+        assert!(format!("{e:#}").contains("unknown key"));
+    }
+
+    #[test]
+    fn unknown_table_is_an_error() {
+        let e = parse("[[other]]\n").unwrap_err();
+        assert!(format!("{e:#}").contains("unknown table"));
+    }
+
+    #[test]
+    fn missing_field_is_an_error() {
+        let e = parse("[[atomic]]\nfile = \"a\"\nordering = \"Relaxed\"\ncount = 1\n")
+            .unwrap_err();
+        assert!(format!("{e:#}").contains("missing `why`"));
+    }
+
+    #[test]
+    fn key_outside_entry_is_an_error() {
+        let e = parse("file = \"a\"\n").unwrap_err();
+        assert!(format!("{e:#}").contains("outside any"));
+    }
+
+    #[test]
+    fn bad_count_is_an_error() {
+        let e = parse("[[atomic]]\ncount = many\n").unwrap_err();
+        assert!(format!("{e:#}").contains("expects an integer"));
+    }
+}

@@ -1,0 +1,791 @@
+//! The six audit rules, run over a [`Corpus`] of scanned sources.
+//!
+//! Every rule matches on the scanner's *code* view (comments and
+//! string/char literals blanked), skips `#[cfg(test)]` regions, and
+//! honors `// audit:allow(<rule>): <reason>` waivers — except where a rule
+//! explicitly reads raw literal content because the literal *is* the
+//! signal (bench filenames and JSON identity keys in `bench_baseline`).
+
+use std::collections::BTreeMap;
+
+use super::registry::AtomicEntry;
+use super::scanner::{waived_lines, waivers, ScannedFile};
+use crate::util::bench::BENCH_IDENT_KEYS;
+
+/// Everything a rule may look at. Built from disk by
+/// [`super::load_corpus`], or from literals in fixture tests.
+pub struct Corpus {
+    /// Scanned sources, paths relative to the crate root
+    /// (`src/...`, `benches/...`), sorted by path.
+    pub files: Vec<ScannedFile>,
+    /// Parsed `audit.toml` atomic-ordering entries.
+    pub registry: Vec<AtomicEntry>,
+    /// Display path of the registry, for diagnostics.
+    pub registry_path: String,
+    /// `(file name, contents)` of every `results-baseline/BENCH_*.json`.
+    pub baselines: Vec<(String, String)>,
+}
+
+/// One diagnostic: `rule path:line msg`.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub rule: String,
+    pub path: String,
+    pub line: usize,
+    pub msg: String,
+}
+
+impl std::fmt::Display for Finding {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{:16} {}:{}  {}", self.rule, self.path, self.line, self.msg)
+    }
+}
+
+/// A rule's name and the one-line contract it enforces.
+pub struct Rule {
+    pub name: &'static str,
+    pub desc: &'static str,
+}
+
+/// The checked-in rule set, in report order.
+pub const RULES: &[Rule] = &[
+    Rule {
+        name: "unsafe_safety",
+        desc: "every `unsafe` block/fn/impl carries a `// SAFETY:` comment within the 8 preceding lines",
+    },
+    Rule {
+        name: "atomic_registry",
+        desc: "every `Ordering::*` site matches a justified entry in audit.toml (per file x variant, exact count)",
+    },
+    Rule {
+        name: "thread_spawn",
+        desc: "no `thread::{spawn,Builder,scope}` outside src/engine/ (Engine/TaskPool are the sanctioned spawn sites)",
+    },
+    Rule {
+        name: "isa_dispatch",
+        desc: "x86 intrinsic surface stays inside kernels::simd; other modules go through the `*_isa` dispatch wrappers",
+    },
+    Rule {
+        name: "hot_path_panic",
+        desc: "no unwrap/expect/panic! family in kernels/engine hot paths (mutex/condvar poisoning propagation exempt)",
+    },
+    Rule {
+        name: "bench_baseline",
+        desc: "every BENCH_*.json emitter has a results-baseline/ twin whose identity keys are still produced",
+    },
+];
+
+/// Lines a SAFETY comment may sit above its `unsafe` (matching the
+/// retired awk gate's window).
+const SAFETY_LOOKBACK: usize = 8;
+
+const ORDERINGS: &[&str] = &["Relaxed", "Acquire", "Release", "AcqRel", "SeqCst"];
+
+const PANIC_TOKENS: &[&str] =
+    &[".unwrap()", ".expect(", "panic!(", "unreachable!(", "todo!(", "unimplemented!("];
+
+const X86_TOKENS: &[&str] = &["_mm256_", "_mm512_", "core::arch::x86_64", "target_feature"];
+
+fn is_ident(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Non-overlapping byte offsets of `pat` in `code`.
+fn occurrences(code: &str, pat: &str) -> Vec<usize> {
+    let mut out = Vec::new();
+    let mut from = 0;
+    while let Some(j) = code[from..].find(pat) {
+        out.push(from + j);
+        from += j + pat.len();
+    }
+    out
+}
+
+/// `word` present with non-identifier chars (or the line edge) on both
+/// sides.
+fn contains_word(code: &str, word: &str) -> bool {
+    let b = code.as_bytes();
+    occurrences(code, word).into_iter().any(|j| {
+        let before_ok = j == 0 || !is_ident(b[j - 1]);
+        let after = j + word.len();
+        before_ok && (after >= b.len() || !is_ident(b[after]))
+    })
+}
+
+fn enabled(rule: &str, filter: Option<&str>) -> bool {
+    filter.is_none_or(|f| f == rule)
+}
+
+/// Run the rules (all, or just `filter`) over the corpus.
+pub fn run(corpus: &Corpus, filter: Option<&str>) -> Vec<Finding> {
+    let mut out = Vec::new();
+    check_waiver_hygiene(corpus, filter, &mut out);
+    if enabled("unsafe_safety", filter) {
+        rule_unsafe_safety(corpus, &mut out);
+    }
+    if enabled("atomic_registry", filter) {
+        rule_atomic_registry(corpus, &mut out);
+    }
+    if enabled("thread_spawn", filter) {
+        rule_thread_spawn(corpus, &mut out);
+    }
+    if enabled("isa_dispatch", filter) {
+        rule_isa_dispatch(corpus, &mut out);
+    }
+    if enabled("hot_path_panic", filter) {
+        rule_hot_path_panic(corpus, &mut out);
+    }
+    if enabled("bench_baseline", filter) {
+        rule_bench_baseline(corpus, &mut out);
+    }
+    out
+}
+
+/// A waiver must name a known rule and carry a non-empty reason — an
+/// unexplained waiver is a violation of the rule it tries to silence.
+fn check_waiver_hygiene(c: &Corpus, filter: Option<&str>, out: &mut Vec<Finding>) {
+    for f in &c.files {
+        for w in waivers(f) {
+            let known = RULES.iter().any(|r| r.name == w.rule);
+            if !known && filter.is_none() {
+                out.push(Finding {
+                    rule: w.rule.clone(),
+                    path: f.path.clone(),
+                    line: w.line,
+                    msg: format!("waiver names unknown rule `{}`", w.rule),
+                });
+            } else if known && w.reason.is_empty() && enabled(&w.rule, filter) {
+                out.push(Finding {
+                    rule: w.rule.clone(),
+                    path: f.path.clone(),
+                    line: w.line,
+                    msg: "waiver has no reason (audit:allow(rule): reason)".to_string(),
+                });
+            }
+        }
+    }
+}
+
+fn rule_unsafe_safety(c: &Corpus, out: &mut Vec<Finding>) {
+    for f in &c.files {
+        let waived = waived_lines(f, "unsafe_safety");
+        for ln in &f.lines {
+            if ln.in_test || waived.contains(&ln.num) || !contains_word(&ln.code, "unsafe") {
+                continue;
+            }
+            let lo = ln.num.saturating_sub(SAFETY_LOOKBACK).max(1);
+            let ok = f.lines[lo - 1..ln.num].iter().any(|b| b.comment.contains("SAFETY:"));
+            if !ok {
+                out.push(Finding {
+                    rule: "unsafe_safety".to_string(),
+                    path: f.path.clone(),
+                    line: ln.num,
+                    msg: format!(
+                        "`unsafe` without a SAFETY: comment in the {SAFETY_LOOKBACK} preceding lines"
+                    ),
+                });
+            }
+        }
+    }
+}
+
+/// `Ordering::<variant>` occurrences (identifier boundary after the
+/// variant), blanked out of `masked` so the bare-variant pass cannot
+/// recount them.
+fn count_qualified(masked: &mut String, variant: &str) -> usize {
+    let pat = format!("Ordering::{variant}");
+    let mut n = 0;
+    let mut from = 0;
+    while let Some(j) = masked[from..].find(&pat) {
+        let j = from + j;
+        let after = j + pat.len();
+        if after >= masked.len() || !is_ident(masked.as_bytes()[after]) {
+            n += 1;
+            masked.replace_range(j..after, &" ".repeat(pat.len()));
+        }
+        from = after;
+    }
+    n
+}
+
+/// Bare `variant` occurrences: identifier boundaries on both sides and
+/// not preceded by `:` (which would be a path segment already counted
+/// or masked).
+fn count_bare(masked: &str, variant: &str) -> usize {
+    let b = masked.as_bytes();
+    occurrences(masked, variant)
+        .into_iter()
+        .filter(|&j| {
+            let before_ok = j == 0 || (!is_ident(b[j - 1]) && b[j - 1] != b':');
+            let after = j + variant.len();
+            before_ok && (after >= b.len() || !is_ident(b[after]))
+        })
+        .count()
+}
+
+fn is_use_line(code: &str) -> bool {
+    let t = code.trim_start();
+    t.starts_with("use ") || t.starts_with("pub use ")
+}
+
+/// Variants a file's `use` lines bring into scope as bare names.
+fn imported_orderings(f: &ScannedFile) -> Vec<&'static str> {
+    ORDERINGS
+        .iter()
+        .copied()
+        .filter(|o| {
+            f.lines.iter().any(|l| {
+                is_use_line(&l.code) && l.code.contains("Ordering") && contains_word(&l.code, o)
+            })
+        })
+        .collect()
+}
+
+fn rule_atomic_registry(c: &Corpus, out: &mut Vec<Finding>) {
+    // (file, variant) -> (count, first line)
+    let mut observed: BTreeMap<(String, String), (usize, usize)> = BTreeMap::new();
+    for f in &c.files {
+        let waived = waived_lines(f, "atomic_registry");
+        let imported = imported_orderings(f);
+        for ln in &f.lines {
+            if ln.in_test || waived.contains(&ln.num) || is_use_line(&ln.code) {
+                continue;
+            }
+            let mut masked = ln.code.clone();
+            let mut record = |variant: &str, k: usize| {
+                if k > 0 {
+                    let e = observed
+                        .entry((f.path.clone(), variant.to_string()))
+                        .or_insert((0, ln.num));
+                    e.0 += k;
+                }
+            };
+            for o in ORDERINGS {
+                let k = count_qualified(&mut masked, o);
+                record(o, k);
+            }
+            for o in &imported {
+                record(o, count_bare(&masked, o));
+            }
+        }
+    }
+    for ((file, variant), (count, first)) in &observed {
+        match c.registry.iter().find(|e| &e.file == file && &e.ordering == variant) {
+            None => out.push(Finding {
+                rule: "atomic_registry".to_string(),
+                path: file.clone(),
+                line: *first,
+                msg: format!(
+                    "{count} `{variant}` site(s) not registered in {} (first here)",
+                    c.registry_path
+                ),
+            }),
+            Some(e) if e.count != *count => out.push(Finding {
+                rule: "atomic_registry".to_string(),
+                path: file.clone(),
+                line: *first,
+                msg: format!(
+                    "{count} `{variant}` site(s) but {} registers {} — update the entry and its `why`",
+                    c.registry_path, e.count
+                ),
+            }),
+            Some(e) if e.why.trim().is_empty() => out.push(Finding {
+                rule: "atomic_registry".to_string(),
+                path: c.registry_path.clone(),
+                line: e.line,
+                msg: format!("entry for {file} `{variant}` has an empty `why`"),
+            }),
+            Some(_) => {}
+        }
+    }
+    for e in &c.registry {
+        if !observed.contains_key(&(e.file.clone(), e.ordering.clone())) {
+            out.push(Finding {
+                rule: "atomic_registry".to_string(),
+                path: c.registry_path.clone(),
+                line: e.line,
+                msg: format!("entry for {} `{}` matches no source site", e.file, e.ordering),
+            });
+        }
+    }
+}
+
+fn has_thread_spawn(code: &str) -> bool {
+    occurrences(code, "thread::").into_iter().any(|j| {
+        let rest = &code[j + "thread::".len()..];
+        ["spawn", "Builder", "scope"].iter().any(|cand| {
+            rest.starts_with(cand)
+                && rest.as_bytes().get(cand.len()).is_none_or(|&nb| !is_ident(nb))
+        })
+    })
+}
+
+fn rule_thread_spawn(c: &Corpus, out: &mut Vec<Finding>) {
+    for f in &c.files {
+        if f.path.starts_with("src/engine/") {
+            continue;
+        }
+        let waived = waived_lines(f, "thread_spawn");
+        for ln in &f.lines {
+            if ln.in_test || waived.contains(&ln.num) {
+                continue;
+            }
+            if has_thread_spawn(&ln.code) {
+                out.push(Finding {
+                    rule: "thread_spawn".to_string(),
+                    path: f.path.clone(),
+                    line: ln.num,
+                    msg: "thread spawn outside src/engine/ (use Engine/TaskPool)".to_string(),
+                });
+            }
+        }
+    }
+}
+
+fn rule_isa_dispatch(c: &Corpus, out: &mut Vec<Finding>) {
+    for f in &c.files {
+        let in_simd = f.path.starts_with("src/kernels/simd");
+        let in_kernels = f.path.starts_with("src/kernels/");
+        if in_simd && in_kernels {
+            continue;
+        }
+        let waived = waived_lines(f, "isa_dispatch");
+        for ln in &f.lines {
+            if ln.in_test || waived.contains(&ln.num) {
+                continue;
+            }
+            if !in_simd {
+                if let Some(tok) = X86_TOKENS.iter().find(|t| ln.code.contains(*t)) {
+                    out.push(Finding {
+                        rule: "isa_dispatch".to_string(),
+                        path: f.path.clone(),
+                        line: ln.num,
+                        msg: format!("x86 intrinsic surface (`{tok}`) outside kernels::simd"),
+                    });
+                    continue;
+                }
+            }
+            if !in_kernels {
+                let b = ln.code.as_bytes();
+                let direct = occurrences(&ln.code, "simd::")
+                    .into_iter()
+                    .any(|j| j == 0 || !is_ident(b[j - 1]));
+                if direct {
+                    out.push(Finding {
+                        rule: "isa_dispatch".to_string(),
+                        path: f.path.clone(),
+                        line: ln.num,
+                        msg: "direct simd:: call outside kernels (use the *_isa dispatch wrappers)"
+                            .to_string(),
+                    });
+                }
+            }
+        }
+    }
+}
+
+fn rule_hot_path_panic(c: &Corpus, out: &mut Vec<Finding>) {
+    for f in &c.files {
+        if !(f.path.starts_with("src/kernels/") || f.path.starts_with("src/engine/")) {
+            continue;
+        }
+        let waived = waived_lines(f, "hot_path_panic");
+        for ln in &f.lines {
+            if ln.in_test || waived.contains(&ln.num) {
+                continue;
+            }
+            // Mutex/Condvar poisoning propagation is the sanctioned
+            // panic: a poisoned lock means a sibling already panicked.
+            if ln.code.contains("lock().unwrap()") || ln.code.contains(".wait(") {
+                continue;
+            }
+            if let Some(tok) = PANIC_TOKENS.iter().find(|t| ln.code.contains(*t)) {
+                out.push(Finding {
+                    rule: "hot_path_panic".to_string(),
+                    path: f.path.clone(),
+                    line: ln.num,
+                    msg: format!("`{tok}` on a hot-path module without a waiver"),
+                });
+            }
+        }
+    }
+}
+
+/// `write_bench_json("BENCH_<stem>.json"` on a raw line — the literal
+/// is the signal, so this reads `raw`, not `code`.
+fn bench_emitter(raw: &str) -> Option<String> {
+    let p = raw.find("write_bench_json(")?;
+    let rest = raw[p + "write_bench_json(".len()..].trim_start();
+    let rest = rest.strip_prefix('"')?;
+    let name = &rest[..rest.find('"')?];
+    let stem = name.strip_prefix("BENCH_")?.strip_suffix(".json")?;
+    let stem_ok = !stem.is_empty()
+        && stem.bytes().all(|b| b.is_ascii_lowercase() || b.is_ascii_digit() || b == b'_');
+    stem_ok.then(|| name.to_string())
+}
+
+fn rule_bench_baseline(c: &Corpus, out: &mut Vec<Finding>) {
+    let mut emitters: Vec<(String, String, usize)> = Vec::new();
+    for f in &c.files {
+        let waived = waived_lines(f, "bench_baseline");
+        for ln in &f.lines {
+            if ln.in_test || waived.contains(&ln.num) {
+                continue;
+            }
+            if let Some(name) = bench_emitter(&ln.raw) {
+                emitters.push((name, f.path.clone(), ln.num));
+            }
+        }
+    }
+    for (name, path, line) in &emitters {
+        let Some((_, content)) = c.baselines.iter().find(|(b, _)| b == name) else {
+            out.push(Finding {
+                rule: "bench_baseline".to_string(),
+                path: path.clone(),
+                line: *line,
+                msg: format!("{name} has no results-baseline/ twin for the benchdiff gate"),
+            });
+            continue;
+        };
+        // Identity keys the committed baseline relies on to match
+        // entries across runs; each must still appear in a produced
+        // JSON literal somewhere in the crate, or the benchdiff gate
+        // rots silently (entries stop matching and nothing fails).
+        let mut keys: Vec<&str> = Vec::new();
+        for bl in content.lines().filter(|l| l.contains("\"mflops\"")) {
+            for k in BENCH_IDENT_KEYS {
+                if bl.contains(&format!("\"{k}\"")) && !keys.contains(k) {
+                    keys.push(k);
+                }
+            }
+        }
+        for k in keys {
+            let escaped = format!("{k}\\\":");
+            let plain = format!("{k}\":");
+            let produced = c.files.iter().any(|f2| {
+                f2.lines.iter().any(|l| {
+                    !l.in_test && (l.raw.contains(&escaped) || l.raw.contains(&plain))
+                })
+            });
+            if !produced {
+                out.push(Finding {
+                    rule: "bench_baseline".to_string(),
+                    path: path.clone(),
+                    line: *line,
+                    msg: format!("{name}: identity key '{k}' is no longer produced by any emitter"),
+                });
+            }
+        }
+    }
+    for (bname, _) in &c.baselines {
+        if bname.starts_with("BENCH_") && !emitters.iter().any(|(n, _, _)| n == bname) {
+            out.push(Finding {
+                rule: "bench_baseline".to_string(),
+                path: format!("results-baseline/{bname}"),
+                line: 0,
+                msg: "orphan baseline: no emitter writes this file any more".to_string(),
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::scanner::scan_source;
+    use super::*;
+
+    fn corpus_of(files: &[(&str, &str)]) -> Corpus {
+        Corpus {
+            files: files.iter().map(|(p, s)| scan_source(p, s)).collect(),
+            registry: Vec::new(),
+            registry_path: "audit.toml".to_string(),
+            baselines: Vec::new(),
+        }
+    }
+
+    fn findings(c: &Corpus, rule: &str) -> Vec<Finding> {
+        run(c, Some(rule))
+    }
+
+    // ---- unsafe_safety ----------------------------------------------
+
+    #[test]
+    fn unsafe_without_safety_fires() {
+        let c = corpus_of(&[("src/x.rs", "fn f() {\n    unsafe { danger() };\n}\n")]);
+        let fs = findings(&c, "unsafe_safety");
+        assert_eq!(fs.len(), 1);
+        assert_eq!((fs[0].path.as_str(), fs[0].line), ("src/x.rs", 2));
+    }
+
+    #[test]
+    fn unsafe_with_safety_comment_is_clean() {
+        let src =
+            "fn f() {\n    // SAFETY: fixture invariant holds.\n    unsafe { danger() };\n}\n";
+        let c = corpus_of(&[("src/x.rs", src)]);
+        assert!(findings(&c, "unsafe_safety").is_empty());
+    }
+
+    #[test]
+    fn unsafe_with_waiver_is_silenced() {
+        let src = "fn f() {\n    // audit:allow(unsafe_safety): fixture exercises the waiver\n    unsafe { danger() };\n}\n";
+        let c = corpus_of(&[("src/x.rs", src)]);
+        assert!(findings(&c, "unsafe_safety").is_empty());
+    }
+
+    #[test]
+    fn unsafe_in_strings_and_tests_is_ignored() {
+        let src = "fn f() { let s = \"unsafe\"; }\n#[cfg(test)]\nmod tests {\n    fn g() { unsafe { x() } }\n}\n";
+        let c = corpus_of(&[("src/x.rs", src)]);
+        assert!(findings(&c, "unsafe_safety").is_empty());
+    }
+
+    #[test]
+    fn safety_comment_too_far_above_does_not_count() {
+        let mut src = String::from("// SAFETY: far away.\n");
+        src.push_str(&"fn pad() {}\n".repeat(9));
+        src.push_str("fn f() { unsafe { danger() }; }\n");
+        let c = corpus_of(&[("src/x.rs", &src)]);
+        assert_eq!(findings(&c, "unsafe_safety").len(), 1);
+    }
+
+    // ---- atomic_registry --------------------------------------------
+
+    const ATOMIC_SRC: &str = "\
+use std::sync::atomic::{AtomicUsize, Ordering};
+fn f(a: &AtomicUsize) {
+    a.store(1, Ordering::SeqCst);
+    let _ = a.load(Ordering::SeqCst);
+}
+";
+
+    #[test]
+    fn unregistered_atomic_fires() {
+        let c = corpus_of(&[("src/x.rs", ATOMIC_SRC)]);
+        let fs = findings(&c, "atomic_registry");
+        assert_eq!(fs.len(), 1);
+        assert!(fs[0].msg.contains("2 `SeqCst`"), "{}", fs[0].msg);
+        assert_eq!(fs[0].line, 3, "anchored at the first site");
+    }
+
+    #[test]
+    fn registered_atomic_with_matching_count_is_clean() {
+        let mut c = corpus_of(&[("src/x.rs", ATOMIC_SRC)]);
+        c.registry.push(AtomicEntry {
+            file: "src/x.rs".into(),
+            ordering: "SeqCst".into(),
+            count: 2,
+            why: "fixture".into(),
+            line: 1,
+        });
+        assert!(findings(&c, "atomic_registry").is_empty());
+    }
+
+    #[test]
+    fn count_drift_fires() {
+        let mut c = corpus_of(&[("src/x.rs", ATOMIC_SRC)]);
+        c.registry.push(AtomicEntry {
+            file: "src/x.rs".into(),
+            ordering: "SeqCst".into(),
+            count: 1,
+            why: "fixture".into(),
+            line: 1,
+        });
+        let fs = findings(&c, "atomic_registry");
+        assert_eq!(fs.len(), 1);
+        assert!(fs[0].msg.contains("registers 1"), "{}", fs[0].msg);
+    }
+
+    #[test]
+    fn orphan_registry_entry_fires() {
+        let mut c = corpus_of(&[("src/x.rs", "fn f() {}\n")]);
+        c.registry.push(AtomicEntry {
+            file: "src/gone.rs".into(),
+            ordering: "Relaxed".into(),
+            count: 1,
+            why: "stale".into(),
+            line: 7,
+        });
+        let fs = findings(&c, "atomic_registry");
+        assert_eq!(fs.len(), 1);
+        assert!(fs[0].msg.contains("matches no source site"));
+        assert_eq!((fs[0].path.as_str(), fs[0].line), ("audit.toml", 7));
+    }
+
+    #[test]
+    fn waived_atomic_site_is_not_counted() {
+        let src = "\
+use std::sync::atomic::{AtomicUsize, Ordering};
+fn f(a: &AtomicUsize) {
+    // audit:allow(atomic_registry): fixture exercises the waiver
+    a.store(1, Ordering::SeqCst);
+}
+";
+        let c = corpus_of(&[("src/x.rs", src)]);
+        assert!(findings(&c, "atomic_registry").is_empty());
+    }
+
+    #[test]
+    fn bare_imported_variant_is_counted() {
+        let src = "\
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+fn f(c: &AtomicU64) {
+    c.fetch_add(1, Relaxed);
+}
+";
+        let c = corpus_of(&[("src/x.rs", src)]);
+        let fs = findings(&c, "atomic_registry");
+        assert_eq!(fs.len(), 1);
+        assert!(fs[0].msg.contains("1 `Relaxed`"), "{}", fs[0].msg);
+    }
+
+    // ---- thread_spawn -----------------------------------------------
+
+    #[test]
+    fn spawn_outside_engine_fires_all_three_forms() {
+        let src = "\
+fn a() { std::thread::spawn(|| {}); }
+fn b() { std::thread::Builder::new(); }
+fn c() { std::thread::scope(|_| {}); }
+";
+        let c = corpus_of(&[("src/serve/x.rs", src)]);
+        assert_eq!(findings(&c, "thread_spawn").len(), 3);
+    }
+
+    #[test]
+    fn spawn_inside_engine_is_sanctioned() {
+        let c = corpus_of(&[("src/engine/pool.rs", "fn a() { std::thread::spawn(|| {}); }\n")]);
+        assert!(findings(&c, "thread_spawn").is_empty());
+    }
+
+    #[test]
+    fn spawn_with_waiver_is_silenced() {
+        let src = "// audit:allow(thread_spawn): fixture exercises the waiver\nfn a() { std::thread::spawn(|| {}); }\n";
+        let c = corpus_of(&[("src/serve/x.rs", src)]);
+        assert!(findings(&c, "thread_spawn").is_empty());
+    }
+
+    // ---- isa_dispatch -----------------------------------------------
+
+    #[test]
+    fn intrinsics_outside_simd_fire() {
+        let src = "use core::arch::x86_64::*;\nfn f() { let _ = simd::triad(); }\n";
+        let c = corpus_of(&[("src/solver/x.rs", src)]);
+        let fs = findings(&c, "isa_dispatch");
+        assert_eq!(fs.len(), 2);
+        assert!(fs[0].msg.contains("core::arch::x86_64"));
+        assert!(fs[1].msg.contains("*_isa dispatch"));
+    }
+
+    #[test]
+    fn intrinsics_inside_simd_and_kernels_are_clean() {
+        let c = corpus_of(&[
+            ("src/kernels/simd/mod.rs", "fn f() { let _ = _mm256_setzero_pd(); }\n"),
+            ("src/kernels/spmv.rs", "fn g() { simd::crs_rows(); }\n"),
+        ]);
+        assert!(findings(&c, "isa_dispatch").is_empty());
+    }
+
+    #[test]
+    fn intrinsics_with_waiver_are_silenced() {
+        let src = "// audit:allow(isa_dispatch): fixture exercises the waiver\nfn f() { let _ = simd::triad(); }\n";
+        let c = corpus_of(&[("src/solver/x.rs", src)]);
+        assert!(findings(&c, "isa_dispatch").is_empty());
+    }
+
+    // ---- hot_path_panic ---------------------------------------------
+
+    #[test]
+    fn unwrap_on_hot_path_fires() {
+        let c = corpus_of(&[("src/kernels/x.rs", "fn f(o: Option<u32>) -> u32 { o.unwrap() }\n")]);
+        let fs = findings(&c, "hot_path_panic");
+        assert_eq!(fs.len(), 1);
+        assert!(fs[0].msg.contains(".unwrap()"));
+    }
+
+    #[test]
+    fn lock_poison_propagation_and_cold_modules_are_clean() {
+        let c = corpus_of(&[
+            ("src/engine/x.rs", "fn f(m: &Mutex<u32>) -> u32 { *m.lock().unwrap() }\n"),
+            ("src/util/x.rs", "fn g(o: Option<u32>) -> u32 { o.unwrap() }\n"),
+        ]);
+        assert!(findings(&c, "hot_path_panic").is_empty());
+    }
+
+    #[test]
+    fn panic_with_waiver_is_silenced() {
+        let src = "fn f() {\n    // audit:allow(hot_path_panic): fixture exercises the waiver\n    panic!(\"boom\");\n}\n";
+        let c = corpus_of(&[("src/engine/x.rs", src)]);
+        assert!(findings(&c, "hot_path_panic").is_empty());
+    }
+
+    // ---- bench_baseline ---------------------------------------------
+
+    const EMITTER: &str = "fn main() { write_bench_json(\"BENCH_x.json\", &json); }\n";
+
+    #[test]
+    fn emitter_without_baseline_fires() {
+        let c = corpus_of(&[("benches/x.rs", EMITTER)]);
+        let fs = findings(&c, "bench_baseline");
+        assert_eq!(fs.len(), 1);
+        assert!(fs[0].msg.contains("no results-baseline/"));
+    }
+
+    #[test]
+    fn baseline_with_produced_keys_is_clean() {
+        let producer =
+            "fn j() -> String { format!(\"{{\\\"case\\\":\\\"a\\\",\\\"mflops\\\":{m}}}\") }\n";
+        let mut c = corpus_of(&[("benches/x.rs", EMITTER), ("src/util/bench.rs", producer)]);
+        c.baselines.push((
+            "BENCH_x.json".to_string(),
+            "{\"case\":\"a\",\"mflops\":100}\n".to_string(),
+        ));
+        assert!(findings(&c, "bench_baseline").is_empty());
+    }
+
+    #[test]
+    fn dropped_identity_key_fires() {
+        let mut c = corpus_of(&[("benches/x.rs", EMITTER)]);
+        c.baselines.push((
+            "BENCH_x.json".to_string(),
+            "{\"case\":\"a\",\"mflops\":100}\n".to_string(),
+        ));
+        let fs = findings(&c, "bench_baseline");
+        assert_eq!(fs.len(), 1);
+        assert!(fs[0].msg.contains("identity key 'case'"), "{}", fs[0].msg);
+    }
+
+    #[test]
+    fn orphan_baseline_fires() {
+        let mut c = corpus_of(&[("src/x.rs", "fn f() {}\n")]);
+        c.baselines.push(("BENCH_gone.json".to_string(), "{}\n".to_string()));
+        let fs = findings(&c, "bench_baseline");
+        assert_eq!(fs.len(), 1);
+        assert!(fs[0].msg.contains("orphan baseline"));
+    }
+
+    #[test]
+    fn waived_emitter_is_silenced() {
+        let src = "// audit:allow(bench_baseline): fixture exercises the waiver\nfn main() { write_bench_json(\"BENCH_x.json\", &json); }\n";
+        let c = corpus_of(&[("benches/x.rs", src)]);
+        assert!(findings(&c, "bench_baseline").is_empty());
+    }
+
+    // ---- waiver hygiene ---------------------------------------------
+
+    #[test]
+    fn empty_reason_waiver_fires() {
+        let src = "// audit:allow(thread_spawn):\nfn a() { std::thread::spawn(|| {}); }\n";
+        let c = corpus_of(&[("src/serve/x.rs", src)]);
+        let fs = findings(&c, "thread_spawn");
+        assert_eq!(fs.len(), 1, "the waiver still covers, but is itself flagged");
+        assert!(fs[0].msg.contains("no reason"));
+    }
+
+    #[test]
+    fn unknown_rule_waiver_fires() {
+        let c = corpus_of(&[("src/x.rs", "// audit:allow(bogus_rule): whatever\n")]);
+        let fs = run(&c, None);
+        assert_eq!(fs.len(), 1);
+        assert!(fs[0].msg.contains("unknown rule"));
+    }
+}

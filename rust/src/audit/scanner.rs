@@ -1,0 +1,396 @@
+//! A comment/string-aware line scanner for Rust sources.
+//!
+//! Deliberately *not* a parser: the audit rules only need to know, per
+//! line, (a) what is code and what is comment, (b) where string/char
+//! literals are (so `"unsafe"` in a message never trips a rule), and
+//! (c) whether the line sits inside a `#[cfg(test)]`-gated region. A
+//! line-oriented state machine answers all three without `syn` or any
+//! other dependency, which keeps the pass runnable offline and fast
+//! enough to be a tier-1 test.
+//!
+//! Known (accepted) approximations, shared with nothing else in the
+//! crate and stable under `rustfmt`-formatted input:
+//! - escapes inside a *continued* (multi-line) plain string are not
+//!   interpreted — the continuation ends at the first `"`;
+//! - `'` is treated as a char literal only for the `'x'` / `'\..'`
+//!   shapes, so lifetimes (`'a`) stay visible to the code view;
+//! - `#[cfg(test)]` regions are tracked by brace depth from the
+//!   attribute, which is exact for the `mod tests { .. }` idiom.
+
+use std::collections::BTreeSet;
+
+/// One scanned source line.
+pub struct Line {
+    /// 1-based line number.
+    pub num: usize,
+    /// The untouched source line (string literals intact) — used only
+    /// where literal content *is* the signal (bench filenames, JSON
+    /// identity keys).
+    pub raw: String,
+    /// The line with comments and string/char literals blanked to
+    /// spaces: what the code-facing rules match against.
+    pub code: String,
+    /// Concatenated comment text on this line (line + block pieces).
+    pub comment: String,
+    /// Inside a `#[cfg(test)]` / `#[test]` gated region.
+    pub in_test: bool,
+}
+
+/// A scanned source file, path relative to the crate root.
+pub struct ScannedFile {
+    pub path: String,
+    pub lines: Vec<Line>,
+}
+
+/// An inline waiver: `// audit:allow(<rule>): <reason>`. It silences
+/// the named rule on its own line and the next [`WAIVER_SPAN`] lines.
+pub struct Waiver {
+    pub rule: String,
+    pub reason: String,
+    pub line: usize,
+}
+
+/// Lines after the waiver comment that stay covered.
+pub const WAIVER_SPAN: usize = 3;
+
+fn memfind(hay: &[u8], from: usize, needle: &[u8]) -> Option<usize> {
+    if needle.is_empty() || hay.len() < needle.len() {
+        return None;
+    }
+    (from..=hay.len() - needle.len()).find(|&i| &hay[i..i + needle.len()] == needle)
+}
+
+fn push_blank(code: &mut Vec<u8>, n: usize) {
+    code.resize(code.len() + n, b' ');
+}
+
+/// `#[cfg(test)]`-family attribute on a whitespace-stripped code line.
+fn has_test_attr(stripped: &str) -> bool {
+    if stripped.contains("#[test]") {
+        return true;
+    }
+    for pat in ["#[cfg(test", "#[cfg(all(test", "#[cfg_attr(test"] {
+        if let Some(p) = stripped.find(pat) {
+            // Boundary after `test`: `)` or `,` (or end of line), so a
+            // hypothetical `cfg(testing)` never gates a region.
+            match stripped.as_bytes().get(p + pat.len()) {
+                None | Some(b')') | Some(b',') => return true,
+                _ => {}
+            }
+        }
+    }
+    false
+}
+
+/// Scan one source file into per-line code/comment views plus
+/// `cfg(test)` region marks.
+pub fn scan_source(path: &str, text: &str) -> ScannedFile {
+    let mut lines = Vec::new();
+    let mut in_block = false;
+    // An open string literal continuing onto the next line: number of
+    // `#`s in its terminator (0 for plain and `r"` strings).
+    let mut str_cont: Option<usize> = None;
+    for (idx, rawline) in text.split('\n').enumerate() {
+        let b = rawline.as_bytes();
+        let n = b.len();
+        let mut code: Vec<u8> = Vec::with_capacity(n);
+        let mut comment: Vec<u8> = Vec::new();
+        let mut i = 0;
+        while i < n {
+            if in_block {
+                match memfind(b, i, b"*/") {
+                    None => {
+                        comment.extend(&b[i..]);
+                        push_blank(&mut code, n - i);
+                        i = n;
+                    }
+                    Some(j) => {
+                        comment.extend(&b[i..j]);
+                        push_blank(&mut code, j + 2 - i);
+                        i = j + 2;
+                        in_block = false;
+                    }
+                }
+                continue;
+            }
+            if let Some(hashes) = str_cont {
+                let mut term = vec![b'"'];
+                term.resize(1 + hashes, b'#');
+                match memfind(b, i, &term) {
+                    None => {
+                        push_blank(&mut code, n - i);
+                        i = n;
+                    }
+                    Some(j) => {
+                        push_blank(&mut code, j + term.len() - i);
+                        i = j + term.len();
+                        str_cont = None;
+                    }
+                }
+                continue;
+            }
+            let c = b[i];
+            if c == b'/' && i + 1 < n && b[i + 1] == b'/' {
+                comment.extend(&b[i + 2..]);
+                push_blank(&mut code, n - i);
+                i = n;
+                continue;
+            }
+            if c == b'/' && i + 1 < n && b[i + 1] == b'*' {
+                in_block = true;
+                push_blank(&mut code, 2);
+                i += 2;
+                continue;
+            }
+            if c == b'r' && i + 1 < n && (b[i + 1] == b'"' || b[i + 1] == b'#') {
+                let mut j = i + 1;
+                let mut hashes = 0;
+                while j < n && b[j] == b'#' {
+                    hashes += 1;
+                    j += 1;
+                }
+                if j < n && b[j] == b'"' {
+                    str_cont = Some(hashes);
+                    push_blank(&mut code, j + 1 - i);
+                    i = j + 1;
+                    continue;
+                }
+                code.push(b'r');
+                i += 1;
+                continue;
+            }
+            if c == b'"' {
+                let mut j = i + 1;
+                let mut closed = false;
+                while j < n {
+                    if b[j] == b'\\' {
+                        j += 2;
+                        continue;
+                    }
+                    if b[j] == b'"' {
+                        closed = true;
+                        break;
+                    }
+                    j += 1;
+                }
+                if closed {
+                    push_blank(&mut code, j + 1 - i);
+                    i = j + 1;
+                } else {
+                    push_blank(&mut code, n - i);
+                    i = n;
+                    str_cont = Some(0);
+                }
+                continue;
+            }
+            if c == b'\'' {
+                if i + 2 < n && b[i + 1] == b'\\' {
+                    let mut j = i + 2;
+                    while j < n && b[j] != b'\'' {
+                        j += 1;
+                    }
+                    if j < n {
+                        push_blank(&mut code, j + 1 - i);
+                        i = j + 1;
+                        continue;
+                    }
+                } else if i + 2 < n && b[i + 2] == b'\'' {
+                    push_blank(&mut code, 3);
+                    i += 3;
+                    continue;
+                }
+                code.push(b'\'');
+                i += 1;
+                continue;
+            }
+            code.push(c);
+            i += 1;
+        }
+        lines.push(Line {
+            num: idx + 1,
+            raw: rawline.to_string(),
+            // Splits only happen at ASCII bytes, so both views stay
+            // valid UTF-8; lossy is a belt-and-braces fallback.
+            code: String::from_utf8_lossy(&code).into_owned(),
+            comment: String::from_utf8_lossy(&comment).into_owned(),
+            in_test: false,
+        });
+    }
+    mark_test_regions(&mut lines);
+    ScannedFile { path: path.to_string(), lines }
+}
+
+/// Mark lines inside `#[cfg(test)]`-gated brace regions: a matching
+/// attribute arms `pending`; the next `{` opens a region popped when
+/// brace depth returns to its opening level.
+fn mark_test_regions(lines: &mut [Line]) {
+    let mut depth: i64 = 0;
+    let mut stack: Vec<i64> = Vec::new();
+    let mut pending = false;
+    for ln in lines.iter_mut() {
+        if !stack.is_empty() {
+            ln.in_test = true;
+        }
+        let stripped: String = ln.code.chars().filter(|c| !c.is_whitespace()).collect();
+        if has_test_attr(&stripped) {
+            pending = true;
+            ln.in_test = true;
+        }
+        for ch in ln.code.chars() {
+            if ch == '{' {
+                if pending {
+                    stack.push(depth);
+                    pending = false;
+                    ln.in_test = true;
+                }
+                depth += 1;
+            } else if ch == '}' {
+                depth -= 1;
+                if stack.last() == Some(&depth) {
+                    stack.pop();
+                }
+            }
+        }
+        if pending {
+            ln.in_test = true;
+        }
+    }
+}
+
+/// All waivers in a file, in order — including empty-reason ones (the
+/// rules report those as findings, but they still cover their span, so
+/// fixing the reason is the only way out).
+pub fn waivers(file: &ScannedFile) -> Vec<Waiver> {
+    let mut out = Vec::new();
+    for ln in &file.lines {
+        let Some(p) = ln.comment.find("audit:allow(") else { continue };
+        let rest = &ln.comment[p + "audit:allow(".len()..];
+        let Some(close) = rest.find(')') else { continue };
+        let rule = &rest[..close];
+        if rule.is_empty() || !rule.bytes().all(|b| b.is_ascii_lowercase() || b == b'_') {
+            continue;
+        }
+        let after = rest[close + 1..].trim_start();
+        let Some(reason) = after.strip_prefix(':') else { continue };
+        out.push(Waiver {
+            rule: rule.to_string(),
+            reason: reason.trim().to_string(),
+            line: ln.num,
+        });
+    }
+    out
+}
+
+/// Line numbers covered by waivers for `rule` in `file`.
+pub fn waived_lines(file: &ScannedFile, rule: &str) -> BTreeSet<usize> {
+    let mut out = BTreeSet::new();
+    for w in waivers(file) {
+        if w.rule == rule {
+            out.extend(w.line..=w.line + WAIVER_SPAN);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn line_comments_move_to_comment_view() {
+        let f = scan_source("t.rs", "let x = 1; // unsafe here\n");
+        assert!(!f.lines[0].code.contains("unsafe"));
+        assert!(f.lines[0].comment.contains("unsafe here"));
+        assert!(f.lines[0].code.contains("let x = 1;"));
+    }
+
+    #[test]
+    fn block_comments_span_lines() {
+        let f = scan_source("t.rs", "a(); /* unsafe\nstill unsafe */ b();");
+        assert!(!f.lines[0].code.contains("unsafe"));
+        assert!(!f.lines[1].code.contains("unsafe"));
+        assert!(f.lines[1].comment.contains("still unsafe"));
+        assert!(f.lines[1].code.contains("b();"));
+    }
+
+    #[test]
+    fn string_literals_are_blanked() {
+        let f = scan_source("t.rs", "let s = \"unsafe { }\"; call();");
+        assert!(!f.lines[0].code.contains("unsafe"));
+        assert!(f.lines[0].code.contains("call();"));
+        assert!(f.lines[0].raw.contains("unsafe"));
+    }
+
+    #[test]
+    fn escaped_quote_does_not_end_the_literal() {
+        let f = scan_source("t.rs", r#"let s = "a\"unsafe"; go();"#);
+        assert!(!f.lines[0].code.contains("unsafe"));
+        assert!(f.lines[0].code.contains("go();"));
+    }
+
+    #[test]
+    fn raw_strings_blank_across_lines() {
+        let src = "let s = r#\"unsafe {\nthread::spawn\n\"# ; tail();";
+        let f = scan_source("t.rs", src);
+        assert!(!f.lines[0].code.contains("unsafe"));
+        assert!(!f.lines[1].code.contains("thread::spawn"));
+        assert!(f.lines[2].code.contains("tail();"));
+    }
+
+    #[test]
+    fn char_literals_blank_but_lifetimes_survive() {
+        let f = scan_source("t.rs", "let c = 'u'; fn f<'a>(x: &'a str) {}");
+        assert!(!f.lines[0].code.contains("'u'"));
+        assert!(f.lines[0].code.contains("<'a>"));
+    }
+
+    #[test]
+    fn cfg_test_region_is_marked() {
+        let src = "fn prod() {}\n#[cfg(test)]\nmod tests {\n    fn inner() {}\n}\nfn after() {}\n";
+        let f = scan_source("t.rs", src);
+        assert!(!f.lines[0].in_test, "prod fn");
+        assert!(f.lines[1].in_test, "attribute line");
+        assert!(f.lines[2].in_test, "mod open");
+        assert!(f.lines[3].in_test, "body");
+        assert!(f.lines[4].in_test, "mod close");
+        assert!(!f.lines[5].in_test, "after the region");
+    }
+
+    #[test]
+    fn nested_braces_keep_the_region_open() {
+        let src = "#[cfg(test)]\nmod tests {\n    fn a() { if x { y(); } }\n    fn b() {}\n}\n";
+        let f = scan_source("t.rs", src);
+        assert!(f.lines[2].in_test);
+        assert!(f.lines[3].in_test);
+    }
+
+    #[test]
+    fn waiver_parses_rule_reason_and_span() {
+        let src =
+            "// audit:allow(hot_path_panic): cold construction path\nx();\ny();\nz();\nw();\n";
+        let f = scan_source("t.rs", src);
+        let ws = waivers(&f);
+        assert_eq!(ws.len(), 1);
+        assert_eq!(ws[0].rule, "hot_path_panic");
+        assert_eq!(ws[0].reason, "cold construction path");
+        let covered = waived_lines(&f, "hot_path_panic");
+        assert!(covered.contains(&1) && covered.contains(&4));
+        assert!(!covered.contains(&5), "span is the waiver line + {WAIVER_SPAN}");
+        assert!(waived_lines(&f, "unsafe_safety").is_empty(), "other rules unaffected");
+    }
+
+    #[test]
+    fn waiver_without_colon_is_ignored() {
+        let f = scan_source("t.rs", "// audit:allow(thread_spawn) missing colon\n");
+        assert!(waivers(&f).is_empty());
+    }
+
+    #[test]
+    fn waiver_with_empty_reason_still_covers_but_is_flagged_later() {
+        let f = scan_source("t.rs", "// audit:allow(thread_spawn):\n");
+        let ws = waivers(&f);
+        assert_eq!(ws.len(), 1);
+        assert!(ws[0].reason.is_empty());
+        assert!(waived_lines(&f, "thread_spawn").contains(&1));
+    }
+}

@@ -165,6 +165,7 @@ impl Service {
         let metrics = Arc::new(Metrics::default());
         let m2 = metrics.clone();
         let (ready_tx, ready_rx) = mpsc::channel::<Result<(), String>>();
+        // audit:allow(thread_spawn): one worker per Service, spawned once at start (executor is !Send)
         let worker = std::thread::Builder::new()
             .name("spmv-service".into())
             .spawn(move || {

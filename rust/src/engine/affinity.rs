@@ -119,6 +119,8 @@ mod sys {
     }
 
     fn errno() -> i32 {
+        // SAFETY: `__errno_location` returns a valid, thread-local
+        // pointer for the lifetime of the calling thread (glibc ABI).
         unsafe { *__errno_location() }
     }
 
@@ -131,6 +133,8 @@ mod sys {
         set[word] |= 1usize << (cpu % usize::BITS as usize);
         // pid 0 = the calling thread (per sched_setaffinity(2), the call
         // affects a single thread, not the whole process).
+        // SAFETY: `set` is a live `CpuSet` and the size argument is
+        // exactly its byte length; the kernel only reads the mask.
         let r = unsafe {
             sched_setaffinity(0, std::mem::size_of::<CpuSet>(), set.as_ptr())
         };
@@ -144,6 +148,8 @@ mod sys {
     /// The calling thread's current affinity mask, for restore-on-drop.
     pub fn get_affinity() -> Option<CpuSet> {
         let mut set: CpuSet = [0; CPU_SET_WORDS];
+        // SAFETY: `set` is a live, writable `CpuSet` and the size
+        // argument is exactly its byte length (the kernel fills it).
         let r = unsafe {
             sched_getaffinity(0, std::mem::size_of::<CpuSet>(), set.as_mut_ptr())
         };
@@ -155,10 +161,14 @@ mod sys {
     }
 
     pub fn set_affinity(set: &CpuSet) -> bool {
+        // SAFETY: `set` is a live `CpuSet` borrowed for the call and the
+        // size argument is exactly its byte length; the kernel reads it.
         unsafe { sched_setaffinity(0, std::mem::size_of::<CpuSet>(), set.as_ptr()) == 0 }
     }
 
     pub fn current_cpu() -> Option<usize> {
+        // SAFETY: `sched_getcpu` takes no arguments and only returns a
+        // cpu id (or -1); there is no memory to get wrong.
         let c = unsafe { sched_getcpu() };
         if c >= 0 {
             Some(c as usize)

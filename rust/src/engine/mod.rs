@@ -171,12 +171,14 @@ impl Engine {
                         job.done.count_down();
                     }
                 })
+                // audit:allow(hot_path_panic): construction-time spawn failure is unrecoverable
                 .expect("spawning engine worker");
             workers.push(handle);
         }
         drop(pin_tx);
         statuses.resize(n_threads, PinStatus::Disabled);
         for _ in 0..n_workers {
+            // audit:allow(hot_path_panic): a worker dying before its pin report is a startup bug
             let (tid, status) = pin_rx.recv().expect("engine worker died before reporting pin");
             statuses[tid] = status;
         }
@@ -213,7 +215,7 @@ impl Engine {
         }
         let latch = Arc::new(Latch::new(self.senders.len()));
         let fr: &(dyn Fn(usize) + Sync) = &f;
-        // Safety: `latch.wait()` below blocks until every worker dropped
+        // SAFETY: `latch.wait()` below blocks until every worker dropped
         // its job guard, so the erased borrow cannot outlive `f`.
         let fr = unsafe {
             std::mem::transmute::<&(dyn Fn(usize) + Sync), &'static (dyn Fn(usize) + Sync)>(fr)
@@ -243,6 +245,7 @@ impl Engine {
             drop(guard); // normal path: wait here
         }
         if latch.poisoned.load(std::sync::atomic::Ordering::SeqCst) {
+            // audit:allow(hot_path_panic): re-raises a contained worker panic to the caller
             panic!("engine worker panicked during partitioned execution");
         }
     }
@@ -287,7 +290,7 @@ impl Engine {
         self.run(|t| {
             for &(a, b) in &partitions[t] {
                 for (bi, base) in bases.iter().enumerate() {
-                    // Safety: chunks are disjoint across threads (caller
+                    // SAFETY: chunks are disjoint across threads (caller
                     // contract, validated in debug builds) and in bounds
                     // (checked above), and every base points at its own
                     // allocation — each sub-slice has exactly one owner.
@@ -369,7 +372,7 @@ impl Engine {
         let bases: Vec<SendPtr> = ys.iter_mut().map(|y| SendPtr(y.as_mut_ptr())).collect();
         self.run(|t| {
             for &(a, b) in &partitions[t] {
-                // Safety: chunks are disjoint across threads (caller
+                // SAFETY: chunks are disjoint across threads (caller
                 // contract, validated above in debug builds) and in
                 // bounds (checked above), and every base points at its
                 // own allocation — so each (chunk, base) sub-slice has
@@ -397,7 +400,12 @@ impl Drop for Engine {
 /// Pointer wrapper so disjoint row partitions can write one output
 /// vector from several threads.
 struct SendPtr(*mut f64);
+// SAFETY: the pointer is only dereferenced inside `run_chunks_ptrs` /
+// `run_chunks_multi`, which carve it into per-thread sub-slices over
+// chunks proven disjoint and in bounds — no two threads alias a byte.
 unsafe impl Send for SendPtr {}
+// SAFETY: shared access is read-only pointer arithmetic; writes go
+// through the disjoint sub-slices described above.
 unsafe impl Sync for SendPtr {}
 
 /// A pool of long-lived *role* threads parked on their channels between
@@ -454,6 +462,7 @@ impl TaskPool {
                         job.done.count_down();
                     }
                 })
+                // audit:allow(hot_path_panic): construction-time spawn failure is unrecoverable
                 .expect("spawning task-pool role thread");
             workers.push(handle);
         }
@@ -487,7 +496,7 @@ impl TaskPool {
         }
         let latch = Arc::new(Latch::new(count));
         let fr: &(dyn Fn(usize) + Sync) = &f;
-        // Safety: `latch.wait()` below blocks until every slot dropped
+        // SAFETY: `latch.wait()` below blocks until every slot dropped
         // its job, so the erased borrow cannot outlive `f` (the same
         // contract as [`Engine::run`]).
         let fr = unsafe {
@@ -510,6 +519,7 @@ impl TaskPool {
         }
         latch.wait();
         if latch.poisoned.load(std::sync::atomic::Ordering::SeqCst) {
+            // audit:allow(hot_path_panic): re-raises a contained role-thread panic to the caller
             panic!("task-pool role thread panicked during dispatch");
         }
     }
@@ -654,6 +664,7 @@ impl SpmvPlan {
     /// warms the owner's caches/TLB.
     fn first_touch(&mut self, engine: &Engine, kernel: &SpmvKernel) {
         let mut bufs = first_touch_buffers(engine, &self.ranges, self.nrows, 2);
+        // audit:allow(hot_path_panic): count is a literal two lines up; setup path, not execute
         let mut yp = bufs.pop().expect("two buffers requested");
         let xp = bufs.pop().expect("two buffers requested");
         // Scalar on purpose: the vector kernels touch the same
@@ -940,14 +951,14 @@ pub fn first_touch_buffers(
         engine.run(|t| {
             for &(a, b) in &partitions[t] {
                 for base in bases.iter() {
-                    // Safety: chunks are disjoint across threads and
+                    // SAFETY: chunks are disjoint across threads and
                     // within capacity; each index has one writer.
                     unsafe { std::ptr::write_bytes(base.0.add(a), 0, b - a) };
                 }
             }
         });
     }
-    // Safety: the tiling check above proves the chunks partition [0, n)
+    // SAFETY: the tiling check above proves the chunks partition [0, n)
     // with no overlap and no hole, so every element of every buffer was
     // initialized by exactly one thread.
     for b in &mut bufs {

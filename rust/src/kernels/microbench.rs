@@ -454,10 +454,17 @@ mod tests {
         assert_eq!(is_scp(&a2, &b, &ind), 0.0 + 198.0 + 150.0);
     }
 
+    // Miri interprets ~100x slower than native; the statistical index
+    // tests keep their assertions but run on smaller samples there.
+    #[cfg(miri)]
+    const IDX_N: usize = 5_000;
+    #[cfg(not(miri))]
+    const IDX_N: usize = 50_000;
+
     #[test]
     fn geometric_index_is_monotone_with_mean_k() {
         let mut rng = Rng::new(99);
-        let n = 50_000;
+        let n = IDX_N;
         let k = 16.0;
         let b_len = 10_000_000;
         let ind = build_index(IndexPattern::Geometric { mean: k }, n, b_len, &mut rng);
@@ -470,18 +477,21 @@ mod tests {
     #[test]
     fn gaussian_index_allows_backward_jumps() {
         let mut rng = Rng::new(7);
+        let n = IDX_N / 2;
         let ind = build_index(
             IndexPattern::Gaussian { mean: 10.0, variance: 10_000.0 },
-            20_000,
+            n,
             1_000_000,
             &mut rng,
         );
         let backward = ind.windows(2).filter(|w| w[1] < w[0]).count();
-        assert!(backward > 1000, "expected many backward jumps, got {backward}");
+        // With σ=100 ≫ mean=10, ~46% of steps are backward; demand a
+        // tenth of that so the bound scales with the sample size.
+        assert!(backward > n / 20, "expected many backward jumps, got {backward}");
         // small variance: (almost) no backward jumps
         let ind2 = build_index(
             IndexPattern::Gaussian { mean: 10.0, variance: 1.0 },
-            20_000,
+            n,
             100_000_000,
             &mut rng,
         );
@@ -491,8 +501,9 @@ mod tests {
 
     #[test]
     fn buffers_run_all_ops() {
+        let (n, b_len) = if cfg!(miri) { (100, 10_000) } else { (1000, 100_000) };
         for op in table1_ops(8) {
-            let bufs = MicroBuffers::new(op, 1000, 100_000, 42);
+            let bufs = MicroBuffers::new(op, n, b_len, 42);
             let v = bufs.run();
             assert!(v.is_finite(), "{}", op.name());
         }

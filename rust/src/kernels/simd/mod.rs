@@ -76,7 +76,9 @@ impl IsaLevel {
     pub fn detect() -> IsaLevel {
         static DETECTED: OnceLock<IsaLevel> = OnceLock::new();
         *DETECTED.get_or_init(|| {
-            #[cfg(target_arch = "x86_64")]
+            // Under Miri there is no CPUID and intrinsic bodies cannot
+            // be interpreted, so everything runs the scalar paths.
+            #[cfg(all(target_arch = "x86_64", not(miri)))]
             {
                 if std::is_x86_feature_detected!("avx2")
                     && std::is_x86_feature_detected!("fma")
@@ -552,6 +554,9 @@ mod x86 {
     /// slice_width[s]`, so every touched index `base + k*h + lane + t`
     /// (`k < w`, `t < 4`) is below `slice_ptr[s+1] <= val.len()`; and
     /// `col_idx` entries are permuted column ids `< xp.len()`.
+    ///
+    /// SAFETY: caller must ensure AVX2+FMA support (dispatch contract)
+    /// and the in-bounds argument above.
     #[target_feature(enable = "avx2", enable = "fma")]
     #[allow(clippy::too_many_arguments)]
     unsafe fn sell_lane4(
@@ -581,6 +586,9 @@ mod x86 {
     /// `Avx512` level on pre-1.89 toolchains; see module docs).
     /// Requires `lane + 8 <= h`; the in-bounds argument of
     /// [`sell_lane4`] applies to both streams.
+    ///
+    /// SAFETY: caller must ensure AVX2+FMA support (dispatch contract)
+    /// and the in-bounds argument above.
     #[cfg(not(spmv_avx512_native))]
     #[target_feature(enable = "avx2", enable = "fma")]
     #[allow(clippy::too_many_arguments)]
@@ -621,6 +629,9 @@ mod x86 {
     /// gather halves. Per-lane accumulation order is unchanged from the
     /// paired-stream body (each lane owns one row), so the Tolerance
     /// bound is identical.
+    ///
+    /// SAFETY: caller must ensure AVX-512F+AVX2+FMA support (dispatch
+    /// contract) and the in-bounds argument of [`sell_lane4`].
     #[cfg(spmv_avx512_native)]
     #[target_feature(enable = "avx512f", enable = "avx2", enable = "fma")]
     #[allow(clippy::too_many_arguments)]
@@ -675,6 +686,10 @@ mod x86 {
     }
 
     /// Horizontal sum of a 4-lane accumulator.
+    ///
+    /// SAFETY: caller must ensure AVX2 support (dispatch contract —
+    /// every path here is gated on `IsaLevel::detect()`); the body only
+    /// touches its value argument.
     #[target_feature(enable = "avx2")]
     unsafe fn hsum4(v: __m256d) -> f64 {
         let hi = _mm256_extractf128_pd::<1>(v);
@@ -685,6 +700,9 @@ mod x86 {
     }
 
     /// One CRS row as 4 gather-FMA partial sums + scalar tail.
+    ///
+    /// SAFETY: caller must ensure AVX2+FMA support (dispatch contract)
+    /// and `col` entries validated `< x.len()`; `val.len() == col.len()`.
     #[target_feature(enable = "avx2", enable = "fma")]
     unsafe fn crs_row4(val: &[f64], col: &[u32], x: &[f64]) -> f64 {
         let n = val.len();
@@ -710,6 +728,9 @@ mod x86 {
 
     /// One CRS row as 8 partial sums in two 256-bit streams + tail
     /// (the `Avx512` level on pre-1.89 toolchains).
+    ///
+    /// SAFETY: caller must ensure AVX2+FMA support (dispatch contract)
+    /// and `col` entries validated `< x.len()`; `val.len() == col.len()`.
     #[cfg(not(spmv_avx512_native))]
     #[target_feature(enable = "avx2", enable = "fma")]
     unsafe fn crs_row8(val: &[f64], col: &[u32], x: &[f64]) -> f64 {
@@ -743,6 +764,10 @@ mod x86 {
     /// paired-stream body — both are within the same Tolerance bound
     /// (the row is already folded into 8 reordered partials either
     /// way).
+    ///
+    /// SAFETY: caller must ensure AVX-512F+AVX2+FMA support (dispatch
+    /// contract) and `col` entries validated `< x.len()`; `val.len() ==
+    /// col.len()`.
     #[cfg(spmv_avx512_native)]
     #[target_feature(enable = "avx512f", enable = "avx2", enable = "fma")]
     unsafe fn crs_row8(val: &[f64], col: &[u32], x: &[f64]) -> f64 {
@@ -822,6 +847,9 @@ mod x86 {
     /// the fused scalar order. Per-vector entry order is ascending `j`
     /// in every path, so only FMA fusion separates this from the scalar
     /// fused loop.
+    ///
+    /// SAFETY: caller must ensure AVX2+FMA support (dispatch contract);
+    /// all slice access is bounds-checked.
     #[target_feature(enable = "avx2", enable = "fma")]
     unsafe fn row_multi(
         val: &[f64],
@@ -869,6 +897,9 @@ mod x86 {
     /// the real entries (`k < nnz`) are walked, so padding never enters
     /// the sum and the result matches the fused scalar SELL loop up to
     /// FMA fusion.
+    ///
+    /// SAFETY: caller must ensure AVX2+FMA support (dispatch contract);
+    /// all slice access is bounds-checked.
     #[target_feature(enable = "avx2", enable = "fma")]
     #[allow(clippy::too_many_arguments)]
     unsafe fn sell_row_multi(
@@ -920,6 +951,9 @@ mod x86 {
 
     /// `Σ a[i]·b[ind[i]]` as 4 gather-FMA partial sums + scalar tail —
     /// the measured kernel behind the gather-bandwidth microbenchmark.
+    ///
+    /// SAFETY: caller must ensure AVX2+FMA support (dispatch contract),
+    /// `a.len() == ind.len()`, and every `ind` entry `< b.len()`.
     #[target_feature(enable = "avx2", enable = "fma")]
     pub unsafe fn gather_scp(a: &[f64], b: &[f64], ind: &[u32]) -> f64 {
         let n = a.len();
@@ -944,6 +978,9 @@ mod x86 {
     }
 
     /// Streaming triad `a[i] = b[i] + scale * c[i]`, 4 lanes per FMA.
+    ///
+    /// SAFETY: caller must ensure AVX2+FMA support (dispatch contract)
+    /// and `a.len() == b.len() == c.len()`.
     #[target_feature(enable = "avx2", enable = "fma")]
     pub unsafe fn triad_avx2(a: &mut [f64], b: &[f64], c: &[f64], scale: f64) {
         let n = a.len();

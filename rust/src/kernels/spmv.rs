@@ -154,6 +154,7 @@ impl SpmvKernel {
                 Scheme::Jds => jds.spmv_permuted_jds(&ws.xp, &mut ws.yp),
                 Scheme::NbJds { block } => jds.spmv_permuted_nbjds(*block, &ws.xp, &mut ws.yp),
                 Scheme::NuJds { unroll } => jds.spmv_permuted_nujds(*unroll, &ws.xp, &mut ws.yp),
+                // audit:allow(hot_path_panic): Jds variant only ever wraps JDS-family schemes
                 _ => unreachable!(),
             },
             SpmvKernel::Rb(m) => m.spmv_permuted(&ws.xp, &mut ws.yp),
@@ -176,6 +177,7 @@ impl SpmvKernel {
                 Scheme::NuJds { unroll } => {
                     jds.spmv_rows_nujds(*unroll, row_begin, row_end, xp, out)
                 }
+                // audit:allow(hot_path_panic): Jds variant only ever wraps JDS-family schemes
                 _ => unreachable!(),
             },
             SpmvKernel::Rb(m) => m.spmv_rows_permuted(row_begin, row_end, xp, out),
@@ -346,6 +348,7 @@ impl SpmvKernel {
                 Scheme::Jds => jds.walk_jds(v),
                 Scheme::NbJds { block } => jds.walk_nbjds(*block, v),
                 Scheme::NuJds { unroll } => jds.walk_nujds(*unroll, v),
+                // audit:allow(hot_path_panic): Jds variant only ever wraps JDS-family schemes
                 _ => unreachable!(),
             },
             SpmvKernel::Rb(m) => m.walk(v),

@@ -30,6 +30,10 @@
 //!                     [--precision bit|tol:EPS] [--block 4] [--exponent 2.2]
 //!                     [--avg-nnz 8] [--edge-factor 8] [--matrices a,b] [--matrix FILE.mtx]
 //!                     — corpus arbitration sweep; writes results/BENCH_corpus.json for CI
+//! spmvperf audit      [--rule NAME] [--list]
+//!                     — static analysis of the crate's own sources: SAFETY
+//!                       comments, the atomic-ordering registry, spawn/ISA
+//!                       containment, hot-path panics, bench baselines (CI gate)
 //! spmvperf matrix     [--out FILE.mtx] — generate + analyze the test matrix
 //! spmvperf info       — platform, machines, artifacts
 //! ```
@@ -71,6 +75,7 @@ fn run() -> Result<()> {
         "serve" => cmd_serve(&args),
         "corpus" => cmd_corpus(&args),
         "matrix" => cmd_matrix(&args),
+        "audit" => cmd_audit(&args),
         "info" => cmd_info(&args),
         "help" | "--help" | "-h" => {
             println!("{}", HELP);
@@ -109,6 +114,7 @@ USAGE:
                       [--avg-nnz 8] [--edge-factor 8]
                       [--matrices power-law,rmat,...] [--matrix FILE.mtx]
   spmvperf matrix     [--out FILE.mtx] [--full|--quick]
+  spmvperf audit      [--rule NAME] [--list]
   spmvperf info
 "#;
 
@@ -730,6 +736,43 @@ fn cmd_matrix(args: &Args) -> Result<()> {
         eprintln!("wrote {path}");
     }
     Ok(())
+}
+
+/// `spmvperf audit [--rule NAME] [--list]` — run the in-repo static
+/// analysis (see `src/audit/`) over the sources this binary was built
+/// from. Exits non-zero on any finding, which is what makes it a CI
+/// gate: `cargo build --release && ./target/release/spmvperf audit`.
+fn cmd_audit(args: &Args) -> Result<()> {
+    let list = args.flag("list");
+    let rule = args.get("rule").map(|s| s.to_string());
+    args.finish()?;
+    if list {
+        let mut t = Table::new("audit rules (waive with `// audit:allow(rule): reason`)", &[
+            "rule", "contract",
+        ]);
+        for r in spmvperf::audit::RULES {
+            t.row(vec![r.name.to_string(), r.desc.to_string()]);
+        }
+        t.print();
+        return Ok(());
+    }
+    let report = spmvperf::audit::audit_crate(&spmvperf::audit::crate_root(), rule.as_deref())?;
+    if report.findings.is_empty() {
+        println!(
+            "audit: {} files clean ({})",
+            report.files,
+            rule.as_deref().unwrap_or("all rules")
+        );
+        return Ok(());
+    }
+    for finding in &report.findings {
+        println!("{finding}");
+    }
+    bail!(
+        "audit: {} finding(s) in {} files — fix the site, or waive it with `// audit:allow(rule): reason`",
+        report.findings.len(),
+        report.files
+    );
 }
 
 fn cmd_info(args: &Args) -> Result<()> {

@@ -160,10 +160,16 @@ pub fn parallel_spmv(crs: &Crs, x: &[f64], y: &mut [f64], assignment: &Assignmen
     assert_eq!(x.len(), crs.ncols);
     assert_eq!(y.len(), crs.nrows);
     struct SendPtr(*mut f64);
+    // SAFETY: each row index has exactly one owning thread (the
+    // assignment partitions rows), so writes through the pointer are
+    // disjoint; the scope below keeps `y` alive past every write.
     unsafe impl Send for SendPtr {}
+    // SAFETY: shared access is address arithmetic only; writes land on
+    // the disjoint per-owner rows described above.
     unsafe impl Sync for SendPtr {}
     let y_ptr = SendPtr(y.as_mut_ptr());
     let y_ref = &y_ptr;
+    // audit:allow(thread_spawn): legacy scoped-thread reference path, benchmarked against Engine
     std::thread::scope(|scope| {
         for t in 0..assignment.n_threads as u16 {
             let ranges = assignment.ranges_of(t);
@@ -177,7 +183,7 @@ pub fn parallel_spmv(crs: &Crs, x: &[f64], y: &mut [f64], assignment: &Assignmen
                         for j in crs.row_ptr[i]..crs.row_ptr[i + 1] {
                             sum += crs.val[j] * x[crs.col_idx[j] as usize];
                         }
-                        // Safety: row ownership is disjoint across threads.
+                        // SAFETY: row ownership is disjoint across threads.
                         unsafe { *y_ref.0.add(i) = sum };
                     }
                 }

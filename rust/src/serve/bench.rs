@@ -294,6 +294,7 @@ fn open_loop_point(
     dur: Duration,
 ) -> Point {
     let (tx, rx) = mpsc::channel::<(Instant, Ticket)>();
+    // audit:allow(thread_spawn): bench harness latency collector, not a serving code path
     let collector = std::thread::spawn(move || {
         let mut lats: Vec<f64> = Vec::new();
         let mut checksum = 0.0;

@@ -423,6 +423,7 @@ impl Server {
         let dispatcher = {
             let inner = inner.clone();
             let stats = stats.clone();
+            // audit:allow(thread_spawn): one dispatcher per Server, spawned once at construction
             std::thread::Builder::new()
                 .name("spmv-serve-dispatch".to_string())
                 .spawn(move || dispatcher_loop(&inner, &stats, cfg))

@@ -151,7 +151,12 @@ pub(crate) struct ShardedSpmv {
 /// phase (interior XOR boundary), so the scatters never alias.
 #[derive(Clone, Copy)]
 struct SharedOut(*mut f64);
+// SAFETY: every global row has exactly one writing shard and one
+// writing phase (doc above), so concurrent scatters never alias; the
+// dispatcher keeps the output borrow alive for the whole call.
 unsafe impl Send for SharedOut {}
+// SAFETY: shared access is address arithmetic; writes land on the
+// disjoint per-shard rows described above.
 unsafe impl Sync for SharedOut {}
 
 /// Raw gather-buffer pointer handed to the exchange thread: the gate
@@ -159,7 +164,12 @@ unsafe impl Sync for SharedOut {}
 /// reference to the buffer is alive while it is being written.
 #[derive(Clone, Copy)]
 struct SharedBuf(*mut f64);
+// SAFETY: the HaloGate orders the exchange thread's writes before
+// every remote-phase read (doc above), and no Rust reference to the
+// buffer is alive while it is being written.
 unsafe impl Send for SharedBuf {}
+// SAFETY: cross-thread use is write-then-gate-then-read; the gate's
+// mutex hand-off makes the writes happen-before the reads.
 unsafe impl Sync for SharedBuf {}
 
 /// Raw views of one shard's buffers, captured while the caller holds the
@@ -237,6 +247,7 @@ impl ShardedSpmv {
         threads: usize,
         pinned: bool,
     ) -> Result<Vec<ShardUnit>> {
+        // audit:allow(thread_spawn): one-shot setup fan-out so first-touch runs in parallel
         std::thread::scope(|scope| {
             let handles: Vec<_> = storage
                 .shards
@@ -546,7 +557,7 @@ impl ShardedSpmv {
         let two = TwoPhasePlan { local: &unit.local_plan, remote: &unit.remote_plan };
         for (bi, x) in xs.iter().enumerate() {
             let x_local = &x[shard.row_begin..shard.row_end];
-            // Safety: the dispatching thread holds this shard's buffer
+            // SAFETY: the dispatching thread holds this shard's buffer
             // lock for the whole call and only this coordinator role
             // touches the output halves, so these views are exclusive.
             let local_out =
@@ -556,7 +567,7 @@ impl ShardedSpmv {
             match self.mode {
                 OverlapMode::BulkSync => {
                     // Vector mode: full gather inline, then both phases.
-                    // Safety: no exchange role is dispatched in
+                    // SAFETY: no exchange role is dispatched in
                     // bulk-sync — this coordinator is the gather
                     // buffer's only user.
                     let concat = unsafe {
@@ -587,7 +598,7 @@ impl ShardedSpmv {
                         remote_out,
                         |a, b, out| kernel.local.spmv_rows_isa(isa, a, b, x_local, out),
                         move |a, b, out| {
-                            // Safety: runs strictly after `ready[bi]`
+                            // SAFETY: runs strictly after `ready[bi]`
                             // opened (TwoPhasePlan waits before
                             // dispatching), so the exchange role's
                             // writes are complete and ordered before
@@ -602,7 +613,7 @@ impl ShardedSpmv {
                     free[bi].signal();
                 }
             }
-            // Scatter both halves' slots to their global rows. Safety:
+            // Scatter both halves' slots to their global rows. SAFETY:
             // each global row has exactly one writer (row partition
             // across shards, interior XOR boundary within the shard).
             let ybase = ybases[bi];
@@ -612,6 +623,7 @@ impl ShardedSpmv {
             }
             for (slot, &v) in remote_out.iter().enumerate() {
                 let row = shard.boundary_rows[kernel.remote.storage_row(slot)] as usize;
+                // SAFETY: single writer per global row, as above.
                 unsafe { *ybase.0.add(row) = v };
             }
         }
@@ -636,7 +648,7 @@ impl ShardedSpmv {
             if bi > 0 {
                 free[bi - 1].wait();
             }
-            // Safety: before `ready[bi]` opens the compute side never
+            // SAFETY: before `ready[bi]` opens the compute side never
             // touches the gather buffer, and the `free[bi-1]` wait
             // above orders this fill after every read of the previous
             // one; both gates' mutex hand-offs order the accesses.

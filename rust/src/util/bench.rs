@@ -186,8 +186,10 @@ pub fn write_bench_json(filename: &str, json: &str) {
 // they may legitimately differ between baseline and current runs.
 // ---------------------------------------------------------------------
 
-/// Keys whose values identify a bench entry across runs.
-const BENCH_IDENT_KEYS: &[&str] = &["bench", "matrix", "name", "case", "config", "policy"];
+/// Keys whose values identify a bench entry across runs. `pub` because
+/// the audit's `bench_baseline` rule checks every committed baseline's
+/// identity keys are still produced by some emitter.
+pub const BENCH_IDENT_KEYS: &[&str] = &["bench", "matrix", "name", "case", "config", "policy"];
 
 /// One comparable data point extracted from a `BENCH_*.json` file.
 #[derive(Debug, Clone, PartialEq)]

@@ -33,6 +33,7 @@ const VALUE_OPTS: &[&str] = &[
     "eigenvalues", "csv", "policy", "tolerance", "shards", "mode", "backend",
     "cv-threshold", "precision", "factor", "max-batch", "max-delay-us", "tenants",
     "queue-cap", "duration", "exponent", "avg-nnz", "edge-factor", "matrices",
+    "rule",
 ];
 
 impl Args {
@@ -258,6 +259,18 @@ mod tests {
         assert_eq!(a.get_str("precision", "bit"), "tol:1e-12");
         assert_eq!(a.get_str("backend", "auto"), "sharded");
         assert_eq!(a.get_str("policy", "heuristic"), "fixed");
+        assert!(a.positionals().is_empty(), "no stray positionals");
+        assert!(a.finish().is_ok());
+    }
+
+    /// Regression: the audit PR's `--rule` must be registered — the
+    /// space-separated form (`spmvperf audit --rule thread_spawn`) would
+    /// otherwise parse as a boolean flag + stray positional and the audit
+    /// would silently run all rules instead of the requested one.
+    #[test]
+    fn audit_options_take_values() {
+        let a = parse("--rule thread_spawn");
+        assert_eq!(a.get("rule"), Some("thread_spawn"));
         assert!(a.positionals().is_empty(), "no stray positionals");
         assert!(a.finish().is_ok());
     }
